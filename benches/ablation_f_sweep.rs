@@ -1,0 +1,62 @@
+//! Ablation bench over EAFL's Eq. (1) blend weight f — the design
+//! choice DESIGN.md calls out (§3.1 Q2 trade-off). f = 1 degenerates to
+//! Oort-like utility chasing, f = 0 to pure battery chasing; the paper
+//! operates at f = 0.25.
+//!
+//! Run: cargo bench --bench ablation_f_sweep
+
+use eafl::benchkit::Bench;
+use eafl::config::{ExperimentConfig, SelectorKind};
+use eafl::coordinator::Coordinator;
+use eafl::metrics::Summary;
+use eafl::runtime::MockRuntime;
+
+fn run(f: f64, rounds: usize) -> Summary {
+    let runtime = MockRuntime::default();
+    let mut cfg = ExperimentConfig::paper_default(SelectorKind::Eafl);
+    cfg.name = format!("f={f}");
+    cfg.federation.rounds = rounds;
+    cfg.federation.num_clients = 100;
+    cfg.selector.eafl_f = f;
+    cfg.devices.min_init_battery = 0.10;
+    cfg.devices.max_init_battery = 0.6;
+    Coordinator::new(cfg, &runtime).unwrap().run().unwrap().summary()
+}
+
+fn main() {
+    const ROUNDS: usize = 150;
+    let mut bench = Bench::heavy();
+    let mut rows = Vec::new();
+    for f in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let s = bench.run_once(&format!("f-sweep f={f} ({ROUNDS} rounds, mock)"), || {
+            run(f, ROUNDS)
+        });
+        rows.push((f, s));
+    }
+
+    println!("\n=== Eq. (1) f ablation ===");
+    println!(
+        "{:<6} {:>9} {:>10} {:>10} {:>13} {:>12}",
+        "f", "acc", "dropouts", "fairness", "mean_rnd(s)", "energy(kJ)"
+    );
+    for (f, s) in &rows {
+        println!(
+            "{:<6} {:>9.4} {:>10} {:>10.3} {:>13.1} {:>12.1}",
+            f,
+            s.final_accuracy,
+            s.total_dropouts,
+            s.final_fairness,
+            s.mean_round_duration_s,
+            s.total_fl_energy_j / 1000.0
+        );
+    }
+
+    // Shape check: battery-heavier blends (smaller f) must not drop
+    // MORE clients than the pure-utility extreme.
+    let d0 = rows[0].1.total_dropouts; // f = 0
+    let d1 = rows.last().unwrap().1.total_dropouts; // f = 1
+    println!(
+        "\nshape: dropouts(f=0)={d0} <= dropouts(f=1)={d1}: {}",
+        if d0 <= d1 { "HOLDS" } else { "VIOLATED" }
+    );
+}

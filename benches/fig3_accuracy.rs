@@ -1,0 +1,76 @@
+//! Fig. 3 regeneration bench (shortened): test accuracy (3a), train
+//! loss (3b) and Jain's fairness (3c) series for EAFL vs Oort vs Random
+//! under identical seeds.
+//!
+//! Uses the analytic mock runtime so the bench isolates COORDINATOR
+//! time; the real-SGD version of this experiment is
+//! `examples/e2e_speech_training.rs` (recorded in EXPERIMENTS.md).
+//!
+//! Run: cargo bench --bench fig3_accuracy
+
+use eafl::benchkit::Bench;
+use eafl::config::{ExperimentConfig, SelectorKind};
+use eafl::coordinator::Coordinator;
+use eafl::metrics::MetricsLog;
+use eafl::runtime::MockRuntime;
+
+fn run(kind: SelectorKind, rounds: usize) -> MetricsLog {
+    let runtime = MockRuntime::default();
+    let mut cfg = ExperimentConfig::paper_default(kind);
+    cfg.name = format!("fig3-{kind}");
+    cfg.federation.rounds = rounds;
+    cfg.federation.num_clients = 100;
+    cfg.devices.min_init_battery = 0.15;
+    cfg.devices.max_init_battery = 0.8;
+    Coordinator::new(cfg, &runtime).unwrap().run().unwrap()
+}
+
+fn main() {
+    const ROUNDS: usize = 150;
+    let mut bench = Bench::heavy();
+    let mut logs = Vec::new();
+    for kind in [SelectorKind::Eafl, SelectorKind::Oort, SelectorKind::Random] {
+        let log = bench.run_once(&format!("fig3 series {kind} ({ROUNDS} rounds, mock)"), || {
+            run(kind, ROUNDS)
+        });
+        logs.push((kind, log));
+    }
+
+    println!("\n=== Fig 3a/3b/3c series (sampled every 30 rounds) ===");
+    println!(
+        "{:<8} {:>6} {:>10} {:>12} {:>10}",
+        "selector", "round", "accuracy", "train_loss", "fairness"
+    );
+    for (kind, log) in &logs {
+        for r in log.records.iter().step_by(30) {
+            println!(
+                "{:<8} {:>6} {:>10.4} {:>12.4} {:>10.3}",
+                kind.to_string(),
+                r.round,
+                r.test_accuracy,
+                r.train_loss,
+                r.fairness
+            );
+        }
+    }
+
+    println!("\n=== expected shape checks (paper Fig. 3) ===");
+    let get = |k: SelectorKind| logs.iter().find(|(kk, _)| *kk == k).unwrap().1.summary();
+    let eafl = get(SelectorKind::Eafl);
+    let oort = get(SelectorKind::Oort);
+    let random = get(SelectorKind::Random);
+    println!(
+        "final fairness: eafl={:.3} oort={:.3} random={:.3}  (paper: eafl&random high, oort degraded: {})",
+        eafl.final_fairness,
+        oort.final_fairness,
+        random.final_fairness,
+        if eafl.final_fairness >= oort.final_fairness { "HOLDS" } else { "VIOLATED" }
+    );
+    println!(
+        "final accuracy: eafl={:.4} oort={:.4} random={:.4}  (paper: eafl best: {})",
+        eafl.final_accuracy,
+        oort.final_accuracy,
+        random.final_accuracy,
+        if eafl.final_accuracy >= oort.final_accuracy { "HOLDS" } else { "VIOLATED" }
+    );
+}

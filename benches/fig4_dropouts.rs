@@ -1,0 +1,86 @@
+//! Fig. 4 regeneration bench: cumulative battery drop-outs (4a) and
+//! per-round duration (4b) for EAFL vs Oort vs Random under identical
+//! seeds in the battery-constrained regime.
+//!
+//! Mock runtime (coordinator dynamics only); the real-SGD version is
+//! `examples/e2e_speech_training.rs`.
+//!
+//! Run: cargo bench --bench fig4_dropouts
+
+use eafl::benchkit::Bench;
+use eafl::config::{ExperimentConfig, SelectorKind};
+use eafl::coordinator::Coordinator;
+use eafl::metrics::MetricsLog;
+use eafl::runtime::MockRuntime;
+
+fn run(kind: SelectorKind, rounds: usize) -> MetricsLog {
+    let runtime = MockRuntime::default();
+    let mut cfg = ExperimentConfig::paper_default(kind);
+    cfg.name = format!("fig4-{kind}");
+    cfg.federation.rounds = rounds;
+    cfg.federation.num_clients = 100;
+    // Battery-tight: the regime where Fig. 4a separates the methods.
+    cfg.devices.min_init_battery = 0.10;
+    cfg.devices.max_init_battery = 0.6;
+    Coordinator::new(cfg, &runtime).unwrap().run().unwrap()
+}
+
+fn main() {
+    const ROUNDS: usize = 200;
+    let mut bench = Bench::heavy();
+    let mut logs = Vec::new();
+    for kind in [SelectorKind::Eafl, SelectorKind::Oort, SelectorKind::Random] {
+        let log = bench.run_once(&format!("fig4 series {kind} ({ROUNDS} rounds, mock)"), || {
+            run(kind, ROUNDS)
+        });
+        logs.push((kind, log));
+    }
+
+    println!("\n=== Fig 4a (cumulative drop-outs) & 4b (round duration) ===");
+    println!(
+        "{:<8} {:>6} {:>9} {:>10} {:>14}",
+        "selector", "round", "wall(h)", "dropouts", "round_dur(s)"
+    );
+    for (kind, log) in &logs {
+        for r in log.records.iter().step_by(40) {
+            println!(
+                "{:<8} {:>6} {:>9.2} {:>10} {:>14.1}",
+                kind.to_string(),
+                r.round,
+                r.wall_clock_h,
+                r.cumulative_dead,
+                r.round_duration_s
+            );
+        }
+    }
+
+    println!("\n=== expected shape checks (paper Fig. 4) ===");
+    let get = |k: SelectorKind| logs.iter().find(|(kk, _)| *kk == k).unwrap().1.summary();
+    let eafl = get(SelectorKind::Eafl);
+    let oort = get(SelectorKind::Oort);
+    let random = get(SelectorKind::Random);
+    println!(
+        "dropouts: eafl={} oort={} random={}  (paper 4a: oort >> eafl: {})",
+        eafl.total_dropouts,
+        oort.total_dropouts,
+        random.total_dropouts,
+        if oort.total_dropouts > eafl.total_dropouts { "HOLDS" } else { "VIOLATED" }
+    );
+    if eafl.total_dropouts > 0 {
+        println!(
+            "oort/eafl drop-out ratio: {:.2}x (paper: up to 2.45x)",
+            oort.total_dropouts as f64 / eafl.total_dropouts as f64
+        );
+    }
+    println!(
+        "mean round duration: eafl={:.1}s oort={:.1}s random={:.1}s  (paper 4b: random longest: {})",
+        eafl.mean_round_duration_s,
+        oort.mean_round_duration_s,
+        random.mean_round_duration_s,
+        if random.mean_round_duration_s >= oort.mean_round_duration_s.min(eafl.mean_round_duration_s) {
+            "HOLDS"
+        } else {
+            "VIOLATED"
+        }
+    );
+}

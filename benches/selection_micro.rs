@@ -1,0 +1,48 @@
+//! Selector microbenchmarks: per-round selection cost for Random, Oort
+//! and EAFL across population sizes 100..100k — L3's own hot path
+//! (everything except model execution).
+//!
+//! Run: cargo bench --bench selection_micro
+
+use eafl::benchkit::{bb, Bench};
+use eafl::config::{SelectorConfig, SelectorKind};
+use eafl::selection::{make_selector, Candidate};
+use eafl::util::rng::Rng;
+
+fn candidates(n: usize) -> Vec<Candidate> {
+    let mut rng = Rng::seed_from_u64(7);
+    (0..n)
+        .map(|id| Candidate {
+            id,
+            // 70% explored with varied utility, 30% fresh.
+            stat_util: if rng.gen_bool(0.7) {
+                Some(rng.gen_range_f64(1.0, 400.0))
+            } else {
+                None
+            },
+            measured_duration_s: Some(rng.gen_range_f64(60.0, 900.0)),
+            expected_duration_s: rng.gen_range_f64(60.0, 900.0),
+            last_selected_round: rng.gen_range_usize(0, 50) as u64,
+            battery_frac: rng.gen_f64(),
+            projected_drain_frac: rng.gen_range_f64(0.001, 0.05),
+        })
+        .collect()
+}
+
+fn main() {
+    let mut bench = Bench::new();
+    for n in [100usize, 1_000, 10_000, 100_000] {
+        let cands = candidates(n);
+        for kind in [SelectorKind::Random, SelectorKind::Oort, SelectorKind::Eafl] {
+            let mut cfg = SelectorConfig::default();
+            cfg.kind = kind;
+            let mut selector = make_selector(&cfg);
+            let mut rng = Rng::seed_from_u64(11);
+            let mut round = 0u64;
+            bench.run(&format!("{kind} select K=10 of N={n}"), || {
+                round += 1;
+                bb(selector.select(round, bb(&cands), 10, &mut rng));
+            });
+        }
+    }
+}

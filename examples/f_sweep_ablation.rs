@@ -1,0 +1,63 @@
+//! Ablation over EAFL's f (Eq. 1 blend weight) — the paper's §3.1 Q2
+//! trade-off between model quality and energy efficiency.
+//!
+//! Sweeps f ∈ {0, 0.25, 0.5, 0.75, 1.0} under identical seeds:
+//!  - f = 0    → pure battery chasing (selection ignores utility),
+//!  - f = 0.25 → the paper's operating point,
+//!  - f = 1    → pure Oort (battery-oblivious).
+//!
+//! Expected shape: drop-outs increase with f; time-to-accuracy improves
+//! with f until drop-outs erase the gain.
+//!
+//! Run: cargo run --release --example f_sweep_ablation -- [--mock] [--rounds N]
+
+use anyhow::Result;
+
+use eafl::config::{ExperimentConfig, SelectorKind};
+use eafl::coordinator::Coordinator;
+use eafl::runtime::{MockRuntime, ModelRuntime, XlaRuntime};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let use_mock = args.iter().any(|a| a == "--mock");
+    let rounds = args
+        .iter()
+        .position(|a| a == "--rounds")
+        .and_then(|i| args.get(i + 1))
+        .map(|v| v.parse::<usize>().expect("--rounds N"))
+        .unwrap_or(if use_mock { 150 } else { 60 });
+
+    let runtime: Box<dyn ModelRuntime> = if use_mock {
+        Box::new(MockRuntime::default())
+    } else {
+        Box::new(XlaRuntime::load(&XlaRuntime::default_dir())?)
+    };
+
+    println!(
+        "{:<6} {:>9} {:>9} {:>10} {:>12} {:>10} {:>12}",
+        "f", "acc", "fairness", "dropouts", "mean_rnd(s)", "wall(h)", "energy(kJ)"
+    );
+    for f in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let mut cfg = ExperimentConfig::paper_default(SelectorKind::Eafl);
+        cfg.name = format!("fsweep-{f}");
+        cfg.federation.rounds = rounds;
+        cfg.federation.num_clients = 100;
+        cfg.selector.eafl_f = f;
+        // Battery-tight scenario so the energy term has bite.
+        cfg.devices.min_init_battery = 0.15;
+        cfg.devices.max_init_battery = 0.7;
+        let log = Coordinator::new(cfg, runtime.as_ref())?.run()?;
+        let s = log.summary();
+        println!(
+            "{:<6} {:>9.4} {:>9.3} {:>10} {:>12.1} {:>10.2} {:>12.1}",
+            f,
+            s.final_accuracy,
+            s.final_fairness,
+            s.total_dropouts,
+            s.mean_round_duration_s,
+            s.wall_clock_h,
+            s.total_fl_energy_j / 1000.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Quickstart: the smallest end-to-end EAFL run.
+//!
+//! Loads the AOT artifacts (falls back to the mock runtime with
+//! `--mock` or if artifacts are missing), builds a small federation,
+//! runs 20 rounds with the paper's EAFL selector and prints the
+//! per-round metrics.
+//!
+//! Run:  cargo run --release --example quickstart            (real PJRT)
+//!       cargo run --release --example quickstart -- --mock  (analytic)
+
+use anyhow::Result;
+
+use eafl::config::{ExperimentConfig, SelectorKind};
+use eafl::coordinator::Coordinator;
+use eafl::runtime::{MockRuntime, ModelRuntime, XlaRuntime};
+
+fn main() -> Result<()> {
+    let use_mock = std::env::args().any(|a| a == "--mock");
+    let runtime: Box<dyn ModelRuntime> = if use_mock {
+        println!("using analytic mock runtime");
+        Box::new(MockRuntime::default())
+    } else {
+        match XlaRuntime::load(&XlaRuntime::default_dir()) {
+            Ok(rt) => {
+                println!("loaded PJRT artifacts from {:?}", XlaRuntime::default_dir());
+                Box::new(rt)
+            }
+            Err(e) => {
+                println!("artifacts unavailable ({e}); falling back to mock runtime");
+                Box::new(MockRuntime::default())
+            }
+        }
+    };
+
+    // Paper §5 defaults, shrunk to a 20-round / 40-client quick run.
+    let mut cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+    cfg.name = "quickstart".into();
+    cfg.federation.rounds = 60; // past the non-IID cold start
+    cfg.federation.eval_interval = 5;
+    cfg.data.min_samples = 60;
+    cfg.data.max_samples = 240;
+
+    println!(
+        "federation: {} clients, K={}, {} rounds, selector={}, f={}",
+        cfg.federation.num_clients,
+        cfg.federation.participants_per_round,
+        cfg.federation.rounds,
+        cfg.selector.kind,
+        cfg.selector.eafl_f
+    );
+
+    let log = Coordinator::new(cfg, runtime.as_ref())?.run()?;
+
+    println!("\nround  wall(h)  dur(s)  done/sel  drop  acc     loss    fairness");
+    for r in log.records.iter().step_by(3) {
+        println!(
+            "{:>5}  {:>7.3}  {:>6.1}  {:>4}/{:<4} {:>4}  {:.4}  {:>6.3}  {:.3}",
+            r.round,
+            r.wall_clock_h,
+            r.round_duration_s,
+            r.completed,
+            r.selected,
+            r.cumulative_dead,
+            r.test_accuracy,
+            r.train_loss,
+            r.fairness
+        );
+    }
+
+    let s = log.summary();
+    println!(
+        "\nfinal: accuracy={:.4} dropouts={} energy={:.1} kJ over {:.2} simulated hours",
+        s.final_accuracy,
+        s.total_dropouts,
+        s.total_fl_energy_j / 1000.0,
+        s.wall_clock_h
+    );
+    Ok(())
+}

@@ -1,0 +1,109 @@
+"""AOT compile path: lower the L2 jax functions (with their L1 Pallas
+kernels inlined) to HLO TEXT artifacts for the Rust runtime.
+
+HLO *text* — NOT ``lowered.compile()`` / ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONLY here, at build time (`make artifacts`); the Rust binary
+is self-contained afterwards.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Batch sizes baked into the artifacts. XLA executables are
+#: shape-monomorphic, so the Rust side pads partial batches up to these.
+TRAIN_BATCH = 20   # paper §5: batch size 20
+EVAL_BATCH = 128   # held-out evaluation, larger batch amortizes dispatch
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifacts():
+    """Return {filename: hlo_text} for every exported entry point."""
+    p = _spec((model.PARAM_COUNT,), jnp.float32)
+    xt = _spec((TRAIN_BATCH, model.INPUT_HW, model.INPUT_HW, 1), jnp.float32)
+    yt = _spec((TRAIN_BATCH,), jnp.int32)
+    xe = _spec((EVAL_BATCH, model.INPUT_HW, model.INPUT_HW, 1), jnp.float32)
+    ye = _spec((EVAL_BATCH,), jnp.int32)
+    lr = _spec((), jnp.float32)
+    seed = _spec((), jnp.uint32)
+
+    return {
+        "train_step.hlo.txt": to_hlo_text(
+            jax.jit(model.train_step).lower(p, xt, yt, lr)
+        ),
+        "eval_step.hlo.txt": to_hlo_text(
+            jax.jit(model.eval_step).lower(p, xe, ye)
+        ),
+        "init_params.hlo.txt": to_hlo_text(
+            jax.jit(model.init_params).lower(seed)
+        ),
+    }
+
+
+def manifest() -> dict:
+    """Shape/packing contract consumed by rust/src/runtime/artifacts.rs."""
+    return {
+        "param_count": model.PARAM_COUNT,
+        "num_classes": model.NUM_CLASSES,
+        "input_hw": model.INPUT_HW,
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "param_spec": [
+            {"name": n, "shape": list(s)} for n, s in model.PARAM_SPEC
+        ],
+        "artifacts": {
+            "train_step": "train_step.hlo.txt",
+            "eval_step": "eval_step.hlo.txt",
+            "init_params": "init_params.hlo.txt",
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    arts = build_artifacts()
+    for fname, text in arts.items():
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+        print(f"wrote {path} ({len(text)} chars, sha256:{digest})")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest(), f, indent=2)
+    print(f"wrote {mpath} (P={model.PARAM_COUNT})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Layer-1 Pallas kernel: fused, tile-blocked `act(x @ w + b)`.
+
+This is the model's FLOP hot spot (the two dense layers of the speech
+CNN). The kernel is written TPU-idiomatically even though this image can
+only run it under ``interpret=True`` (the CPU PJRT plugin cannot execute
+Mosaic custom-calls — see DESIGN.md §Hardware-Adaptation):
+
+ - the grid tiles the output over (M/bm, N/bn); each program instance
+   holds one (bm, K) x-panel, one (K, bn) w-panel and its (bm, bn) output
+   tile in VMEM — the BlockSpec index maps ARE the HBM->VMEM schedule;
+ - the contraction runs on the MXU path (``preferred_element_type=f32``
+   accumulation);
+ - block sizes default to MXU/VPU-friendly multiples (8 sublanes x 128
+   lanes) and inputs are zero-padded up to tile boundaries, then the
+   result is sliced back.
+
+Because ``pallas_call`` has no autodiff rule, ``dense`` is wrapped in a
+``jax.custom_vjp`` whose backward pass reuses the same kernel (bias-less,
+no activation) for dx = g @ w^T and dw = x^T @ g, so the Pallas code path
+is exercised by *both* the forward and backward HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VPU lane / sublane granularity on TPU; used to pick tile sizes.
+_SUBLANE = 8
+_LANE = 128
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def pick_blocks(m: int, n: int, k: int) -> tuple[int, int]:
+    """Choose (bm, bn) output-tile sizes.
+
+    Keeps the working set (x-panel + w-panel + out-tile, f32) within a
+    conservative VMEM budget while using hardware-aligned tile shapes.
+
+    Perf note (EXPERIMENTS.md §Perf, L1 iteration 1): bn is aligned to
+    64 rather than the full 128-lane vreg width. For this model's
+    narrow dense layers (n = 64 and n = 35) padding N up to 128 doubles
+    the tile FLOPs for zero output; a 64-wide MXU pass trades a lane
+    relayout for half the padded work — occupancy on the training-shape
+    dense1 (20x1024x64) rises 0.42 -> 0.83.
+    """
+    bm = min(_round_up(m, _SUBLANE), 128)
+    bn = min(_round_up(n, 64), 256)
+    # VMEM budget ~= 4 MiB of the ~16 MiB/core, leaving room for
+    # double-buffering by the pipeline.
+    budget = 4 * 1024 * 1024
+    while (bm * k + k * bn + bm * bn) * 4 > budget and bm > _SUBLANE:
+        bm //= 2
+    while (bm * k + k * bn + bm * bn) * 4 > budget and bn > 64:
+        bn //= 2
+    return max(bm, _SUBLANE), max(bn, min(64, _round_up(n, _SUBLANE)))
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    """One (bm, bn) output tile: act(x_panel @ w_panel + b_tile)."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "interpret"))
+def dense_fwd_kernel(x, w, b, activation: str = "id", interpret: bool = True):
+    """Raw (non-differentiable) fused dense kernel: act(x @ w + b)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bn = pick_blocks(m, n, k)
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n))
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, activation=activation),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def matmul_kernel(x, w, interpret: bool = True):
+    """Bias-less, activation-less Pallas matmul (backward-pass worker)."""
+    zeros = jnp.zeros((w.shape[1],), jnp.float32)
+    return dense_fwd_kernel(x, w, zeros, activation="id", interpret=interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, activation: str = "id"):
+    """Differentiable fused dense layer: act(x @ w + b), Pallas fwd+bwd."""
+    return dense_fwd_kernel(x, w, b, activation=activation)
+
+
+def _dense_vjp_fwd(x, w, b, activation):
+    y = dense_fwd_kernel(x, w, b, activation=activation)
+    return y, (x, w, y)
+
+
+def _dense_vjp_bwd(activation, res, g):
+    x, w, y = res
+    if activation == "relu":
+        # y is the post-relu output; its positivity mask is the relu grad.
+        g = g * (y > 0.0).astype(g.dtype)
+    dx = matmul_kernel(g, w.T)
+    dw = matmul_kernel(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_vjp_fwd, _dense_vjp_bwd)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this
+package must match its oracle to float32 tolerance across the shape/dtype
+sweep in python/tests/test_kernels.py (hypothesis-driven).
+"""
+
+import jax.numpy as jnp
+
+
+def dense_ref(x, w, b, activation: str = "id"):
+    """Reference for kernels.dense.dense: y = act(x @ w + b).
+
+    x: f32[M, K], w: f32[K, N], b: f32[N] -> f32[M, N]
+    """
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation != "id":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def matmul_ref(x, w):
+    """Reference for the bias-less matmul used by dense's backward pass."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def softmax_xent_ref(logits, onehot):
+    """Reference for kernels.softmax_xent: per-example cross-entropy.
+
+    logits: f32[B, C], onehot: f32[B, C] -> f32[B]
+    Numerically-stable log-softmax via max subtraction.
+    """
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[:, 0]
+    return lse - jnp.sum(onehot * logits, axis=-1)
+
+
+def softmax_ref(logits):
+    """Softmax over the last axis (used by the xent backward pass)."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

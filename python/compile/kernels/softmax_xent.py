@@ -1,0 +1,78 @@
+"""Layer-1 Pallas kernel: fused, numerically-stable softmax cross-entropy.
+
+Produces the PER-EXAMPLE loss vector — this is what feeds Oort/EAFL's
+statistical utility (Eq. 2 needs sqrt(mean(loss^2)) over a client's
+samples), so it is a first-class output of the train/eval steps rather
+than a scalar-only reduction.
+
+Single-block kernel: the (B, C) logits tile is tiny for this model
+(B<=128, C=35 padded to the 128-lane boundary), so one program instance
+holds everything in VMEM; the fusion (max, exp, sum, log, dot with the
+one-hot) avoids materializing softmax probabilities in HBM.
+
+Like `dense`, wrapped in a custom_vjp (softmax(logits) - onehot, scaled
+by the incoming cotangent) because pallas_call has no autodiff rule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANE = 128
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _xent_kernel(logits_ref, onehot_ref, mask_ref, o_ref):
+    """Per-example xent over one (B, Cp) block; mask kills pad columns."""
+    logits = logits_ref[...]
+    onehot = onehot_ref[...]
+    mask = mask_ref[...][None, :]  # 1.0 on real classes, 0.0 on padding
+    neg_inf = jnp.float32(-1e30)
+    masked = jnp.where(mask > 0.0, logits, neg_inf)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    shifted = jnp.where(mask > 0.0, masked - m, neg_inf)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted) * mask, axis=-1)) + m[:, 0]
+    o_ref[...] = lse - jnp.sum(onehot * logits * mask, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def softmax_xent_fwd_kernel(logits, onehot, interpret: bool = True):
+    """Raw fused kernel: per-example cross-entropy f32[B]."""
+    b, c = logits.shape
+    cp = _round_up(c, _LANE)
+    lp = jnp.pad(logits, ((0, 0), (0, cp - c)))
+    op = jnp.pad(onehot, ((0, 0), (0, cp - c)))
+    mask = jnp.pad(jnp.ones((c,), jnp.float32), (0, cp - c))
+    return pl.pallas_call(
+        _xent_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(lp, op, mask)
+
+
+@jax.custom_vjp
+def softmax_xent(logits, onehot):
+    """Differentiable fused per-example softmax cross-entropy."""
+    return softmax_xent_fwd_kernel(logits, onehot)
+
+
+def _xent_vjp_fwd(logits, onehot):
+    loss = softmax_xent_fwd_kernel(logits, onehot)
+    return loss, (logits, onehot)
+
+
+def _xent_vjp_bwd(res, g):
+    logits, onehot = res
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    dlogits = (probs - onehot) * g[:, None]
+    return dlogits, jnp.zeros_like(onehot)
+
+
+softmax_xent.defvjp(_xent_vjp_fwd, _xent_vjp_bwd)

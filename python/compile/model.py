@@ -1,0 +1,143 @@
+"""Layer-2 JAX model: compact speech-commands CNN with a FLAT parameter
+interface, calling the Layer-1 Pallas kernels for its dense hot path.
+
+The paper trains a ResNet on Google Speech Commands (35 labels). Per
+DESIGN.md §2 we substitute a compact CNN over 32x32 log-mel-like feature
+maps so that REAL per-client SGD runs inside the Rust simulator on CPU.
+Selection dynamics (what EAFL/Oort observe) depend on per-client losses
+and timings, not on model capacity.
+
+Flat-parameter convention: every exported function takes/returns the
+model parameters as ONE ``f32[P]`` vector, so the Rust coordinator
+handles exactly one array per direction (see rust/src/runtime). The
+packing order is PARAM_SPEC below; `python -m compile.aot` writes it to
+artifacts/manifest.json for the Rust side.
+
+Exported (AOT-lowered by compile/aot.py):
+  train_step(flat, x, y, lr) -> (flat', mean_loss, per_example_loss)
+  eval_step(flat, x, y)      -> (correct_count, mean_loss)
+  init_params(seed)          -> flat
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.dense import dense
+from .kernels.softmax_xent import softmax_xent
+
+# --- Model geometry ---------------------------------------------------------
+
+NUM_CLASSES = 35  # Google Speech Commands v2 label count
+INPUT_HW = 32     # feature map side (log-mel-like)
+_C1, _C2 = 8, 16  # conv channels
+_FLAT = (INPUT_HW // 4) * (INPUT_HW // 4) * _C2  # after two 2x2 maxpools
+_HIDDEN = 64
+
+#: (name, shape) in flat-packing order. Keep in sync with rust runtime
+#: via artifacts/manifest.json — never reorder without regenerating.
+PARAM_SPEC = [
+    ("conv1_w", (3, 3, 1, _C1)),
+    ("conv1_b", (_C1,)),
+    ("conv2_w", (3, 3, _C1, _C2)),
+    ("conv2_b", (_C2,)),
+    ("dense1_w", (_FLAT, _HIDDEN)),
+    ("dense1_b", (_HIDDEN,)),
+    ("dense2_w", (_HIDDEN, NUM_CLASSES)),
+    ("dense2_b", (NUM_CLASSES,)),
+]
+
+PARAM_COUNT = sum(math.prod(s) for _, s in PARAM_SPEC)
+
+
+def unflatten(flat):
+    """Split the flat f32[P] vector into the PARAM_SPEC dict."""
+    params, off = {}, 0
+    for name, shape in PARAM_SPEC:
+        size = math.prod(shape)
+        params[name] = lax.dynamic_slice_in_dim(flat, off, size).reshape(shape)
+        off += size
+    return params
+
+
+def flatten(params):
+    """Inverse of unflatten."""
+    return jnp.concatenate([params[n].reshape(-1) for n, _ in PARAM_SPEC])
+
+
+# --- Forward pass -----------------------------------------------------------
+
+
+def _conv_block(x, w, b):
+    """3x3 same-conv + bias + relu + 2x2 maxpool (NHWC/HWIO)."""
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = jnp.maximum(y + b[None, None, None, :], 0.0)
+    return lax.reduce_window(
+        y, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(flat, x):
+    """Logits f32[B, NUM_CLASSES] for inputs x f32[B, 32, 32, 1]."""
+    p = unflatten(flat)
+    h = _conv_block(x, p["conv1_w"], p["conv1_b"])
+    h = _conv_block(h, p["conv2_w"], p["conv2_b"])
+    h = h.reshape(h.shape[0], -1)
+    h = dense(h, p["dense1_w"], p["dense1_b"], "relu")   # Pallas hot path
+    return dense(h, p["dense2_w"], p["dense2_b"], "id")  # Pallas hot path
+
+
+# --- Exported entry points --------------------------------------------------
+
+
+def per_example_losses(flat, x, y):
+    """Fused Pallas softmax-xent per example; y is i32[B] labels."""
+    logits = forward(flat, x)
+    onehot = jax.nn.one_hot(y, NUM_CLASSES, dtype=jnp.float32)
+    return softmax_xent(logits, onehot)
+
+
+def train_step(flat, x, y, lr):
+    """One local SGD step.
+
+    Returns (flat', mean_loss, per_example_loss); per-example losses feed
+    Oort/EAFL's statistical utility (Eq. 2) in the Rust coordinator.
+    """
+
+    def loss_fn(f):
+        per_ex = per_example_losses(f, x, y)
+        return jnp.mean(per_ex), per_ex
+
+    (mean_loss, per_ex), grads = jax.value_and_grad(loss_fn, has_aux=True)(flat)
+    return flat - lr * grads, mean_loss, per_ex
+
+
+def eval_step(flat, x, y):
+    """Returns (correct_count i32, mean_loss f32) over one batch."""
+    logits = forward(flat, x)
+    onehot = jax.nn.one_hot(y, NUM_CLASSES, dtype=jnp.float32)
+    loss = jnp.mean(softmax_xent(logits, onehot))
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.int32))
+    return correct, loss
+
+
+def init_params(seed):
+    """He-initialized flat parameter vector from a u32 seed scalar."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in PARAM_SPEC:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            chunks.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            fan_in = math.prod(shape[:-1])
+            std = math.sqrt(2.0 / fan_in)
+            chunks.append(
+                (jax.random.normal(sub, shape, jnp.float32) * std).reshape(-1)
+            )
+    return jnp.concatenate(chunks)

@@ -1,0 +1,58 @@
+"""AOT path: lowered HLO text is well-formed and the manifest is the
+contract the Rust runtime expects."""
+
+import json
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    return aot.build_artifacts()
+
+
+def test_all_entry_points_lowered(artifacts):
+    assert set(artifacts) == {
+        "train_step.hlo.txt",
+        "eval_step.hlo.txt",
+        "init_params.hlo.txt",
+    }
+
+
+def test_hlo_text_well_formed(artifacts):
+    for name, text in artifacts.items():
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        # text interchange, never a serialized proto blob
+        assert "\x00" not in text, name
+
+
+def test_train_step_signature_in_hlo(artifacts):
+    """Parameter/rout shapes are baked into the module text."""
+    text = artifacts["train_step.hlo.txt"]
+    p = model.PARAM_COUNT
+    assert f"f32[{p}]" in text  # flat params in and out
+    assert f"f32[{aot.TRAIN_BATCH},32,32,1]" in text
+    assert f"s32[{aot.TRAIN_BATCH}]" in text
+    assert f"f32[{aot.TRAIN_BATCH}]" in text  # per-example losses
+
+
+def test_eval_step_signature_in_hlo(artifacts):
+    text = artifacts["eval_step.hlo.txt"]
+    assert f"f32[{aot.EVAL_BATCH},32,32,1]" in text
+    assert "s32[]" in text  # correct-count output
+
+
+def test_manifest_contract():
+    m = aot.manifest()
+    assert m["param_count"] == model.PARAM_COUNT
+    assert m["num_classes"] == 35
+    assert m["train_batch"] == 20  # paper §5 batch size
+    spec_total = sum(
+        int(__import__("math").prod(e["shape"])) for e in m["param_spec"]
+    )
+    assert spec_total == m["param_count"]
+    assert set(m["artifacts"]) == {"train_step", "eval_step", "init_params"}
+    json.dumps(m)  # must be JSON-serializable as written

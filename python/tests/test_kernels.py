@@ -1,0 +1,134 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and the activation switch) and asserts
+allclose against ref.py — the core correctness signal for the kernels
+that end up inside the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dense import dense, dense_fwd_kernel, matmul_kernel, pick_blocks
+from compile.kernels.softmax_xent import softmax_xent, softmax_xent_fwd_kernel
+
+jax.config.update("jax_platform_name", "cpu")
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# --- dense ------------------------------------------------------------------
+
+
+@settings(**_SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 160),
+    n=st.integers(1, 90),
+    act=st.sampled_from(["id", "relu"]),
+)
+def test_dense_matches_ref(m, k, n, act):
+    x, w, b = _rand(0, (m, k)), _rand(1, (k, n)), _rand(2, (n,))
+    got = dense_fwd_kernel(x, w, b, activation=act)
+    want = ref.dense_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(**_SETTINGS)
+@given(m=st.integers(1, 40), k=st.integers(1, 128), n=st.integers(1, 70))
+def test_matmul_matches_ref(m, k, n):
+    x, w = _rand(3, (m, k)), _rand(4, (k, n))
+    np.testing.assert_allclose(
+        matmul_kernel(x, w), ref.matmul_ref(x, w), rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("act", ["id", "relu"])
+def test_dense_gradients_match_ref(act):
+    x, w, b = _rand(5, (20, 96)), _rand(6, (96, 48)), _rand(7, (48,))
+
+    def f_kernel(x, w, b):
+        return jnp.sum(dense(x, w, b, act) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.dense_ref(x, w, b, act) ** 2)
+
+    g = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(g, gr):
+        np.testing.assert_allclose(a, e, rtol=5e-4, atol=5e-4)
+
+
+def test_dense_model_shapes_exact():
+    """The exact shapes the speech CNN uses (1024->64, 64->35)."""
+    for (m, k, n) in [(20, 1024, 64), (20, 64, 35), (128, 1024, 64)]:
+        x, w, b = _rand(8, (m, k)), _rand(9, (k, n), 0.05), _rand(10, (n,))
+        np.testing.assert_allclose(
+            dense_fwd_kernel(x, w, b, activation="relu"),
+            ref.dense_ref(x, w, b, "relu"),
+            rtol=2e-5, atol=2e-5,
+        )
+
+
+def test_pick_blocks_vmem_budget():
+    """Chosen tiles keep the f32 working set within the 4 MiB budget."""
+    for (m, n, k) in [(20, 64, 1024), (128, 35, 64), (512, 512, 2048), (8, 8, 8)]:
+        bm, bn = pick_blocks(m, n, k)
+        assert bm >= 1 and bn >= 1
+        working_set = (bm * k + k * bn + bm * bn) * 4
+        assert working_set <= 4 * 1024 * 1024, (m, n, k, bm, bn)
+
+
+def test_dense_relu_clamps_negative():
+    x = -jnp.ones((4, 4), jnp.float32)
+    w = jnp.eye(4, dtype=jnp.float32)
+    b = jnp.zeros((4,), jnp.float32)
+    assert float(jnp.max(dense_fwd_kernel(x, w, b, activation="relu"))) == 0.0
+
+
+# --- softmax_xent -----------------------------------------------------------
+
+
+@settings(**_SETTINGS)
+@given(b=st.integers(1, 64), c=st.integers(2, 200))
+def test_softmax_xent_matches_ref(b, c):
+    logits = _rand(11, (b, c), 3.0)
+    labels = jnp.arange(b, dtype=jnp.int32) % c
+    onehot = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+    got = softmax_xent_fwd_kernel(logits, onehot)
+    want = ref.softmax_xent_ref(logits, onehot)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_softmax_xent_extreme_logits_stable():
+    """Max-subtraction keeps large-magnitude logits finite."""
+    logits = jnp.array([[1e4, -1e4, 0.0], [-1e4, 1e4, 1e4]], jnp.float32)
+    onehot = jax.nn.one_hot(jnp.array([0, 1]), 3, dtype=jnp.float32)
+    loss = softmax_xent_fwd_kernel(logits, onehot)
+    assert bool(jnp.all(jnp.isfinite(loss)))
+    # A perfectly-confident correct prediction has ~0 loss.
+    assert float(loss[0]) < 1e-3
+
+
+def test_softmax_xent_gradient_matches_ref():
+    logits = _rand(12, (20, 35), 2.0)
+    onehot = jax.nn.one_hot(jnp.arange(20) % 35, 35, dtype=jnp.float32)
+    g = jax.grad(lambda l: jnp.mean(softmax_xent(l, onehot)))(logits)
+    gr = jax.grad(lambda l: jnp.mean(ref.softmax_xent_ref(l, onehot)))(logits)
+    np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-5)
+
+
+def test_softmax_xent_uniform_logits_is_log_c():
+    """Zero logits => loss = log(C) exactly (uniform prediction)."""
+    for c in (5, 35, 128):
+        logits = jnp.zeros((3, c), jnp.float32)
+        onehot = jax.nn.one_hot(jnp.array([0, 1, 2]) % c, c, dtype=jnp.float32)
+        loss = softmax_xent_fwd_kernel(logits, onehot)
+        np.testing.assert_allclose(loss, jnp.full((3,), jnp.log(c)), rtol=1e-6)

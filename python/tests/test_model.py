@@ -1,0 +1,109 @@
+"""L2 correctness: speech-CNN model — shapes, packing, learning signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def flat0():
+    return model.init_params(jnp.uint32(7))
+
+
+def _batch(key, n=20):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    x = jax.random.normal(k1, (n, model.INPUT_HW, model.INPUT_HW, 1), jnp.float32)
+    y = jax.random.randint(k2, (n,), 0, model.NUM_CLASSES, jnp.int32)
+    return x, y
+
+
+def test_param_count_matches_spec(flat0):
+    assert flat0.shape == (model.PARAM_COUNT,)
+    total = sum(int(np.prod(s)) for _, s in model.PARAM_SPEC)
+    assert total == model.PARAM_COUNT == 69123
+
+
+def test_flatten_unflatten_roundtrip(flat0):
+    params = model.unflatten(flat0)
+    assert set(params) == {n for n, _ in model.PARAM_SPEC}
+    for name, shape in model.PARAM_SPEC:
+        assert params[name].shape == shape
+    np.testing.assert_array_equal(model.flatten(params), flat0)
+
+
+def test_init_deterministic_and_seed_sensitive():
+    a = model.init_params(jnp.uint32(1))
+    b = model.init_params(jnp.uint32(1))
+    c = model.init_params(jnp.uint32(2))
+    np.testing.assert_array_equal(a, b)
+    assert float(jnp.max(jnp.abs(a - c))) > 0.0
+
+
+def test_biases_init_to_zero(flat0):
+    params = model.unflatten(flat0)
+    for name, _ in model.PARAM_SPEC:
+        if name.endswith("_b"):
+            np.testing.assert_array_equal(params[name], 0.0)
+
+
+def test_forward_shapes(flat0):
+    x, _ = _batch(0)
+    logits = model.forward(flat0, x)
+    assert logits.shape == (20, model.NUM_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_log_c(flat0):
+    """Fresh random init ~= uniform predictor => mean loss ~ log(35)."""
+    x, y = _batch(1, n=64)
+    _, loss = model.eval_step(flat0, x, y)
+    assert 0.3 * np.log(35) < float(loss) < 4.0 * np.log(35)
+
+
+def test_train_step_decreases_loss(flat0):
+    x, y = _batch(2)
+    flat, lr = flat0, jnp.float32(0.05)
+    flat, first, _ = model.train_step(flat, x, y, lr)
+    for _ in range(15):
+        flat, loss, per_ex = model.train_step(flat, x, y, lr)
+    assert float(loss) < float(first) * 0.7
+    assert per_ex.shape == (20,)
+    np.testing.assert_allclose(float(jnp.mean(per_ex)), float(loss), rtol=1e-5)
+
+
+def test_train_step_overfits_tiny_batch(flat0):
+    """Real learning signal: memorize 8 samples to near-zero loss."""
+    x, y = _batch(3, n=20)
+    flat = flat0
+    for _ in range(120):
+        flat, loss, _ = model.train_step(flat, x, y, jnp.float32(0.1))
+    assert float(loss) < 0.2
+    correct, _ = model.eval_step(flat, x, y)
+    assert int(correct) >= 18
+
+
+def test_eval_step_counts_correct(flat0):
+    x, y = _batch(4, n=128)
+    correct, loss = model.eval_step(flat0, x, y)
+    assert 0 <= int(correct) <= 128
+    assert float(loss) > 0.0
+
+
+def test_per_example_losses_nonnegative(flat0):
+    x, y = _batch(5)
+    per_ex = model.per_example_losses(flat0, x, y)
+    assert per_ex.shape == (20,)
+    assert bool(jnp.all(per_ex >= 0.0))
+
+
+def test_gradient_is_descent_direction(flat0):
+    """One SGD step with small lr strictly reduces loss on the same batch."""
+    x, y = _batch(6)
+    flat1, loss0, _ = model.train_step(flat0, x, y, jnp.float32(0.01))
+    _, loss1, _ = model.train_step(flat1, x, y, jnp.float32(0.01))
+    assert float(loss1) < float(loss0)

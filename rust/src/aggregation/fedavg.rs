@@ -1,0 +1,58 @@
+//! FedAvg (McMahan et al., AISTATS'17): the global model becomes the
+//! sample-weighted mean of the completing clients' parameters.
+
+use anyhow::{ensure, Result};
+
+use super::{weighted_mean, Aggregator, ClientUpdate};
+
+/// Stateless sample-weighted averaging.
+pub struct FedAvg;
+
+impl Aggregator for FedAvg {
+    fn aggregate(&mut self, global: &mut [f32], updates: &[ClientUpdate]) -> Result<()> {
+        ensure!(!updates.is_empty(), "FedAvg needs at least one update");
+        for u in updates {
+            ensure!(u.params.len() == global.len(), "update length mismatch");
+        }
+        let mut mean = vec![0.0f32; global.len()];
+        weighted_mean(updates, &mut mean);
+        global.copy_from_slice(&mean);
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_client_replaces_global() {
+        let mut global = vec![0.0, 0.0];
+        let updates = vec![ClientUpdate { params: vec![1.0, 2.0], weight: 5.0 }];
+        FedAvg.aggregate(&mut global, &updates).unwrap();
+        assert_eq!(global, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn equal_weights_average() {
+        let mut global = vec![9.0];
+        let updates = vec![
+            ClientUpdate { params: vec![2.0], weight: 1.0 },
+            ClientUpdate { params: vec![4.0], weight: 1.0 },
+        ];
+        FedAvg.aggregate(&mut global, &updates).unwrap();
+        assert!((global[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_empty_and_mismatched() {
+        let mut global = vec![0.0];
+        assert!(FedAvg.aggregate(&mut global, &[]).is_err());
+        let bad = vec![ClientUpdate { params: vec![1.0, 2.0], weight: 1.0 }];
+        assert!(FedAvg.aggregate(&mut global, &bad).is_err());
+    }
+}

@@ -1,0 +1,92 @@
+//! Server-side aggregation over flat f32 parameter vectors.
+//!
+//! The paper's §5 setup uses YoGi (Ramaswamy et al. / Reddi et al.,
+//! "Adaptive Federated Optimization") as the aggregation algorithm; we
+//! also provide classic sample-weighted FedAvg as the baseline rule.
+
+mod fedavg;
+mod yogi;
+
+pub use fedavg::FedAvg;
+pub use yogi::Yogi;
+
+use anyhow::Result;
+
+use crate::config::AggregatorKind;
+
+/// One completing client's contribution to a round.
+#[derive(Debug, Clone)]
+pub struct ClientUpdate {
+    /// The client's locally-updated flat parameter vector.
+    pub params: Vec<f32>,
+    /// Aggregation weight (sample count |B_i|).
+    pub weight: f64,
+}
+
+/// Server aggregation rule: folds completing clients' updates into the
+/// global flat parameter vector in place.
+pub trait Aggregator: Send {
+    /// Apply one round of updates. `updates` is non-empty and every
+    /// vector has `global.len()` elements.
+    fn aggregate(&mut self, global: &mut [f32], updates: &[ClientUpdate]) -> Result<()>;
+
+    /// Human-readable name for logs.
+    fn name(&self) -> &'static str;
+}
+
+/// Instantiate the configured aggregator for `param_count` parameters.
+pub fn make_aggregator(kind: AggregatorKind, param_count: usize, server_lr: f32) -> Box<dyn Aggregator> {
+    match kind {
+        AggregatorKind::FedAvg => Box::new(FedAvg),
+        AggregatorKind::Yogi => Box::new(Yogi::new(param_count, server_lr)),
+    }
+}
+
+/// Sample-weighted mean of client parameter vectors (shared helper).
+pub(crate) fn weighted_mean(updates: &[ClientUpdate], out: &mut [f32]) {
+    debug_assert!(!updates.is_empty());
+    let total: f64 = updates.iter().map(|u| u.weight).sum();
+    let total = if total > 0.0 { total } else { updates.len() as f64 };
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for u in updates {
+        let w = (if u.weight > 0.0 { u.weight } else { 1.0 } / total) as f32;
+        debug_assert_eq!(u.params.len(), out.len());
+        for (o, &p) in out.iter_mut().zip(&u.params) {
+            *o += w * p;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_mean_respects_weights() {
+        let updates = vec![
+            ClientUpdate { params: vec![0.0, 0.0], weight: 1.0 },
+            ClientUpdate { params: vec![3.0, 6.0], weight: 2.0 },
+        ];
+        let mut out = vec![0.0; 2];
+        weighted_mean(&updates, &mut out);
+        assert!((out[0] - 2.0).abs() < 1e-6);
+        assert!((out[1] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_weights_fall_back_to_uniform() {
+        let updates = vec![
+            ClientUpdate { params: vec![1.0], weight: 0.0 },
+            ClientUpdate { params: vec![3.0], weight: 0.0 },
+        ];
+        let mut out = vec![0.0; 1];
+        weighted_mean(&updates, &mut out);
+        assert!((out[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn factory_constructs_both() {
+        assert_eq!(make_aggregator(AggregatorKind::FedAvg, 4, 0.1).name(), "fedavg");
+        assert_eq!(make_aggregator(AggregatorKind::Yogi, 4, 0.1).name(), "yogi");
+    }
+}

@@ -1,0 +1,129 @@
+//! YoGi server optimizer (Reddi et al., "Adaptive Federated
+//! Optimization"; used in production FL per Ramaswamy et al. — the
+//! paper's §5 aggregation algorithm).
+//!
+//! Treats the round's (weighted-mean-update − global) difference as a
+//! pseudo-gradient Δ and applies the YoGi adaptive rule:
+//!
+//!   m ←  β₁ m + (1−β₁) Δ
+//!   v ←  v − (1−β₂) Δ² · sign(v − Δ²)        (YoGi's additive variant)
+//!   w ←  w + η · m / (√v + τ)
+//!
+//! YoGi's v-update is the key difference from Adam: v moves toward Δ²
+//! additively, which keeps the effective LR stable under the sparse /
+//! heterogeneous client updates typical of FL.
+
+use anyhow::{ensure, Result};
+
+use super::{weighted_mean, Aggregator, ClientUpdate};
+
+/// YoGi state: first/second moment per parameter.
+pub struct Yogi {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    /// Server learning rate η.
+    pub eta: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    /// Adaptivity floor τ.
+    pub tau: f32,
+    scratch: Vec<f32>,
+}
+
+impl Yogi {
+    pub fn new(param_count: usize, eta: f32) -> Self {
+        Self {
+            m: vec![0.0; param_count],
+            // Reddi et al. initialize v to τ² (adaptivity floor squared).
+            v: vec![1e-6; param_count],
+            eta,
+            beta1: 0.9,
+            beta2: 0.99,
+            tau: 1e-3,
+            scratch: vec![0.0; param_count],
+        }
+    }
+}
+
+impl Aggregator for Yogi {
+    fn aggregate(&mut self, global: &mut [f32], updates: &[ClientUpdate]) -> Result<()> {
+        ensure!(!updates.is_empty(), "YoGi needs at least one update");
+        ensure!(global.len() == self.m.len(), "YoGi state/param length mismatch");
+        for u in updates {
+            ensure!(u.params.len() == global.len(), "update length mismatch");
+        }
+        weighted_mean(updates, &mut self.scratch);
+        for i in 0..global.len() {
+            let delta = self.scratch[i] - global[i]; // pseudo-gradient
+            let d2 = delta * delta;
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * delta;
+            self.v[i] -= (1.0 - self.beta2) * d2 * (self.v[i] - d2).signum();
+            global[i] += self.eta * self.m[i] / (self.v[i].max(0.0).sqrt() + self.tau);
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "yogi"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upd(params: Vec<f32>) -> ClientUpdate {
+        ClientUpdate { params, weight: 1.0 }
+    }
+
+    #[test]
+    fn moves_toward_client_consensus() {
+        let mut y = Yogi::new(2, 0.5);
+        let mut global = vec![0.0, 0.0];
+        for _ in 0..200 {
+            y.aggregate(&mut global, &[upd(vec![1.0, -1.0])]).unwrap();
+        }
+        assert!(global[0] > 0.5, "global {global:?} should approach +1");
+        assert!(global[1] < -0.5, "global {global:?} should approach -1");
+    }
+
+    #[test]
+    fn zero_delta_is_stationary_with_zero_momentum() {
+        let mut y = Yogi::new(1, 0.5);
+        let mut global = vec![2.0];
+        y.aggregate(&mut global, &[upd(vec![2.0])]).unwrap();
+        // Δ = 0 ⇒ m stays 0 ⇒ no movement.
+        assert!((global[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_carries_past_updates() {
+        let mut y = Yogi::new(1, 0.1);
+        let mut global = vec![0.0];
+        y.aggregate(&mut global, &[upd(vec![1.0])]).unwrap();
+        let after_first = global[0];
+        // Client now agrees with server; momentum still pushes.
+        let frozen = global.clone();
+        y.aggregate(&mut global, &[upd(frozen)]).unwrap();
+        assert!(global[0] > after_first);
+    }
+
+    #[test]
+    fn v_stays_nonnegative_under_alternating_deltas() {
+        let mut y = Yogi::new(1, 0.1);
+        let mut global = vec![0.0];
+        for i in 0..100 {
+            let target = if i % 2 == 0 { 5.0 } else { -5.0 };
+            y.aggregate(&mut global, &[upd(vec![target])]).unwrap();
+            assert!(y.v[0] >= 0.0, "v must stay non-negative");
+            assert!(global[0].is_finite());
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_lengths() {
+        let mut y = Yogi::new(3, 0.1);
+        let mut global = vec![0.0; 2];
+        assert!(y.aggregate(&mut global, &[upd(vec![0.0, 0.0])]).is_err());
+    }
+}

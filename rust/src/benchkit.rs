@@ -1,0 +1,187 @@
+//! Minimal benchmarking harness (offline stand-in for criterion).
+//!
+//! Auto-calibrates iteration counts to a target measurement time, runs
+//! warmup + measured batches, and reports min/mean/median/p95 per
+//! iteration. Used by every target in `benches/` (declared with
+//! `harness = false`).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark's timing statistics (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iterations: u64,
+    pub min_ns: f64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} iters  min {:>12}  mean {:>12}  median {:>12}  p95 {:>12}",
+            self.name,
+            self.iterations,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+        );
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a fixed time budget per benchmark.
+pub struct Bench {
+    /// Target total measurement time.
+    pub measure_time: Duration,
+    /// Warmup time before measuring.
+    pub warmup_time: Duration,
+    /// Number of measured batches (samples).
+    pub samples: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self {
+            measure_time: Duration::from_secs(2),
+            warmup_time: Duration::from_millis(300),
+            samples: 20,
+            results: Vec::new(),
+        }
+    }
+
+    /// Quick harness for heavy end-to-end benches.
+    pub fn heavy() -> Self {
+        Self {
+            measure_time: Duration::from_secs(4),
+            warmup_time: Duration::from_millis(0),
+            samples: 3,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchStats {
+        // Warmup + calibration: how many iterations fit in a batch?
+        let calib_start = Instant::now();
+        let mut calib_iters = 0u64;
+        loop {
+            f();
+            calib_iters += 1;
+            if calib_start.elapsed() >= self.warmup_time.max(Duration::from_millis(50)) {
+                break;
+            }
+        }
+        let per_iter = calib_start.elapsed().as_secs_f64() / calib_iters as f64;
+        let budget_per_sample = self.measure_time.as_secs_f64() / self.samples as f64;
+        let iters_per_sample = ((budget_per_sample / per_iter).ceil() as u64).max(1);
+
+        // Measured batches.
+        let mut batch_ns: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            batch_ns.push(t0.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+        }
+        batch_ns.sort_by(f64::total_cmp);
+        let stats = BenchStats {
+            name: name.to_string(),
+            iterations: iters_per_sample * self.samples as u64,
+            min_ns: batch_ns[0],
+            mean_ns: batch_ns.iter().sum::<f64>() / batch_ns.len() as f64,
+            median_ns: batch_ns[batch_ns.len() / 2],
+            p95_ns: batch_ns[((batch_ns.len() as f64 * 0.95) as usize).min(batch_ns.len() - 1)],
+        };
+        stats.report();
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Run a function once and report its wall time (for long
+    /// end-to-end benches where iteration is meaningless).
+    pub fn run_once<T, F: FnOnce() -> T>(&mut self, name: &str, f: F) -> T {
+        let t0 = Instant::now();
+        let out = black_box(f());
+        let ns = t0.elapsed().as_nanos() as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            iterations: 1,
+            min_ns: ns,
+            mean_ns: ns,
+            median_ns: ns,
+            p95_ns: ns,
+        };
+        stats.report();
+        self.results.push(stats);
+        out
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+/// Re-export for benches to keep the optimizer honest.
+pub use std::hint::black_box as bb;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench {
+            measure_time: Duration::from_millis(80),
+            warmup_time: Duration::from_millis(10),
+            samples: 4,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        let stats = b.run("noop-ish", || {
+            acc = bb(acc.wrapping_add(1));
+        });
+        assert!(stats.min_ns > 0.0);
+        assert!(stats.p95_ns >= stats.median_ns);
+        assert!(stats.iterations > 0);
+    }
+
+    #[test]
+    fn run_once_returns_value() {
+        let mut b = Bench::heavy();
+        let v = b.run_once("compute", || 21 * 2);
+        assert_eq!(v, 42);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

@@ -1,0 +1,636 @@
+//! Experiment configuration: typed structs + TOML-subset codec (see
+//! `util::toml` — the build is offline, so the codec is in-tree).
+//!
+//! Every knob of the simulation is here so that the paper's experiments
+//! are plain config files and the benches/examples construct variants
+//! programmatically. Defaults reproduce the paper's §5 setup: lr = 0.05,
+//! batch = 20, K = 10 participants/round, f = 0.25, non-IID 4-of-35
+//! labels per client.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::toml::{TomlDoc, TomlWriter};
+
+/// Which participant-selection policy the coordinator runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectorKind {
+    /// Uniform random over eligible clients (paper's "Random").
+    Random,
+    /// Oort guided selection (Lai et al., OSDI'21) — utility Eq. (2).
+    Oort,
+    /// EAFL — Oort utility blended with remaining battery, Eq. (1).
+    Eafl,
+}
+
+impl std::fmt::Display for SelectorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SelectorKind::Random => write!(f, "random"),
+            SelectorKind::Oort => write!(f, "oort"),
+            SelectorKind::Eafl => write!(f, "eafl"),
+        }
+    }
+}
+
+impl std::str::FromStr for SelectorKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "random" => Ok(Self::Random),
+            "oort" => Ok(Self::Oort),
+            "eafl" => Ok(Self::Eafl),
+            other => bail!("unknown selector {other:?} (random|oort|eafl)"),
+        }
+    }
+}
+
+/// Server-side aggregation rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggregatorKind {
+    /// Sample-weighted parameter averaging (McMahan et al.).
+    FedAvg,
+    /// YoGi adaptive server optimizer over the pseudo-gradient
+    /// (paper §5 uses YoGi, per Reddi et al. / Ramaswamy et al.).
+    Yogi,
+}
+
+impl std::fmt::Display for AggregatorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AggregatorKind::FedAvg => write!(f, "fedavg"),
+            AggregatorKind::Yogi => write!(f, "yogi"),
+        }
+    }
+}
+
+impl std::str::FromStr for AggregatorKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fedavg" => Ok(Self::FedAvg),
+            "yogi" => Ok(Self::Yogi),
+            other => bail!("unknown aggregator {other:?} (fedavg|yogi)"),
+        }
+    }
+}
+
+/// Federation-level parameters (paper §5 "Experimental Setup").
+#[derive(Debug, Clone, PartialEq)]
+pub struct FederationConfig {
+    /// Total client population N.
+    pub num_clients: usize,
+    /// Participants per round K (paper: 10).
+    pub participants_per_round: usize,
+    /// Total training rounds (paper: 500).
+    pub rounds: usize,
+    /// Minimum fraction of K that must report for a round to commit
+    /// (FedScale-style round-failure threshold).
+    pub min_report_fraction: f64,
+    /// Evaluate the global model every this many rounds.
+    pub eval_interval: usize,
+    /// Aggregation rule.
+    pub aggregator: AggregatorKind,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        Self {
+            num_clients: 200,
+            participants_per_round: 10,
+            rounds: 500,
+            min_report_fraction: 0.5,
+            eval_interval: 10,
+            aggregator: AggregatorKind::Yogi,
+        }
+    }
+}
+
+/// Local-training parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainingConfig {
+    /// Client learning rate (paper: 0.05).
+    pub learning_rate: f32,
+    /// Local SGD steps per selected client per round.
+    pub local_steps: usize,
+    /// Server learning rate for YoGi.
+    pub server_learning_rate: f32,
+    /// Model init seed.
+    pub init_seed: u32,
+}
+
+impl Default for TrainingConfig {
+    fn default() -> Self {
+        Self { learning_rate: 0.05, local_steps: 5, server_learning_rate: 0.05, init_seed: 42 }
+    }
+}
+
+/// Selector-specific knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelectorConfig {
+    pub kind: SelectorKind,
+    /// EAFL's f in Eq. (1): reward = f·Util + (1−f)·power. Paper: 0.25.
+    pub eafl_f: f64,
+    /// Oort exploration fraction at round 1 (decays to `min_explore`).
+    pub explore_init: f64,
+    /// Exploration decay factor per round.
+    pub explore_decay: f64,
+    /// Exploration floor.
+    pub min_explore: f64,
+    /// Oort α: straggler penalty exponent in Eq. (2).
+    pub alpha: f64,
+    /// UCB confidence weight on rounds-since-last-selection.
+    pub ucb_weight: f64,
+    /// Pacer: target round duration percentile among candidate speeds.
+    pub pacer_percentile: f64,
+    /// Pacer: seconds added to the deadline when utility stalls.
+    pub pacer_step_s: f64,
+    /// Clients below this battery fraction are ineligible (safety floor;
+    /// mirrors mobile OSes refusing background work on low battery).
+    pub min_battery_frac: f64,
+}
+
+impl Default for SelectorConfig {
+    fn default() -> Self {
+        Self {
+            kind: SelectorKind::Eafl,
+            eafl_f: 0.25,
+            explore_init: 0.9,
+            explore_decay: 0.98,
+            min_explore: 0.2,
+            alpha: 2.0,
+            ucb_weight: 0.1,
+            pacer_percentile: 0.8,
+            pacer_step_s: 10.0,
+            min_battery_frac: 0.02,
+        }
+    }
+}
+
+/// Synthetic speech-commands dataset + non-IID partition (paper §5
+/// "Data Partitioning": each learner gets a random 10% of the labels —
+/// 4 of 35 — with uniform sample counts).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataConfig {
+    /// Labels each client holds (paper: 4 of 35).
+    pub labels_per_client: usize,
+    /// Per-client sample count is uniform in [min_samples, max_samples].
+    pub min_samples: usize,
+    pub max_samples: usize,
+    /// Local minibatch size B (paper: 20). Must equal the AOT artifact's
+    /// baked train batch.
+    pub batch_size: usize,
+    /// Held-out IID test-set size.
+    pub test_samples: usize,
+    /// Feature-noise stddev (class templates are unit-scale).
+    pub noise_std: f32,
+    /// Dataset/partition RNG seed.
+    pub seed: u64,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        Self {
+            labels_per_client: 4,
+            min_samples: 60,
+            max_samples: 240,
+            batch_size: 20,
+            test_samples: 1024,
+            noise_std: 0.6,
+            seed: 7,
+        }
+    }
+}
+
+/// Device-population mix and battery behaviour.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceConfig {
+    /// Fractions of high/mid/low-end devices (Table 2 tiers); must sum
+    /// to ~1.
+    pub tier_fractions: [f64; 3],
+    /// Initial battery fraction is uniform in [min_init, max_init].
+    pub min_init_battery: f64,
+    pub max_init_battery: f64,
+    /// Idle drain in battery-fraction per hour for unselected devices.
+    pub idle_drain_per_hour: f64,
+    /// Normal-usage (screen-on) drain in fraction/hour.
+    pub busy_drain_per_hour: f64,
+    /// Probability an unselected device is in the busy state.
+    pub busy_probability: f64,
+    /// If > 0, a dead device returns after this many hours at this
+    /// recharge fraction (0 disables recovery — paper's harsh scenario).
+    pub recharge_after_hours: f64,
+    pub recharge_to_fraction: f64,
+    /// Trace RNG seed.
+    pub seed: u64,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        Self {
+            tier_fractions: [0.25, 0.40, 0.35],
+            min_init_battery: 0.25,
+            max_init_battery: 1.0,
+            idle_drain_per_hour: 0.005,
+            busy_drain_per_hour: 0.04,
+            busy_probability: 0.3,
+            recharge_after_hours: 0.0,
+            recharge_to_fraction: 0.8,
+            seed: 13,
+        }
+    }
+}
+
+/// Network trace generation (MobiPerf substitute, DESIGN.md §2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkConfig {
+    /// Fraction of clients on WiFi (rest on 3G/cellular).
+    pub wifi_fraction: f64,
+    /// Log-normal medians (Mbps) per medium.
+    pub wifi_down_mbps: f64,
+    pub wifi_up_mbps: f64,
+    pub cell_down_mbps: f64,
+    pub cell_up_mbps: f64,
+    /// Log-normal sigma (spread) of bandwidth draws.
+    pub sigma: f64,
+    pub seed: u64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        Self {
+            wifi_fraction: 0.6,
+            wifi_down_mbps: 20.0,
+            wifi_up_mbps: 8.0,
+            cell_down_mbps: 6.0,
+            cell_up_mbps: 2.0,
+            sigma: 0.6,
+            seed: 17,
+        }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExperimentConfig {
+    /// Experiment name (used in output file names).
+    pub name: String,
+    pub federation: FederationConfig,
+    pub training: TrainingConfig,
+    pub selector: SelectorConfig,
+    pub data: DataConfig,
+    pub devices: DeviceConfig,
+    pub network: NetworkConfig,
+}
+
+impl ExperimentConfig {
+    /// Paper §5 defaults with a given selector.
+    pub fn paper_default(kind: SelectorKind) -> Self {
+        let mut c = Self::default();
+        c.selector.kind = kind;
+        c.name = format!("paper-{kind}");
+        c
+    }
+
+    /// A small/fast configuration for tests and smoke runs.
+    pub fn smoke(kind: SelectorKind) -> Self {
+        let mut c = Self::paper_default(kind);
+        c.name = format!("smoke-{kind}");
+        c.federation.num_clients = 40;
+        c.federation.rounds = 30;
+        c.federation.eval_interval = 5;
+        c.data.min_samples = 20;
+        c.data.max_samples = 60;
+        c.data.test_samples = 256;
+        c
+    }
+
+    pub fn from_toml_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        let cfg = Self::from_toml(&text)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse from TOML text. Missing keys fall back to defaults, so
+    /// partial configs (just the overrides) are valid.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text).context("parsing TOML config")?;
+        let mut c = Self::default();
+        if let Some(v) = doc.get_str("name") {
+            c.name = v.to_string();
+        }
+
+        let f = &mut c.federation;
+        if let Some(v) = doc.get_usize("federation.num_clients") {
+            f.num_clients = v;
+        }
+        if let Some(v) = doc.get_usize("federation.participants_per_round") {
+            f.participants_per_round = v;
+        }
+        if let Some(v) = doc.get_usize("federation.rounds") {
+            f.rounds = v;
+        }
+        if let Some(v) = doc.get_f64("federation.min_report_fraction") {
+            f.min_report_fraction = v;
+        }
+        if let Some(v) = doc.get_usize("federation.eval_interval") {
+            f.eval_interval = v;
+        }
+        if let Some(v) = doc.get_str("federation.aggregator") {
+            f.aggregator = v.parse()?;
+        }
+
+        let t = &mut c.training;
+        if let Some(v) = doc.get_f32("training.learning_rate") {
+            t.learning_rate = v;
+        }
+        if let Some(v) = doc.get_usize("training.local_steps") {
+            t.local_steps = v;
+        }
+        if let Some(v) = doc.get_f32("training.server_learning_rate") {
+            t.server_learning_rate = v;
+        }
+        if let Some(v) = doc.get_u32("training.init_seed") {
+            t.init_seed = v;
+        }
+
+        let s = &mut c.selector;
+        if let Some(v) = doc.get_str("selector.kind") {
+            s.kind = v.parse()?;
+        }
+        if let Some(v) = doc.get_f64("selector.eafl_f") {
+            s.eafl_f = v;
+        }
+        if let Some(v) = doc.get_f64("selector.explore_init") {
+            s.explore_init = v;
+        }
+        if let Some(v) = doc.get_f64("selector.explore_decay") {
+            s.explore_decay = v;
+        }
+        if let Some(v) = doc.get_f64("selector.min_explore") {
+            s.min_explore = v;
+        }
+        if let Some(v) = doc.get_f64("selector.alpha") {
+            s.alpha = v;
+        }
+        if let Some(v) = doc.get_f64("selector.ucb_weight") {
+            s.ucb_weight = v;
+        }
+        if let Some(v) = doc.get_f64("selector.pacer_percentile") {
+            s.pacer_percentile = v;
+        }
+        if let Some(v) = doc.get_f64("selector.pacer_step_s") {
+            s.pacer_step_s = v;
+        }
+        if let Some(v) = doc.get_f64("selector.min_battery_frac") {
+            s.min_battery_frac = v;
+        }
+
+        let d = &mut c.data;
+        if let Some(v) = doc.get_usize("data.labels_per_client") {
+            d.labels_per_client = v;
+        }
+        if let Some(v) = doc.get_usize("data.min_samples") {
+            d.min_samples = v;
+        }
+        if let Some(v) = doc.get_usize("data.max_samples") {
+            d.max_samples = v;
+        }
+        if let Some(v) = doc.get_usize("data.batch_size") {
+            d.batch_size = v;
+        }
+        if let Some(v) = doc.get_usize("data.test_samples") {
+            d.test_samples = v;
+        }
+        if let Some(v) = doc.get_f32("data.noise_std") {
+            d.noise_std = v;
+        }
+        if let Some(v) = doc.get_u64("data.seed") {
+            d.seed = v;
+        }
+
+        let dev = &mut c.devices;
+        if let Some(v) = doc.get_num_array("devices.tier_fractions") {
+            ensure!(v.len() == 3, "devices.tier_fractions must have 3 entries");
+            dev.tier_fractions = [v[0], v[1], v[2]];
+        }
+        if let Some(v) = doc.get_f64("devices.min_init_battery") {
+            dev.min_init_battery = v;
+        }
+        if let Some(v) = doc.get_f64("devices.max_init_battery") {
+            dev.max_init_battery = v;
+        }
+        if let Some(v) = doc.get_f64("devices.idle_drain_per_hour") {
+            dev.idle_drain_per_hour = v;
+        }
+        if let Some(v) = doc.get_f64("devices.busy_drain_per_hour") {
+            dev.busy_drain_per_hour = v;
+        }
+        if let Some(v) = doc.get_f64("devices.busy_probability") {
+            dev.busy_probability = v;
+        }
+        if let Some(v) = doc.get_f64("devices.recharge_after_hours") {
+            dev.recharge_after_hours = v;
+        }
+        if let Some(v) = doc.get_f64("devices.recharge_to_fraction") {
+            dev.recharge_to_fraction = v;
+        }
+        if let Some(v) = doc.get_u64("devices.seed") {
+            dev.seed = v;
+        }
+
+        let n = &mut c.network;
+        if let Some(v) = doc.get_f64("network.wifi_fraction") {
+            n.wifi_fraction = v;
+        }
+        if let Some(v) = doc.get_f64("network.wifi_down_mbps") {
+            n.wifi_down_mbps = v;
+        }
+        if let Some(v) = doc.get_f64("network.wifi_up_mbps") {
+            n.wifi_up_mbps = v;
+        }
+        if let Some(v) = doc.get_f64("network.cell_down_mbps") {
+            n.cell_down_mbps = v;
+        }
+        if let Some(v) = doc.get_f64("network.cell_up_mbps") {
+            n.cell_up_mbps = v;
+        }
+        if let Some(v) = doc.get_f64("network.sigma") {
+            n.sigma = v;
+        }
+        if let Some(v) = doc.get_u64("network.seed") {
+            n.seed = v;
+        }
+
+        Ok(c)
+    }
+
+    pub fn to_toml(&self) -> String {
+        // f32 -> f64 via decimal shortest-repr so 0.05f32 emits as
+        // "0.05", not "0.05000000074505806".
+        fn f32d(v: f32) -> f64 {
+            v.to_string().parse().unwrap_or(v as f64)
+        }
+        let mut w = TomlWriter::new();
+        w.str("name", &self.name);
+
+        w.table("federation");
+        w.num("num_clients", self.federation.num_clients as f64)
+            .num("participants_per_round", self.federation.participants_per_round as f64)
+            .num("rounds", self.federation.rounds as f64)
+            .num("min_report_fraction", self.federation.min_report_fraction)
+            .num("eval_interval", self.federation.eval_interval as f64)
+            .str("aggregator", &self.federation.aggregator.to_string());
+
+        w.table("training");
+        w.num("learning_rate", f32d(self.training.learning_rate))
+            .num("local_steps", self.training.local_steps as f64)
+            .num("server_learning_rate", f32d(self.training.server_learning_rate))
+            .num("init_seed", self.training.init_seed as f64);
+
+        w.table("selector");
+        w.str("kind", &self.selector.kind.to_string())
+            .num("eafl_f", self.selector.eafl_f)
+            .num("explore_init", self.selector.explore_init)
+            .num("explore_decay", self.selector.explore_decay)
+            .num("min_explore", self.selector.min_explore)
+            .num("alpha", self.selector.alpha)
+            .num("ucb_weight", self.selector.ucb_weight)
+            .num("pacer_percentile", self.selector.pacer_percentile)
+            .num("pacer_step_s", self.selector.pacer_step_s)
+            .num("min_battery_frac", self.selector.min_battery_frac);
+
+        w.table("data");
+        w.num("labels_per_client", self.data.labels_per_client as f64)
+            .num("min_samples", self.data.min_samples as f64)
+            .num("max_samples", self.data.max_samples as f64)
+            .num("batch_size", self.data.batch_size as f64)
+            .num("test_samples", self.data.test_samples as f64)
+            .num("noise_std", f32d(self.data.noise_std))
+            .num("seed", self.data.seed as f64);
+
+        w.table("devices");
+        w.num_array("tier_fractions", &self.devices.tier_fractions)
+            .num("min_init_battery", self.devices.min_init_battery)
+            .num("max_init_battery", self.devices.max_init_battery)
+            .num("idle_drain_per_hour", self.devices.idle_drain_per_hour)
+            .num("busy_drain_per_hour", self.devices.busy_drain_per_hour)
+            .num("busy_probability", self.devices.busy_probability)
+            .num("recharge_after_hours", self.devices.recharge_after_hours)
+            .num("recharge_to_fraction", self.devices.recharge_to_fraction)
+            .num("seed", self.devices.seed as f64);
+
+        w.table("network");
+        w.num("wifi_fraction", self.network.wifi_fraction)
+            .num("wifi_down_mbps", self.network.wifi_down_mbps)
+            .num("wifi_up_mbps", self.network.wifi_up_mbps)
+            .num("cell_down_mbps", self.network.cell_down_mbps)
+            .num("cell_up_mbps", self.network.cell_up_mbps)
+            .num("sigma", self.network.sigma)
+            .num("seed", self.network.seed as f64);
+
+        w.finish()
+    }
+
+    /// Sanity checks; call after construction or deserialization.
+    pub fn validate(&self) -> Result<()> {
+        let f = &self.federation;
+        ensure!(f.num_clients > 0, "num_clients must be > 0");
+        ensure!(
+            f.participants_per_round > 0 && f.participants_per_round <= f.num_clients,
+            "participants_per_round must be in 1..=num_clients"
+        );
+        ensure!(f.rounds > 0, "rounds must be > 0");
+        ensure!(
+            (0.0..=1.0).contains(&f.min_report_fraction),
+            "min_report_fraction must be in [0,1]"
+        );
+        ensure!(f.eval_interval > 0, "eval_interval must be > 0");
+        ensure!(self.training.learning_rate > 0.0, "learning_rate must be > 0");
+        ensure!(self.training.local_steps > 0, "local_steps must be > 0");
+        ensure!((0.0..=1.0).contains(&self.selector.eafl_f), "eafl_f must be in [0,1]");
+        let tiers: f64 = self.devices.tier_fractions.iter().sum();
+        ensure!((tiers - 1.0).abs() < 1e-6, "tier_fractions must sum to 1 (got {tiers})");
+        ensure!(
+            self.devices.min_init_battery <= self.devices.max_init_battery
+                && self.devices.min_init_battery >= 0.0
+                && self.devices.max_init_battery <= 1.0,
+            "init battery range must satisfy 0 <= min <= max <= 1"
+        );
+        ensure!(self.data.labels_per_client >= 1, "labels_per_client must be >= 1");
+        ensure!(
+            self.data.min_samples <= self.data.max_samples && self.data.min_samples > 0,
+            "sample range must satisfy 0 < min <= max"
+        );
+        ensure!((0.0..=1.0).contains(&self.network.wifi_fraction), "wifi_fraction in [0,1]");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_section5() {
+        let c = ExperimentConfig::paper_default(SelectorKind::Eafl);
+        assert_eq!(c.training.learning_rate, 0.05);
+        assert_eq!(c.data.batch_size, 20);
+        assert_eq!(c.federation.participants_per_round, 10);
+        assert_eq!(c.federation.rounds, 500);
+        assert_eq!(c.selector.eafl_f, 0.25);
+        assert_eq!(c.data.labels_per_client, 4);
+        assert_eq!(c.federation.aggregator, AggregatorKind::Yogi);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_roundtrip_exact() {
+        let mut c = ExperimentConfig::paper_default(SelectorKind::Oort);
+        c.devices.recharge_after_hours = 2.5;
+        c.network.sigma = 0.33;
+        let text = c.to_toml();
+        let back = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn partial_toml_uses_defaults() {
+        let cfg =
+            ExperimentConfig::from_toml("[selector]\nkind = \"oort\"\n").unwrap();
+        assert_eq!(cfg.selector.kind, SelectorKind::Oort);
+        assert_eq!(cfg.federation.participants_per_round, 10);
+        assert_eq!(cfg.data.batch_size, 20);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mut c = ExperimentConfig::default();
+        c.federation.participants_per_round = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.selector.eafl_f = 1.5;
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.devices.tier_fractions = [0.5, 0.5, 0.5];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn selector_kind_parses() {
+        assert_eq!("eafl".parse::<SelectorKind>().unwrap(), SelectorKind::Eafl);
+        assert_eq!("OORT".parse::<SelectorKind>().unwrap(), SelectorKind::Oort);
+        assert!("bogus".parse::<SelectorKind>().is_err());
+    }
+
+    #[test]
+    fn bad_tier_array_len_rejected_at_parse() {
+        let text = "[devices]\ntier_fractions = [0.5, 0.5]\n";
+        assert!(ExperimentConfig::from_toml(text).is_err());
+    }
+}

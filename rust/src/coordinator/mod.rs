@@ -1,0 +1,9 @@
+//! Layer-3 coordinator — the FL server loop that is the paper's system
+//! surface: client registry, per-round selection → dispatch → simulate
+//! → train → aggregate → account energy → metrics.
+
+mod registry;
+mod server;
+
+pub use registry::{ClientState, ClientStats, Registry};
+pub use server::Coordinator;

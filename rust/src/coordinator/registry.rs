@@ -1,0 +1,254 @@
+//! Client registry: per-client device + link + battery + data shard +
+//! utility statistics. The coordinator's source of truth — selectors
+//! see read-only [`Candidate`] projections built here (paper Fig. 2:
+//! the coordinator "registers each client's profile ... and forwards
+//! the characteristics to the server running EAFL").
+
+
+use crate::config::ExperimentConfig;
+use crate::data::{partition_clients, ClientShard};
+use crate::device::{generate_profiles, Battery, DeviceProfile};
+use crate::energy::RoundEnergy;
+use crate::network::{generate_links, LinkProfile};
+use crate::selection::Candidate;
+
+/// Mutable per-client selection statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ClientStats {
+    /// Last measured Oort statistical utility (None = unexplored).
+    pub stat_util: Option<f64>,
+    /// Last measured participation duration, seconds.
+    pub measured_duration_s: Option<f64>,
+    /// Round of last selection (0 = never).
+    pub last_selected_round: u64,
+    pub times_selected: u64,
+    pub times_completed: u64,
+    /// Consecutive deadline misses (Oort-style blacklist trigger).
+    pub consecutive_misses: u32,
+    /// Client is ineligible until this round (exclusive).
+    pub banned_until_round: u64,
+}
+
+/// One registered client.
+#[derive(Debug, Clone)]
+pub struct ClientState {
+    pub id: usize,
+    pub device: DeviceProfile,
+    pub link: LinkProfile,
+    pub battery: Battery,
+    pub shard: ClientShard,
+    pub stats: ClientStats,
+}
+
+impl ClientState {
+    /// Seconds of local compute for `local_steps` steps of `batch`.
+    pub fn compute_secs(&self, local_steps: usize, batch: usize) -> f64 {
+        (local_steps * batch) as f64 / self.device.samples_per_sec
+    }
+
+    /// Estimated full-round duration: download + compute + upload.
+    pub fn expected_duration_s(
+        &self,
+        payload_bytes: usize,
+        local_steps: usize,
+        batch: usize,
+    ) -> f64 {
+        self.link.download_secs(payload_bytes)
+            + self.compute_secs(local_steps, batch)
+            + self.link.upload_secs(payload_bytes)
+    }
+
+    /// Projected energy of the next round's participation.
+    pub fn projected_energy(
+        &self,
+        payload_bytes: usize,
+        local_steps: usize,
+        batch: usize,
+    ) -> RoundEnergy {
+        RoundEnergy::for_participation(
+            &self.device.spec,
+            &self.link,
+            payload_bytes,
+            self.compute_secs(local_steps, batch),
+        )
+    }
+}
+
+/// The full client population.
+pub struct Registry {
+    pub clients: Vec<ClientState>,
+    /// Model payload exchanged each round (flat params as f32 bytes).
+    pub payload_bytes: usize,
+}
+
+impl Registry {
+    /// Build the population from the experiment config: device traces,
+    /// link traces and the non-IID partition are all seeded and merged
+    /// 1:1 by client index.
+    pub fn build(cfg: &ExperimentConfig, num_classes: usize, param_count: usize) -> Self {
+        let n = cfg.federation.num_clients;
+        let devices = generate_profiles(&cfg.devices, n);
+        let links = generate_links(&cfg.network, n);
+        let partition = partition_clients(&cfg.data, num_classes, n);
+        let clients = devices
+            .into_iter()
+            .zip(links)
+            .zip(partition.shards)
+            .enumerate()
+            .map(|(id, ((device, link), shard))| {
+                let battery = Battery::new(&device.spec, device.init_battery_frac);
+                ClientState { id, device, link, battery, shard, stats: ClientStats::default() }
+            })
+            .collect();
+        Self { clients, payload_bytes: param_count * 4 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clients.is_empty()
+    }
+
+    /// Clients currently alive (battery not dead).
+    pub fn alive_count(&self) -> usize {
+        self.clients.iter().filter(|c| c.battery.is_alive()).count()
+    }
+
+    /// Clients whose battery has died so far (Fig. 4a's cumulative
+    /// drop-out count).
+    pub fn dead_count(&self) -> usize {
+        self.len() - self.alive_count()
+    }
+
+    /// Mean battery fraction over alive clients (1.0 if none alive).
+    pub fn mean_battery_alive(&self) -> f64 {
+        let alive: Vec<f64> = self
+            .clients
+            .iter()
+            .filter(|c| c.battery.is_alive())
+            .map(|c| c.battery.fraction())
+            .collect();
+        if alive.is_empty() {
+            0.0
+        } else {
+            alive.iter().sum::<f64>() / alive.len() as f64
+        }
+    }
+
+    /// Total FL energy drawn across the population, joules.
+    pub fn total_fl_energy_j(&self) -> f64 {
+        self.clients.iter().map(|c| c.battery.fl_energy_j).sum()
+    }
+
+    /// Per-client selection counts (Jain's fairness input).
+    pub fn selection_counts(&self) -> Vec<u64> {
+        self.clients.iter().map(|c| c.stats.times_selected).collect()
+    }
+
+    /// Build selector candidates: alive clients above the battery
+    /// floor and not blacklisted, with timing and energy projections
+    /// attached. `round` is the upcoming round (1-based).
+    pub fn candidates(
+        &self,
+        round: u64,
+        min_battery_frac: f64,
+        local_steps: usize,
+        batch: usize,
+    ) -> Vec<Candidate> {
+        self.clients
+            .iter()
+            .filter(|c| {
+                c.battery.is_alive()
+                    && c.battery.fraction() > min_battery_frac
+                    && c.stats.banned_until_round <= round
+            })
+            .map(|c| {
+                let energy =
+                    c.projected_energy(self.payload_bytes, local_steps, batch).total();
+                Candidate {
+                    id: c.id,
+                    stat_util: c.stats.stat_util,
+                    measured_duration_s: c.stats.measured_duration_s,
+                    expected_duration_s: c.expected_duration_s(
+                        self.payload_bytes,
+                        local_steps,
+                        batch,
+                    ),
+                    last_selected_round: c.stats.last_selected_round,
+                    battery_frac: c.battery.fraction(),
+                    projected_drain_frac: energy / c.battery.capacity_joules(),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SelectorKind;
+
+    fn registry() -> Registry {
+        let cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+        Registry::build(&cfg, 35, 1000)
+    }
+
+    #[test]
+    fn build_merges_profiles_one_to_one() {
+        let r = registry();
+        assert_eq!(r.len(), 40);
+        assert_eq!(r.payload_bytes, 4000);
+        for (i, c) in r.clients.iter().enumerate() {
+            assert_eq!(c.id, i);
+            assert!(!c.shard.samples.is_empty());
+            assert!(c.battery.is_alive());
+        }
+    }
+
+    #[test]
+    fn expected_duration_decomposes() {
+        let r = registry();
+        let c = &r.clients[0];
+        let d = c.expected_duration_s(r.payload_bytes, 5, 20);
+        let manual = c.link.download_secs(r.payload_bytes)
+            + c.compute_secs(5, 20)
+            + c.link.upload_secs(r.payload_bytes);
+        assert!((d - manual).abs() < 1e-12);
+        assert!(d > 0.0);
+    }
+
+    #[test]
+    fn candidates_respect_battery_floor() {
+        let mut r = registry();
+        // Kill half the clients.
+        let cap = r.clients[0].battery.capacity_joules();
+        for c in r.clients.iter_mut().take(20) {
+            c.battery.drain_fl(cap * 2.0, 0.0);
+        }
+        let cands = r.candidates(1, 0.02, 5, 20);
+        assert!(cands.len() <= 20);
+        assert!(cands.iter().all(|c| c.battery_frac > 0.02));
+        assert_eq!(r.dead_count(), 20);
+    }
+
+    #[test]
+    fn projections_are_positive_fractions() {
+        let r = registry();
+        for cand in r.candidates(1, 0.0, 5, 20) {
+            assert!(cand.projected_drain_frac > 0.0);
+            assert!(cand.projected_drain_frac < 1.0, "one round must not eat a full battery");
+            assert!((0.0..=1.0).contains(&cand.battery_frac));
+        }
+    }
+
+    #[test]
+    fn selection_counts_track_stats() {
+        let mut r = registry();
+        r.clients[3].stats.times_selected = 7;
+        let counts = r.selection_counts();
+        assert_eq!(counts[3], 7);
+        assert_eq!(counts.iter().sum::<u64>(), 7);
+    }
+}

@@ -1,0 +1,14 @@
+//! Data substrate: the Google-Speech-Commands substitute (DESIGN.md §2)
+//! and the paper's §5 non-IID partition (each learner holds a random
+//! ~10% of the labels — 4 of 35 — with uniform sample counts).
+
+mod partition;
+mod synthetic;
+
+pub use partition::{partition_clients, ClientShard, Partition};
+pub use synthetic::SyntheticSpeech;
+
+/// A sample reference: (class label, per-class sample index). Features
+/// are generated on demand — the dataset is procedural, nothing is
+/// stored.
+pub type SampleRef = (u16, u32);

@@ -1,0 +1,149 @@
+//! Non-IID client partition — paper §5 "Data Partitioning": each
+//! learner is assigned samples from a random 10% of the labels (4 of
+//! 35) while per-learner sample counts are uniform.
+
+use crate::util::rng::Rng;
+
+use crate::config::DataConfig;
+
+use super::SampleRef;
+
+/// One client's local dataset.
+#[derive(Debug, Clone)]
+pub struct ClientShard {
+    /// The labels this client holds (paper: 4 of 35).
+    pub labels: Vec<u16>,
+    /// Sample references into the procedural dataset.
+    pub samples: Vec<SampleRef>,
+    /// Client-specific channel gain applied to every feature map
+    /// (system-level heterogeneity beyond label skew).
+    pub channel_gain: f32,
+}
+
+/// The full partition: per-client shards + IID test set.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub shards: Vec<ClientShard>,
+    pub test: Vec<SampleRef>,
+}
+
+/// Deterministically partition `num_clients` clients per `cfg`.
+///
+/// Per-class sample indices are globally unique (a per-class counter),
+/// so no two clients share a sample — disjoint local datasets, as in
+/// a real federation.
+pub fn partition_clients(
+    cfg: &DataConfig,
+    num_classes: usize,
+    num_clients: usize,
+) -> Partition {
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ 0xBEEF);
+    let mut next_index = vec![0u32; num_classes];
+    let labels_per_client = cfg.labels_per_client.min(num_classes);
+    let shards = (0..num_clients)
+        .map(|_| {
+            let labels = {
+                let mut all: Vec<u16> = (0..num_classes as u16).collect();
+                rng.shuffle(&mut all);
+                let mut l = all[..labels_per_client].to_vec();
+                l.sort_unstable();
+                l
+            };
+            let n = rng.gen_range_usize(cfg.min_samples, cfg.max_samples);
+            let samples = (0..n)
+                .map(|_| {
+                    let &class = rng.choose(&labels).expect("labels non-empty");
+                    let idx = next_index[class as usize];
+                    next_index[class as usize] += 1;
+                    (class, idx)
+                })
+                .collect();
+            let channel_gain = rng.gen_range_f32(0.8, 1.2);
+            ClientShard { labels, samples, channel_gain }
+        })
+        .collect();
+
+    // Test refs live in a disjoint index range (>= 1e6, see synthetic.rs).
+    let test = (0..cfg.test_samples)
+        .map(|i| ((i % num_classes) as u16, 1_000_000 + (i / num_classes) as u32))
+        .collect();
+
+    Partition { shards, test }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DataConfig {
+        DataConfig::default()
+    }
+
+    #[test]
+    fn deterministic_partition() {
+        let a = partition_clients(&cfg(), 35, 20);
+        let b = partition_clients(&cfg(), 35, 20);
+        for (x, y) in a.shards.iter().zip(&b.shards) {
+            assert_eq!(x.labels, y.labels);
+            assert_eq!(x.samples, y.samples);
+        }
+    }
+
+    #[test]
+    fn each_client_has_exactly_4_of_35_labels() {
+        let p = partition_clients(&cfg(), 35, 50);
+        for shard in &p.shards {
+            assert_eq!(shard.labels.len(), 4);
+            let mut dedup = shard.labels.clone();
+            dedup.dedup();
+            assert_eq!(dedup.len(), 4, "labels must be distinct");
+            for &(class, _) in &shard.samples {
+                assert!(shard.labels.contains(&class));
+            }
+        }
+    }
+
+    #[test]
+    fn sample_counts_within_range() {
+        let c = cfg();
+        let p = partition_clients(&c, 35, 100);
+        for shard in &p.shards {
+            assert!((c.min_samples..=c.max_samples).contains(&shard.samples.len()));
+        }
+    }
+
+    #[test]
+    fn samples_are_globally_disjoint() {
+        let p = partition_clients(&cfg(), 35, 60);
+        let mut seen = std::collections::HashSet::new();
+        for shard in &p.shards {
+            for s in &shard.samples {
+                assert!(seen.insert(*s), "duplicate sample {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn test_set_disjoint_from_training() {
+        let p = partition_clients(&cfg(), 35, 60);
+        let train_max = p
+            .shards
+            .iter()
+            .flat_map(|s| s.samples.iter().map(|&(_, i)| i))
+            .max()
+            .unwrap();
+        let test_min = p.test.iter().map(|&(_, i)| i).min().unwrap();
+        assert!(test_min > train_max);
+        assert_eq!(p.test.len(), cfg().test_samples);
+    }
+
+    #[test]
+    fn labels_per_client_clamped_to_num_classes() {
+        let mut c = cfg();
+        c.labels_per_client = 99;
+        let p = partition_clients(&c, 10, 5);
+        for shard in &p.shards {
+            assert_eq!(shard.labels.len(), 10);
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Battery state machine.
+//!
+//! Tracks charge as a fraction of the device's capacity (Table 2 mAh →
+//! joules). Drain sources: training compute (E = P·t), wireless
+//! transfers (Table 1 models via `energy::comm`), and background
+//! idle/busy usage for unselected devices. A device whose battery hits
+//! zero is `Dead` — the paper's client drop-out condition — and stays
+//! dead unless the (optional) recharge model revives it.
+
+
+use super::tier::DeviceSpec;
+
+/// Liveness state of a device's battery.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatteryState {
+    /// Charge above the dead threshold; device can participate.
+    Alive,
+    /// Battery exhausted; device is unavailable (drop-out).
+    Dead,
+}
+
+/// A device battery with charge tracked in joules.
+#[derive(Debug, Clone)]
+pub struct Battery {
+    capacity_j: f64,
+    charge_j: f64,
+    state: BatteryState,
+    /// Cumulative energy drained through FL work (compute + comm), J.
+    pub fl_energy_j: f64,
+    /// Cumulative energy drained through background usage, J.
+    pub background_energy_j: f64,
+    /// Simulation hour at which the battery died (if it did).
+    pub died_at_h: Option<f64>,
+}
+
+impl Battery {
+    /// New battery for `spec`, charged to `fraction` (clamped to [0,1]).
+    pub fn new(spec: &DeviceSpec, fraction: f64) -> Self {
+        let capacity_j = spec.battery_joules();
+        let charge_j = capacity_j * fraction.clamp(0.0, 1.0);
+        Self {
+            capacity_j,
+            charge_j,
+            state: if charge_j > 0.0 { BatteryState::Alive } else { BatteryState::Dead },
+            fl_energy_j: 0.0,
+            background_energy_j: 0.0,
+            died_at_h: None,
+        }
+    }
+
+    pub fn state(&self) -> BatteryState {
+        self.state
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.state == BatteryState::Alive
+    }
+
+    /// Remaining charge as a fraction of capacity in [0, 1].
+    pub fn fraction(&self) -> f64 {
+        (self.charge_j / self.capacity_j).clamp(0.0, 1.0)
+    }
+
+    pub fn charge_joules(&self) -> f64 {
+        self.charge_j
+    }
+
+    pub fn capacity_joules(&self) -> f64 {
+        self.capacity_j
+    }
+
+    /// Whether the battery currently holds at least `energy_j`.
+    pub fn can_supply(&self, energy_j: f64) -> bool {
+        self.is_alive() && self.charge_j >= energy_j
+    }
+
+    /// Drain `energy_j` of FL work at simulation time `now_h`.
+    ///
+    /// Returns the fraction of the request that was actually supplied
+    /// (< 1.0 means the battery died partway — the paper's mid-round
+    /// drop-out). Negative requests are treated as zero.
+    pub fn drain_fl(&mut self, energy_j: f64, now_h: f64) -> f64 {
+        self.drain(energy_j, now_h, true)
+    }
+
+    /// Drain background (idle/busy) energy at time `now_h`.
+    pub fn drain_background(&mut self, energy_j: f64, now_h: f64) -> f64 {
+        self.drain(energy_j, now_h, false)
+    }
+
+    fn drain(&mut self, energy_j: f64, now_h: f64, fl: bool) -> f64 {
+        if self.state == BatteryState::Dead {
+            return 0.0;
+        }
+        let req = energy_j.max(0.0);
+        let supplied = req.min(self.charge_j);
+        self.charge_j -= supplied;
+        if fl {
+            self.fl_energy_j += supplied;
+        } else {
+            self.background_energy_j += supplied;
+        }
+        if self.charge_j <= f64::EPSILON {
+            self.charge_j = 0.0;
+            self.state = BatteryState::Dead;
+            self.died_at_h = Some(now_h);
+        }
+        if req == 0.0 {
+            1.0
+        } else {
+            supplied / req
+        }
+    }
+
+    /// Recharge to `fraction` of capacity and revive (recharge model).
+    pub fn recharge_to(&mut self, fraction: f64) {
+        self.charge_j = self.capacity_j * fraction.clamp(0.0, 1.0);
+        if self.charge_j > 0.0 {
+            self.state = BatteryState::Alive;
+            self.died_at_h = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::tier::Tier;
+
+    fn batt(frac: f64) -> Battery {
+        Battery::new(&DeviceSpec::for_tier(Tier::Low), frac)
+    }
+
+    #[test]
+    fn full_drain_kills_device() {
+        let mut b = batt(1.0);
+        let cap = b.capacity_joules();
+        assert_eq!(b.drain_fl(cap * 2.0, 5.0), 0.5); // only half supplied
+        assert_eq!(b.state(), BatteryState::Dead);
+        assert_eq!(b.died_at_h, Some(5.0));
+        assert_eq!(b.fraction(), 0.0);
+    }
+
+    #[test]
+    fn partial_drain_keeps_alive() {
+        let mut b = batt(1.0);
+        let cap = b.capacity_joules();
+        assert_eq!(b.drain_fl(cap * 0.25, 1.0), 1.0);
+        assert!(b.is_alive());
+        assert!((b.fraction() - 0.75).abs() < 1e-12);
+        assert!((b.fl_energy_j - cap * 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dead_battery_supplies_nothing() {
+        let mut b = batt(0.0);
+        assert_eq!(b.state(), BatteryState::Dead);
+        assert_eq!(b.drain_fl(10.0, 0.0), 0.0);
+        assert_eq!(b.drain_background(10.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn background_and_fl_accounted_separately() {
+        let mut b = batt(1.0);
+        b.drain_fl(100.0, 0.0);
+        b.drain_background(50.0, 0.0);
+        assert_eq!(b.fl_energy_j, 100.0);
+        assert_eq!(b.background_energy_j, 50.0);
+    }
+
+    #[test]
+    fn recharge_revives() {
+        let mut b = batt(0.01);
+        b.drain_fl(b.capacity_joules(), 2.0);
+        assert!(!b.is_alive());
+        b.recharge_to(0.8);
+        assert!(b.is_alive());
+        assert!((b.fraction() - 0.8).abs() < 1e-12);
+        assert_eq!(b.died_at_h, None);
+    }
+
+    #[test]
+    fn negative_request_is_noop() {
+        let mut b = batt(0.5);
+        let before = b.charge_joules();
+        assert_eq!(b.drain_fl(-5.0, 0.0), 1.0);
+        assert_eq!(b.charge_joules(), before);
+    }
+}

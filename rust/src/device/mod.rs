@@ -1,0 +1,10 @@
+//! Device substrate: hardware tiers (paper Table 2), battery state, and
+//! the AI-Benchmark-substitute trace generator (DESIGN.md §2).
+
+mod battery;
+mod tier;
+mod traces;
+
+pub use battery::{Battery, BatteryState};
+pub use tier::{DeviceSpec, Tier, ALL_TIERS};
+pub use traces::{generate_profiles, DeviceProfile};

@@ -1,0 +1,125 @@
+//! Paper Table 2 — the three representative devices and their measured
+//! specs (average power from GFXBench, per the paper):
+//!
+//! | Device                         | Avg Power | Perf/W      | RAM | Battery |
+//! |--------------------------------|-----------|-------------|-----|---------|
+//! | Huawei Mate 10 (Kirin 970)     | 6.33 W    | 5.94 fps/W  | 4GB | 4000mAh |
+//! | Nexus 6P (Snapdragon 810 v2.1) | 5.44 W    | 4.03 fps/W  | 3GB | 3450mAh |
+//! | Huawei P9 (Kirin 955)          | 2.98 W    | 3.55 fps/W  | 3GB | 3000mAh |
+
+
+/// Nominal Li-ion cell voltage used to convert mAh to energy.
+pub const NOMINAL_VOLTAGE: f64 = 3.7;
+
+/// Performance tier of an edge device (paper clusters AI-Benchmark
+/// profiles into exactly these three).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tier {
+    High,
+    Mid,
+    Low,
+}
+
+pub const ALL_TIERS: [Tier; 3] = [Tier::High, Tier::Mid, Tier::Low];
+
+/// Static hardware specification for one device tier (Table 2 row).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceSpec {
+    pub tier: Tier,
+    /// Representative handset name.
+    pub model: &'static str,
+    /// Average power draw under training load, watts (GFXBench).
+    pub avg_power_w: f64,
+    /// Throughput efficiency, fps/W (GFXBench); used to derive relative
+    /// compute speed across tiers.
+    pub perf_per_watt: f64,
+    /// RAM in GB (informational; gates nothing in this model).
+    pub ram_gb: f64,
+    /// Battery capacity, mAh.
+    pub battery_mah: f64,
+}
+
+impl DeviceSpec {
+    /// Table 2 row for a tier.
+    pub const fn for_tier(tier: Tier) -> Self {
+        match tier {
+            Tier::High => DeviceSpec {
+                tier: Tier::High,
+                model: "Huawei Mate 10 (Kirin 970)",
+                avg_power_w: 6.33,
+                perf_per_watt: 5.94,
+                ram_gb: 4.0,
+                battery_mah: 4000.0,
+            },
+            Tier::Mid => DeviceSpec {
+                tier: Tier::Mid,
+                model: "Nexus 6P (Snapdragon 810 v2.1)",
+                avg_power_w: 5.44,
+                perf_per_watt: 4.03,
+                ram_gb: 3.0,
+                battery_mah: 3450.0,
+            },
+            Tier::Low => DeviceSpec {
+                tier: Tier::Low,
+                model: "Huawei P9 (Kirin 955)",
+                avg_power_w: 2.98,
+                perf_per_watt: 3.55,
+                ram_gb: 3.0,
+                battery_mah: 3000.0,
+            },
+        }
+    }
+
+    /// Battery capacity in joules (mAh × 3.7 V × 3.6 J/mWh).
+    pub fn battery_joules(&self) -> f64 {
+        self.battery_mah * NOMINAL_VOLTAGE * 3.6
+    }
+
+    /// Effective training throughput proxy (fps): power × fps/W.
+    /// Normalizing to the low tier gives each tier's relative speed.
+    pub fn throughput_fps(&self) -> f64 {
+        self.avg_power_w * self.perf_per_watt
+    }
+
+    /// Compute speed relative to the LOW tier (≥ 1.0).
+    pub fn relative_speed(&self) -> f64 {
+        self.throughput_fps() / DeviceSpec::for_tier(Tier::Low).throughput_fps()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values_pinned() {
+        let hi = DeviceSpec::for_tier(Tier::High);
+        assert_eq!(hi.avg_power_w, 6.33);
+        assert_eq!(hi.perf_per_watt, 5.94);
+        assert_eq!(hi.battery_mah, 4000.0);
+        let mid = DeviceSpec::for_tier(Tier::Mid);
+        assert_eq!(mid.avg_power_w, 5.44);
+        assert_eq!(mid.perf_per_watt, 4.03);
+        assert_eq!(mid.battery_mah, 3450.0);
+        let lo = DeviceSpec::for_tier(Tier::Low);
+        assert_eq!(lo.avg_power_w, 2.98);
+        assert_eq!(lo.perf_per_watt, 3.55);
+        assert_eq!(lo.battery_mah, 3000.0);
+    }
+
+    #[test]
+    fn battery_energy_conversion() {
+        // 4000 mAh * 3.7 V = 14.8 Wh = 53 280 J
+        let j = DeviceSpec::for_tier(Tier::High).battery_joules();
+        assert!((j - 53_280.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tier_ordering_by_speed() {
+        let hi = DeviceSpec::for_tier(Tier::High).relative_speed();
+        let mid = DeviceSpec::for_tier(Tier::Mid).relative_speed();
+        let lo = DeviceSpec::for_tier(Tier::Low).relative_speed();
+        assert!(hi > mid && mid > lo);
+        assert!((lo - 1.0).abs() < 1e-12);
+    }
+}

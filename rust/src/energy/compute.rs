@@ -1,0 +1,121 @@
+//! Computation energy (paper §4.2): `E_comp = P × t`, with `P` the
+//! tier's average training power (Table 2) and `t` the time spent in
+//! local training — plus the background idle/busy model the paper uses
+//! for unselected devices.
+
+
+use crate::device::DeviceSpec;
+use crate::energy::comm::{comm_energy_joules, CommDirection};
+use crate::network::LinkProfile;
+
+/// Energy (J) for `train_secs` of on-device training on `spec`.
+pub fn compute_energy_joules(spec: &DeviceSpec, train_secs: f64) -> f64 {
+    spec.avg_power_w * train_secs.max(0.0)
+}
+
+/// Background energy (J) for an *unselected* device over `hours`.
+///
+/// `drain_frac_per_hour` is expressed as battery-fraction/hour (config
+/// knob), so the joules depend on the device's own capacity — bigger
+/// batteries spend more joules for the same fractional drain, matching
+/// how per-hour percentage figures are quoted in practice.
+pub fn background_energy_joules(
+    spec: &DeviceSpec,
+    drain_frac_per_hour: f64,
+    hours: f64,
+) -> f64 {
+    spec.battery_joules() * drain_frac_per_hour.max(0.0) * hours.max(0.0)
+}
+
+/// Full energy breakdown for one client's participation in one round.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundEnergy {
+    pub download_j: f64,
+    pub compute_j: f64,
+    pub upload_j: f64,
+}
+
+impl RoundEnergy {
+    /// Energy for: download model (`payload_bytes`), train `train_secs`,
+    /// upload update (`payload_bytes`) — the paper's step 1/2/3 costs.
+    pub fn for_participation(
+        spec: &DeviceSpec,
+        link: &LinkProfile,
+        payload_bytes: usize,
+        train_secs: f64,
+    ) -> Self {
+        let down_secs = link.download_secs(payload_bytes);
+        let up_secs = link.upload_secs(payload_bytes);
+        Self {
+            download_j: comm_energy_joules(link.medium, CommDirection::Download, down_secs),
+            compute_j: compute_energy_joules(spec, train_secs),
+            upload_j: comm_energy_joules(link.medium, CommDirection::Upload, up_secs),
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.download_j + self.compute_j + self.upload_j
+    }
+}
+
+/// Convenience: energy split at an interruption `frac` of the way
+/// through the round (download → compute → upload order). Used when a
+/// battery dies mid-round to attribute partial energy.
+pub fn partial_round_energy(e: &RoundEnergy, frac: f64) -> f64 {
+    e.total() * frac.clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Tier;
+    use crate::network::Medium;
+
+    fn link() -> LinkProfile {
+        LinkProfile { medium: Medium::Wifi, down_mbps: 8.0, up_mbps: 4.0 }
+    }
+
+    #[test]
+    fn compute_energy_is_p_times_t() {
+        let hi = DeviceSpec::for_tier(Tier::High);
+        // 6.33 W for 100 s = 633 J
+        assert!((compute_energy_joules(&hi, 100.0) - 633.0).abs() < 1e-9);
+        assert_eq!(compute_energy_joules(&hi, -5.0), 0.0);
+    }
+
+    #[test]
+    fn high_tier_burns_more_than_low_for_same_time() {
+        let hi = DeviceSpec::for_tier(Tier::High);
+        let lo = DeviceSpec::for_tier(Tier::Low);
+        assert!(compute_energy_joules(&hi, 60.0) > compute_energy_joules(&lo, 60.0));
+    }
+
+    #[test]
+    fn background_scales_with_capacity_and_time() {
+        let hi = DeviceSpec::for_tier(Tier::High);
+        let lo = DeviceSpec::for_tier(Tier::Low);
+        let e_hi = background_energy_joules(&hi, 0.01, 2.0);
+        let e_lo = background_energy_joules(&lo, 0.01, 2.0);
+        assert!(e_hi > e_lo);
+        assert!((e_hi - hi.battery_joules() * 0.02).abs() < 1e-9);
+    }
+
+    #[test]
+    fn round_energy_components_positive() {
+        let spec = DeviceSpec::for_tier(Tier::Mid);
+        // 280 KB model payload, 5 minutes of training.
+        let e = RoundEnergy::for_participation(&spec, &link(), 280_000, 300.0);
+        assert!(e.compute_j > 0.0);
+        assert!(e.download_j >= 0.0 && e.upload_j >= 0.0);
+        assert!((e.compute_j - 5.44 * 300.0).abs() < 1e-9);
+        assert!(e.total() >= e.compute_j);
+    }
+
+    #[test]
+    fn partial_energy_clamped() {
+        let e = RoundEnergy { download_j: 10.0, compute_j: 80.0, upload_j: 10.0 };
+        assert_eq!(partial_round_energy(&e, 0.5), 50.0);
+        assert_eq!(partial_round_energy(&e, 2.0), 100.0);
+        assert_eq!(partial_round_energy(&e, -1.0), 0.0);
+    }
+}

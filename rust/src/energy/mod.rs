@@ -1,0 +1,12 @@
+//! Energy substrate — the paper's §4.2 consumption model.
+//!
+//! Two drain sources for selected clients: local **computation**
+//! (E = P·t, per-tier power from Table 2) and wireless **communication**
+//! (Table 1's linear battery-%-vs-hours models), plus background
+//! idle/busy drain for unselected devices.
+
+mod comm;
+mod compute;
+
+pub use comm::{comm_energy_joules, comm_energy_percent, CommDirection, HTC_DESIRE_HD_JOULES};
+pub use compute::{background_energy_joules, compute_energy_joules, RoundEnergy};

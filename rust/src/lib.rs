@@ -1,0 +1,35 @@
+//! # EAFL — Energy-Aware Federated Learning on Battery-Powered Clients
+//!
+//! Rust + JAX + Pallas reproduction of *"EAFL: Towards Energy-Aware
+//! Federated Learning on Battery-Powered Edge Devices"* (Arouj &
+//! Abdelmoniem, FedEdge @ MobiCom'22).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!  - **Layer 3 (this crate)** — the FL coordinator: client selection
+//!    (Random / Oort / EAFL), event-driven device simulation, energy and
+//!    battery accounting, aggregation (FedAvg / YoGi), metrics.
+//!  - **Layer 2** — JAX speech-CNN fwd/bwd, AOT-lowered to HLO text at
+//!    build time (`make artifacts`), executed here via PJRT.
+//!  - **Layer 1** — Pallas kernels (fused dense, fused softmax-xent)
+//!    inlined into the Layer-2 HLO.
+//!
+//! Python never runs on the request path: the `eafl` binary is
+//! self-contained once `artifacts/` exists.
+
+pub mod aggregation;
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod energy;
+pub mod metrics;
+pub mod network;
+pub mod runtime;
+pub mod selection;
+pub mod sim;
+pub mod training;
+pub mod util;
+
+pub use config::ExperimentConfig;
+pub use coordinator::Coordinator;

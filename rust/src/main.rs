@@ -1,0 +1,224 @@
+//! `eafl` — leader entrypoint & CLI (hand-rolled arg parsing; the
+//! build is offline, see DESIGN.md §2).
+//!
+//! Subcommands:
+//!   run          one experiment (selector × config) → CSV + summary JSON
+//!   compare      EAFL vs Oort vs Random under one seed (the paper's
+//!                headline comparison, Figs. 3 & 4)
+//!   gen-config   write the paper-default TOML config
+//!   energy-table print the Table 1 / Table 2 reproduction
+//!
+//! Python never runs here: the binary loads `artifacts/*.hlo.txt`
+//! produced once by `make artifacts`.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use eafl::config::{ExperimentConfig, SelectorKind};
+use eafl::coordinator::Coordinator;
+use eafl::device::{DeviceSpec, ALL_TIERS};
+use eafl::energy::{comm_energy_percent, CommDirection};
+use eafl::metrics::Summary;
+use eafl::network::Medium;
+use eafl::runtime::{MockRuntime, ModelRuntime, XlaRuntime};
+
+const USAGE: &str = "\
+eafl — energy-aware federated learning (MobiCom'22 FedEdge reproduction)
+
+USAGE:
+  eafl run [--config FILE] [--selector random|oort|eafl] [--rounds N]
+           [--clients N] [--f F] [--out DIR] [--mock]
+  eafl compare [--config FILE] [--rounds N] [--clients N] [--out DIR] [--mock]
+  eafl gen-config [--out FILE]
+  eafl energy-table
+  eafl help
+
+  --mock uses the analytic mock runtime instead of the PJRT artifacts
+  (fast; coordinator dynamics only — no real SGD).
+";
+
+/// Tiny flag parser: `--key value` pairs plus boolean switches.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+    switches: std::collections::HashSet<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], switch_names: &[&str]) -> Result<Self> {
+        let mut flags = std::collections::HashMap::new();
+        let mut switches = std::collections::HashSet::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            let Some(name) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument {arg:?}\n\n{USAGE}");
+            };
+            if switch_names.contains(&name) {
+                switches.insert(name.to_string());
+                i += 1;
+            } else {
+                let value = argv
+                    .get(i + 1)
+                    .with_context(|| format!("--{name} requires a value"))?;
+                flags.insert(name.to_string(), value.clone());
+                i += 2;
+            }
+        }
+        Ok(Self { flags, switches })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("invalid --{name} {v:?}: {e}")),
+        }
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.switches.contains(name)
+    }
+}
+
+fn load_runtime(mock: bool) -> Result<Box<dyn ModelRuntime>> {
+    if mock {
+        Ok(Box::new(MockRuntime::default()))
+    } else {
+        Ok(Box::new(XlaRuntime::load(&XlaRuntime::default_dir())?))
+    }
+}
+
+fn base_config(args: &Args, kind: SelectorKind) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(p) => ExperimentConfig::from_toml_file(&PathBuf::from(p))?,
+        None => ExperimentConfig::paper_default(kind),
+    };
+    if let Some(r) = args.get_parsed::<usize>("rounds")? {
+        cfg.federation.rounds = r;
+    }
+    if let Some(n) = args.get_parsed::<usize>("clients")? {
+        cfg.federation.num_clients = n;
+    }
+    if let Some(f) = args.get_parsed::<f64>("f")? {
+        cfg.selector.eafl_f = f;
+    }
+    Ok(cfg)
+}
+
+fn run_one(cfg: ExperimentConfig, runtime: &dyn ModelRuntime, out: &PathBuf) -> Result<Summary> {
+    std::fs::create_dir_all(out)?;
+    let name = cfg.name.clone();
+    let log = Coordinator::new(cfg, runtime)?.run()?;
+    log.write_csv(&out.join(format!("{name}.csv")))?;
+    log.write_summary_json(&out.join(format!("{name}.summary.json")))?;
+    Ok(log.summary())
+}
+
+fn print_summary(s: &Summary) {
+    println!(
+        "{:<16} acc={:.4} best={:.4} loss={:.4} fairness={:.3} dropouts={} \
+         rounds={}({} ok) mean_round={:.1}s wall={:.2}h energy={:.1}kJ",
+        s.name,
+        s.final_accuracy,
+        s.best_accuracy,
+        s.final_train_loss,
+        s.final_fairness,
+        s.total_dropouts,
+        s.rounds,
+        s.committed_rounds,
+        s.mean_round_duration_s,
+        s.wall_clock_h,
+        s.total_fl_energy_j / 1000.0,
+    );
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(command) = argv.first().map(String::as_str) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match command {
+        "run" => {
+            let args = Args::parse(rest, &["mock"])?;
+            let kind = args
+                .get_parsed::<SelectorKind>("selector")?
+                .unwrap_or(SelectorKind::Eafl);
+            let mut cfg = base_config(&args, kind)?;
+            cfg.selector.kind = kind;
+            if args.get("config").is_none() {
+                cfg.name = format!("run-{kind}");
+            }
+            cfg.validate()?;
+            let out = PathBuf::from(args.get("out").unwrap_or("results"));
+            let runtime = load_runtime(args.has("mock"))?;
+            let s = run_one(cfg, runtime.as_ref(), &out)?;
+            print_summary(&s);
+        }
+        "compare" => {
+            let args = Args::parse(rest, &["mock"])?;
+            let out = PathBuf::from(args.get("out").unwrap_or("results"));
+            let runtime = load_runtime(args.has("mock"))?;
+            let mut summaries = Vec::new();
+            for kind in [SelectorKind::Eafl, SelectorKind::Oort, SelectorKind::Random] {
+                let mut cfg = base_config(&args, kind)?;
+                cfg.selector.kind = kind;
+                cfg.name = format!("compare-{kind}");
+                cfg.validate()?;
+                summaries.push(run_one(cfg, runtime.as_ref(), &out)?);
+            }
+            println!("\n=== EAFL vs Oort vs Random ===");
+            for s in &summaries {
+                print_summary(s);
+            }
+        }
+        "gen-config" => {
+            let args = Args::parse(rest, &[])?;
+            let cfg = ExperimentConfig::paper_default(SelectorKind::Eafl);
+            let text = cfg.to_toml();
+            match args.get("out") {
+                Some(p) => {
+                    std::fs::write(p, &text)?;
+                    println!("wrote {p}");
+                }
+                None => print!("{text}"),
+            }
+        }
+        "energy-table" => {
+            println!("Table 1 — comm energy (battery-% after 1 h on medium):");
+            for (m, name) in [(Medium::Wifi, "WiFi"), (Medium::Cell3G, "3G  ")] {
+                let d = comm_energy_percent(m, CommDirection::Download, 1.0);
+                let u = comm_energy_percent(m, CommDirection::Upload, 1.0);
+                println!("  {name}  download={d:6.2}%  upload={u:6.2}%");
+            }
+            println!("\nTable 2 — device tiers:");
+            for t in ALL_TIERS {
+                let s = DeviceSpec::for_tier(t);
+                println!(
+                    "  {:?}: {} — {:.2} W, {:.2} fps/W, {:.0} GB RAM, {:.0} mAh ({:.0} kJ)",
+                    t,
+                    s.model,
+                    s.avg_power_w,
+                    s.perf_per_watt,
+                    s.ram_gb,
+                    s.battery_mah,
+                    s.battery_joules() / 1000.0
+                );
+            }
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+    Ok(())
+}

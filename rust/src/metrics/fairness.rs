@@ -1,0 +1,55 @@
+//! Jain's fairness index over per-client selection counts (Fig. 3c):
+//!
+//! J(x) = (Σ x_i)² / (n · Σ x_i²),  J ∈ [1/n, 1]
+//!
+//! J = 1 when every client has participated equally; J → 1/n as
+//! participation concentrates on a single client. The paper plots J
+//! over the whole population as training unwinds.
+
+/// Jain's fairness index of `counts`. Returns 1.0 for an empty or
+/// all-zero population (vacuously fair).
+pub fn jain_index(counts: &[u64]) -> f64 {
+    if counts.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = counts.iter().map(|&c| c as f64).sum();
+    if sum == 0.0 {
+        return 1.0;
+    }
+    let sum_sq: f64 = counts.iter().map(|&c| (c as f64) * (c as f64)).sum();
+    (sum * sum) / (counts.len() as f64 * sum_sq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfectly_equal_is_one() {
+        assert!((jain_index(&[3, 3, 3, 3]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_hog_is_one_over_n() {
+        let j = jain_index(&[10, 0, 0, 0, 0]);
+        assert!((j - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounds_hold() {
+        let counts = [7, 1, 0, 4, 2, 9];
+        let j = jain_index(&counts);
+        assert!(j > 1.0 / counts.len() as f64 && j < 1.0);
+    }
+
+    #[test]
+    fn empty_and_zero_are_vacuously_fair() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0, 0, 0]), 1.0);
+    }
+
+    #[test]
+    fn more_even_is_fairer() {
+        assert!(jain_index(&[5, 5, 4, 6]) > jain_index(&[1, 9, 0, 10]));
+    }
+}

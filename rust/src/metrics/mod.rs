@@ -1,0 +1,8 @@
+//! Metrics: Jain's fairness index, per-round time series, experiment
+//! summaries and CSV/JSON emission — everything Figs. 3 & 4 plot.
+
+mod fairness;
+mod timeseries;
+
+pub use fairness::jain_index;
+pub use timeseries::{MetricsLog, RoundRecord, Summary};

@@ -1,0 +1,257 @@
+//! Per-round experiment time series — one [`RoundRecord`] per committed
+//! (or failed) round, CSV/JSON emission, and end-of-run [`Summary`].
+//! These series ARE the paper's figures: accuracy (3a), train loss
+//! (3b), fairness (3c), cumulative drop-outs (4a), round duration (4b).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One row of the experiment time series.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: u64,
+    /// Simulated wall-clock at round end, hours.
+    pub wall_clock_h: f64,
+    /// Round duration, seconds.
+    pub round_duration_s: f64,
+    /// Clients selected / completed / dropped (battery death mid-round)
+    /// / deadline-missed this round.
+    pub selected: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    pub deadline_missed: usize,
+    /// Whether enough clients reported for the round to commit.
+    pub committed: bool,
+    /// Mean training loss over completing clients (NaN if none).
+    pub train_loss: f64,
+    /// Latest test accuracy in [0,1] (carried between eval points).
+    pub test_accuracy: f64,
+    /// Latest test loss (carried between eval points).
+    pub test_loss: f64,
+    /// Jain's fairness index over all clients' selection counts.
+    pub fairness: f64,
+    /// Cumulative clients whose battery has died (drop-outs, Fig. 4a).
+    pub cumulative_dead: usize,
+    /// Fraction of the population still alive.
+    pub alive_fraction: f64,
+    /// Mean battery fraction over alive clients.
+    pub mean_battery: f64,
+    /// Total FL energy spent so far across the population, joules.
+    pub total_fl_energy_j: f64,
+}
+
+/// End-of-run summary (what the paper quotes in headline numbers).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub rounds: u64,
+    pub wall_clock_h: f64,
+    pub final_accuracy: f64,
+    pub best_accuracy: f64,
+    pub final_train_loss: f64,
+    pub final_fairness: f64,
+    pub total_dropouts: usize,
+    pub total_fl_energy_j: f64,
+    pub mean_round_duration_s: f64,
+    pub committed_rounds: u64,
+    pub failed_rounds: u64,
+}
+
+impl Summary {
+    /// JSON via the in-tree codec (offline build — no serde).
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("rounds".into(), Json::Num(self.rounds as f64));
+        m.insert("wall_clock_h".into(), Json::Num(self.wall_clock_h));
+        m.insert("final_accuracy".into(), Json::Num(self.final_accuracy));
+        m.insert("best_accuracy".into(), Json::Num(self.best_accuracy));
+        m.insert(
+            "final_train_loss".into(),
+            if self.final_train_loss.is_finite() {
+                Json::Num(self.final_train_loss)
+            } else {
+                Json::Null
+            },
+        );
+        m.insert("final_fairness".into(), Json::Num(self.final_fairness));
+        m.insert("total_dropouts".into(), Json::Num(self.total_dropouts as f64));
+        m.insert("total_fl_energy_j".into(), Json::Num(self.total_fl_energy_j));
+        m.insert("mean_round_duration_s".into(), Json::Num(self.mean_round_duration_s));
+        m.insert("committed_rounds".into(), Json::Num(self.committed_rounds as f64));
+        m.insert("failed_rounds".into(), Json::Num(self.failed_rounds as f64));
+        Json::Obj(m)
+    }
+}
+
+/// Accumulating experiment log.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsLog {
+    pub name: String,
+    pub records: Vec<RoundRecord>,
+}
+
+impl MetricsLog {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn last(&self) -> Option<&RoundRecord> {
+        self.records.last()
+    }
+
+    /// CSV with a fixed header (one column per RoundRecord field).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,wall_clock_h,round_duration_s,selected,completed,dropped,\
+             deadline_missed,committed,train_loss,test_accuracy,test_loss,\
+             fairness,cumulative_dead,alive_fraction,mean_battery,total_fl_energy_j\n",
+        );
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{:.6},{:.3},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{},{:.6},{:.6},{:.3}\n",
+                r.round,
+                r.wall_clock_h,
+                r.round_duration_s,
+                r.selected,
+                r.completed,
+                r.dropped,
+                r.deadline_missed,
+                r.committed,
+                r.train_loss,
+                r.test_accuracy,
+                r.test_loss,
+                r.fairness,
+                r.cumulative_dead,
+                r.alive_fraction,
+                r.mean_battery,
+                r.total_fl_energy_j,
+            ));
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+        f.write_all(self.to_csv().as_bytes()).context("writing csv")?;
+        Ok(())
+    }
+
+    /// Compute the end-of-run summary.
+    pub fn summary(&self) -> Summary {
+        let last = self.records.last();
+        let committed = self.records.iter().filter(|r| r.committed).count() as u64;
+        let durations: Vec<f64> = self.records.iter().map(|r| r.round_duration_s).collect();
+        Summary {
+            name: self.name.clone(),
+            rounds: self.records.len() as u64,
+            wall_clock_h: last.map_or(0.0, |r| r.wall_clock_h),
+            final_accuracy: last.map_or(0.0, |r| r.test_accuracy),
+            best_accuracy: self
+                .records
+                .iter()
+                .map(|r| r.test_accuracy)
+                .fold(0.0, f64::max),
+            final_train_loss: last.map_or(f64::NAN, |r| r.train_loss),
+            final_fairness: last.map_or(1.0, |r| r.fairness),
+            total_dropouts: last.map_or(0, |r| r.cumulative_dead),
+            total_fl_energy_j: last.map_or(0.0, |r| r.total_fl_energy_j),
+            mean_round_duration_s: if durations.is_empty() {
+                0.0
+            } else {
+                durations.iter().sum::<f64>() / durations.len() as f64
+            },
+            committed_rounds: committed,
+            failed_rounds: self.records.len() as u64 - committed,
+        }
+    }
+
+    pub fn write_summary_json(&self, path: &Path) -> Result<()> {
+        let text = self.summary().to_json().to_string_pretty();
+        std::fs::write(path, text).with_context(|| format!("writing {path:?}"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: u64, acc: f64, committed: bool) -> RoundRecord {
+        RoundRecord {
+            round,
+            wall_clock_h: round as f64 * 0.1,
+            round_duration_s: 100.0 + round as f64,
+            selected: 10,
+            completed: 8,
+            dropped: 1,
+            deadline_missed: 1,
+            committed,
+            train_loss: 2.0 / (round + 1) as f64,
+            test_accuracy: acc,
+            test_loss: 1.0,
+            fairness: 0.9,
+            cumulative_dead: round as usize,
+            alive_fraction: 0.95,
+            mean_battery: 0.6,
+            total_fl_energy_j: 1000.0 * round as f64,
+        }
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut log = MetricsLog::new("t");
+        log.push(rec(1, 0.1, true));
+        log.push(rec(2, 0.2, false));
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("round,"));
+        assert!(csv.lines().nth(2).unwrap().contains("false"));
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let mut log = MetricsLog::new("exp");
+        log.push(rec(1, 0.3, true));
+        log.push(rec(2, 0.5, true));
+        log.push(rec(3, 0.4, false));
+        let s = log.summary();
+        assert_eq!(s.rounds, 3);
+        assert_eq!(s.best_accuracy, 0.5);
+        assert_eq!(s.final_accuracy, 0.4);
+        assert_eq!(s.committed_rounds, 2);
+        assert_eq!(s.failed_rounds, 1);
+        assert_eq!(s.total_dropouts, 3);
+    }
+
+    #[test]
+    fn empty_log_summary_is_sane() {
+        let s = MetricsLog::new("empty").summary();
+        assert_eq!(s.rounds, 0);
+        assert_eq!(s.final_accuracy, 0.0);
+        assert_eq!(s.mean_round_duration_s, 0.0);
+    }
+
+    #[test]
+    fn csv_roundtrip_file() {
+        let dir = std::env::temp_dir().join(format!("eafl-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut log = MetricsLog::new("t");
+        log.push(rec(1, 0.1, true));
+        let p = dir.join("out.csv");
+        log.write_csv(&p).unwrap();
+        assert!(std::fs::read_to_string(&p).unwrap().contains("0.100000"));
+        log.write_summary_json(&dir.join("s.json")).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(dir.join("s.json")).unwrap()).unwrap();
+        assert_eq!(parsed.field("rounds").unwrap().as_usize(), Some(1));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

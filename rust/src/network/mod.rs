@@ -1,0 +1,129 @@
+//! Network substrate: per-client link profiles (MobiPerf substitute).
+//!
+//! Each client is assigned a communication medium (WiFi or 3G/cellular)
+//! and log-normally distributed down/up bandwidths around configurable
+//! medians. Transfer durations drive both the round timeline and the
+//! Table-1 communication-energy model (which keys on medium + duration).
+
+use crate::util::rng::Rng;
+
+use crate::config::NetworkConfig;
+
+/// Wireless medium (Table 1 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Medium {
+    Wifi,
+    /// Cellular; the paper's Table 1 measured 3G.
+    Cell3G,
+}
+
+/// Per-client link profile.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkProfile {
+    pub medium: Medium,
+    pub down_mbps: f64,
+    pub up_mbps: f64,
+}
+
+impl LinkProfile {
+    /// Seconds to download `bytes` over this link.
+    pub fn download_secs(&self, bytes: usize) -> f64 {
+        transfer_secs(bytes, self.down_mbps)
+    }
+
+    /// Seconds to upload `bytes` over this link.
+    pub fn upload_secs(&self, bytes: usize) -> f64 {
+        transfer_secs(bytes, self.up_mbps)
+    }
+}
+
+/// Seconds to move `bytes` at `mbps` megabits/second.
+pub fn transfer_secs(bytes: usize, mbps: f64) -> f64 {
+    debug_assert!(mbps > 0.0);
+    (bytes as f64 * 8.0) / (mbps * 1e6)
+}
+
+/// Deterministically generate `n` link profiles from the config seed.
+pub fn generate_links(cfg: &NetworkConfig, n: usize) -> Vec<LinkProfile> {
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    // Log-normal around the medium's median; sigma controls the spread.
+    // Floor at 1% of the median so no link is pathologically dead.
+    let draw = |rng: &mut Rng, median: f64, sigma: f64| -> f64 {
+        rng.lognormal(median, sigma).max(median * 0.01)
+    };
+    (0..n)
+        .map(|_| {
+            let medium =
+                if rng.gen_bool(cfg.wifi_fraction) { Medium::Wifi } else { Medium::Cell3G };
+            let (dm, um) = match medium {
+                Medium::Wifi => (cfg.wifi_down_mbps, cfg.wifi_up_mbps),
+                Medium::Cell3G => (cfg.cell_down_mbps, cfg.cell_up_mbps),
+            };
+            LinkProfile {
+                medium,
+                down_mbps: draw(&mut rng, dm, cfg.sigma),
+                up_mbps: draw(&mut rng, um, cfg.sigma),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_math() {
+        // 1 MB at 8 Mbps = 1 second.
+        assert!((transfer_secs(1_000_000, 8.0) - 1.0).abs() < 1e-12);
+        // Larger payloads take proportionally longer.
+        assert!((transfer_secs(2_000_000, 8.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = NetworkConfig::default();
+        let a = generate_links(&cfg, 50);
+        let b = generate_links(&cfg, 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.medium, y.medium);
+            assert_eq!(x.down_mbps, y.down_mbps);
+        }
+    }
+
+    #[test]
+    fn wifi_fraction_respected() {
+        let mut cfg = NetworkConfig::default();
+        cfg.wifi_fraction = 1.0;
+        assert!(generate_links(&cfg, 100).iter().all(|l| l.medium == Medium::Wifi));
+        cfg.wifi_fraction = 0.0;
+        assert!(generate_links(&cfg, 100).iter().all(|l| l.medium == Medium::Cell3G));
+    }
+
+    #[test]
+    fn bandwidths_positive_and_spread() {
+        let cfg = NetworkConfig::default();
+        let links = generate_links(&cfg, 500);
+        assert!(links.iter().all(|l| l.down_mbps > 0.0 && l.up_mbps > 0.0));
+        let downs: Vec<f64> = links.iter().map(|l| l.down_mbps).collect();
+        let min = downs.iter().cloned().fold(f64::MAX, f64::min);
+        let max = downs.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(max > min * 2.0, "log-normal draws should spread: {min}..{max}");
+    }
+
+    #[test]
+    fn wifi_faster_than_cell_in_median() {
+        let cfg = NetworkConfig::default();
+        let links = generate_links(&cfg, 2000);
+        let med = |m: Medium| {
+            let mut v: Vec<f64> = links
+                .iter()
+                .filter(|l| l.medium == m)
+                .map(|l| l.down_mbps)
+                .collect();
+            v.sort_by(f64::total_cmp);
+            v[v.len() / 2]
+        };
+        assert!(med(Medium::Wifi) > med(Medium::Cell3G));
+    }
+}

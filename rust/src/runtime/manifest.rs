@@ -1,0 +1,221 @@
+//! `artifacts/manifest.json` — the shape/packing contract written by
+//! `python -m compile.aot` and consumed here. The flat-parameter packing
+//! order must match `python/compile/model.py::PARAM_SPEC` exactly.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// One named parameter tensor inside the flat vector.
+#[derive(Debug, Clone)]
+pub struct ParamSpecEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpecEntry {
+    /// Number of scalars this entry occupies in the flat vector.
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub param_count: usize,
+    pub num_classes: usize,
+    pub input_hw: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub param_spec: Vec<ParamSpecEntry>,
+    /// entry-point name -> HLO text filename (relative to artifact dir).
+    pub artifacts: HashMap<String, String>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let m = Self::from_json_text(&text).context("parsing manifest.json")?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Parse from JSON text (no validation).
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let usize_field = |key: &str| -> Result<usize> {
+            j.field(key)?
+                .as_usize()
+                .ok_or_else(|| anyhow!("field {key:?} is not a non-negative integer"))
+        };
+        let param_spec = j
+            .field("param_spec")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("param_spec is not an array"))?
+            .iter()
+            .map(|e| {
+                let name = e
+                    .field("name")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("param name not a string"))?
+                    .to_string();
+                let shape = e
+                    .field("shape")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("param shape not an array"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in {name}")))
+                    .collect::<Result<Vec<usize>>>()?;
+                Ok(ParamSpecEntry { name, shape })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = j
+            .field("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts is not an object"))?
+            .iter()
+            .map(|(k, v)| {
+                Ok((
+                    k.clone(),
+                    v.as_str()
+                        .ok_or_else(|| anyhow!("artifact {k:?} not a string"))?
+                        .to_string(),
+                ))
+            })
+            .collect::<Result<HashMap<_, _>>>()?;
+        Ok(Manifest {
+            param_count: usize_field("param_count")?,
+            num_classes: usize_field("num_classes")?,
+            input_hw: usize_field("input_hw")?,
+            train_batch: usize_field("train_batch")?,
+            eval_batch: usize_field("eval_batch")?,
+            param_spec,
+            artifacts,
+        })
+    }
+
+    /// Internal consistency checks (spec sizes sum to param_count, all
+    /// referenced artifact files declared).
+    pub fn validate(&self) -> Result<()> {
+        let total: usize = self.param_spec.iter().map(|e| e.size()).sum();
+        ensure!(
+            total == self.param_count,
+            "param_spec sums to {total}, manifest says {}",
+            self.param_count
+        );
+        for key in ["train_step", "eval_step", "init_params"] {
+            ensure!(self.artifacts.contains_key(key), "manifest missing artifact {key:?}");
+        }
+        ensure!(self.train_batch > 0 && self.eval_batch > 0, "batch sizes must be positive");
+        Ok(())
+    }
+
+    /// Absolute path of a named artifact.
+    pub fn artifact_path(&self, dir: &Path, key: &str) -> Result<PathBuf> {
+        let fname = self
+            .artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("unknown artifact {key:?}"))?;
+        Ok(dir.join(fname))
+    }
+
+    /// Elements in one training input batch (`B * HW * HW`, C = 1).
+    pub fn train_x_len(&self) -> usize {
+        self.train_batch * self.input_hw * self.input_hw
+    }
+
+    /// Elements in one eval input batch.
+    pub fn eval_x_len(&self) -> usize {
+        self.eval_batch * self.input_hw * self.input_hw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest {
+            param_count: 12,
+            num_classes: 35,
+            input_hw: 32,
+            train_batch: 20,
+            eval_batch: 128,
+            param_spec: vec![
+                ParamSpecEntry { name: "w".into(), shape: vec![2, 5] },
+                ParamSpecEntry { name: "b".into(), shape: vec![2] },
+            ],
+            artifacts: [
+                ("train_step", "t.hlo.txt"),
+                ("eval_step", "e.hlo.txt"),
+                ("init_params", "i.hlo.txt"),
+            ]
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect(),
+        }
+    }
+
+    #[test]
+    fn validates_consistent_manifest() {
+        sample().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_param_total() {
+        let mut m = sample();
+        m.param_count = 99;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_missing_artifact() {
+        let mut m = sample();
+        m.artifacts.remove("eval_step");
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn batch_lengths() {
+        let m = sample();
+        assert_eq!(m.train_x_len(), 20 * 32 * 32);
+        assert_eq!(m.eval_x_len(), 128 * 32 * 32);
+    }
+
+    #[test]
+    fn parses_real_manifest_json() {
+        let text = r#"{
+          "param_count": 12,
+          "num_classes": 35,
+          "input_hw": 32,
+          "train_batch": 20,
+          "eval_batch": 128,
+          "param_spec": [
+            {"name": "w", "shape": [2, 5]},
+            {"name": "b", "shape": [2]}
+          ],
+          "artifacts": {
+            "train_step": "train_step.hlo.txt",
+            "eval_step": "eval_step.hlo.txt",
+            "init_params": "init_params.hlo.txt"
+          }
+        }"#;
+        let m = Manifest::from_json_text(text).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.param_spec[0].size(), 10);
+        assert_eq!(m.artifacts["train_step"], "train_step.hlo.txt");
+    }
+
+    #[test]
+    fn parse_errors_are_descriptive() {
+        let err = Manifest::from_json_text("{}").unwrap_err();
+        assert!(format!("{err}").contains("param_"), "got {err}");
+    }
+}

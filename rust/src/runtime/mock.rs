@@ -1,0 +1,195 @@
+//! Deterministic analytic [`ModelRuntime`] stand-in.
+//!
+//! Used by unit/property tests and the coordinator-only criterion
+//! benches so they measure *coordinator* cost, not XLA compile/execute.
+//! The loss trajectory follows an exponential decay toward an
+//! irreducible floor, modulated per-example by a cheap hash so that
+//! Oort's statistical utility still sees client-to-client variance.
+//! "Accuracy" rises as loss falls. NOT a learning model — a fixture.
+
+use anyhow::{ensure, Result};
+
+use super::{EvalOutput, ModelRuntime, TrainOutput};
+
+/// Analytic mock runtime. `strength` scales how fast loss decays per
+/// step; `floor` is the irreducible loss.
+pub struct MockRuntime {
+    pub param_count: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub num_classes: usize,
+    pub input_hw: usize,
+    pub strength: f32,
+    pub floor: f32,
+}
+
+impl Default for MockRuntime {
+    fn default() -> Self {
+        Self {
+            // Matches the real manifest so shard/batch plumbing is
+            // exercised with authentic sizes.
+            param_count: 69_123,
+            train_batch: 20,
+            eval_batch: 128,
+            num_classes: 35,
+            input_hw: 32,
+            strength: 0.04,
+            floor: 0.35,
+        }
+    }
+}
+
+impl MockRuntime {
+    /// Tiny variant for fast property tests (small P, small batches).
+    pub fn tiny() -> Self {
+        Self {
+            param_count: 16,
+            train_batch: 4,
+            eval_batch: 8,
+            num_classes: 5,
+            input_hw: 4,
+            strength: 0.08,
+            floor: 0.2,
+        }
+    }
+
+    /// Loss is carried in params[0] (initialized to ln C — a uniform
+    /// predictor); the remaining slots are inert ballast so the vector
+    /// has realistic size. Reads are clamped so server-side optimizers
+    /// (YoGi momentum) can overshoot without breaking the fixture.
+    fn current_loss(&self, params: &[f32]) -> f32 {
+        let lmax = (self.num_classes as f32).ln();
+        params[0].clamp(self.floor * 0.5, lmax * 2.0)
+    }
+
+    fn hash01(x: u32) -> f32 {
+        // xorshift-style scramble -> [0, 1)
+        let mut h = x.wrapping_mul(0x9E37_79B9) ^ 0x85EB_CA6B;
+        h ^= h >> 13;
+        h = h.wrapping_mul(0xC2B2_AE35);
+        h ^= h >> 16;
+        (h as f32) / (u32::MAX as f32)
+    }
+}
+
+impl ModelRuntime for MockRuntime {
+    fn param_count(&self) -> usize {
+        self.param_count
+    }
+    fn train_batch(&self) -> usize {
+        self.train_batch
+    }
+    fn eval_batch(&self) -> usize {
+        self.eval_batch
+    }
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+    fn input_hw(&self) -> usize {
+        self.input_hw
+    }
+
+    fn init_params(&self, seed: u32) -> Result<Vec<f32>> {
+        let mut p = vec![0.0; self.param_count];
+        p[0] = (self.num_classes as f32).ln(); // uniform-predictor loss
+        if self.param_count > 1 {
+            p[1] = seed as f32; // seed marker, keeps runs distinguishable
+        }
+        Ok(p)
+    }
+
+    fn train_step(&self, params: &[f32], x: &[f32], y: &[i32], lr: f32) -> Result<TrainOutput> {
+        ensure!(params.len() == self.param_count, "params length");
+        ensure!(x.len() == self.train_batch * self.input_hw * self.input_hw, "x length");
+        ensure!(y.len() == self.train_batch, "y length");
+        let loss = self.current_loss(params);
+        // Exponential decay toward the floor, scaled by lr relative to
+        // the paper's 0.05 so lr sweeps still do something.
+        let rate = self.strength * (lr / 0.05);
+        let new_loss = self.floor + (loss - self.floor) * (1.0 - rate).max(0.0);
+        let mut new_params = params.to_vec();
+        new_params[0] = new_loss;
+        let per_example: Vec<f32> = y
+            .iter()
+            .enumerate()
+            .map(|(i, &label)| {
+                // +-30% per-example spread keyed on label and position.
+                let jitter = 0.7 + 0.6 * Self::hash01(label as u32 ^ ((i as u32) << 8));
+                new_loss * jitter
+            })
+            .collect();
+        let mean = per_example.iter().sum::<f32>() / per_example.len() as f32;
+        Ok(TrainOutput { params: new_params, mean_loss: mean, per_example_loss: per_example })
+    }
+
+    fn eval_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOutput> {
+        ensure!(params.len() == self.param_count, "params length");
+        ensure!(x.len() == self.eval_batch * self.input_hw * self.input_hw, "x length");
+        ensure!(y.len() == self.eval_batch, "y length");
+        let loss = self.current_loss(params);
+        let lmax = (self.num_classes as f32).ln();
+        // Map loss in [floor, ln C] to accuracy in [1/C, ~0.95].
+        let frac = ((lmax - loss) / (lmax - self.floor)).clamp(0.0, 1.0);
+        let acc = (1.0 / self.num_classes as f32) + frac * 0.92;
+        let correct = ((self.eval_batch as f32) * acc).round() as i32;
+        Ok(EvalOutput { correct: correct.min(self.eval_batch as i32), mean_loss: loss })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_decays_monotonically_to_floor() {
+        let rt = MockRuntime::default();
+        let mut p = rt.init_params(0).unwrap();
+        let x = vec![0.0; rt.train_batch * rt.input_hw * rt.input_hw];
+        let y = vec![1i32; rt.train_batch];
+        let mut last = f32::MAX;
+        for _ in 0..400 {
+            let out = rt.train_step(&p, &x, &y, 0.05).unwrap();
+            assert!(out.params[0] <= last);
+            last = out.params[0];
+            p = out.params;
+        }
+        assert!((last - rt.floor).abs() < 0.05, "loss {last} should approach floor");
+    }
+
+    #[test]
+    fn accuracy_rises_with_training() {
+        let rt = MockRuntime::default();
+        let mut p = rt.init_params(0).unwrap();
+        let x = vec![0.0; rt.train_batch * rt.input_hw * rt.input_hw];
+        let y = vec![1i32; rt.train_batch];
+        let xe = vec![0.0; rt.eval_batch * rt.input_hw * rt.input_hw];
+        let ye = vec![1i32; rt.eval_batch];
+        let before = rt.eval_step(&p, &xe, &ye).unwrap();
+        for _ in 0..200 {
+            p = rt.train_step(&p, &x, &y, 0.05).unwrap().params;
+        }
+        let after = rt.eval_step(&p, &xe, &ye).unwrap();
+        assert!(after.correct > before.correct);
+        assert!(after.mean_loss < before.mean_loss);
+    }
+
+    #[test]
+    fn per_example_losses_have_variance() {
+        let rt = MockRuntime::default();
+        let p = rt.init_params(0).unwrap();
+        let x = vec![0.0; rt.train_batch * rt.input_hw * rt.input_hw];
+        let y: Vec<i32> = (0..rt.train_batch as i32).collect();
+        let out = rt.train_step(&p, &x, &y, 0.05).unwrap();
+        let mn = out.per_example_loss.iter().cloned().fold(f32::MAX, f32::min);
+        let mx = out.per_example_loss.iter().cloned().fold(f32::MIN, f32::max);
+        assert!(mx > mn, "per-example losses must not be constant");
+    }
+
+    #[test]
+    fn shape_validation_errors() {
+        let rt = MockRuntime::tiny();
+        let p = rt.init_params(0).unwrap();
+        assert!(rt.train_step(&p, &[0.0; 3], &[0; 4], 0.05).is_err());
+        assert!(rt.eval_step(&p[..4], &[0.0; 128], &[0; 8]).is_err());
+    }
+}

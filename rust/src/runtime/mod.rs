@@ -1,0 +1,70 @@
+//! Layer-3 ↔ Layer-2 bridge: load the AOT-compiled HLO artifacts and run
+//! them on the PJRT CPU client from the coordinator's hot path.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax≥0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects, while the text parser reassigns ids cleanly.
+//!
+//! Two implementations of [`ModelRuntime`]:
+//!  - [`XlaRuntime`] — the real thing (PJRT CPU, compiled executables).
+//!  - [`MockRuntime`] — a deterministic analytic stand-in used by unit
+//!    tests, property tests and the coordinator-only benches so they do
+//!    not pay XLA compilation; the e2e example and integration tests use
+//!    the real runtime.
+
+mod manifest;
+mod mock;
+mod xla_runtime;
+
+pub use manifest::{Manifest, ParamSpecEntry};
+pub use mock::MockRuntime;
+pub use xla_runtime::XlaRuntime;
+
+use anyhow::Result;
+
+/// Output of one local SGD step.
+#[derive(Debug, Clone)]
+pub struct TrainOutput {
+    /// Updated flat parameter vector (length = manifest.param_count).
+    pub params: Vec<f32>,
+    /// Mean loss over the batch.
+    pub mean_loss: f32,
+    /// Per-example losses — feed Oort/EAFL statistical utility (Eq. 2).
+    pub per_example_loss: Vec<f32>,
+}
+
+/// Output of one evaluation batch.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOutput {
+    /// Number of correctly classified examples in the batch.
+    pub correct: i32,
+    /// Mean loss over the batch.
+    pub mean_loss: f32,
+}
+
+/// The model-execution interface the coordinator depends on.
+///
+/// Implementations must be deterministic for a given input so that
+/// simulation runs are reproducible under a fixed seed.
+pub trait ModelRuntime: Send {
+    /// Flat parameter vector length `P`.
+    fn param_count(&self) -> usize;
+    /// Train-step batch size baked into the executable.
+    fn train_batch(&self) -> usize;
+    /// Eval-step batch size baked into the executable.
+    fn eval_batch(&self) -> usize;
+    /// Number of classes.
+    fn num_classes(&self) -> usize;
+    /// Input feature-map side length.
+    fn input_hw(&self) -> usize;
+
+    /// He-initialized flat parameters from a seed.
+    fn init_params(&self, seed: u32) -> Result<Vec<f32>>;
+
+    /// One SGD step. `x` is `f32[B*HW*HW]` (NHWC, C=1) and `y` is
+    /// `i32[B]` with `B == self.train_batch()`.
+    fn train_step(&self, params: &[f32], x: &[f32], y: &[i32], lr: f32) -> Result<TrainOutput>;
+
+    /// One evaluation batch with `B == self.eval_batch()`.
+    fn eval_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOutput>;
+}

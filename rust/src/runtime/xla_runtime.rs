@@ -1,0 +1,155 @@
+//! Real [`ModelRuntime`]: PJRT CPU client executing the AOT artifacts.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Each artifact is compiled exactly once
+//! at load time; the per-step path is literal-marshal + execute only.
+
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::{EvalOutput, Manifest, ModelRuntime, TrainOutput};
+
+/// PJRT-backed model runtime. One compiled executable per entry point.
+pub struct XlaRuntime {
+    manifest: Manifest,
+    train: PjRtLoadedExecutable,
+    eval: PjRtLoadedExecutable,
+    init: PjRtLoadedExecutable,
+    // Client must outlive executables; keep it last in drop order.
+    _client: PjRtClient,
+}
+
+// The xla crate's raw pointers are not Sync; the coordinator owns the
+// runtime exclusively and drives it from one thread at a time.
+unsafe impl Send for XlaRuntime {}
+
+impl XlaRuntime {
+    /// Load `manifest.json` + all HLO artifacts from `dir` and compile
+    /// them on a fresh PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        let compile = |key: &str| -> Result<PjRtLoadedExecutable> {
+            let path = manifest.artifact_path(dir, key)?;
+            let proto = HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+            let comp = XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {key}: {e}"))
+        };
+        let train = compile("train_step")?;
+        let eval = compile("eval_step")?;
+        let init = compile("init_params")?;
+        Ok(Self { manifest, train, eval, init, _client: client })
+    }
+
+    /// Default artifact location relative to the repo root, overridable
+    /// via `EAFL_ARTIFACTS`.
+    pub fn default_dir() -> std::path::PathBuf {
+        std::env::var_os("EAFL_ARTIFACTS")
+            .map(Into::into)
+            .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+    }
+
+    fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+        Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape f32{dims:?}: {e}"))
+    }
+
+    fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+        Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape i32{dims:?}: {e}"))
+    }
+
+    /// Execute and unpack the (tupled) result into its element literals.
+    fn run(exe: &PjRtLoadedExecutable, args: &[Literal]) -> Result<Vec<Literal>> {
+        let bufs = exe.execute::<Literal>(args).map_err(|e| anyhow!("execute: {e}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal_sync: {e}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple literal.
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e}"))
+    }
+}
+
+impl ModelRuntime for XlaRuntime {
+    fn param_count(&self) -> usize {
+        self.manifest.param_count
+    }
+    fn train_batch(&self) -> usize {
+        self.manifest.train_batch
+    }
+    fn eval_batch(&self) -> usize {
+        self.manifest.eval_batch
+    }
+    fn num_classes(&self) -> usize {
+        self.manifest.num_classes
+    }
+    fn input_hw(&self) -> usize {
+        self.manifest.input_hw
+    }
+
+    fn init_params(&self, seed: u32) -> Result<Vec<f32>> {
+        let out = Self::run(&self.init, &[Literal::scalar(seed)])?;
+        ensure!(out.len() == 1, "init_params returned {} outputs", out.len());
+        let params = out[0].to_vec::<f32>().map_err(|e| anyhow!("init to_vec: {e}"))?;
+        ensure!(params.len() == self.param_count(), "init param length mismatch");
+        Ok(params)
+    }
+
+    fn train_step(&self, params: &[f32], x: &[f32], y: &[i32], lr: f32) -> Result<TrainOutput> {
+        let b = self.train_batch() as i64;
+        let hw = self.input_hw() as i64;
+        ensure!(params.len() == self.param_count(), "params length mismatch");
+        ensure!(x.len() == self.manifest.train_x_len(), "x length mismatch");
+        ensure!(y.len() == self.train_batch(), "y length mismatch");
+        let args = [
+            Self::literal_f32(params, &[self.param_count() as i64])?,
+            Self::literal_f32(x, &[b, hw, hw, 1])?,
+            Self::literal_i32(y, &[b])?,
+            Literal::scalar(lr),
+        ];
+        let out = Self::run(&self.train, &args)?;
+        ensure!(out.len() == 3, "train_step returned {} outputs", out.len());
+        Ok(TrainOutput {
+            params: out[0].to_vec::<f32>().map_err(|e| anyhow!("params out: {e}"))?,
+            mean_loss: out[1]
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow!("mean_loss out: {e}"))?,
+            per_example_loss: out[2]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("per_example out: {e}"))?,
+        })
+    }
+
+    fn eval_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOutput> {
+        let b = self.eval_batch() as i64;
+        let hw = self.input_hw() as i64;
+        ensure!(params.len() == self.param_count(), "params length mismatch");
+        ensure!(x.len() == self.manifest.eval_x_len(), "x length mismatch");
+        ensure!(y.len() == self.eval_batch(), "y length mismatch");
+        let args = [
+            Self::literal_f32(params, &[self.param_count() as i64])?,
+            Self::literal_f32(x, &[b, hw, hw, 1])?,
+            Self::literal_i32(y, &[b])?,
+        ];
+        let out = Self::run(&self.eval, &args)?;
+        ensure!(out.len() == 2, "eval_step returned {} outputs", out.len());
+        Ok(EvalOutput {
+            correct: out[0]
+                .get_first_element::<i32>()
+                .map_err(|e| anyhow!("correct out: {e}"))?,
+            mean_loss: out[1]
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow!("loss out: {e}"))?,
+        })
+    }
+}

@@ -1,0 +1,263 @@
+//! EAFL participant selection — the paper's contribution (§4).
+//!
+//! Replaces Oort's pure-utility ranking with the Eq. (1) reward:
+//!
+//!   reward(i) = f · Util(i) + (1−f) · power(i)
+//!   power(i)  = cur_battery_level(i) − battery_used(i)
+//!
+//! with Util(i) Oort's Eq. (2) utility min-max normalized over the
+//! candidate pool so the two terms are commensurate ([0,1] each). As
+//! f → 0 selection degenerates to "highest remaining battery"; as
+//! f → 1 it degenerates to Oort. The paper's experiments use f = 0.25,
+//! weighting energy conservation 3:1 over time-to-accuracy.
+//!
+//! Exploration of unmeasured clients and the pacer are inherited from
+//! the Oort machinery (EAFL is a drop-in replacement for the reward
+//! inside Oort's selector loop).
+
+use crate::util::rng::Rng;
+
+use crate::config::SelectorConfig;
+
+use super::utility::{eafl_reward, min_max_normalize, oort_utility, power_term, staleness_bonus};
+use super::{percentile, Candidate, OortSelector, RoundFeedback, Selector};
+
+pub struct EaflSelector {
+    cfg: SelectorConfig,
+    /// Inner Oort machinery reused for ε schedule + pacer state.
+    oort: OortSelector,
+}
+
+impl EaflSelector {
+    pub fn new(cfg: SelectorConfig) -> Self {
+        let oort = OortSelector::new(cfg.clone());
+        Self { cfg, oort }
+    }
+
+    /// Eq. (1) rewards for the explored candidates (parallel array).
+    fn rewards(&self, round: u64, explored: &[&Candidate], deadline: f64) -> Vec<f64> {
+        let utils: Vec<f64> = explored
+            .iter()
+            .map(|c| {
+                let duration = c.measured_duration_s.unwrap_or(c.expected_duration_s);
+                oort_utility(c.stat_util.unwrap_or(0.0), deadline, duration, self.cfg.alpha)
+            })
+            .collect();
+        let normed = min_max_normalize(&utils);
+        explored
+            .iter()
+            .zip(&normed)
+            .map(|(c, &u)| {
+                let power = power_term(c.battery_frac, c.projected_drain_frac);
+                // Staleness bonus operates in normalized-reward space.
+                eafl_reward(self.cfg.eafl_f, u, power)
+                    + staleness_bonus(round, c.last_selected_round, self.cfg.ucb_weight) * 0.25
+            })
+            .collect()
+    }
+}
+
+impl Selector for EaflSelector {
+    fn select(
+        &mut self,
+        round: u64,
+        candidates: &[Candidate],
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        if candidates.is_empty() || k == 0 {
+            return Vec::new();
+        }
+        let deadline = self.deadline_s(candidates);
+        let eps = self.oort.epsilon(round);
+
+        let (unexplored, explored): (Vec<&Candidate>, Vec<&Candidate>) =
+            candidates.iter().partition(|c| c.stat_util.is_none());
+
+        // Exploration — but energy-aware even here: prefer high-power
+        // unexplored clients (weighted by the Eq. (1) power term).
+        let k_explore = ((eps * k as f64).round() as usize)
+            .min(unexplored.len())
+            .min(k);
+        let mut selected: Vec<usize> = {
+            let mut pool: Vec<(usize, f64)> = unexplored
+                .iter()
+                .map(|c| {
+                    (c.id, power_term(c.battery_frac, c.projected_drain_frac).max(1e-6))
+                })
+                .collect();
+            let mut picked = Vec::with_capacity(k_explore);
+            while picked.len() < k_explore && !pool.is_empty() {
+                let total: f64 = pool.iter().map(|(_, w)| w).sum();
+                let mut r = rng.gen_f64() * total;
+                let mut idx = pool.len() - 1;
+                for (i, (_, w)) in pool.iter().enumerate() {
+                    r -= w;
+                    if r <= 0.0 {
+                        idx = i;
+                        break;
+                    }
+                }
+                picked.push(pool.swap_remove(idx).0);
+            }
+            picked
+        };
+
+        // Exploitation by Eq. (1) reward: weighted draw from the top
+        // reward band (Oort's randomized-cutoff idiom) rather than a
+        // hard top-k — keeps near-ties rotating, which is what keeps
+        // EAFL's Jain fairness at Random-like levels (paper Fig. 3c).
+        let k_exploit = k - selected.len();
+        if k_exploit > 0 && !explored.is_empty() {
+            let rewards = self.rewards(round, &explored, deadline);
+            let mut scored: Vec<(usize, f64)> = explored
+                .iter()
+                .zip(&rewards)
+                .map(|(c, &r)| (c.id, r.max(1e-9)))
+                .collect();
+            scored.sort_by(|a, b| b.1.total_cmp(&a.1));
+            let band = ((k_exploit as f64) * 3.0).ceil() as usize;
+            scored.truncate(band.max(k_exploit));
+            let mut pool = scored;
+            selected.extend(OortSelector::weighted_pick(&mut pool, k_exploit, rng));
+        } else if k_exploit > 0 {
+            let mut rest: Vec<usize> = unexplored
+                .iter()
+                .map(|c| c.id)
+                .filter(|id| !selected.contains(id))
+                .collect();
+            rng.shuffle(&mut rest);
+            selected.extend(rest.into_iter().take(k_exploit));
+        }
+        selected
+    }
+
+    fn feedback(&mut self, fb: &RoundFeedback<'_>) {
+        self.oort.feedback(fb);
+    }
+
+    fn deadline_s(&self, candidates: &[Candidate]) -> f64 {
+        // Same pacer as Oort (Fig. 4b: EAFL and Oort round durations
+        // are nearly identical early on).
+        let durations: Vec<f64> = candidates
+            .iter()
+            .map(|c| c.measured_duration_s.unwrap_or(c.expected_duration_s))
+            .collect();
+        percentile(&durations, self.cfg.pacer_percentile).max(1.0)
+            + (self.oort.deadline_s(candidates)
+                - percentile(&durations, self.cfg.pacer_percentile).max(1.0))
+    }
+
+    fn name(&self) -> &'static str {
+        "eafl"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+    fn cand(id: usize, util: Option<f64>, dur: f64, battery: f64) -> Candidate {
+        Candidate {
+            id,
+            stat_util: util,
+            measured_duration_s: util.map(|_| dur),
+            expected_duration_s: dur,
+            last_selected_round: 0,
+            battery_frac: battery,
+            projected_drain_frac: 0.02,
+        }
+    }
+
+    fn exploit_cfg(f: f64) -> SelectorConfig {
+        let mut cfg = SelectorConfig::default();
+        cfg.explore_init = 0.0;
+        cfg.min_explore = 0.0;
+        cfg.ucb_weight = 0.0;
+        cfg.eafl_f = f;
+        cfg
+    }
+
+    #[test]
+    fn f_zero_picks_highest_battery() {
+        let mut s = EaflSelector::new(exploit_cfg(0.0));
+        let cands = vec![
+            cand(0, Some(100.0), 100.0, 0.10),
+            cand(1, Some(1.0), 100.0, 0.95),
+            cand(2, Some(50.0), 100.0, 0.50),
+        ];
+        let picked = s.select(10, &cands, 1, &mut Rng::seed_from_u64(0));
+        assert_eq!(picked, vec![1], "f=0 must ignore utility entirely");
+    }
+
+    #[test]
+    fn f_one_behaves_like_oort_ranking() {
+        let mut s = EaflSelector::new(exploit_cfg(1.0));
+        let cands = vec![
+            cand(0, Some(100.0), 100.0, 0.05),
+            cand(1, Some(1.0), 100.0, 1.00),
+        ];
+        let picked = s.select(10, &cands, 1, &mut Rng::seed_from_u64(0));
+        assert_eq!(picked, vec![0], "f=1 must chase utility like Oort");
+    }
+
+    #[test]
+    fn paper_f_025_prefers_power_on_close_utilities() {
+        // With f=0.25 the power term carries 3x the weight: a modest
+        // utility edge must not beat a large battery edge.
+        let mut s = EaflSelector::new(exploit_cfg(0.25));
+        let cands = vec![
+            cand(0, Some(10.0), 100.0, 0.15), // slightly higher utility, low battery
+            cand(1, Some(8.0), 100.0, 0.90),  // slightly lower utility, high battery
+        ];
+        let picked = s.select(10, &cands, 1, &mut Rng::seed_from_u64(0));
+        assert_eq!(picked, vec![1]);
+    }
+
+    #[test]
+    fn high_utility_wins_when_batteries_comparable() {
+        let mut s = EaflSelector::new(exploit_cfg(0.25));
+        let cands = vec![
+            cand(0, Some(100.0), 100.0, 0.80),
+            cand(1, Some(1.0), 100.0, 0.82),
+        ];
+        let picked = s.select(10, &cands, 1, &mut Rng::seed_from_u64(0));
+        assert_eq!(picked, vec![0]);
+    }
+
+    #[test]
+    fn exploration_weighted_toward_high_battery() {
+        let mut cfg = SelectorConfig::default();
+        cfg.explore_init = 1.0;
+        cfg.explore_decay = 1.0;
+        cfg.min_explore = 1.0;
+        let mut s = EaflSelector::new(cfg);
+        let cands = vec![cand(0, None, 100.0, 0.05), cand(1, None, 100.0, 0.95)];
+        let mut high_battery_first = 0;
+        for seed in 0..200 {
+            let picked = s.select(1, &cands, 1, &mut Rng::seed_from_u64(seed));
+            if picked == vec![1] {
+                high_battery_first += 1;
+            }
+        }
+        // power(1)≈0.93 vs power(0)≈0.03 ⇒ ~97% of draws pick id 1.
+        assert!(high_battery_first > 150, "got {high_battery_first}/200");
+    }
+
+    #[test]
+    fn never_exceeds_k() {
+        let mut s = EaflSelector::new(SelectorConfig::default());
+        let cands: Vec<Candidate> = (0..25)
+            .map(|i| cand(i, if i % 3 == 0 { Some(i as f64) } else { None }, 60.0, 0.7))
+            .collect();
+        for round in 1..20 {
+            let picked =
+                s.select(round, &cands, 10, &mut Rng::seed_from_u64(round));
+            assert!(picked.len() <= 10);
+            let mut d = picked.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), picked.len());
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Participant selection — the paper's contribution surface.
+//!
+//! Three policies behind one [`Selector`] trait:
+//!  - [`RandomSelector`] — uniform over eligible clients.
+//!  - [`OortSelector`]  — Oort's guided selection (Lai et al., OSDI'21):
+//!    statistical×system utility (Eq. 2), exploration/exploitation,
+//!    UCB staleness bonus, and a pacer controlling the deadline T.
+//!  - [`EaflSelector`]  — EAFL (Eq. 1): Oort's utility blended with the
+//!    remaining-battery term, `reward = f·Util + (1−f)·power`.
+//!
+//! The coordinator builds one [`Candidate`] per *eligible* client each
+//! round (alive, above the battery floor) and the selector returns at
+//! most K of them. Selector feedback (measured losses/durations) flows
+//! back through [`RoundFeedback`].
+
+mod eafl;
+mod oort;
+mod random;
+pub mod utility;
+
+pub use eafl::EaflSelector;
+pub use oort::OortSelector;
+pub use random::RandomSelector;
+
+use crate::util::rng::Rng;
+
+use crate::config::{SelectorConfig, SelectorKind};
+
+/// Everything a selector may know about one eligible client this round.
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    /// Registry index of the client.
+    pub id: usize,
+    /// Oort statistical utility from the client's last participation
+    /// (|B_i|·sqrt(mean loss²)); None if never yet measured.
+    pub stat_util: Option<f64>,
+    /// Measured wall duration of the client's last participation, s.
+    pub measured_duration_s: Option<f64>,
+    /// Coordinator-estimated duration of the NEXT round for this client
+    /// (download + compute + upload from its profiles), seconds.
+    pub expected_duration_s: f64,
+    /// Round number of the client's last selection (0 = never).
+    pub last_selected_round: u64,
+    /// Remaining battery fraction in [0, 1].
+    pub battery_frac: f64,
+    /// Projected battery cost of participating in the next round, as a
+    /// fraction of this client's capacity.
+    pub projected_drain_frac: f64,
+}
+
+/// Post-round feedback for one participant.
+#[derive(Debug, Clone, Copy)]
+pub struct ParticipantOutcome {
+    pub id: usize,
+    /// Oort statistical utility measured this round (None if the client
+    /// dropped out before reporting).
+    pub stat_util: Option<f64>,
+    /// Measured duration, seconds.
+    pub duration_s: f64,
+    /// Completed within the deadline and reported an update.
+    pub completed: bool,
+}
+
+/// Feedback the coordinator hands back after every round.
+#[derive(Debug, Clone)]
+pub struct RoundFeedback<'a> {
+    pub round: u64,
+    pub outcomes: &'a [ParticipantOutcome],
+}
+
+/// A participant-selection policy.
+pub trait Selector: Send {
+    /// Choose at most `k` clients from `candidates`. `round` is
+    /// 1-based. Must be deterministic given (`rng`, inputs).
+    fn select(
+        &mut self,
+        round: u64,
+        candidates: &[Candidate],
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize>;
+
+    /// Observe the outcome of the round this selector picked.
+    fn feedback(&mut self, fb: &RoundFeedback<'_>);
+
+    /// The straggler deadline T (seconds) this selector wants for the
+    /// upcoming round, given candidate timing estimates. Also the T in
+    /// Oort's Eq. (2) system penalty.
+    fn deadline_s(&self, candidates: &[Candidate]) -> f64;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Build the configured selector.
+pub fn make_selector(cfg: &SelectorConfig) -> Box<dyn Selector> {
+    match cfg.kind {
+        SelectorKind::Random => Box::new(RandomSelector::new(cfg.clone())),
+        SelectorKind::Oort => Box::new(OortSelector::new(cfg.clone())),
+        SelectorKind::Eafl => Box::new(EaflSelector::new(cfg.clone())),
+    }
+}
+
+/// Percentile (0..=1) of an unsorted slice; linear interpolation.
+pub(crate) fn percentile(values: &[f64], p: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = values.to_vec();
+    v.sort_by(f64::total_cmp);
+    let pos = p.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&v, 0.0), 10.0);
+        assert_eq!(percentile(&v, 1.0), 40.0);
+        assert!((percentile(&v, 0.5) - 25.0).abs() < 1e-12);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.9), 7.0);
+    }
+
+    #[test]
+    fn factory_builds_each_kind() {
+        for (kind, name) in [
+            (SelectorKind::Random, "random"),
+            (SelectorKind::Oort, "oort"),
+            (SelectorKind::Eafl, "eafl"),
+        ] {
+            let mut cfg = SelectorConfig::default();
+            cfg.kind = kind;
+            assert_eq!(make_selector(&cfg).name(), name);
+        }
+    }
+}

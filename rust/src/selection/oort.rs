@@ -1,0 +1,314 @@
+//! Oort guided participant selection (Lai et al., OSDI'21) — the
+//! state-of-the-art baseline the paper modifies.
+//!
+//! Faithful to the published design in structure:
+//!  - utility Eq. (2): statistical utility × system (deadline) penalty;
+//!  - ε-greedy exploration of never-measured clients, ε decaying per
+//!    round to a floor;
+//!  - UCB-style staleness bonus on stale utility estimates;
+//!  - a pacer that sets the round deadline T at a percentile of client
+//!    durations and relaxes it when aggregate utility stalls;
+//!  - exploitation samples from the top-(1+ε_cut)·k utility band rather
+//!    than strictly top-k (Oort's randomized cutoff), which spreads
+//!    selection across near-ties.
+//!
+//! Deliberately battery-oblivious: this is precisely the behaviour the
+//! paper's Fig. 4a shows causing mass drop-outs.
+
+use crate::util::rng::Rng;
+
+use crate::config::SelectorConfig;
+
+use super::utility::{oort_utility, staleness_bonus};
+use super::{percentile, Candidate, RoundFeedback, Selector};
+
+/// Width of the exploitation cutoff band (fraction of k over-sampled
+/// before the final weighted draw).
+const CUTOFF_BAND: f64 = 0.5;
+
+pub struct OortSelector {
+    cfg: SelectorConfig,
+    /// Pacer state: deadline relaxation accumulated when utility stalls.
+    pacer_relax_s: f64,
+    /// Sum of selected-client utilities in recent rounds (pacer signal).
+    recent_utils: Vec<f64>,
+}
+
+impl OortSelector {
+    pub fn new(cfg: SelectorConfig) -> Self {
+        Self { cfg, pacer_relax_s: 0.0, recent_utils: Vec::new() }
+    }
+
+    /// Current exploration fraction ε for `round` (1-based).
+    pub fn epsilon(&self, round: u64) -> f64 {
+        (self.cfg.explore_init * self.cfg.explore_decay.powi(round.saturating_sub(1) as i32))
+            .max(self.cfg.min_explore)
+    }
+
+    /// Score an explored candidate: Eq. (2) + staleness bonus scaled by
+    /// the candidate pool's utility range.
+    fn score(&self, c: &Candidate, round: u64, deadline: f64, util_scale: f64) -> f64 {
+        let stat = c.stat_util.unwrap_or(0.0);
+        let duration = c.measured_duration_s.unwrap_or(c.expected_duration_s);
+        oort_utility(stat, deadline, duration, self.cfg.alpha)
+            + staleness_bonus(round, c.last_selected_round, self.cfg.ucb_weight) * util_scale
+    }
+
+    /// Weighted sample of `k` distinct ids from `(id, weight)` pairs.
+    pub(super) fn weighted_pick(
+        pool: &mut Vec<(usize, f64)>,
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        let mut picked = Vec::with_capacity(k);
+        while picked.len() < k && !pool.is_empty() {
+            let total: f64 = pool.iter().map(|(_, w)| w.max(1e-12)).sum();
+            let mut r = rng.gen_f64() * total;
+            let mut idx = pool.len() - 1;
+            for (i, (_, w)) in pool.iter().enumerate() {
+                r -= w.max(1e-12);
+                if r <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            picked.push(pool.swap_remove(idx).0);
+        }
+        picked
+    }
+}
+
+impl Selector for OortSelector {
+    fn select(
+        &mut self,
+        round: u64,
+        candidates: &[Candidate],
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        if candidates.is_empty() || k == 0 {
+            return Vec::new();
+        }
+        let deadline = self.deadline_s(candidates);
+        let eps = self.epsilon(round);
+
+        let (unexplored, explored): (Vec<&Candidate>, Vec<&Candidate>) =
+            candidates.iter().partition(|c| c.stat_util.is_none());
+
+        // Exploration quota: ε·k, but never more than available.
+        let k_explore = ((eps * k as f64).round() as usize)
+            .min(unexplored.len())
+            .min(k);
+        let mut selected: Vec<usize> = {
+            let mut ids: Vec<usize> = unexplored.iter().map(|c| c.id).collect();
+            rng.shuffle(&mut ids);
+            ids.truncate(k_explore);
+            ids
+        };
+
+        // Exploitation: weighted draw from the top utility band.
+        let k_exploit = k - selected.len();
+        if k_exploit > 0 && !explored.is_empty() {
+            let utils: Vec<f64> =
+                explored.iter().map(|c| c.stat_util.unwrap_or(0.0)).collect();
+            let util_scale = percentile(&utils, 0.95).max(1e-9);
+            let mut scored: Vec<(usize, f64)> = explored
+                .iter()
+                .map(|c| (c.id, self.score(c, round, deadline, util_scale)))
+                .collect();
+            scored.sort_by(|a, b| b.1.total_cmp(&a.1));
+            let band = ((k_exploit as f64) * (1.0 + CUTOFF_BAND)).ceil() as usize;
+            scored.truncate(band.max(k_exploit));
+            let mut pool = scored;
+            selected.extend(Self::weighted_pick(&mut pool, k_exploit, rng));
+        } else if k_exploit > 0 {
+            // Nothing explored yet: fill from unexplored remainder.
+            let mut rest: Vec<usize> = unexplored
+                .iter()
+                .map(|c| c.id)
+                .filter(|id| !selected.contains(id))
+                .collect();
+            rng.shuffle(&mut rest);
+            selected.extend(rest.into_iter().take(k_exploit));
+        }
+        selected
+    }
+
+    fn feedback(&mut self, fb: &RoundFeedback<'_>) {
+        // Pacer signal: total utility delivered by this round's cohort.
+        let total: f64 = fb
+            .outcomes
+            .iter()
+            .filter(|o| o.completed)
+            .filter_map(|o| o.stat_util)
+            .sum();
+        self.recent_utils.push(total);
+        let n = self.recent_utils.len();
+        // Oort's pacer: compare the last two windows of 5 rounds; if
+        // aggregate utility fell, relax the deadline by pacer_step.
+        const W: usize = 5;
+        if n >= 2 * W && n % W == 0 {
+            let prev: f64 = self.recent_utils[n - 2 * W..n - W].iter().sum();
+            let cur: f64 = self.recent_utils[n - W..].iter().sum();
+            if cur < prev {
+                self.pacer_relax_s += self.cfg.pacer_step_s;
+            } else if self.pacer_relax_s > 0.0 {
+                // Utility recovered: claw back half a step.
+                self.pacer_relax_s =
+                    (self.pacer_relax_s - 0.5 * self.cfg.pacer_step_s).max(0.0);
+            }
+        }
+    }
+
+    fn deadline_s(&self, candidates: &[Candidate]) -> f64 {
+        let durations: Vec<f64> = candidates
+            .iter()
+            .map(|c| c.measured_duration_s.unwrap_or(c.expected_duration_s))
+            .collect();
+        percentile(&durations, self.cfg.pacer_percentile).max(1.0) + self.pacer_relax_s
+    }
+
+    fn name(&self) -> &'static str {
+        "oort"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::ParticipantOutcome;
+    
+    fn cand(id: usize, util: Option<f64>, dur: f64, battery: f64) -> Candidate {
+        Candidate {
+            id,
+            stat_util: util,
+            measured_duration_s: util.map(|_| dur),
+            expected_duration_s: dur,
+            last_selected_round: 0,
+            battery_frac: battery,
+            projected_drain_frac: 0.02,
+        }
+    }
+
+    #[test]
+    fn epsilon_decays_to_floor() {
+        let s = OortSelector::new(SelectorConfig::default());
+        assert!(s.epsilon(1) > s.epsilon(50));
+        assert!((s.epsilon(10_000) - s.cfg.min_explore).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefers_high_utility_when_exploitation_dominates() {
+        let mut cfg = SelectorConfig::default();
+        cfg.explore_init = 0.0;
+        cfg.min_explore = 0.0;
+        cfg.ucb_weight = 0.0;
+        let mut s = OortSelector::new(cfg);
+        let mut cands: Vec<Candidate> =
+            (0..20).map(|i| cand(i, Some(i as f64 + 1.0), 100.0, 1.0)).collect();
+        Rng::seed_from_u64(0).shuffle(&mut cands);
+        let mut hits = 0;
+        for seed in 0..50 {
+            let picked = s.select(100, &cands, 5, &mut Rng::seed_from_u64(seed));
+            assert_eq!(picked.len(), 5);
+            hits += picked.iter().filter(|&&id| id >= 13).count();
+        }
+        // Top band is ids 13..20 (utility 14..20 within 1.5x cutoff);
+        // high-utility clients must dominate selections.
+        assert!(hits > 150, "high-utility ids picked {hits}/250 times");
+    }
+
+    #[test]
+    fn stragglers_get_penalized() {
+        let mut cfg = SelectorConfig::default();
+        cfg.explore_init = 0.0;
+        cfg.min_explore = 0.0;
+        cfg.ucb_weight = 0.0;
+        cfg.pacer_percentile = 0.5;
+        let mut s = OortSelector::new(cfg);
+        // Same statistical utility; one is a 10x straggler.
+        let cands = vec![
+            cand(0, Some(10.0), 100.0, 1.0),
+            cand(1, Some(10.0), 100.0, 1.0),
+            cand(2, Some(10.0), 1000.0, 1.0),
+        ];
+        let mut straggler_picks = 0;
+        for seed in 0..100 {
+            let picked = s.select(10, &cands, 1, &mut Rng::seed_from_u64(seed));
+            if picked == vec![2] {
+                straggler_picks += 1;
+            }
+        }
+        assert!(straggler_picks < 20, "straggler picked {straggler_picks}/100");
+    }
+
+    #[test]
+    fn exploration_picks_unexplored() {
+        let mut cfg = SelectorConfig::default();
+        cfg.explore_init = 1.0;
+        cfg.explore_decay = 1.0;
+        cfg.min_explore = 1.0;
+        let mut s = OortSelector::new(cfg);
+        let cands = vec![
+            cand(0, Some(100.0), 100.0, 1.0),
+            cand(1, None, 100.0, 1.0),
+            cand(2, None, 100.0, 1.0),
+        ];
+        let picked = s.select(1, &cands, 2, &mut Rng::seed_from_u64(4));
+        assert_eq!(picked.len(), 2);
+        // ε=1 ⇒ all picks are exploration ⇒ explored id 0 never chosen.
+        assert!(!picked.contains(&0));
+    }
+
+    #[test]
+    fn battery_is_ignored_by_design() {
+        let mut cfg = SelectorConfig::default();
+        cfg.explore_init = 0.0;
+        cfg.min_explore = 0.0;
+        cfg.ucb_weight = 0.0;
+        let mut s = OortSelector::new(cfg);
+        // High utility + nearly dead battery vs low utility + full.
+        let cands = vec![cand(0, Some(100.0), 100.0, 0.03), cand(1, Some(1.0), 100.0, 1.0)];
+        let picked = s.select(10, &cands, 1, &mut Rng::seed_from_u64(0));
+        assert_eq!(picked, vec![0], "Oort must chase utility regardless of battery");
+    }
+
+    #[test]
+    fn pacer_relaxes_deadline_on_utility_drop() {
+        let mut s = OortSelector::new(SelectorConfig::default());
+        let cands = vec![cand(0, Some(1.0), 100.0, 1.0)];
+        let d0 = s.deadline_s(&cands);
+        let out = |u: f64| ParticipantOutcome {
+            id: 0,
+            stat_util: Some(u),
+            duration_s: 100.0,
+            completed: true,
+        };
+        // 5 good rounds then 5 bad rounds => relax.
+        for r in 0..5 {
+            s.feedback(&RoundFeedback { round: r, outcomes: &[out(10.0)] });
+        }
+        for r in 5..10 {
+            s.feedback(&RoundFeedback { round: r, outcomes: &[out(0.1)] });
+        }
+        let d1 = s.deadline_s(&cands);
+        assert!(d1 > d0, "deadline must relax: {d0} -> {d1}");
+    }
+
+    #[test]
+    fn never_selects_more_than_k_or_duplicates() {
+        let mut s = OortSelector::new(SelectorConfig::default());
+        let cands: Vec<Candidate> = (0..30)
+            .map(|i| cand(i, if i % 2 == 0 { Some(i as f64) } else { None }, 50.0, 1.0))
+            .collect();
+        for round in 1..30 {
+            let picked =
+                s.select(round, &cands, 10, &mut Rng::seed_from_u64(round));
+            assert!(picked.len() <= 10);
+            let mut d = picked.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), picked.len());
+        }
+    }
+}

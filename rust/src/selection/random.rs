@@ -1,0 +1,117 @@
+//! Uniform random participant selection — the paper's "Random"
+//! baseline. Battery- and utility-oblivious: every eligible client is
+//! equally likely, which spreads energy cost across the population but
+//! ignores both statistical value and device speed.
+
+use crate::util::rng::Rng;
+
+use crate::config::SelectorConfig;
+
+use super::{percentile, Candidate, RoundFeedback, Selector};
+
+pub struct RandomSelector {
+    cfg: SelectorConfig,
+}
+
+impl RandomSelector {
+    pub fn new(cfg: SelectorConfig) -> Self {
+        Self { cfg }
+    }
+}
+
+impl Selector for RandomSelector {
+    fn select(
+        &mut self,
+        _round: u64,
+        candidates: &[Candidate],
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        let mut ids: Vec<usize> = candidates.iter().map(|c| c.id).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(k);
+        ids
+    }
+
+    fn feedback(&mut self, _fb: &RoundFeedback<'_>) {}
+
+    fn deadline_s(&self, candidates: &[Candidate]) -> f64 {
+        // Random has no pacer; it waits for (almost) everyone — the
+        // paper's Fig. 4b shows its rounds are the longest. Deadline is
+        // the slow tail of the expected-duration distribution.
+        let durations: Vec<f64> =
+            candidates.iter().map(|c| c.expected_duration_s).collect();
+        percentile(&durations, 0.95).max(self.cfg.pacer_step_s)
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+    fn cands(n: usize) -> Vec<Candidate> {
+        (0..n)
+            .map(|id| Candidate {
+                id,
+                stat_util: None,
+                measured_duration_s: None,
+                expected_duration_s: 100.0 + id as f64,
+                last_selected_round: 0,
+                battery_frac: 1.0,
+                projected_drain_frac: 0.01,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn selects_exactly_k_distinct() {
+        let mut s = RandomSelector::new(SelectorConfig::default());
+        let mut rng = Rng::seed_from_u64(1);
+        let picked = s.select(1, &cands(50), 10, &mut rng);
+        assert_eq!(picked.len(), 10);
+        let mut dedup = picked.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 10);
+    }
+
+    #[test]
+    fn short_population_returns_all() {
+        let mut s = RandomSelector::new(SelectorConfig::default());
+        let mut rng = Rng::seed_from_u64(1);
+        assert_eq!(s.select(1, &cands(3), 10, &mut rng).len(), 3);
+    }
+
+    #[test]
+    fn deterministic_given_rng_seed() {
+        let mut s = RandomSelector::new(SelectorConfig::default());
+        let a = s.select(1, &cands(30), 5, &mut Rng::seed_from_u64(9));
+        let b = s.select(1, &cands(30), 5, &mut Rng::seed_from_u64(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn coverage_is_roughly_uniform() {
+        let mut s = RandomSelector::new(SelectorConfig::default());
+        let mut rng = Rng::seed_from_u64(3);
+        let mut counts = vec![0u32; 20];
+        for r in 0..2000 {
+            for id in s.select(r, &cands(20), 4, &mut rng) {
+                counts[id] += 1;
+            }
+        }
+        // Expected 400 each; allow generous tolerance.
+        assert!(counts.iter().all(|&c| (250..=550).contains(&c)), "{counts:?}");
+    }
+
+    #[test]
+    fn deadline_covers_slow_tail() {
+        let s = RandomSelector::new(SelectorConfig::default());
+        let d = s.deadline_s(&cands(100));
+        assert!(d >= 190.0, "95th percentile of 100..200 ≈ 195, got {d}");
+    }
+}

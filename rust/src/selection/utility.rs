@@ -1,0 +1,143 @@
+//! Utility math shared by Oort and EAFL.
+//!
+//! Eq. (2) (Oort, OSDI'21):
+//!   Util(i) = |B_i| · sqrt( (1/|B_i|) Σ_{k∈B_i} Loss(k)² ) × (T/t_i)^{1(T<t_i)·α}
+//!
+//! Eq. (1) (EAFL):
+//!   reward(i) = f · Util(i) + (1−f) · power(i)
+//!   power(i)  = cur_battery_level(i) − battery_used(i)
+
+/// Statistical utility from a client's per-example losses:
+/// |B| · sqrt(mean(loss²)). Returns 0 for an empty batch.
+pub fn statistical_utility(per_example_losses: &[f32]) -> f64 {
+    if per_example_losses.is_empty() {
+        return 0.0;
+    }
+    let n = per_example_losses.len() as f64;
+    let mean_sq: f64 =
+        per_example_losses.iter().map(|&l| (l as f64) * (l as f64)).sum::<f64>() / n;
+    n * mean_sq.sqrt()
+}
+
+/// Oort's system-efficiency penalty: (T/t_i)^α if the client is slower
+/// than the deadline (t_i > T), else 1.
+pub fn system_penalty(deadline_s: f64, duration_s: f64, alpha: f64) -> f64 {
+    if duration_s > deadline_s && duration_s > 0.0 && deadline_s > 0.0 {
+        (deadline_s / duration_s).powf(alpha)
+    } else {
+        1.0
+    }
+}
+
+/// Full Eq. (2): statistical utility × system penalty.
+pub fn oort_utility(stat_util: f64, deadline_s: f64, duration_s: f64, alpha: f64) -> f64 {
+    stat_util * system_penalty(deadline_s, duration_s, alpha)
+}
+
+/// Eq. (1) power term: remaining battery after the projected round
+/// cost, clamped to [0, 1]. Both inputs are fractions of capacity.
+pub fn power_term(battery_frac: f64, projected_drain_frac: f64) -> f64 {
+    (battery_frac - projected_drain_frac).clamp(0.0, 1.0)
+}
+
+/// Eq. (1): reward = f · util_norm + (1−f) · power.
+/// `util_norm` must already be normalized to [0, 1] so the two terms
+/// are commensurate (the paper blends them directly).
+pub fn eafl_reward(f: f64, util_norm: f64, power: f64) -> f64 {
+    let f = f.clamp(0.0, 1.0);
+    f * util_norm + (1.0 - f) * power
+}
+
+/// Min-max normalize `values` into [0,1]; all-equal values map to 0.5
+/// (no preference signal either way).
+pub fn min_max_normalize(values: &[f64]) -> Vec<f64> {
+    if values.is_empty() {
+        return Vec::new();
+    }
+    let min = values.iter().cloned().fold(f64::MAX, f64::min);
+    let max = values.iter().cloned().fold(f64::MIN, f64::max);
+    if (max - min).abs() < 1e-12 {
+        return vec![0.5; values.len()];
+    }
+    values.iter().map(|v| (v - min) / (max - min)).collect()
+}
+
+/// UCB-style staleness bonus: grows with rounds since last selection,
+/// encouraging revisits of stale utility estimates (Oort §4.2).
+pub fn staleness_bonus(round: u64, last_selected_round: u64, weight: f64) -> f64 {
+    let staleness = round.saturating_sub(last_selected_round).max(1) as f64;
+    weight * (0.1 * (round.max(2) as f64).ln() * staleness).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stat_util_matches_formula() {
+        // |B|=4, losses all 2 ⇒ 4·sqrt(4) = 8
+        assert!((statistical_utility(&[2.0, 2.0, 2.0, 2.0]) - 8.0).abs() < 1e-9);
+        assert_eq!(statistical_utility(&[]), 0.0);
+    }
+
+    #[test]
+    fn stat_util_rewards_high_loss_clients() {
+        let low = statistical_utility(&[0.1; 10]);
+        let high = statistical_utility(&[3.0; 10]);
+        assert!(high > low);
+    }
+
+    #[test]
+    fn stat_util_scales_with_batch_size() {
+        // Same loss, more data ⇒ more useful (|B| prefactor).
+        assert!(statistical_utility(&[1.0; 20]) > statistical_utility(&[1.0; 5]));
+    }
+
+    #[test]
+    fn penalty_only_for_stragglers() {
+        assert_eq!(system_penalty(100.0, 50.0, 2.0), 1.0); // fast: no penalty
+        assert_eq!(system_penalty(100.0, 100.0, 2.0), 1.0); // on time
+        let p = system_penalty(100.0, 200.0, 2.0); // 2x late: (1/2)^2
+        assert!((p - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_utility_eq2() {
+        let u = oort_utility(8.0, 100.0, 200.0, 1.0);
+        assert!((u - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_term_clamps() {
+        assert!((power_term(0.8, 0.1) - 0.7).abs() < 1e-12);
+        assert_eq!(power_term(0.05, 0.2), 0.0);
+        assert_eq!(power_term(1.5, 0.0), 1.0);
+    }
+
+    #[test]
+    fn reward_extremes() {
+        // f=1 ⇒ pure Oort; f=0 ⇒ pure power (paper: f→0 favors battery).
+        assert_eq!(eafl_reward(1.0, 0.3, 0.9), 0.3);
+        assert_eq!(eafl_reward(0.0, 0.3, 0.9), 0.9);
+        let mid = eafl_reward(0.25, 0.4, 0.8);
+        assert!((mid - (0.25 * 0.4 + 0.75 * 0.8)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_bounds_and_degenerate() {
+        let n = min_max_normalize(&[1.0, 3.0, 2.0]);
+        assert_eq!(n[0], 0.0);
+        assert_eq!(n[1], 1.0);
+        assert!((n[2] - 0.5).abs() < 1e-12);
+        assert_eq!(min_max_normalize(&[5.0, 5.0]), vec![0.5, 0.5]);
+        assert!(min_max_normalize(&[]).is_empty());
+    }
+
+    #[test]
+    fn staleness_grows() {
+        let fresh = staleness_bonus(100, 99, 0.1);
+        let stale = staleness_bonus(100, 10, 0.1);
+        assert!(stale > fresh);
+        assert!(fresh > 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Event-driven round simulation.
+//!
+//! The paper (§5): "This is an event-driven simulation with time
+//! calculated based on the completion time of the learners." Within a
+//! round, every participant's download → compute → upload timeline and
+//! possible mid-round battery death are resolved in event order on a
+//! deterministic event queue; the round's wall-clock duration falls out
+//! of the latest relevant event.
+
+mod events;
+mod round;
+
+pub use events::{Event, EventQueue};
+pub use round::{
+    simulate_round, FailureKind, ParticipantPlan, ParticipantResult, RoundSimOutcome,
+};

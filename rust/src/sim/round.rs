@@ -1,0 +1,250 @@
+//! One training round resolved on the event queue.
+//!
+//! Each participant's timeline is download → compute → upload with
+//! durations from its device/link profiles. Two things can prevent a
+//! client from reporting:
+//!   * **battery death** — its remaining charge cannot supply the
+//!     round's energy; it dies at the proportional point of its
+//!     timeline (the paper's mid-round drop-out), and
+//!   * **deadline miss** — its timeline exceeds the selector's deadline
+//!     T (the straggler case); it pays energy up to T, then the server
+//!     stops waiting.
+//!
+//! The round's duration is the latest completion among reporting
+//! clients, or the deadline if anyone was still running at T.
+
+
+use super::EventQueue;
+
+/// Input: one selected client's planned round.
+#[derive(Debug, Clone, Copy)]
+pub struct ParticipantPlan {
+    pub id: usize,
+    pub download_s: f64,
+    pub compute_s: f64,
+    pub upload_s: f64,
+    /// Total energy the full round would draw, joules.
+    pub round_energy_j: f64,
+    /// Battery charge available, joules.
+    pub charge_j: f64,
+}
+
+impl ParticipantPlan {
+    pub fn total_duration_s(&self) -> f64 {
+        self.download_s + self.compute_s + self.upload_s
+    }
+}
+
+/// Why a participant failed to report.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FailureKind {
+    /// Battery hit zero mid-round (the paper's drop-out).
+    BatteryDeath,
+    /// Exceeded the round deadline (classic straggler).
+    DeadlineMiss,
+}
+
+/// Outcome for one participant.
+#[derive(Debug, Clone, Copy)]
+pub struct ParticipantResult {
+    pub id: usize,
+    /// Reported an update within the deadline.
+    pub completed: bool,
+    pub failure: Option<FailureKind>,
+    /// Wall time the client was active this round, seconds.
+    pub active_s: f64,
+    /// Energy actually drawn from the battery, joules.
+    pub energy_spent_j: f64,
+}
+
+/// Aggregate outcome of the simulated round.
+#[derive(Debug, Clone)]
+pub struct RoundSimOutcome {
+    pub results: Vec<ParticipantResult>,
+    /// Wall-clock duration of the round, seconds.
+    pub duration_s: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum RoundEvent {
+    /// Client would finish its full timeline.
+    Finish(usize),
+    /// Client's battery dies at this instant.
+    Death(usize),
+    /// Server deadline fires.
+    Deadline,
+}
+
+/// Resolve a round over `plans` with straggler deadline `deadline_s`.
+///
+/// Pure function of its inputs — battery mutation happens in the
+/// coordinator using the returned energies, keeping this simulator
+/// trivially testable.
+pub fn simulate_round(plans: &[ParticipantPlan], deadline_s: f64) -> RoundSimOutcome {
+    let mut q: EventQueue<RoundEvent> = EventQueue::new();
+    for p in plans {
+        let duration = p.total_duration_s();
+        if p.round_energy_j > p.charge_j && p.round_energy_j > 0.0 {
+            // Battery dies at the proportional point of the timeline.
+            let frac = (p.charge_j / p.round_energy_j).clamp(0.0, 1.0);
+            q.push(duration * frac, RoundEvent::Death(p.id));
+        } else {
+            q.push(duration, RoundEvent::Finish(p.id));
+        }
+    }
+    q.push(deadline_s, RoundEvent::Deadline);
+
+    let mut results: Vec<ParticipantResult> = plans
+        .iter()
+        .map(|p| ParticipantResult {
+            id: p.id,
+            completed: false,
+            failure: None,
+            active_s: 0.0,
+            energy_spent_j: 0.0,
+        })
+        .collect();
+    let index: std::collections::HashMap<usize, usize> =
+        plans.iter().enumerate().map(|(i, p)| (p.id, i)).collect();
+
+    let mut latest_completion = 0.0f64;
+    let mut any_straggler = false;
+    while let Some(ev) = q.pop() {
+        match ev.payload {
+            RoundEvent::Finish(id) if ev.time_s <= deadline_s => {
+                let i = index[&id];
+                let p = &plans[i];
+                results[i].completed = true;
+                results[i].active_s = ev.time_s;
+                results[i].energy_spent_j = p.round_energy_j;
+                latest_completion = latest_completion.max(ev.time_s);
+            }
+            RoundEvent::Finish(_) => { /* resolved at Deadline below */ }
+            RoundEvent::Death(id) if ev.time_s <= deadline_s => {
+                let i = index[&id];
+                let p = &plans[i];
+                results[i].failure = Some(FailureKind::BatteryDeath);
+                results[i].active_s = ev.time_s;
+                results[i].energy_spent_j = p.charge_j; // drained flat
+            }
+            RoundEvent::Death(_) => { /* dies after the server moved on */ }
+            RoundEvent::Deadline => {
+                // Anyone not yet finished or dead is a straggler: pays
+                // energy for the fraction of its timeline it ran.
+                for (i, p) in plans.iter().enumerate() {
+                    if !results[i].completed && results[i].failure.is_none() {
+                        any_straggler = true;
+                        results[i].failure = Some(FailureKind::DeadlineMiss);
+                        results[i].active_s = deadline_s;
+                        let frac =
+                            (deadline_s / p.total_duration_s().max(1e-9)).clamp(0.0, 1.0);
+                        results[i].energy_spent_j =
+                            (p.round_energy_j * frac).min(p.charge_j);
+                    }
+                }
+            }
+        }
+    }
+
+    // Post-deadline battery deaths: a straggler whose partial energy
+    // equals its whole charge also dies (flagged as battery death —
+    // it is both late AND flat; battery death dominates for Fig. 4a).
+    for (i, p) in plans.iter().enumerate() {
+        if results[i].failure == Some(FailureKind::DeadlineMiss)
+            && results[i].energy_spent_j >= p.charge_j
+            && p.charge_j > 0.0
+        {
+            results[i].failure = Some(FailureKind::BatteryDeath);
+        }
+    }
+
+    let duration_s = if any_straggler { deadline_s } else { latest_completion };
+    RoundSimOutcome { results, duration_s: duration_s.max(0.0) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(id: usize, total_s: f64, energy: f64, charge: f64) -> ParticipantPlan {
+        ParticipantPlan {
+            id,
+            download_s: total_s * 0.1,
+            compute_s: total_s * 0.8,
+            upload_s: total_s * 0.1,
+            round_energy_j: energy,
+            charge_j: charge,
+        }
+    }
+
+    #[test]
+    fn all_complete_round_ends_at_slowest() {
+        let plans = vec![plan(0, 100.0, 10.0, 100.0), plan(1, 250.0, 10.0, 100.0)];
+        let out = simulate_round(&plans, 1000.0);
+        assert!(out.results.iter().all(|r| r.completed));
+        assert_eq!(out.duration_s, 250.0);
+        assert_eq!(out.results[1].active_s, 250.0);
+    }
+
+    #[test]
+    fn straggler_forces_deadline_duration() {
+        let plans = vec![plan(0, 100.0, 10.0, 100.0), plan(1, 900.0, 10.0, 100.0)];
+        let out = simulate_round(&plans, 300.0);
+        assert!(out.results[0].completed);
+        assert!(!out.results[1].completed);
+        assert_eq!(out.results[1].failure, Some(FailureKind::DeadlineMiss));
+        assert_eq!(out.duration_s, 300.0);
+        // Straggler paid 300/900 of its round energy.
+        assert!((out.results[1].energy_spent_j - 10.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn battery_death_mid_round() {
+        // Needs 100 J, has 25 J: dies at 25% of its 200 s timeline.
+        let plans = vec![plan(0, 200.0, 100.0, 25.0)];
+        let out = simulate_round(&plans, 1000.0);
+        let r = &out.results[0];
+        assert!(!r.completed);
+        assert_eq!(r.failure, Some(FailureKind::BatteryDeath));
+        assert!((r.active_s - 50.0).abs() < 1e-9);
+        assert_eq!(r.energy_spent_j, 25.0);
+    }
+
+    #[test]
+    fn exact_energy_budget_survives() {
+        let plans = vec![plan(0, 100.0, 50.0, 50.0)];
+        let out = simulate_round(&plans, 1000.0);
+        assert!(out.results[0].completed);
+        assert_eq!(out.results[0].energy_spent_j, 50.0);
+    }
+
+    #[test]
+    fn straggler_that_drains_flat_counts_as_battery_death() {
+        // Misses the deadline AND its partial energy >= charge.
+        let plans = vec![plan(0, 1000.0, 100.0, 100.0)]; // can afford full round
+        let out = simulate_round(&plans, 900.0);
+        // 900/1000 of 100 J = 90 J < 100 J charge => plain deadline miss.
+        assert_eq!(out.results[0].failure, Some(FailureKind::DeadlineMiss));
+
+        let plans = vec![plan(0, 1000.0, 200.0, 150.0)];
+        // Death scheduled at 750 s (150/200 of 1000) — before deadline.
+        let out = simulate_round(&plans, 900.0);
+        assert_eq!(out.results[0].failure, Some(FailureKind::BatteryDeath));
+    }
+
+    #[test]
+    fn empty_round_is_zero_duration() {
+        let out = simulate_round(&[], 500.0);
+        assert!(out.results.is_empty());
+        assert_eq!(out.duration_s, 0.0);
+    }
+
+    #[test]
+    fn energy_never_exceeds_charge() {
+        for (energy, charge) in [(10.0, 5.0), (10.0, 10.0), (10.0, 50.0), (0.0, 1.0)] {
+            let out = simulate_round(&[plan(0, 120.0, energy, charge)], 60.0);
+            assert!(out.results[0].energy_spent_j <= charge + 1e-12);
+            assert!(out.results[0].energy_spent_j <= energy + 1e-12);
+        }
+    }
+}

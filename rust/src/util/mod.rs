@@ -1,0 +1,16 @@
+//! In-tree substrates that would normally come from crates.io — this
+//! build is fully offline (only the `xla` PJRT bridge and `anyhow` are
+//! vendored), so per DESIGN.md §2 we implement them from scratch:
+//!
+//!  - [`rng`]  — deterministic xoshiro256++ RNG + the distributions the
+//!    trace generators need (uniform, Bernoulli, normal, log-normal,
+//!    Fisher–Yates shuffle).
+//!  - [`json`] — minimal JSON parser/writer (manifest + summaries).
+//!  - [`toml`] — TOML-subset parser/writer (experiment configs).
+//!  - [`prop`] — tiny property-testing harness (randomized cases with
+//!    seed reporting on failure) used by the invariant tests.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod toml;

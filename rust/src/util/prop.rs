@@ -1,0 +1,76 @@
+//! Tiny property-testing harness (the offline stand-in for proptest).
+//!
+//! `forall(cases, |rng| { ... })` runs the closure under `cases`
+//! independent seeded RNGs; on panic it re-raises with the failing seed
+//! embedded so the case is reproducible with `forall_seed`.
+
+use super::rng::Rng;
+
+/// Default number of cases for invariant properties.
+pub const DEFAULT_CASES: u64 = 128;
+
+/// Run `property` under `cases` seeded RNG streams. Panics (with the
+/// seed) on the first failing case.
+pub fn forall<F: FnMut(&mut Rng)>(cases: u64, mut property: F) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::seed_from_u64(seed);
+            property(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn forall_seed<F: FnOnce(&mut Rng)>(seed: u64, property: F) {
+    let mut rng = Rng::seed_from_u64(seed);
+    property(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(16, |rng| {
+            count += 1;
+            let v = rng.gen_f64();
+            assert!((0.0..1.0).contains(&v));
+        });
+        assert_eq!(count, 16);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let err = std::panic::catch_unwind(|| {
+            forall(8, |rng| {
+                // Fails for every seed.
+                assert!(rng.gen_f64() > 2.0, "impossible");
+            });
+        })
+        .unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("seed 0"), "got {msg:?}");
+    }
+
+    #[test]
+    fn forall_seed_reproduces_stream() {
+        let mut a = 0.0;
+        forall_seed(5, |rng| a = rng.gen_f64());
+        let mut b = 0.0;
+        forall_seed(5, |rng| b = rng.gen_f64());
+        assert_eq!(a, b);
+    }
+}

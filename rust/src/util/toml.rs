@@ -1,0 +1,299 @@
+//! TOML-subset parser/writer for experiment configs.
+//!
+//! Supported grammar (everything `ExperimentConfig` emits):
+//!   - `[table]` / `[table.subtable]` headers
+//!   - `key = value` with value ∈ {string, integer, float, bool,
+//!     array of numbers}
+//!   - `#` comments, blank lines
+//!
+//! The document model is a flat map from dotted path (`table.key`) to
+//! [`TomlValue`]; config structs read typed values through the
+//! accessors with defaults.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    NumArray(Vec<f64>),
+}
+
+/// A parsed TOML-subset document: dotted-path → value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(header) = line.strip_prefix('[') {
+                let header = header
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated table header", lineno + 1))?
+                    .trim();
+                if header.is_empty() {
+                    bail!("line {}: empty table header", lineno + 1);
+                }
+                prefix = header.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let path = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            entries.insert(
+                path,
+                parse_value(value.trim())
+                    .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?,
+            );
+        }
+        Ok(Self { entries })
+    }
+
+    // --- typed accessors (with defaults) -------------------------------------
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        match self.entries.get(path) {
+            Some(TomlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_f64(&self, path: &str) -> Option<f64> {
+        match self.entries.get(path) {
+            Some(TomlValue::Num(n)) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn get_usize(&self, path: &str) -> Option<usize> {
+        self.get_f64(path)
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .map(|n| n as usize)
+    }
+
+    pub fn get_u32(&self, path: &str) -> Option<u32> {
+        self.get_usize(path).map(|n| n as u32)
+    }
+
+    pub fn get_u64(&self, path: &str) -> Option<u64> {
+        self.get_usize(path).map(|n| n as u64)
+    }
+
+    pub fn get_f32(&self, path: &str) -> Option<f32> {
+        self.get_f64(path).map(|n| n as f32)
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        match self.entries.get(path) {
+            Some(TomlValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn get_num_array(&self, path: &str) -> Option<&[f64]> {
+        match self.entries.get(path) {
+            Some(TomlValue::NumArray(a)) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue> {
+    if text.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string {text:?}"))?;
+        // Minimal escapes (configs only need these).
+        return Ok(TomlValue::Str(
+            inner.replace("\\\"", "\"").replace("\\\\", "\\"),
+        ));
+    }
+    if text == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if text == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array {text:?}"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::NumArray(Vec::new()));
+        }
+        let nums = inner
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f64>()
+                    .map_err(|e| anyhow!("bad array element {s:?}: {e}"))
+            })
+            .collect::<Result<Vec<f64>>>()?;
+        return Ok(TomlValue::NumArray(nums));
+    }
+    text.replace('_', "")
+        .parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|e| anyhow!("unrecognized value {text:?}: {e}"))
+}
+
+/// Incremental writer producing the same subset the parser accepts.
+#[derive(Debug, Default)]
+pub struct TomlWriter {
+    out: String,
+    current_table: Option<String>,
+}
+
+impl TomlWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn table(&mut self, name: &str) -> &mut Self {
+        if !self.out.is_empty() {
+            self.out.push('\n');
+        }
+        let _ = writeln!(self.out, "[{name}]");
+        self.current_table = Some(name.to_string());
+        self
+    }
+
+    pub fn str(&mut self, key: &str, value: &str) -> &mut Self {
+        let escaped = value.replace('\\', "\\\\").replace('"', "\\\"");
+        let _ = writeln!(self.out, "{key} = \"{escaped}\"");
+        self
+    }
+
+    pub fn num(&mut self, key: &str, value: f64) -> &mut Self {
+        if value.fract() == 0.0 && value.abs() < 1e15 {
+            let _ = writeln!(self.out, "{key} = {}", value as i64);
+        } else {
+            let _ = writeln!(self.out, "{key} = {value}");
+        }
+        self
+    }
+
+    pub fn boolean(&mut self, key: &str, value: bool) -> &mut Self {
+        let _ = writeln!(self.out, "{key} = {value}");
+        self
+    }
+
+    pub fn num_array(&mut self, key: &str, values: &[f64]) -> &mut Self {
+        let body: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        let _ = writeln!(self.out, "{key} = [{}]", body.join(", "));
+        self
+    }
+
+    pub fn finish(&self) -> String {
+        self.out.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_and_values() {
+        let doc = TomlDoc::parse(
+            r#"
+            name = "exp-1"   # the experiment
+            [federation]
+            rounds = 500
+            fraction = 0.25
+            enabled = true
+            [devices]
+            tier_fractions = [0.25, 0.4, 0.35]
+            seed = 1_000
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("exp-1"));
+        assert_eq!(doc.get_usize("federation.rounds"), Some(500));
+        assert_eq!(doc.get_f64("federation.fraction"), Some(0.25));
+        assert_eq!(doc.get_bool("federation.enabled"), Some(true));
+        assert_eq!(
+            doc.get_num_array("devices.tier_fractions"),
+            Some(&[0.25, 0.4, 0.35][..])
+        );
+        assert_eq!(doc.get_u64("devices.seed"), Some(1000));
+    }
+
+    #[test]
+    fn writer_output_reparses() {
+        let mut w = TomlWriter::new();
+        w.str("name", "paper \"quoted\"");
+        w.table("federation");
+        w.num("rounds", 500.0).num("lr", 0.05).boolean("on", false);
+        w.table("devices");
+        w.num_array("tiers", &[0.1, 0.9]);
+        let text = w.finish();
+        let doc = TomlDoc::parse(&text).unwrap();
+        assert_eq!(doc.get_str("name"), Some("paper \"quoted\""));
+        assert_eq!(doc.get_usize("federation.rounds"), Some(500));
+        assert_eq!(doc.get_f64("federation.lr"), Some(0.05));
+        assert_eq!(doc.get_bool("federation.on"), Some(false));
+        assert_eq!(doc.get_num_array("devices.tiers"), Some(&[0.1, 0.9][..]));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse("s = \"a#b\"").unwrap();
+        assert_eq!(doc.get_str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("keyonly").is_err());
+        assert!(TomlDoc::parse("k = [1, 2").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+        assert!(TomlDoc::parse("k = nonsense").is_err());
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let doc = TomlDoc::parse("[a]\nx = 1").unwrap();
+        assert_eq!(doc.get_f64("a.y"), None);
+        assert_eq!(doc.get_str("a.x"), None, "type mismatch is None, not panic");
+        assert_eq!(doc.get_usize("a.x"), Some(1));
+    }
+}

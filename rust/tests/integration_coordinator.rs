@@ -1,0 +1,198 @@
+//! Integration tests over the full coordinator (mock runtime): the
+//! paper's qualitative claims must hold in the battery-constrained
+//! regime, plus lifecycle behaviours (recharge, early stop, config IO).
+
+use eafl::config::{ExperimentConfig, SelectorKind};
+use eafl::coordinator::Coordinator;
+use eafl::metrics::Summary;
+use eafl::runtime::MockRuntime;
+
+/// Battery-tight scenario shared by the comparison tests.
+fn tight_config(kind: SelectorKind, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_default(kind);
+    cfg.name = format!("itest-{kind}");
+    cfg.federation.rounds = rounds;
+    cfg.federation.num_clients = 80;
+    cfg.data.min_samples = 20;
+    cfg.data.max_samples = 80;
+    cfg.data.test_samples = 256;
+    cfg.devices.min_init_battery = 0.10;
+    cfg.devices.max_init_battery = 0.6;
+    cfg
+}
+
+fn run(kind: SelectorKind, rounds: usize) -> Summary {
+    let runtime = MockRuntime::default();
+    Coordinator::new(tight_config(kind, rounds), &runtime)
+        .unwrap()
+        .run()
+        .unwrap()
+        .summary()
+}
+
+/// Paper Fig. 4a: Oort (battery-oblivious) must drop out strictly more
+/// clients than EAFL in the battery-constrained regime.
+#[test]
+fn eafl_drops_fewer_clients_than_oort() {
+    let eafl = run(SelectorKind::Eafl, 150);
+    let oort = run(SelectorKind::Oort, 150);
+    assert!(
+        oort.total_dropouts > eafl.total_dropouts,
+        "oort={} must exceed eafl={}",
+        oort.total_dropouts,
+        eafl.total_dropouts
+    );
+}
+
+/// Paper Fig. 3c: while the population is alive, EAFL's fairness must
+/// stay at or above Oort's (Oort "initially enjoys the same levels of
+/// fairness but then ... degrades"). Compared as the mean over the
+/// series' live region — once everyone is dead the index is frozen and
+/// meaningless.
+#[test]
+fn eafl_fairness_at_least_oort() {
+    let runtime = MockRuntime::default();
+    let mean_live_fairness = |kind: SelectorKind| -> f64 {
+        let mut cfg = ExperimentConfig::paper_default(kind); // moderate regime
+        cfg.name = format!("itest-fair-{kind}");
+        cfg.federation.rounds = 200;
+        cfg.federation.num_clients = 80;
+        cfg.data.min_samples = 20;
+        cfg.data.max_samples = 80;
+        cfg.data.test_samples = 256;
+        let log = Coordinator::new(cfg, &runtime).unwrap().run().unwrap();
+        let live: Vec<f64> = log
+            .records
+            .iter()
+            .skip(50) // past the exploration warm-up
+            .filter(|r| r.alive_fraction > 0.5)
+            .map(|r| r.fairness)
+            .collect();
+        assert!(!live.is_empty(), "population died too early for the comparison");
+        live.iter().sum::<f64>() / live.len() as f64
+    };
+    let eafl = mean_live_fairness(SelectorKind::Eafl);
+    let oort = mean_live_fairness(SelectorKind::Oort);
+    assert!(
+        eafl >= oort - 0.01,
+        "live-region fairness: eafl {eafl:.3} must be >= oort {oort:.3}"
+    );
+}
+
+/// Paper Fig. 4b: Random (no pacer, waits for the tail) has the longest
+/// rounds.
+#[test]
+fn random_rounds_are_longest() {
+    let eafl = run(SelectorKind::Eafl, 100);
+    let random = run(SelectorKind::Random, 100);
+    assert!(
+        random.mean_round_duration_s > eafl.mean_round_duration_s,
+        "random={:.1}s must exceed eafl={:.1}s",
+        random.mean_round_duration_s,
+        eafl.mean_round_duration_s
+    );
+}
+
+/// All rounds run, wall clock advances, model improves (mock decay).
+#[test]
+fn training_progresses_end_to_end() {
+    let runtime = MockRuntime::default();
+    let cfg = tight_config(SelectorKind::Eafl, 60);
+    let log = Coordinator::new(cfg, &runtime).unwrap().run().unwrap();
+    assert_eq!(log.records.len(), 60);
+    let first_acc = log.records.iter().find(|r| r.committed).unwrap().test_accuracy;
+    let last = log.records.last().unwrap();
+    assert!(last.test_accuracy > first_acc, "accuracy must improve");
+    assert!(last.wall_clock_h > 0.0);
+    assert!(log.summary().committed_rounds > 40, "most rounds should commit");
+}
+
+/// The recharge model revives dead clients after the cooldown.
+#[test]
+fn recharge_model_revives_clients() {
+    let runtime = MockRuntime::default();
+    let mut harsh = tight_config(SelectorKind::Oort, 200);
+    harsh.devices.min_init_battery = 0.05;
+    harsh.devices.max_init_battery = 0.25;
+    harsh.devices.busy_drain_per_hour = 0.10;
+
+    let without = Coordinator::new(harsh.clone(), &runtime).unwrap().run().unwrap();
+    let mut with = harsh;
+    with.devices.recharge_after_hours = 1.0;
+    with.devices.recharge_to_fraction = 0.9;
+    let with = Coordinator::new(with, &runtime).unwrap().run().unwrap();
+
+    let alive_without = without.records.last().unwrap().alive_fraction;
+    let alive_with = with.records.last().unwrap().alive_fraction;
+    assert!(
+        alive_with > alive_without,
+        "recharge must keep more clients alive: {alive_with} vs {alive_without}"
+    );
+}
+
+/// A population that fully dies stops the run early.
+#[test]
+fn run_stops_when_population_dies() {
+    let runtime = MockRuntime::default();
+    let mut cfg = tight_config(SelectorKind::Oort, 500);
+    cfg.federation.num_clients = 10;
+    cfg.federation.participants_per_round = 5;
+    cfg.devices.min_init_battery = 0.02;
+    cfg.devices.max_init_battery = 0.08;
+    cfg.devices.busy_drain_per_hour = 0.5; // brutal background drain
+    cfg.devices.busy_probability = 1.0;
+    cfg.selector.min_battery_frac = 0.0;
+    let log = Coordinator::new(cfg, &runtime).unwrap().run().unwrap();
+    assert!(log.records.len() < 500, "run must stop early when everyone is dead");
+    assert_eq!(log.records.last().unwrap().alive_fraction, 0.0);
+}
+
+/// Config round-trips through TOML and drives the coordinator.
+#[test]
+fn config_file_roundtrip_drives_run() {
+    let dir = std::env::temp_dir().join(format!("eafl-itest-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    let mut cfg = tight_config(SelectorKind::Eafl, 5);
+    cfg.name = "from-file".into();
+    std::fs::write(&path, cfg.to_toml()).unwrap();
+
+    let loaded = ExperimentConfig::from_toml_file(&path).unwrap();
+    assert_eq!(loaded, cfg);
+    let runtime = MockRuntime::default();
+    let log = Coordinator::new(loaded, &runtime).unwrap().run().unwrap();
+    assert_eq!(log.records.len(), 5);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// FedAvg and YoGi both converge on the mock (different speeds are
+/// fine; both must improve).
+#[test]
+fn both_aggregators_improve_accuracy() {
+    for agg in [
+        eafl::config::AggregatorKind::FedAvg,
+        eafl::config::AggregatorKind::Yogi,
+    ] {
+        let runtime = MockRuntime::default();
+        let mut cfg = tight_config(SelectorKind::Eafl, 50);
+        cfg.federation.aggregator = agg;
+        let log = Coordinator::new(cfg, &runtime).unwrap().run().unwrap();
+        let last = log.records.last().unwrap();
+        assert!(
+            last.test_accuracy > 0.1,
+            "{agg:?} should reach >10% accuracy on the mock, got {}",
+            last.test_accuracy
+        );
+    }
+}
+
+/// Cross-selector determinism guard: two full compare-style runs under
+/// the same seeds give identical headline numbers.
+#[test]
+fn compare_runs_are_deterministic() {
+    let a = run(SelectorKind::Eafl, 40);
+    let b = run(SelectorKind::Eafl, 40);
+    assert_eq!(a.total_dropouts, b.total_dropouts);
+    assert_eq!(a.final_accuracy, b.final_accuracy);
+    assert_eq!(a.wall_clock_h, b.wall_clock_h);
+}

@@ -1,0 +1,175 @@
+//! Integration tests over the REAL runtime: AOT artifacts -> PJRT CPU
+//! -> execute. Requires `make artifacts` (the Makefile's `test` target
+//! guarantees ordering).
+//!
+//! These tests validate the L3<->L2 contract end to end: shapes, real
+//! gradient descent through the Pallas-kernel HLO, and the full
+//! coordinator loop doing real SGD.
+
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use eafl::config::{ExperimentConfig, SelectorKind};
+use eafl::coordinator::Coordinator;
+use eafl::data::SyntheticSpeech;
+use eafl::runtime::{ModelRuntime, XlaRuntime};
+use eafl::training::Trainer;
+
+fn artifact_dir() -> PathBuf {
+    std::env::var_os("EAFL_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+// PJRT CPU client is process-global state; share ONE runtime across
+// tests behind a mutex (XlaRuntime is Send but not Sync — the xla
+// crate's wrappers hold Rc internals — so cargo's parallel test
+// threads must serialize access).
+fn runtime() -> MutexGuard<'static, XlaRuntime> {
+    static RT: OnceLock<Mutex<XlaRuntime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        Mutex::new(
+            XlaRuntime::load(&artifact_dir())
+                .expect("artifacts missing — run `make artifacts` first"),
+        )
+    })
+    .lock()
+    // A failed sibling test must not cascade: the runtime itself is
+    // stateless between calls, so poisoning is safe to clear.
+    .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[test]
+fn manifest_contract_matches_model() {
+    let rt = runtime();
+    assert_eq!(rt.param_count(), 69_123);
+    assert_eq!(rt.num_classes(), 35);
+    assert_eq!(rt.input_hw(), 32);
+    assert_eq!(rt.train_batch(), 20); // paper batch size
+}
+
+#[test]
+fn init_params_deterministic_and_seed_sensitive() {
+    let rt = runtime();
+    let a = rt.init_params(7).unwrap();
+    let b = rt.init_params(7).unwrap();
+    let c = rt.init_params(8).unwrap();
+    assert_eq!(a.len(), rt.param_count());
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+    assert!(a.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn train_step_descends_on_fixed_batch() {
+    let rt = runtime();
+    let data = SyntheticSpeech::new(rt.input_hw(), rt.num_classes(), 0.6, 3);
+    let mut x = vec![0.0f32; rt.train_batch() * data.feature_len()];
+    let mut y = vec![0i32; rt.train_batch()];
+    let samples: Vec<(u16, u32)> = (0..20).map(|i| ((i % 5) as u16, i as u32)).collect();
+    data.fill_batch(&samples, 1.0, &mut x, &mut y);
+
+    let mut params = rt.init_params(1).unwrap();
+    let first = rt.train_step(&params, &x, &y, 0.05).unwrap();
+    assert_eq!(first.per_example_loss.len(), rt.train_batch());
+    let mut loss = first.mean_loss;
+    params = first.params;
+    for _ in 0..20 {
+        let out = rt.train_step(&params, &x, &y, 0.05).unwrap();
+        params = out.params;
+        loss = out.mean_loss;
+    }
+    assert!(
+        loss < first.mean_loss * 0.7,
+        "20 steps must cut loss: {} -> {loss}",
+        first.mean_loss
+    );
+    assert!(params.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn per_example_losses_mean_matches_scalar() {
+    let rt = runtime();
+    let data = SyntheticSpeech::new(rt.input_hw(), rt.num_classes(), 0.6, 4);
+    let mut x = vec![0.0f32; rt.train_batch() * data.feature_len()];
+    let mut y = vec![0i32; rt.train_batch()];
+    let samples: Vec<(u16, u32)> = (0..20).map(|i| ((i % 7) as u16, i as u32)).collect();
+    data.fill_batch(&samples, 1.0, &mut x, &mut y);
+    let params = rt.init_params(2).unwrap();
+    let out = rt.train_step(&params, &x, &y, 0.05).unwrap();
+    let mean: f32 =
+        out.per_example_loss.iter().sum::<f32>() / out.per_example_loss.len() as f32;
+    assert!(
+        (mean - out.mean_loss).abs() < 1e-4,
+        "mean(per_example)={mean} vs scalar={}",
+        out.mean_loss
+    );
+}
+
+#[test]
+fn eval_step_counts_are_consistent() {
+    let rt = runtime();
+    let data = SyntheticSpeech::new(rt.input_hw(), rt.num_classes(), 0.6, 5);
+    let mut x = vec![0.0f32; rt.eval_batch() * data.feature_len()];
+    let mut y = vec![0i32; rt.eval_batch()];
+    let test = data.test_set(rt.eval_batch());
+    data.fill_batch(&test, 1.0, &mut x, &mut y);
+    let params = rt.init_params(3).unwrap();
+    let out = rt.eval_step(&params, &x, &y).unwrap();
+    assert!((0..=rt.eval_batch() as i32).contains(&out.correct));
+    assert!(out.mean_loss > 0.0 && out.mean_loss.is_finite());
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let rt = runtime();
+    let params = rt.init_params(0).unwrap();
+    assert!(rt.train_step(&params, &[0.0; 3], &[0; 20], 0.05).is_err());
+    assert!(rt.train_step(&params[..10], &[0.0; 20 * 1024], &[0; 20], 0.05).is_err());
+    assert!(rt.eval_step(&params, &[0.0; 128 * 1024], &[0; 5]).is_err());
+}
+
+/// Real trainer: a client with separable data learns it.
+#[test]
+fn trainer_overfits_one_client_shard() {
+    let rt = runtime();
+    let data = SyntheticSpeech::new(rt.input_hw(), rt.num_classes(), 0.4, 6);
+    let shard = eafl::data::ClientShard {
+        labels: vec![0, 1, 2, 3],
+        samples: (0..40).map(|i| ((i % 4) as u16, i as u32)).collect(),
+        channel_gain: 1.0,
+    };
+    let mut trainer = Trainer::new(&*rt, &data);
+    let global = rt.init_params(9).unwrap();
+    let short = trainer.train_client(&global, &shard, 0.05, 2, 1).unwrap();
+    let long = trainer.train_client(&global, &shard, 0.05, 40, 1).unwrap();
+    assert!(
+        long.final_loss < short.final_loss * 0.8,
+        "more local steps must fit better: {} vs {}",
+        long.final_loss,
+        short.final_loss
+    );
+    assert!(long.stat_util > 0.0);
+}
+
+/// The full coordinator over the REAL runtime: accuracy beats the
+/// 1/35 ≈ 2.9% random-guess floor within a short run.
+#[test]
+fn coordinator_learns_with_real_runtime() {
+    let rt = runtime();
+    let mut cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+    cfg.federation.rounds = 60; // past the non-IID + YoGi cold start
+    cfg.federation.eval_interval = 5;
+    cfg.federation.num_clients = 30;
+    // paper-default shard sizes: enough local data to learn from
+    cfg.data.min_samples = 60;
+    cfg.data.max_samples = 240;
+    let log = Coordinator::new(cfg, &*rt).unwrap().run().unwrap();
+    let last = log.records.last().unwrap();
+    assert!(
+        last.test_accuracy > 0.2,
+        "real training must climb well past the 2.9% guess floor, got {}",
+        last.test_accuracy
+    );
+    assert!(log.summary().committed_rounds >= 45);
+}

@@ -1,0 +1,228 @@
+//! Property-based invariant tests over the coordinator stack (in-tree
+//! prop harness — see util::prop). Each property runs under many seeded
+//! RNG streams and random configurations.
+
+use eafl::config::{AggregatorKind, ExperimentConfig, SelectorKind};
+use eafl::coordinator::{Coordinator, Registry};
+use eafl::metrics::jain_index;
+use eafl::runtime::MockRuntime;
+use eafl::selection::{make_selector, Candidate};
+use eafl::sim::{simulate_round, ParticipantPlan};
+use eafl::util::prop::forall;
+use eafl::util::rng::Rng;
+
+fn random_candidates(rng: &mut Rng, n: usize) -> Vec<Candidate> {
+    (0..n)
+        .map(|id| Candidate {
+            id,
+            stat_util: if rng.gen_bool(0.5) {
+                Some(rng.gen_range_f64(0.0, 300.0))
+            } else {
+                None
+            },
+            measured_duration_s: if rng.gen_bool(0.5) {
+                Some(rng.gen_range_f64(10.0, 2000.0))
+            } else {
+                None
+            },
+            expected_duration_s: rng.gen_range_f64(10.0, 2000.0),
+            last_selected_round: rng.gen_range_usize(0, 40) as u64,
+            battery_frac: rng.gen_f64(),
+            projected_drain_frac: rng.gen_range_f64(0.0, 0.2),
+        })
+        .collect()
+}
+
+/// Every selector: |selected| <= K, ids distinct, ids ∈ candidates.
+#[test]
+fn prop_selection_never_exceeds_k_and_is_valid() {
+    forall(96, |rng| {
+        let n = rng.gen_range_usize(0, 60);
+        let k = rng.gen_range_usize(1, 15);
+        let round = rng.gen_range_usize(1, 100) as u64;
+        let cands = random_candidates(rng, n);
+        let valid: std::collections::HashSet<usize> = cands.iter().map(|c| c.id).collect();
+        for kind in [SelectorKind::Random, SelectorKind::Oort, SelectorKind::Eafl] {
+            let mut cfg = eafl::config::SelectorConfig::default();
+            cfg.kind = kind;
+            let mut selector = make_selector(&cfg);
+            let picked = selector.select(round, &cands, k, rng);
+            assert!(picked.len() <= k, "{kind:?} picked {} > K={k}", picked.len());
+            assert!(picked.len() <= n);
+            let mut dedup = picked.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), picked.len(), "{kind:?} duplicated ids");
+            assert!(picked.iter().all(|id| valid.contains(id)), "{kind:?} invented an id");
+        }
+    });
+}
+
+/// Round simulation: energy spent never exceeds charge or the round's
+/// energy demand; completed + failed == selected; duration bounded by
+/// the deadline when stragglers exist.
+#[test]
+fn prop_round_sim_conserves_energy_and_counts() {
+    forall(128, |rng| {
+        let n = rng.gen_range_usize(1, 20);
+        let deadline = rng.gen_range_f64(10.0, 2000.0);
+        let plans: Vec<ParticipantPlan> = (0..n)
+            .map(|id| ParticipantPlan {
+                id,
+                download_s: rng.gen_range_f64(0.1, 50.0),
+                compute_s: rng.gen_range_f64(1.0, 2000.0),
+                upload_s: rng.gen_range_f64(0.1, 50.0),
+                round_energy_j: rng.gen_range_f64(0.0, 3000.0),
+                charge_j: rng.gen_range_f64(0.0, 3000.0),
+            })
+            .collect();
+        let out = simulate_round(&plans, deadline);
+        assert_eq!(out.results.len(), plans.len());
+        let mut completed = 0;
+        let mut failed = 0;
+        for (r, p) in out.results.iter().zip(&plans) {
+            assert!(r.energy_spent_j <= p.charge_j + 1e-9, "spent more than charge");
+            assert!(r.energy_spent_j <= p.round_energy_j + 1e-9, "spent more than demand");
+            assert!(r.energy_spent_j >= 0.0);
+            assert!(r.active_s >= 0.0);
+            if r.completed {
+                completed += 1;
+                assert!(r.failure.is_none());
+                assert!(r.active_s <= deadline + 1e-9);
+            } else {
+                failed += 1;
+                assert!(r.failure.is_some());
+            }
+        }
+        assert_eq!(completed + failed, n);
+        assert!(out.duration_s <= deadline.max(0.0) + 1e-9 || failed == 0);
+    });
+}
+
+/// Jain's index is always in (0, 1] and 1/n lower-bounded.
+#[test]
+fn prop_jain_bounds() {
+    forall(128, |rng| {
+        let n = rng.gen_range_usize(1, 200);
+        let counts: Vec<u64> =
+            (0..n).map(|_| rng.gen_range_usize(0, 50) as u64).collect();
+        let j = jain_index(&counts);
+        assert!(j > 0.0 && j <= 1.0 + 1e-12, "jain {j} out of bounds");
+        if counts.iter().any(|&c| c > 0) {
+            assert!(j >= 1.0 / n as f64 - 1e-12);
+        }
+    });
+}
+
+fn random_smoke_config(rng: &mut Rng, kind: SelectorKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::smoke(kind);
+    cfg.federation.num_clients = rng.gen_range_usize(8, 30);
+    cfg.federation.participants_per_round =
+        rng.gen_range_usize(1, cfg.federation.num_clients.min(8));
+    cfg.federation.rounds = rng.gen_range_usize(3, 12);
+    cfg.federation.aggregator = if rng.gen_bool(0.5) {
+        AggregatorKind::Yogi
+    } else {
+        AggregatorKind::FedAvg
+    };
+    cfg.devices.min_init_battery = rng.gen_range_f64(0.02, 0.3);
+    cfg.devices.max_init_battery =
+        rng.gen_range_f64(cfg.devices.min_init_battery, 1.0);
+    cfg.devices.seed = rng.next_u64();
+    cfg.data.seed = rng.next_u64();
+    cfg.network.seed = rng.next_u64();
+    // Tiny data so MockRuntime batches stay cheap.
+    cfg.data.min_samples = 5;
+    cfg.data.max_samples = 20;
+    cfg.data.test_samples = 256;
+    cfg
+}
+
+/// Full coordinator runs (mock runtime): battery never increases
+/// (recharge off), round accounting conserves clients, energies and
+/// fairness stay in range.
+#[test]
+fn prop_coordinator_accounting_invariants() {
+    forall(24, |rng| {
+        let kind = *rng
+            .choose(&[SelectorKind::Random, SelectorKind::Oort, SelectorKind::Eafl])
+            .unwrap();
+        let cfg = random_smoke_config(rng, kind);
+        let runtime = MockRuntime {
+            train_batch: cfg.data.batch_size,
+            ..MockRuntime::default()
+        };
+        let log = Coordinator::new(cfg.clone(), &runtime).unwrap().run().unwrap();
+        let mut last_battery = f64::MAX;
+        let mut last_dead = 0usize;
+        let mut last_energy = 0.0f64;
+        let mut last_wall = 0.0f64;
+        for r in &log.records {
+            assert_eq!(
+                r.completed + r.dropped + r.deadline_missed,
+                r.selected,
+                "round {} does not conserve participants",
+                r.round
+            );
+            assert!(r.selected <= cfg.federation.participants_per_round);
+            assert!(r.cumulative_dead >= last_dead, "dead count must be monotone");
+            assert!(r.total_fl_energy_j >= last_energy - 1e-6, "energy must be monotone");
+            assert!(r.wall_clock_h > last_wall, "clock must advance");
+            assert!((0.0..=1.0).contains(&r.test_accuracy));
+            assert!(r.fairness > 0.0 && r.fairness <= 1.0 + 1e-12);
+            assert!((0.0..=1.0).contains(&r.alive_fraction));
+            // Mean battery over alive clients can rise when low-battery
+            // clients die out of the mean, but population mean must not
+            // exceed the previous value plus that effect; we check the
+            // weaker invariant that it stays in [0, 1].
+            assert!((0.0..=1.0).contains(&r.mean_battery));
+            last_dead = r.cumulative_dead;
+            last_energy = r.total_fl_energy_j;
+            last_wall = r.wall_clock_h;
+            last_battery = last_battery.min(r.mean_battery);
+        }
+    });
+}
+
+/// Registry candidates never include dead or below-floor clients.
+#[test]
+fn prop_candidates_respect_eligibility() {
+    forall(48, |rng| {
+        let cfg = random_smoke_config(rng, SelectorKind::Eafl);
+        let mut registry = Registry::build(&cfg, 35, 1000);
+        // Randomly kill/drain some clients.
+        for c in registry.clients.iter_mut() {
+            if rng.gen_bool(0.3) {
+                let cap = c.battery.capacity_joules();
+                c.battery.drain_fl(cap * rng.gen_range_f64(0.5, 2.0), 1.0);
+            }
+        }
+        let floor = rng.gen_range_f64(0.0, 0.3);
+        let cands = registry.candidates(1, floor, 5, cfg.data.batch_size);
+        for cand in &cands {
+            let c = &registry.clients[cand.id];
+            assert!(c.battery.is_alive());
+            assert!(c.battery.fraction() > floor);
+            assert!(cand.expected_duration_s > 0.0);
+            assert!(cand.projected_drain_frac >= 0.0);
+        }
+    });
+}
+
+/// Determinism: identical config + seeds => identical metrics CSV.
+#[test]
+fn prop_runs_are_reproducible() {
+    forall(8, |rng| {
+        let kind = *rng
+            .choose(&[SelectorKind::Random, SelectorKind::Oort, SelectorKind::Eafl])
+            .unwrap();
+        let cfg = random_smoke_config(rng, kind);
+        let runtime = MockRuntime {
+            train_batch: cfg.data.batch_size,
+            ..MockRuntime::default()
+        };
+        let a = Coordinator::new(cfg.clone(), &runtime).unwrap().run().unwrap();
+        let b = Coordinator::new(cfg, &runtime).unwrap().run().unwrap();
+        assert_eq!(a.to_csv(), b.to_csv(), "same seeds must reproduce bit-identical runs");
+    });
+}
