@@ -1,0 +1,26 @@
+# EAFL build entry points. The Rust side is fully offline
+# (vendor/anyhow is in-tree); `artifacts` needs the Python/JAX
+# toolchain and is only required for `--features xla` builds.
+
+.PHONY: build test bench verify sweep artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+# Tier-1 verification: build + tests + (if installed) clippy + fmt.
+verify:
+	./ci.sh
+
+# Smoke the campaign runner end to end on the mock runtime.
+sweep: build
+	./target/release/eafl sweep --mock --rounds 60 --out results/campaign
+
+# AOT-lower the JAX model to HLO text for the PJRT runtime (Layer 2).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts

@@ -3,35 +3,57 @@
 //! Oort-like utility chasing, f = 0 to pure battery chasing; the paper
 //! operates at f = 0.25.
 //!
+//! Built on the campaign runner: the whole sweep is ONE campaign whose
+//! f axis spans the blend, run across threads — the bench therefore
+//! also measures the campaign layer's parallel speedup over the
+//! sequential equivalent.
+//!
 //! Run: cargo bench --bench ablation_f_sweep
 
 use eafl::benchkit::Bench;
+use eafl::campaign::{run_campaign, CampaignGrid, CampaignSpec};
 use eafl::config::{ExperimentConfig, SelectorKind};
-use eafl::coordinator::Coordinator;
-use eafl::metrics::Summary;
 use eafl::runtime::MockRuntime;
 
-fn run(f: f64, rounds: usize) -> Summary {
-    let runtime = MockRuntime::default();
+const F_VALUES: [f64; 5] = [0.0, 0.25, 0.5, 0.75, 1.0];
+const ROUNDS: usize = 150;
+
+fn spec(jobs: usize) -> CampaignSpec {
     let mut cfg = ExperimentConfig::paper_default(SelectorKind::Eafl);
-    cfg.name = format!("f={f}");
-    cfg.federation.rounds = rounds;
+    cfg.federation.rounds = ROUNDS;
     cfg.federation.num_clients = 100;
-    cfg.selector.eafl_f = f;
     cfg.devices.min_init_battery = 0.10;
     cfg.devices.max_init_battery = 0.6;
-    Coordinator::new(cfg, &runtime).unwrap().run().unwrap().summary()
+    let mut spec = CampaignSpec::new("f-ablation", cfg);
+    spec.grid = CampaignGrid {
+        selectors: vec![SelectorKind::Eafl],
+        seeds: vec![7],
+        f_values: F_VALUES.to_vec(),
+        client_counts: Vec::new(),
+    };
+    spec.jobs = jobs;
+    spec
 }
 
 fn main() {
-    const ROUNDS: usize = 150;
+    let runtime = MockRuntime::default();
     let mut bench = Bench::heavy();
-    let mut rows = Vec::new();
-    for f in [0.0, 0.25, 0.5, 0.75, 1.0] {
-        let s = bench.run_once(&format!("f-sweep f={f} ({ROUNDS} rounds, mock)"), || {
-            run(f, ROUNDS)
-        });
-        rows.push((f, s));
+
+    let sequential = bench.run_once(
+        &format!("f-sweep campaign jobs=1 ({} runs x {ROUNDS} rounds, mock)", F_VALUES.len()),
+        || run_campaign(&spec(1), &runtime, None).unwrap(),
+    );
+    let jobs = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let parallel = bench.run_once(
+        &format!("f-sweep campaign jobs={jobs} (same grid)"),
+        || run_campaign(&spec(jobs), &runtime, None).unwrap(),
+    );
+
+    // Campaign determinism: job count must not move a single number.
+    for (a, b) in sequential.runs.iter().zip(&parallel.runs) {
+        assert_eq!(a.summary.final_accuracy, b.summary.final_accuracy);
+        assert_eq!(a.summary.total_dropouts, b.summary.total_dropouts);
+        assert_eq!(a.summary.wall_clock_h, b.summary.wall_clock_h);
     }
 
     println!("\n=== Eq. (1) f ablation ===");
@@ -39,10 +61,11 @@ fn main() {
         "{:<6} {:>9} {:>10} {:>10} {:>13} {:>12}",
         "f", "acc", "dropouts", "fairness", "mean_rnd(s)", "energy(kJ)"
     );
-    for (f, s) in &rows {
+    for r in &sequential.runs {
+        let s = &r.summary;
         println!(
             "{:<6} {:>9.4} {:>10} {:>10.3} {:>13.1} {:>12.1}",
-            f,
+            r.f,
             s.final_accuracy,
             s.total_dropouts,
             s.final_fairness,
@@ -53,8 +76,8 @@ fn main() {
 
     // Shape check: battery-heavier blends (smaller f) must not drop
     // MORE clients than the pure-utility extreme.
-    let d0 = rows[0].1.total_dropouts; // f = 0
-    let d1 = rows.last().unwrap().1.total_dropouts; // f = 1
+    let d0 = sequential.runs.first().unwrap().summary.total_dropouts; // f = 0
+    let d1 = sequential.runs.last().unwrap().summary.total_dropouts; // f = 1
     println!(
         "\nshape: dropouts(f=0)={d0} <= dropouts(f=1)={d1}: {}",
         if d0 <= d1 { "HOLDS" } else { "VIOLATED" }

@@ -6,7 +6,7 @@
 
 use eafl::benchkit::{bb, Bench};
 use eafl::config::{SelectorConfig, SelectorKind};
-use eafl::selection::{make_selector, Candidate};
+use eafl::selection::{make_selector, percentile_in_place, Candidate};
 use eafl::util::rng::Rng;
 
 fn candidates(n: usize) -> Vec<Candidate> {
@@ -29,8 +29,40 @@ fn candidates(n: usize) -> Vec<Candidate> {
         .collect()
 }
 
+/// The pre-refactor percentile: clone + full sort on every call.
+fn percentile_sort_baseline(values: &[f64], p: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = values.to_vec();
+    v.sort_by(f64::total_cmp);
+    let pos = p.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
 fn main() {
     let mut bench = Bench::new();
+
+    // The selection hot path's primitive: percentile of the candidate
+    // duration distribution, computed on every deadline_s call.
+    for n in [1_000usize, 100_000] {
+        let mut rng = Rng::seed_from_u64(3);
+        let durations: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(60.0, 900.0)).collect();
+        let mut scratch = durations.clone();
+        bench.run(&format!("percentile sort-baseline N={n}"), || {
+            bb(percentile_sort_baseline(bb(&durations), 0.8));
+        });
+        bench.run(&format!("percentile select_nth (in place) N={n}"), || {
+            scratch.copy_from_slice(&durations);
+            bb(percentile_in_place(bb(&mut scratch), 0.8));
+        });
+    }
+
     for n in [100usize, 1_000, 10_000, 100_000] {
         let cands = candidates(n);
         for kind in [SelectorKind::Random, SelectorKind::Oort, SelectorKind::Eafl] {

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Offline verification pipeline (what `make verify` runs).
+#
+# Order matters: the cheap compile gate first, then the test suite,
+# then lints. clippy/rustfmt are optional components of a toolchain, so
+# their absence downgrades to a loud skip instead of a hard failure —
+# everything else is strict.
+
+set -euo pipefail
+cd "$(dirname "$0")"
+
+# Never touch the network: every dependency is vendored in-tree.
+export CARGO_NET_OFFLINE=true
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+if cargo clippy --version >/dev/null 2>&1; then
+  echo "==> cargo clippy --all-targets -- -D warnings"
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "==> SKIP clippy (component not installed)"
+fi
+
+if cargo fmt --version >/dev/null 2>&1; then
+  echo "==> cargo fmt --check"
+  cargo fmt --check
+else
+  echo "==> SKIP rustfmt (component not installed)"
+fi
+
+echo "==> verify OK"

@@ -1,7 +1,9 @@
 //! Ablation over EAFL's f (Eq. 1 blend weight) — the paper's §3.1 Q2
 //! trade-off between model quality and energy efficiency.
 //!
-//! Sweeps f ∈ {0, 0.25, 0.5, 0.75, 1.0} under identical seeds:
+//! Sweeps f ∈ {0, 0.25, 0.5, 0.75, 1.0} under identical seeds as ONE
+//! campaign (see `eafl::campaign`): the runs execute across threads and
+//! merge into a single campaign.json/.csv under --out.
 //!  - f = 0    → pure battery chasing (selection ignores utility),
 //!  - f = 0.25 → the paper's operating point,
 //!  - f = 1    → pure Oort (battery-oblivious).
@@ -9,23 +11,29 @@
 //! Expected shape: drop-outs increase with f; time-to-accuracy improves
 //! with f until drop-outs erase the gain.
 //!
-//! Run: cargo run --release --example f_sweep_ablation -- [--mock] [--rounds N]
+//! Run: cargo run --release --example f_sweep_ablation -- \
+//!          [--mock] [--rounds N] [--jobs N] [--out DIR]
+
+use std::path::PathBuf;
 
 use anyhow::Result;
 
+use eafl::campaign::{run_campaign, CampaignGrid, CampaignSpec};
 use eafl::config::{ExperimentConfig, SelectorKind};
-use eafl::coordinator::Coordinator;
 use eafl::runtime::{MockRuntime, ModelRuntime, XlaRuntime};
+
+fn flag<T: std::str::FromStr>(args: &[String], name: &str) -> Option<T> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|v| {
+        v.parse()
+            .unwrap_or_else(|_| panic!("invalid {name} value {v:?} (expected {name} N)"))
+    })
+}
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let use_mock = args.iter().any(|a| a == "--mock");
-    let rounds = args
-        .iter()
-        .position(|a| a == "--rounds")
-        .and_then(|i| args.get(i + 1))
-        .map(|v| v.parse::<usize>().expect("--rounds N"))
-        .unwrap_or(if use_mock { 150 } else { 60 });
+    let rounds = flag::<usize>(&args, "--rounds").unwrap_or(if use_mock { 150 } else { 60 });
+    let out = PathBuf::from(flag::<String>(&args, "--out").unwrap_or_else(|| "results/fsweep".into()));
 
     let runtime: Box<dyn ModelRuntime> = if use_mock {
         Box::new(MockRuntime::default())
@@ -33,24 +41,35 @@ fn main() -> Result<()> {
         Box::new(XlaRuntime::load(&XlaRuntime::default_dir())?)
     };
 
+    let mut cfg = ExperimentConfig::paper_default(SelectorKind::Eafl);
+    cfg.federation.rounds = rounds;
+    cfg.federation.num_clients = 100;
+    // Battery-tight scenario so the energy term has bite.
+    cfg.devices.min_init_battery = 0.15;
+    cfg.devices.max_init_battery = 0.7;
+
+    let mut spec = CampaignSpec::new("fsweep", cfg);
+    spec.grid = CampaignGrid {
+        selectors: vec![SelectorKind::Eafl],
+        seeds: vec![spec.base.data.seed],
+        f_values: vec![0.0, 0.25, 0.5, 0.75, 1.0],
+        client_counts: Vec::new(),
+    };
+    if let Some(j) = flag::<usize>(&args, "--jobs") {
+        spec.jobs = j.max(1);
+    }
+
+    let report = run_campaign(&spec, runtime.as_ref(), Some(&out))?;
+
     println!(
         "{:<6} {:>9} {:>9} {:>10} {:>12} {:>10} {:>12}",
         "f", "acc", "fairness", "dropouts", "mean_rnd(s)", "wall(h)", "energy(kJ)"
     );
-    for f in [0.0, 0.25, 0.5, 0.75, 1.0] {
-        let mut cfg = ExperimentConfig::paper_default(SelectorKind::Eafl);
-        cfg.name = format!("fsweep-{f}");
-        cfg.federation.rounds = rounds;
-        cfg.federation.num_clients = 100;
-        cfg.selector.eafl_f = f;
-        // Battery-tight scenario so the energy term has bite.
-        cfg.devices.min_init_battery = 0.15;
-        cfg.devices.max_init_battery = 0.7;
-        let log = Coordinator::new(cfg, runtime.as_ref())?.run()?;
-        let s = log.summary();
+    for r in &report.runs {
+        let s = &r.summary;
         println!(
             "{:<6} {:>9.4} {:>9.3} {:>10} {:>12.1} {:>10.2} {:>12.1}",
-            f,
+            r.f,
             s.final_accuracy,
             s.final_fairness,
             s.total_dropouts,
@@ -59,5 +78,9 @@ fn main() -> Result<()> {
             s.total_fl_energy_j / 1000.0
         );
     }
+    println!(
+        "\nmerged campaign summary: {}",
+        out.join(format!("{}.campaign.json", report.name)).display()
+    );
     Ok(())
 }

@@ -1,0 +1,404 @@
+//! Multi-experiment campaign runner — the paper's figures are grids,
+//! not single runs (Figs. 3–4 are selector × seed sweeps, the ablation
+//! is an f sweep), so the unit of work here is a whole *campaign*:
+//!
+//!  1. [`CampaignGrid`] expands selectors × seeds × f-values × client
+//!     counts against a base [`ExperimentConfig`] into named run
+//!     configs (empty axes inherit the base value);
+//!  2. [`run_campaign`] executes the runs across `jobs` worker threads
+//!     — experiments are embarrassingly parallel, each gets its own
+//!     [`Coordinator`] pinned to 1 execution worker so threads × runs
+//!     don't oversubscribe — sharing one `&dyn ModelRuntime`;
+//!  3. per-run CSV/summary files plus a merged `campaign.json` and
+//!     `campaign.csv` land in the output directory.
+//!
+//! Deterministic: a run's seeds derive only from its grid coordinates,
+//! so any subset of a campaign reproduces bit-identically, at any job
+//! count, in any execution order.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use anyhow::{Context, Result};
+
+use crate::config::{ExperimentConfig, SelectorKind};
+use crate::coordinator::Coordinator;
+use crate::metrics::Summary;
+use crate::runtime::ModelRuntime;
+use crate::util::json::Json;
+
+/// The sweep axes. Empty `f_values` / `client_counts` inherit the base
+/// config's value (a single grid point on that axis).
+#[derive(Debug, Clone)]
+pub struct CampaignGrid {
+    pub selectors: Vec<SelectorKind>,
+    pub seeds: Vec<u64>,
+    pub f_values: Vec<f64>,
+    pub client_counts: Vec<usize>,
+}
+
+impl Default for CampaignGrid {
+    /// The headline comparison grid: all three selectors × three seeds
+    /// at the base config's f and population.
+    fn default() -> Self {
+        Self {
+            selectors: vec![SelectorKind::Eafl, SelectorKind::Oort, SelectorKind::Random],
+            seeds: vec![1, 2, 3],
+            f_values: Vec::new(),
+            client_counts: Vec::new(),
+        }
+    }
+}
+
+/// A whole campaign: base config + grid + parallelism.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    /// Campaign name (used in the merged output file names).
+    pub name: String,
+    pub base: ExperimentConfig,
+    pub grid: CampaignGrid,
+    /// Experiments to run concurrently.
+    pub jobs: usize,
+    /// Execution-phase worker threads inside each experiment (the
+    /// campaign default of 1 makes experiments the parallel unit).
+    pub workers_per_run: usize,
+}
+
+impl CampaignSpec {
+    pub fn new(name: impl Into<String>, base: ExperimentConfig) -> Self {
+        Self {
+            name: name.into(),
+            base,
+            grid: CampaignGrid::default(),
+            jobs: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            workers_per_run: 1,
+        }
+    }
+}
+
+/// One grid point: the coordinates plus the fully resolved config.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub selector: SelectorKind,
+    pub seed: u64,
+    pub f: f64,
+    pub clients: usize,
+    pub cfg: ExperimentConfig,
+}
+
+/// One finished run: its coordinates plus the end-of-run summary.
+#[derive(Debug, Clone)]
+pub struct CampaignRun {
+    pub selector: SelectorKind,
+    pub seed: u64,
+    pub f: f64,
+    pub clients: usize,
+    pub summary: Summary,
+}
+
+/// The merged campaign result, in grid order.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    pub name: String,
+    pub runs: Vec<CampaignRun>,
+}
+
+/// Derive every per-run RNG stream from the grid seed so seeds — not
+/// incidental config state — pin the run.
+fn apply_seed(cfg: &mut ExperimentConfig, seed: u64) {
+    cfg.data.seed = seed;
+    cfg.devices.seed = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+    cfg.network.seed = seed.wrapping_mul(0xBF58_476D_1CE4_E5B9).wrapping_add(2);
+    cfg.training.init_seed = (seed as u32).wrapping_mul(2_654_435_761).wrapping_add(3);
+}
+
+/// Expand the grid into fully resolved, uniquely named run configs.
+/// Order: selector (outermost) → clients → f → seed; the f axis only
+/// applies to EAFL (other selectors ignore f and get a single point).
+pub fn expand(spec: &CampaignSpec) -> Vec<RunSpec> {
+    let f_values: Vec<f64> = if spec.grid.f_values.is_empty() {
+        vec![spec.base.selector.eafl_f]
+    } else {
+        spec.grid.f_values.clone()
+    };
+    let client_counts: Vec<usize> = if spec.grid.client_counts.is_empty() {
+        vec![spec.base.federation.num_clients]
+    } else {
+        spec.grid.client_counts.clone()
+    };
+    let mut runs = Vec::new();
+    for &selector in &spec.grid.selectors {
+        // f only parameterizes EAFL's Eq. (1) reward; Oort and Random
+        // never read it, so for them the axis collapses to one point —
+        // otherwise every extra f value would repeat identical runs.
+        let selector_f: &[f64] = if selector == SelectorKind::Eafl {
+            &f_values
+        } else {
+            &f_values[..1]
+        };
+        for &clients in &client_counts {
+            for &f in selector_f {
+                for &seed in &spec.grid.seeds {
+                    let mut cfg = spec.base.clone();
+                    cfg.selector.kind = selector;
+                    cfg.selector.eafl_f = f;
+                    cfg.federation.num_clients = clients;
+                    cfg.federation.participants_per_round =
+                        cfg.federation.participants_per_round.min(clients);
+                    apply_seed(&mut cfg, seed);
+                    cfg.name = format!("{}-{selector}-n{clients}-f{f}-s{seed}", spec.name);
+                    runs.push(RunSpec { selector, seed, f, clients, cfg });
+                }
+            }
+        }
+    }
+    runs
+}
+
+fn run_one(
+    run: &RunSpec,
+    runtime: &dyn ModelRuntime,
+    out_dir: Option<&Path>,
+    workers_per_run: usize,
+) -> Result<CampaignRun> {
+    let cfg = run.cfg.clone();
+    let name = cfg.name.clone();
+    let log = Coordinator::new(cfg, runtime)
+        .with_context(|| format!("building coordinator for {name}"))?
+        .with_workers(workers_per_run)
+        .run()
+        .with_context(|| format!("running {name}"))?;
+    if let Some(dir) = out_dir {
+        log.write_csv(&dir.join(format!("{name}.csv")))?;
+        log.write_summary_json(&dir.join(format!("{name}.summary.json")))?;
+    }
+    Ok(CampaignRun {
+        selector: run.selector,
+        seed: run.seed,
+        f: run.f,
+        clients: run.clients,
+        summary: log.summary(),
+    })
+}
+
+/// Run the whole campaign; `out_dir` (if given) receives per-run CSVs
+/// and the merged `<name>.campaign.json` / `<name>.campaign.csv`.
+pub fn run_campaign(
+    spec: &CampaignSpec,
+    runtime: &dyn ModelRuntime,
+    out_dir: Option<&Path>,
+) -> Result<CampaignReport> {
+    let runs = expand(spec);
+    if let Some(dir) = out_dir {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    }
+    let jobs = spec.jobs.max(1).min(runs.len().max(1));
+
+    // First failure aborts the rest of the grid: experiments can take
+    // hours each, so nobody wants 26 more runs after run 1 errored.
+    let failed = AtomicBool::new(false);
+    let mut collected: Vec<(usize, Result<CampaignRun>)> = if jobs <= 1 {
+        let mut out = Vec::new();
+        for (i, r) in runs.iter().enumerate() {
+            let res = run_one(r, runtime, out_dir, spec.workers_per_run);
+            let is_err = res.is_err();
+            out.push((i, res));
+            if is_err {
+                break;
+            }
+        }
+        out
+    } else {
+        // Work-stealing over an atomic cursor; each worker accumulates
+        // (index, result) locally, merged and re-ordered after join —
+        // scheduling order never touches results.
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..jobs)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut local = Vec::new();
+                        loop {
+                            if failed.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            let Some(run) = runs.get(i) else { break };
+                            let res = run_one(run, runtime, out_dir, spec.workers_per_run);
+                            if res.is_err() {
+                                failed.store(true, Ordering::Relaxed);
+                            }
+                            local.push((i, res));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("campaign worker panicked"))
+                .collect()
+        })
+    };
+    collected.sort_by_key(|(i, _)| *i);
+
+    let mut finished = Vec::with_capacity(collected.len());
+    for (_, r) in collected {
+        finished.push(r?);
+    }
+    let report = CampaignReport { name: spec.name.clone(), runs: finished };
+    if let Some(dir) = out_dir {
+        let json_path = dir.join(format!("{}.campaign.json", report.name));
+        std::fs::write(&json_path, report.to_json().to_string_pretty())
+            .with_context(|| format!("writing {json_path:?}"))?;
+        let csv_path = dir.join(format!("{}.campaign.csv", report.name));
+        std::fs::write(&csv_path, report.to_csv())
+            .with_context(|| format!("writing {csv_path:?}"))?;
+    }
+    Ok(report)
+}
+
+impl CampaignReport {
+    /// Merged summary as JSON (in-tree codec; offline build, no serde).
+    pub fn to_json(&self) -> Json {
+        let runs: Vec<Json> = self
+            .runs
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("selector".to_string(), Json::Str(r.selector.to_string()));
+                m.insert("seed".to_string(), Json::Num(r.seed as f64));
+                m.insert("f".to_string(), Json::Num(r.f));
+                m.insert("clients".to_string(), Json::Num(r.clients as f64));
+                m.insert("summary".to_string(), r.summary.to_json());
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("campaign".to_string(), Json::Str(self.name.clone()));
+        top.insert("total_runs".to_string(), Json::Num(self.runs.len() as f64));
+        top.insert("runs".to_string(), Json::Arr(runs));
+        Json::Obj(top)
+    }
+
+    /// One CSV row per run (the merged table the plots consume).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "selector,seed,f,clients,rounds,committed_rounds,final_accuracy,\
+             best_accuracy,final_fairness,total_dropouts,mean_round_duration_s,\
+             wall_clock_h,total_fl_energy_j\n",
+        );
+        for r in &self.runs {
+            let s = &r.summary;
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{:.6},{:.6},{:.6},{},{:.3},{:.6},{:.3}\n",
+                r.selector,
+                r.seed,
+                r.f,
+                r.clients,
+                s.rounds,
+                s.committed_rounds,
+                s.final_accuracy,
+                s.best_accuracy,
+                s.final_fairness,
+                s.total_dropouts,
+                s.mean_round_duration_s,
+                s.wall_clock_h,
+                s.total_fl_energy_j,
+            ));
+        }
+        out
+    }
+
+    /// Mean final accuracy per selector (quick cross-seed aggregate).
+    pub fn mean_accuracy_by_selector(&self) -> Vec<(SelectorKind, f64)> {
+        let mut acc: Vec<(SelectorKind, f64, usize)> = Vec::new();
+        for r in &self.runs {
+            match acc.iter_mut().find(|(k, _, _)| *k == r.selector) {
+                Some(slot) => {
+                    slot.1 += r.summary.final_accuracy;
+                    slot.2 += 1;
+                }
+                None => acc.push((r.selector, r.summary.final_accuracy, 1)),
+            }
+        }
+        acc.into_iter().map(|(k, sum, n)| (k, sum / n as f64)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+        cfg.federation.rounds = 3;
+        cfg.federation.num_clients = 12;
+        cfg.federation.participants_per_round = 4;
+        cfg.data.min_samples = 5;
+        cfg.data.max_samples = 15;
+        cfg
+    }
+
+    #[test]
+    fn expand_is_the_product_with_f_only_for_eafl() {
+        let mut spec = CampaignSpec::new("t", base());
+        spec.grid = CampaignGrid {
+            selectors: vec![SelectorKind::Eafl, SelectorKind::Random],
+            seeds: vec![7, 8],
+            f_values: vec![0.25, 0.5],
+            client_counts: vec![10, 20],
+        };
+        let runs = expand(&spec);
+        // EAFL gets the full 2 clients x 2 f x 2 seeds; Random ignores
+        // f so its axis collapses: 2 clients x 1 f x 2 seeds.
+        assert_eq!(runs.len(), 8 + 4);
+        // Outermost axis is the selector.
+        assert!(runs[..8].iter().all(|r| r.selector == SelectorKind::Eafl));
+        assert!(runs[8..].iter().all(|r| r.selector == SelectorKind::Random));
+        assert!(runs[8..].iter().all(|r| r.f == 0.25), "non-EAFL pins f to the first value");
+        // Names are unique.
+        let mut names: Vec<&str> = runs.iter().map(|r| r.cfg.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), runs.len());
+        // Seeds land in the config.
+        assert!(runs.iter().all(|r| r.cfg.data.seed == r.seed));
+        // K is clamped to the population.
+        assert!(runs
+            .iter()
+            .all(|r| r.cfg.federation.participants_per_round <= r.cfg.federation.num_clients));
+        for r in &runs {
+            r.cfg.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn empty_axes_inherit_base() {
+        let spec = CampaignSpec::new("t", base());
+        let runs = expand(&spec);
+        assert_eq!(runs.len(), 3 * 3); // default grid: 3 selectors × 3 seeds
+        assert!(runs.iter().all(|r| r.f == spec.base.selector.eafl_f));
+        assert!(runs.iter().all(|r| r.clients == spec.base.federation.num_clients));
+    }
+
+    #[test]
+    fn report_csv_has_one_row_per_run_plus_header() {
+        let report = CampaignReport {
+            name: "t".into(),
+            runs: vec![CampaignRun {
+                selector: SelectorKind::Eafl,
+                seed: 1,
+                f: 0.25,
+                clients: 10,
+                summary: crate::metrics::MetricsLog::new("x").summary(),
+            }],
+        };
+        let csv = report.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("selector,seed,f,clients,"));
+        let parsed = Json::parse(&report.to_json().to_string_pretty()).unwrap();
+        assert_eq!(parsed.field("total_runs").unwrap().as_usize(), Some(1));
+    }
+}

@@ -1,0 +1,193 @@
+//! Battery accounting and recharge policy — the engine's power phase.
+//!
+//! Split out of the round loop so energy scenarios plug in without
+//! touching the engine: [`BatteryAccounting`] applies the simulated
+//! round's energy draws to the registry (participants per the event
+//! simulation, bystanders per the background idle/busy model), and a
+//! [`RechargePolicy`] decides whether dead devices come back. New
+//! recharge models (overnight charging windows, solar traces, fleet
+//! rotation) implement the trait and slot into the coordinator.
+
+use std::collections::HashSet;
+
+use crate::config::DeviceConfig;
+use crate::sim::ParticipantResult;
+
+use super::registry::Registry;
+
+/// Applies a simulated round's energy draws to the client population.
+pub struct BatteryAccounting;
+
+impl BatteryAccounting {
+    /// Drain each participant by the energy the event simulation says
+    /// it actually spent. `clock_h` is the round's *start* time; a
+    /// death lands at the proportional point of the client's timeline.
+    pub fn drain_participants(
+        registry: &mut Registry,
+        results: &[ParticipantResult],
+        clock_h: f64,
+    ) {
+        for r in results {
+            let c = &mut registry.clients[r.id];
+            let death_time_h = clock_h + r.active_s / 3600.0;
+            c.battery.drain_fl(r.energy_spent_j, death_time_h);
+        }
+    }
+
+    /// Background idle/busy drain for every alive non-participant over
+    /// the round's wall-clock span ending at `end_clock_h`.
+    pub fn drain_background(
+        registry: &mut Registry,
+        selected: &[usize],
+        dev: &DeviceConfig,
+        round_hours: f64,
+        end_clock_h: f64,
+    ) {
+        let selected_set: HashSet<usize> = selected.iter().copied().collect();
+        for c in &mut registry.clients {
+            if selected_set.contains(&c.id) || !c.battery.is_alive() {
+                continue;
+            }
+            let rate = if c.device.background_busy {
+                dev.busy_drain_per_hour
+            } else {
+                dev.idle_drain_per_hour
+            };
+            let e = crate::energy::background_energy_joules(&c.device.spec, rate, round_hours);
+            c.battery.drain_background(e, end_clock_h);
+        }
+    }
+}
+
+/// Pluggable device-recovery model, applied once at the end of every
+/// round with the round's end time.
+pub trait RechargePolicy: Send {
+    fn apply(&self, registry: &mut Registry, end_clock_h: f64);
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's harsh scenario: a dead device never returns.
+pub struct NoRecharge;
+
+impl RechargePolicy for NoRecharge {
+    fn apply(&self, _registry: &mut Registry, _end_clock_h: f64) {}
+    fn name(&self) -> &'static str {
+        "none"
+    }
+}
+
+/// Cooldown recharge: a device dead for at least `after_hours` comes
+/// back charged to `to_fraction` of capacity (the config's optional
+/// recovery model).
+pub struct CooldownRecharge {
+    pub after_hours: f64,
+    pub to_fraction: f64,
+}
+
+impl RechargePolicy for CooldownRecharge {
+    fn apply(&self, registry: &mut Registry, end_clock_h: f64) {
+        for c in &mut registry.clients {
+            if let Some(died) = c.battery.died_at_h {
+                if end_clock_h - died >= self.after_hours {
+                    c.battery.recharge_to(self.to_fraction);
+                }
+            }
+        }
+    }
+    fn name(&self) -> &'static str {
+        "cooldown"
+    }
+}
+
+/// The policy the device config asks for.
+pub fn recharge_policy_from(dev: &DeviceConfig) -> Box<dyn RechargePolicy> {
+    if dev.recharge_after_hours > 0.0 {
+        Box::new(CooldownRecharge {
+            after_hours: dev.recharge_after_hours,
+            to_fraction: dev.recharge_to_fraction,
+        })
+    } else {
+        Box::new(NoRecharge)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, SelectorKind};
+    use crate::sim::FailureKind;
+
+    fn registry() -> Registry {
+        let cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+        Registry::build(&cfg, 35, 1000)
+    }
+
+    #[test]
+    fn participants_drain_what_the_sim_spent() {
+        let mut r = registry();
+        let before = r.clients[2].battery.charge_joules();
+        let results = vec![ParticipantResult {
+            id: 2,
+            completed: true,
+            failure: None,
+            active_s: 120.0,
+            energy_spent_j: 50.0,
+        }];
+        BatteryAccounting::drain_participants(&mut r, &results, 1.0);
+        assert!((before - r.clients[2].battery.charge_joules() - 50.0).abs() < 1e-9);
+        assert!((r.clients[2].battery.fl_energy_j - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn death_timestamp_lands_mid_round() {
+        let mut r = registry();
+        let cap = r.clients[0].battery.capacity_joules();
+        let results = vec![ParticipantResult {
+            id: 0,
+            completed: false,
+            failure: Some(FailureKind::BatteryDeath),
+            active_s: 1800.0, // died half an hour in
+            energy_spent_j: cap * 2.0,
+        }];
+        BatteryAccounting::drain_participants(&mut r, &results, 10.0);
+        assert!(!r.clients[0].battery.is_alive());
+        assert_eq!(r.clients[0].battery.died_at_h, Some(10.5));
+    }
+
+    #[test]
+    fn background_skips_participants_and_dead() {
+        let mut r = registry();
+        let cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+        // Kill client 1.
+        let cap = r.clients[1].battery.capacity_joules();
+        r.clients[1].battery.drain_fl(cap * 2.0, 0.0);
+        let charge0 = r.clients[0].battery.charge_joules();
+        let charge2 = r.clients[2].battery.charge_joules();
+        BatteryAccounting::drain_background(&mut r, &[0], &cfg.devices, 1.0, 1.0);
+        assert_eq!(r.clients[0].battery.charge_joules(), charge0, "participant skipped");
+        assert!(r.clients[2].battery.charge_joules() < charge2, "bystander drained");
+        assert_eq!(r.clients[1].battery.background_energy_j, 0.0, "dead skipped");
+    }
+
+    #[test]
+    fn cooldown_recharge_waits_out_the_cooldown() {
+        let mut r = registry();
+        let cap = r.clients[0].battery.capacity_joules();
+        r.clients[0].battery.drain_fl(cap * 2.0, 5.0);
+        let policy = CooldownRecharge { after_hours: 2.0, to_fraction: 0.8 };
+        policy.apply(&mut r, 6.0); // only 1 h dead
+        assert!(!r.clients[0].battery.is_alive());
+        policy.apply(&mut r, 7.5); // 2.5 h dead
+        assert!(r.clients[0].battery.is_alive());
+        assert!((r.clients[0].battery.fraction() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn policy_factory_matches_config() {
+        let mut cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+        cfg.devices.recharge_after_hours = 0.0;
+        assert_eq!(recharge_policy_from(&cfg.devices).name(), "none");
+        cfg.devices.recharge_after_hours = 3.0;
+        assert_eq!(recharge_policy_from(&cfg.devices).name(), "cooldown");
+    }
+}

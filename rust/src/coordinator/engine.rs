@@ -1,0 +1,538 @@
+//! The staged RoundEngine: one FL round decomposed into explicit,
+//! individually testable phases with typed inputs and outputs.
+//!
+//! ```text
+//!            ┌────────────┐   RoundPlan    ┌───────────┐  SimulatedRound
+//!  Registry ─► PlanPhase  ├───────────────►│ SimPhase  ├──────────────┐
+//!  Selector  └────────────┘ (selected,     └───────────┘ (per-client  │
+//!                            plans, T)                    outcomes)   │
+//!            ┌─────────────────────────────────────────────────────┐  │
+//!            │ ExecPhase — REAL local SGD for completing clients,  │◄─┘
+//!            │ parallel over worker threads, committed in          │
+//!            │ deterministic client order                          │
+//!            └───────────────┬─────────────────────────────────────┘
+//!                            │ ExecutionOutcome (updates, outcomes)
+//!            ┌───────────────▼──────────┐   ┌──────────────────────┐
+//!            │ CommitPhase — quorum     ├──►│ BatteryAccounting +  │
+//!            │ check, aggregate         │   │ RechargePolicy       │
+//!            └───────────────┬──────────┘   │ (accounting module)  │
+//!                            │              └──────────┬───────────┘
+//!            ┌───────────────▼──────────┐   ┌──────────▼───────────┐
+//!            │ FeedbackPhase — client   ├──►│ RecordPhase —        │
+//!            │ stats, blacklist,        │   │ RoundRecord row      │
+//!            │ selector feedback        │   └──────────────────────┘
+//!            └──────────────────────────┘
+//! ```
+//!
+//! Each phase is a plain struct whose `run` takes exactly the state it
+//! reads and returns a typed result, so alternative scenarios
+//! (availability churn in planning, degraded networks in simulation,
+//! different quorum rules in commit) swap a single phase without
+//! touching the loop in `server.rs`.
+//!
+//! **Determinism:** the execution phase trains the round's K completing
+//! clients concurrently (`std::thread::scope`, one `TrainerBufs` per
+//! worker), but each client's local SGD depends only on the immutable
+//! round inputs, and results are committed strictly in simulation
+//! order — so seeded runs are bit-identical at any worker count
+//! (`EAFL_WORKERS=1` vs `=8` produce byte-identical metrics CSVs).
+
+use anyhow::Result;
+
+use crate::aggregation::{Aggregator, ClientUpdate};
+use crate::config::{ExperimentConfig, FederationConfig, TrainingConfig};
+use crate::data::SyntheticSpeech;
+use crate::metrics::{jain_index, RoundRecord};
+use crate::runtime::ModelRuntime;
+use crate::selection::{ParticipantOutcome, RoundFeedback, Selector};
+use crate::sim::{simulate_round, FailureKind, ParticipantPlan, RoundSimOutcome};
+use crate::training::{LocalTrainResult, Trainer, TrainerBufs};
+use crate::util::rng::Rng;
+
+use super::registry::Registry;
+
+/// Consecutive deadline misses before a client is benched.
+pub const MISS_BLACKLIST_THRESHOLD: u32 = 3;
+/// Rounds a benched client stays ineligible.
+pub const MISS_BLACKLIST_COOLDOWN: u64 = 10;
+
+// ---------------------------------------------------------------------------
+// Phase 1: candidate planning
+// ---------------------------------------------------------------------------
+
+/// Output of [`PlanPhase`]: who participates and on what timeline.
+#[derive(Debug, Clone)]
+pub struct RoundPlan {
+    pub round: u64,
+    /// Registry ids the selector picked (selection order).
+    pub selected: Vec<usize>,
+    /// One timing/energy plan per selected client (same order).
+    pub plans: Vec<ParticipantPlan>,
+    /// Straggler deadline T for this round, seconds.
+    pub deadline_s: f64,
+}
+
+/// Builds candidates from the registry, runs the selector, and projects
+/// each pick's download/compute/upload timeline and energy demand.
+pub struct PlanPhase;
+
+impl PlanPhase {
+    pub fn run(
+        registry: &Registry,
+        selector: &mut dyn Selector,
+        cfg: &ExperimentConfig,
+        round: u64,
+        rng: &mut Rng,
+    ) -> RoundPlan {
+        let k = cfg.federation.participants_per_round;
+        let local_steps = cfg.training.local_steps;
+        let batch = cfg.data.batch_size;
+
+        let candidates =
+            registry.candidates(round, cfg.selector.min_battery_frac, local_steps, batch);
+        let selected = selector.select(round, &candidates, k, rng);
+        let deadline_s = selector.deadline_s(&candidates);
+
+        let plans: Vec<ParticipantPlan> = selected
+            .iter()
+            .map(|&id| {
+                let c = &registry.clients[id];
+                let energy = c
+                    .projected_energy(registry.payload_bytes, local_steps, batch)
+                    .total();
+                ParticipantPlan {
+                    id,
+                    download_s: c.link.download_secs(registry.payload_bytes),
+                    compute_s: c.compute_secs(local_steps, batch),
+                    upload_s: c.link.upload_secs(registry.payload_bytes),
+                    round_energy_j: energy,
+                    charge_j: c.battery.charge_joules(),
+                }
+            })
+            .collect();
+        RoundPlan { round, selected, plans, deadline_s }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phase 2: event-driven round simulation
+// ---------------------------------------------------------------------------
+
+/// Output of [`SimPhase`]: per-client outcomes plus the round's clock.
+#[derive(Debug, Clone)]
+pub struct SimulatedRound {
+    pub outcome: RoundSimOutcome,
+    /// Wall-clock duration the server attributes to the round, seconds
+    /// (an empty round still waits out the deadline).
+    pub round_duration_s: f64,
+    pub round_hours: f64,
+}
+
+/// Resolves the round on the deterministic event queue.
+pub struct SimPhase;
+
+impl SimPhase {
+    pub fn run(plan: &RoundPlan) -> SimulatedRound {
+        let outcome = simulate_round(&plan.plans, plan.deadline_s);
+        // An empty round still advances time by the deadline (the
+        // server waits before concluding nobody is coming).
+        let round_duration_s = if plan.selected.is_empty() {
+            plan.deadline_s.max(1.0)
+        } else {
+            outcome.duration_s.max(1.0)
+        };
+        SimulatedRound { outcome, round_duration_s, round_hours: round_duration_s / 3600.0 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phase 3: local execution (parallel)
+// ---------------------------------------------------------------------------
+
+/// Output of [`ExecPhase`]: aggregable updates plus per-participant
+/// outcomes and failure tallies.
+#[derive(Debug)]
+pub struct ExecutionOutcome {
+    /// One update per completing client, in simulation order.
+    pub updates: Vec<ClientUpdate>,
+    /// One outcome per selected client, in simulation order.
+    pub outcomes: Vec<ParticipantOutcome>,
+    /// Sum of completing clients' final losses (simulation order).
+    pub train_loss_sum: f64,
+    /// Mid-round battery deaths.
+    pub dropped: usize,
+    /// Straggler deadline misses.
+    pub deadline_missed: usize,
+}
+
+/// Runs REAL local SGD for every client the simulation says completed.
+///
+/// The hot loop of the whole system: clients are independent given the
+/// round's global parameters, so they train concurrently on scoped
+/// worker threads — each worker owns its own [`TrainerBufs`] from the
+/// coordinator's pool — and results are committed sequentially in
+/// simulation order, keeping seeded runs bit-identical at any worker
+/// count.
+pub struct ExecPhase<'e> {
+    pub runtime: &'e dyn ModelRuntime,
+    pub data: &'e SyntheticSpeech,
+    /// Worker threads to spread clients over (1 = inline, no spawn).
+    pub workers: usize,
+}
+
+impl ExecPhase<'_> {
+    pub fn run(
+        &self,
+        registry: &Registry,
+        global: &[f32],
+        plan: &RoundPlan,
+        sim: &SimulatedRound,
+        training: &TrainingConfig,
+        bufs_pool: &mut Vec<TrainerBufs>,
+    ) -> Result<ExecutionOutcome> {
+        let results = &sim.outcome.results;
+        // Indices (into `results`) of clients that completed, in order.
+        let tasks: Vec<usize> = results
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.completed)
+            .map(|(i, _)| i)
+            .collect();
+        let workers = self.workers.max(1).min(tasks.len().max(1));
+        while bufs_pool.len() < workers {
+            bufs_pool.push(TrainerBufs::new(self.runtime));
+        }
+
+        let mut slots: Vec<Option<Result<LocalTrainResult>>> = Vec::new();
+        slots.resize_with(tasks.len(), || None);
+
+        if workers <= 1 {
+            let mut trainer = Trainer::with_bufs(
+                self.runtime,
+                self.data,
+                std::mem::replace(&mut bufs_pool[0], TrainerBufs::empty()),
+            );
+            for (slot, &ti) in slots.iter_mut().zip(&tasks) {
+                let client = &registry.clients[results[ti].id];
+                *slot = Some(trainer.train_client(
+                    global,
+                    &client.shard,
+                    training.learning_rate,
+                    training.local_steps,
+                    plan.round,
+                ));
+            }
+            bufs_pool[0] = trainer.into_bufs();
+        } else {
+            // Contiguous chunks keep the slot/task pairing trivial; the
+            // per-client cost is uniform enough that static partitioning
+            // loses nothing to work stealing here.
+            let chunk = (tasks.len() + workers - 1) / workers;
+            std::thread::scope(|scope| {
+                for ((task_chunk, slot_chunk), buf) in tasks
+                    .chunks(chunk)
+                    .zip(slots.chunks_mut(chunk))
+                    .zip(bufs_pool.iter_mut())
+                {
+                    scope.spawn(move || {
+                        let mut trainer = Trainer::with_bufs(
+                            self.runtime,
+                            self.data,
+                            std::mem::replace(buf, TrainerBufs::empty()),
+                        );
+                        for (slot, &ti) in slot_chunk.iter_mut().zip(task_chunk) {
+                            let client = &registry.clients[results[ti].id];
+                            *slot = Some(trainer.train_client(
+                                global,
+                                &client.shard,
+                                training.learning_rate,
+                                training.local_steps,
+                                plan.round,
+                            ));
+                        }
+                        *buf = trainer.into_bufs();
+                    });
+                }
+            });
+        }
+
+        // Commit strictly in simulation order — this is what makes the
+        // parallel phase deterministic.
+        let mut updates: Vec<ClientUpdate> = Vec::with_capacity(tasks.len());
+        let mut outcomes: Vec<ParticipantOutcome> = Vec::with_capacity(results.len());
+        let mut train_loss_sum = 0.0f64;
+        let mut dropped = 0usize;
+        let mut deadline_missed = 0usize;
+        let mut next_task = 0usize;
+        for (r, p) in results.iter().zip(&plan.plans) {
+            let mut stat_util = None;
+            if r.completed {
+                let res = slots[next_task]
+                    .take()
+                    .expect("execution phase left a completed client untrained")?;
+                next_task += 1;
+                train_loss_sum += res.final_loss as f64;
+                stat_util = Some(res.stat_util);
+                updates.push(ClientUpdate { params: res.params, weight: res.weight });
+            } else {
+                match r.failure {
+                    Some(FailureKind::BatteryDeath) => dropped += 1,
+                    _ => deadline_missed += 1,
+                }
+            }
+            // For deadline misses report the client's TRUE round
+            // duration (not the deadline-clamped active time) so Oort's
+            // Eq. (2) straggler penalty sees t_i > T.
+            let duration_s = match r.failure {
+                Some(FailureKind::DeadlineMiss) => p.total_duration_s(),
+                _ => r.active_s,
+            };
+            outcomes.push(ParticipantOutcome {
+                id: r.id,
+                stat_util,
+                duration_s,
+                completed: r.completed,
+            });
+        }
+        Ok(ExecutionOutcome { updates, outcomes, train_loss_sum, dropped, deadline_missed })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phase 4: commit / quorum
+// ---------------------------------------------------------------------------
+
+/// Output of [`CommitPhase`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommitDecision {
+    /// Reports needed for the round to commit.
+    pub required: usize,
+    /// Whether the round met quorum (its time elapses either way).
+    pub committed: bool,
+}
+
+/// Reports required for a round to commit: `ceil(K · min_report_fraction)`,
+/// at least 1, but never more than were actually selected (a thin
+/// candidate pool must not make every round unwinnable).
+pub fn quorum_required(k: usize, min_report_fraction: f64, selected: usize) -> usize {
+    let required = ((k as f64) * min_report_fraction).ceil().max(1.0) as usize;
+    required.min(selected.max(1))
+}
+
+/// FedScale-style round failure: too few reports → the round's time
+/// elapses but nothing aggregates.
+pub struct CommitPhase;
+
+impl CommitPhase {
+    /// Pure quorum decision (unit-testable without a coordinator).
+    pub fn decide(fed: &FederationConfig, selected: usize, completed: usize) -> CommitDecision {
+        let required =
+            quorum_required(fed.participants_per_round, fed.min_report_fraction, selected);
+        CommitDecision { required, committed: completed >= required }
+    }
+
+    /// Decide, then aggregate into `global` when quorum was met.
+    pub fn run(
+        fed: &FederationConfig,
+        aggregator: &mut dyn Aggregator,
+        global: &mut Vec<f32>,
+        selected: usize,
+        updates: &[ClientUpdate],
+    ) -> Result<CommitDecision> {
+        let decision = Self::decide(fed, selected, updates.len());
+        if decision.committed && !updates.is_empty() {
+            aggregator.aggregate(global, updates)?;
+        }
+        Ok(decision)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phase 5: selector feedback + client stats
+// ---------------------------------------------------------------------------
+
+/// Writes per-client stats (selection counts, measured durations,
+/// utilities, the Oort-style miss blacklist) and feeds the outcomes
+/// back to the selector.
+pub struct FeedbackPhase;
+
+impl FeedbackPhase {
+    pub fn run(
+        registry: &mut Registry,
+        selector: &mut dyn Selector,
+        round: u64,
+        outcomes: &[ParticipantOutcome],
+    ) {
+        for o in outcomes {
+            let stats = &mut registry.clients[o.id].stats;
+            stats.times_selected += 1;
+            stats.last_selected_round = round;
+            stats.measured_duration_s = Some(o.duration_s);
+            if o.completed {
+                stats.times_completed += 1;
+                stats.stat_util = o.stat_util;
+                stats.consecutive_misses = 0;
+            } else {
+                // Oort-style blacklist: repeated deadline misses bench
+                // the client for a cooldown window.
+                stats.consecutive_misses += 1;
+                if stats.consecutive_misses >= MISS_BLACKLIST_THRESHOLD {
+                    stats.banned_until_round = round + MISS_BLACKLIST_COOLDOWN;
+                    stats.consecutive_misses = 0;
+                }
+            }
+        }
+        selector.feedback(&RoundFeedback { round, outcomes });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phase 6: metrics record
+// ---------------------------------------------------------------------------
+
+/// Assembles the round's [`RoundRecord`] row from the phase outputs and
+/// the post-accounting registry state.
+pub struct RecordPhase;
+
+impl RecordPhase {
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        registry: &Registry,
+        plan: &RoundPlan,
+        sim: &SimulatedRound,
+        exec: &ExecutionOutcome,
+        commit: &CommitDecision,
+        end_clock_h: f64,
+        test_accuracy: f64,
+        test_loss: f64,
+    ) -> RoundRecord {
+        let completed = exec.updates.len();
+        RoundRecord {
+            round: plan.round,
+            wall_clock_h: end_clock_h,
+            round_duration_s: sim.round_duration_s,
+            selected: plan.selected.len(),
+            completed,
+            dropped: exec.dropped,
+            deadline_missed: exec.deadline_missed,
+            committed: commit.committed,
+            train_loss: if completed > 0 {
+                exec.train_loss_sum / completed as f64
+            } else {
+                f64::NAN
+            },
+            test_accuracy,
+            test_loss,
+            fairness: jain_index(&registry.selection_counts()),
+            cumulative_dead: registry.dead_count(),
+            alive_fraction: registry.alive_count() as f64 / registry.len().max(1) as f64,
+            mean_battery: registry.mean_battery_alive(),
+            total_fl_energy_j: registry.total_fl_energy_j(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SelectorKind;
+    use crate::runtime::MockRuntime;
+    use crate::selection::make_selector;
+
+    fn fixture() -> (ExperimentConfig, Registry, MockRuntime) {
+        let mut cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+        cfg.data.min_samples = 5;
+        cfg.data.max_samples = 20;
+        let rt = MockRuntime { train_batch: cfg.data.batch_size, ..MockRuntime::default() };
+        let registry = Registry::build(&cfg, rt.num_classes, rt.param_count);
+        (cfg, registry, rt)
+    }
+
+    #[test]
+    fn plan_phase_projects_each_selected_client() {
+        let (cfg, registry, _rt) = fixture();
+        let mut selector = make_selector(&cfg.selector);
+        let mut rng = Rng::seed_from_u64(1);
+        let plan = PlanPhase::run(&registry, selector.as_mut(), &cfg, 1, &mut rng);
+        assert_eq!(plan.selected.len(), plan.plans.len());
+        assert!(plan.selected.len() <= cfg.federation.participants_per_round);
+        assert!(plan.deadline_s > 0.0);
+        for (id, p) in plan.selected.iter().zip(&plan.plans) {
+            assert_eq!(*id, p.id);
+            assert!(p.total_duration_s() > 0.0);
+            assert!(p.round_energy_j > 0.0);
+        }
+    }
+
+    #[test]
+    fn sim_phase_empty_round_still_waits_out_deadline() {
+        let plan = RoundPlan { round: 3, selected: vec![], plans: vec![], deadline_s: 42.0 };
+        let sim = SimPhase::run(&plan);
+        assert_eq!(sim.round_duration_s, 42.0);
+        assert!(sim.outcome.results.is_empty());
+    }
+
+    #[test]
+    fn exec_phase_identical_at_1_and_4_workers() {
+        let (cfg, registry, rt) = fixture();
+        let mut selector = make_selector(&cfg.selector);
+        let mut rng = Rng::seed_from_u64(9);
+        let plan = PlanPhase::run(&registry, selector.as_mut(), &cfg, 1, &mut rng);
+        let sim = SimPhase::run(&plan);
+        let global = rt.init_params(0).unwrap();
+        let data = SyntheticSpeech::new(rt.input_hw, rt.num_classes, 0.3, cfg.data.seed);
+
+        let run_with = |workers: usize| {
+            let mut pool = Vec::new();
+            ExecPhase { runtime: &rt, data: &data, workers }
+                .run(&registry, &global, &plan, &sim, &cfg.training, &mut pool)
+                .unwrap()
+        };
+        let a = run_with(1);
+        let b = run_with(4);
+        assert_eq!(a.updates.len(), b.updates.len());
+        assert_eq!(a.train_loss_sum, b.train_loss_sum);
+        for (ua, ub) in a.updates.iter().zip(&b.updates) {
+            assert_eq!(ua.params, ub.params);
+            assert_eq!(ua.weight, ub.weight);
+        }
+        assert_eq!(a.outcomes.len(), b.outcomes.len());
+        for (oa, ob) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(oa.id, ob.id);
+            assert_eq!(oa.stat_util, ob.stat_util);
+        }
+    }
+
+    #[test]
+    fn feedback_phase_bans_after_repeated_misses() {
+        let (cfg, mut registry, _rt) = fixture();
+        let mut selector = make_selector(&cfg.selector);
+        let miss =
+            ParticipantOutcome { id: 0, stat_util: None, duration_s: 1e4, completed: false };
+        for round in 1..=MISS_BLACKLIST_THRESHOLD as u64 {
+            FeedbackPhase::run(&mut registry, selector.as_mut(), round, &[miss]);
+        }
+        let stats = &registry.clients[0].stats;
+        assert_eq!(stats.consecutive_misses, 0, "reset after the ban fires");
+        assert_eq!(
+            stats.banned_until_round,
+            MISS_BLACKLIST_THRESHOLD as u64 + MISS_BLACKLIST_COOLDOWN
+        );
+        assert_eq!(stats.times_selected, MISS_BLACKLIST_THRESHOLD as u64);
+        assert_eq!(stats.times_completed, 0);
+    }
+
+    #[test]
+    fn quorum_required_boundaries() {
+        // Paper default: K=10, half must report.
+        assert_eq!(quorum_required(10, 0.5, 10), 5);
+        // Fraction rounds UP.
+        assert_eq!(quorum_required(10, 0.55, 10), 6);
+        // Never below 1, even at fraction 0.
+        assert_eq!(quorum_required(10, 0.0, 10), 1);
+        // Capped by how many were actually selected.
+        assert_eq!(quorum_required(10, 0.9, 4), 4);
+        // Empty selection: still demands 1 (so it can never commit).
+        assert_eq!(quorum_required(10, 0.5, 0), 1);
+    }
+}

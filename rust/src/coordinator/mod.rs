@@ -1,9 +1,25 @@
 //! Layer-3 coordinator — the FL server loop that is the paper's system
-//! surface: client registry, per-round selection → dispatch → simulate
-//! → train → aggregate → account energy → metrics.
+//! surface, structured as a staged round engine:
+//!
+//!  - [`engine`] — the six explicit phases of a round (plan → simulate
+//!    → execute → commit → feedback → record) with typed IO; the
+//!    execution phase trains clients in parallel.
+//!  - [`accounting`](self) — battery drain + pluggable recharge policy.
+//!  - [`Registry`] — per-client device/link/battery/shard state.
+//!  - [`Coordinator`] — owns the experiment state and drives the
+//!    phases round by round.
 
+mod accounting;
+mod engine;
 mod registry;
 mod server;
 
+pub use accounting::{
+    recharge_policy_from, BatteryAccounting, CooldownRecharge, NoRecharge, RechargePolicy,
+};
+pub use engine::{
+    quorum_required, CommitDecision, CommitPhase, ExecPhase, ExecutionOutcome, FeedbackPhase,
+    PlanPhase, RecordPhase, RoundPlan, SimPhase, SimulatedRound,
+};
 pub use registry::{ClientState, ClientStats, Registry};
 pub use server::Coordinator;

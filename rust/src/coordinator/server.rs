@@ -1,47 +1,64 @@
-//! The FL server loop (paper Fig. 1 / Fig. 2).
+//! The FL server loop (paper Fig. 1 / Fig. 2), assembled from the
+//! staged [`RoundEngine`](super::engine) phases.
 //!
-//! Per round: build candidates → selector picks K → event-driven round
-//! simulation (timing, battery deaths, stragglers) → REAL local SGD via
-//! the AOT runtime for completing clients → aggregate (YoGi/FedAvg) →
-//! drain batteries (participants per simulation, bystanders background)
-//! → update utilities, metrics, clock. Rounds with fewer than
-//! `min_report_fraction·K` completions fail and are not aggregated
-//! (FedScale semantics); their time still elapses.
+//! Per round: [`PlanPhase`] builds candidates and the selector picks K
+//! → [`SimPhase`] resolves timing, battery deaths and stragglers on the
+//! event queue → [`ExecPhase`] runs REAL local SGD for completing
+//! clients (parallel across worker threads, deterministic commit
+//! order) → [`CommitPhase`] applies the quorum rule and aggregates
+//! (YoGi/FedAvg) → [`BatteryAccounting`] + the [`RechargePolicy`] drain
+//! participants and bystanders → [`FeedbackPhase`] updates utilities
+//! and the miss blacklist → [`RecordPhase`] emits the metrics row.
+//! Rounds with fewer than `min_report_fraction·K` completions fail and
+//! are not aggregated (FedScale semantics); their time still elapses.
 
 use anyhow::Result;
-use crate::util::rng::Rng;
 
-use crate::aggregation::{make_aggregator, Aggregator, ClientUpdate};
+use crate::aggregation::{make_aggregator, Aggregator};
 use crate::config::ExperimentConfig;
 use crate::data::SyntheticSpeech;
-use crate::metrics::{jain_index, MetricsLog, RoundRecord};
+use crate::metrics::MetricsLog;
 use crate::runtime::ModelRuntime;
-use crate::selection::{make_selector, ParticipantOutcome, RoundFeedback, Selector};
-use crate::sim::{simulate_round, ParticipantPlan};
+use crate::selection::{make_selector, Selector};
 use crate::training::{Trainer, TrainerBufs};
+use crate::util::rng::Rng;
 
+use super::accounting::{recharge_policy_from, BatteryAccounting, RechargePolicy};
+use super::engine::{CommitPhase, ExecPhase, FeedbackPhase, PlanPhase, RecordPhase, SimPhase};
 use super::registry::Registry;
 
-/// Consecutive deadline misses before a client is benched.
-const MISS_BLACKLIST_THRESHOLD: u32 = 3;
-/// Rounds a benched client stays ineligible.
-const MISS_BLACKLIST_COOLDOWN: u64 = 10;
+/// Worker threads for the execution phase: `EAFL_WORKERS` if set, else
+/// the machine's available parallelism (capped — per-client training is
+/// short enough that more threads stop paying off).
+fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("EAFL_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
 
-/// The coordinator owns the full experiment state.
+/// The coordinator owns the full experiment state and drives the
+/// engine phases round by round.
 pub struct Coordinator<'r> {
     cfg: ExperimentConfig,
     runtime: &'r dyn ModelRuntime,
     registry: Registry,
     selector: Box<dyn Selector>,
     aggregator: Box<dyn Aggregator>,
+    recharge: Box<dyn RechargePolicy>,
     data: SyntheticSpeech,
     global_params: Vec<f32>,
     /// Simulated wall clock, hours.
     clock_h: f64,
     rng: Rng,
     log: MetricsLog,
-    /// Reused batch buffers (§Perf L3: no per-round allocation).
-    trainer_bufs: TrainerBufs,
+    /// Reused batch buffers, one per execution worker (§Perf L3: no
+    /// per-round allocation; slot 0 doubles as the eval buffers).
+    bufs_pool: Vec<TrainerBufs>,
+    /// Execution-phase worker threads.
+    workers: usize,
     /// Carried between eval points.
     last_accuracy: f64,
     last_test_loss: f64,
@@ -69,8 +86,9 @@ impl<'r> Coordinator<'r> {
             runtime.param_count(),
             cfg.training.server_learning_rate,
         );
+        let recharge = recharge_policy_from(&cfg.devices);
         let global_params = runtime.init_params(cfg.training.init_seed)?;
-        let trainer_bufs = TrainerBufs::new(runtime);
+        let bufs_pool = vec![TrainerBufs::new(runtime)];
         let rng = Rng::seed_from_u64(cfg.data.seed ^ cfg.devices.seed ^ 0x5EED);
         let log = MetricsLog::new(cfg.name.clone());
         Ok(Self {
@@ -79,15 +97,35 @@ impl<'r> Coordinator<'r> {
             registry,
             selector,
             aggregator,
+            recharge,
             data,
             global_params,
             clock_h: 0.0,
             rng,
             log,
-            trainer_bufs,
+            bufs_pool,
+            workers: default_workers(),
             last_accuracy: 0.0,
             last_test_loss: f64::NAN,
         })
+    }
+
+    /// Override the execution-phase worker count (builder style). The
+    /// campaign runner pins this to 1 so experiments — not clients —
+    /// are the unit of parallelism; seeded results are identical at
+    /// any setting.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.set_workers(workers);
+        self
+    }
+
+    /// Override the execution-phase worker count in place.
+    pub fn set_workers(&mut self, workers: usize) {
+        self.workers = workers.max(1);
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
     }
 
     pub fn registry(&self) -> &Registry {
@@ -115,196 +153,82 @@ impl<'r> Coordinator<'r> {
         Ok(self.log)
     }
 
-    /// Execute one round end to end.
+    /// Execute one round end to end through the engine phases.
     pub fn run_round(&mut self, round: u64) -> Result<()> {
+        // --- Phase 1: candidate planning ----------------------------------
+        let plan =
+            PlanPhase::run(&self.registry, self.selector.as_mut(), &self.cfg, round, &mut self.rng);
+
+        // --- Phase 2: event-driven round simulation -----------------------
+        let sim = SimPhase::run(&plan);
+        let end_clock_h = self.clock_h + sim.round_hours;
+
+        // --- Phase 3: real local training (parallel) ----------------------
+        let exec = ExecPhase { runtime: self.runtime, data: &self.data, workers: self.workers }
+            .run(
+                &self.registry,
+                &self.global_params,
+                &plan,
+                &sim,
+                &self.cfg.training,
+                &mut self.bufs_pool,
+            )?;
+
+        // --- Phase 4: commit or fail the round ----------------------------
+        let commit = CommitPhase::run(
+            &self.cfg.federation,
+            self.aggregator.as_mut(),
+            &mut self.global_params,
+            plan.selected.len(),
+            &exec.updates,
+        )?;
+
+        // --- Phase 5: battery accounting + recharge policy ----------------
+        BatteryAccounting::drain_participants(
+            &mut self.registry,
+            &sim.outcome.results,
+            self.clock_h,
+        );
+        BatteryAccounting::drain_background(
+            &mut self.registry,
+            &plan.selected,
+            &self.cfg.devices,
+            sim.round_hours,
+            end_clock_h,
+        );
+        self.recharge.apply(&mut self.registry, end_clock_h);
+
+        // --- Phase 6: stats + selector feedback ---------------------------
+        FeedbackPhase::run(&mut self.registry, self.selector.as_mut(), round, &exec.outcomes);
+
+        // --- Evaluation ---------------------------------------------------
         let fed = &self.cfg.federation;
-        let k = fed.participants_per_round;
-        let local_steps = self.cfg.training.local_steps;
-        let batch = self.cfg.data.batch_size;
-
-        let candidates = self.registry.candidates(
-            round,
-            self.cfg.selector.min_battery_frac,
-            local_steps,
-            batch,
-        );
-        let selected = self.selector.select(round, &candidates, k, &mut self.rng);
-        let deadline_s = self.selector.deadline_s(&candidates);
-
-        // --- Event-driven round simulation -------------------------------
-        let plans: Vec<ParticipantPlan> = selected
-            .iter()
-            .map(|&id| {
-                let c = &self.registry.clients[id];
-                let energy = c
-                    .projected_energy(self.registry.payload_bytes, local_steps, batch)
-                    .total();
-                ParticipantPlan {
-                    id,
-                    download_s: c.link.download_secs(self.registry.payload_bytes),
-                    compute_s: c.compute_secs(local_steps, batch),
-                    upload_s: c.link.upload_secs(self.registry.payload_bytes),
-                    round_energy_j: energy,
-                    charge_j: c.battery.charge_joules(),
-                }
-            })
-            .collect();
-        let sim = simulate_round(&plans, deadline_s);
-        // An empty round still advances time by the deadline (the server
-        // waits before concluding nobody is coming).
-        let round_duration_s =
-            if selected.is_empty() { deadline_s.max(1.0) } else { sim.duration_s.max(1.0) };
-        let round_hours = round_duration_s / 3600.0;
-        let end_clock_h = self.clock_h + round_hours;
-
-        // --- Real local training for completing clients ------------------
-        let mut trainer = Trainer::with_bufs(
-            self.runtime,
-            &self.data,
-            std::mem::replace(&mut self.trainer_bufs, TrainerBufs::empty()),
-        );
-        let mut updates: Vec<ClientUpdate> = Vec::with_capacity(selected.len());
-        let mut outcomes: Vec<ParticipantOutcome> = Vec::with_capacity(selected.len());
-        let mut train_loss_sum = 0.0f64;
-        let mut dropped = 0usize;
-        let mut deadline_missed = 0usize;
-
-        for (r, plan) in sim.results.iter().zip(&plans) {
-            let client = &self.registry.clients[r.id];
-            let mut stat_util = None;
-            if r.completed {
-                let res = trainer.train_client(
-                    &self.global_params,
-                    &client.shard,
-                    self.cfg.training.learning_rate,
-                    local_steps,
-                    round,
-                )?;
-                train_loss_sum += res.final_loss as f64;
-                stat_util = Some(res.stat_util);
-                updates.push(ClientUpdate { params: res.params, weight: res.weight });
-            } else {
-                match r.failure {
-                    Some(crate::sim::FailureKind::BatteryDeath) => dropped += 1,
-                    _ => deadline_missed += 1,
-                }
-            }
-            // For deadline misses report the client's TRUE round
-            // duration (not the deadline-clamped active time) so Oort's
-            // Eq. (2) straggler penalty sees t_i > T.
-            let duration_s = match r.failure {
-                Some(crate::sim::FailureKind::DeadlineMiss) => plan.total_duration_s(),
-                _ => r.active_s,
-            };
-            outcomes.push(ParticipantOutcome {
-                id: r.id,
-                stat_util,
-                duration_s,
-                completed: r.completed,
-            });
-        }
-
-        // --- Commit or fail the round ------------------------------------
-        let required =
-            ((k as f64) * fed.min_report_fraction).ceil().max(1.0) as usize;
-        let committed = updates.len() >= required.min(selected.len().max(1));
-        if committed && !updates.is_empty() {
-            self.aggregator.aggregate(&mut self.global_params, &updates)?;
-        }
-
-        // --- Battery accounting -------------------------------------------
-        for r in &sim.results {
-            let c = &mut self.registry.clients[r.id];
-            let death_time_h = self.clock_h + r.active_s / 3600.0;
-            c.battery.drain_fl(r.energy_spent_j, death_time_h);
-        }
-        let selected_set: std::collections::HashSet<usize> =
-            selected.iter().copied().collect();
-        for c in &mut self.registry.clients {
-            if selected_set.contains(&c.id) || !c.battery.is_alive() {
-                continue;
-            }
-            let rate = if c.device.background_busy {
-                self.cfg.devices.busy_drain_per_hour
-            } else {
-                self.cfg.devices.idle_drain_per_hour
-            };
-            let e = crate::energy::background_energy_joules(&c.device.spec, rate, round_hours);
-            c.battery.drain_background(e, end_clock_h);
-        }
-
-        // --- Optional recharge model ---------------------------------------
-        if self.cfg.devices.recharge_after_hours > 0.0 {
-            let after = self.cfg.devices.recharge_after_hours;
-            let to = self.cfg.devices.recharge_to_fraction;
-            for c in &mut self.registry.clients {
-                if let Some(died) = c.battery.died_at_h {
-                    if end_clock_h - died >= after {
-                        c.battery.recharge_to(to);
-                    }
-                }
-            }
-        }
-
-        // --- Stats + selector feedback -------------------------------------
-        for o in &outcomes {
-            let stats = &mut self.registry.clients[o.id].stats;
-            stats.times_selected += 1;
-            stats.last_selected_round = round;
-            stats.measured_duration_s = Some(o.duration_s);
-            if o.completed {
-                stats.times_completed += 1;
-                stats.stat_util = o.stat_util;
-                stats.consecutive_misses = 0;
-            } else {
-                // Oort-style blacklist: repeated deadline misses bench
-                // the client for a cooldown window.
-                stats.consecutive_misses += 1;
-                if stats.consecutive_misses >= MISS_BLACKLIST_THRESHOLD {
-                    stats.banned_until_round = round + MISS_BLACKLIST_COOLDOWN;
-                    stats.consecutive_misses = 0;
-                }
-            }
-        }
-        self.selector.feedback(&RoundFeedback { round, outcomes: &outcomes });
-
-        // --- Evaluation -----------------------------------------------------
-        if committed && (round % fed.eval_interval as u64 == 0 || round == 1) {
+        if commit.committed && (round % fed.eval_interval as u64 == 0 || round == 1) {
             let test = self.data.test_set(self.cfg.data.test_samples);
-            let ev = trainer.evaluate(&self.global_params, &test)?;
+            let mut trainer = Trainer::with_bufs(
+                self.runtime,
+                &self.data,
+                std::mem::replace(&mut self.bufs_pool[0], TrainerBufs::empty()),
+            );
+            let ev = trainer.evaluate(&self.global_params, &test);
+            self.bufs_pool[0] = trainer.into_bufs();
+            let ev = ev?;
             self.last_accuracy = ev.accuracy;
             self.last_test_loss = ev.mean_loss;
-            // (eval accuracy is recorded in the round metrics below)
         }
 
-        self.trainer_bufs = trainer.into_bufs();
-
-        // --- Record ---------------------------------------------------------
+        // --- Phase 7: record ----------------------------------------------
         self.clock_h = end_clock_h;
-        let completed = updates.len();
-        self.log.push(RoundRecord {
-            round,
-            wall_clock_h: self.clock_h,
-            round_duration_s,
-            selected: selected.len(),
-            completed,
-            dropped,
-            deadline_missed,
-            committed,
-            train_loss: if completed > 0 {
-                train_loss_sum / completed as f64
-            } else {
-                f64::NAN
-            },
-            test_accuracy: self.last_accuracy,
-            test_loss: self.last_test_loss,
-            fairness: jain_index(&self.registry.selection_counts()),
-            cumulative_dead: self.registry.dead_count(),
-            alive_fraction: self.registry.alive_count() as f64
-                / self.registry.len().max(1) as f64,
-            mean_battery: self.registry.mean_battery_alive(),
-            total_fl_energy_j: self.registry.total_fl_energy_j(),
-        });
+        self.log.push(RecordPhase::run(
+            &self.registry,
+            &plan,
+            &sim,
+            &exec,
+            &commit,
+            self.clock_h,
+            self.last_accuracy,
+            self.last_test_loss,
+        ));
         Ok(())
     }
 }

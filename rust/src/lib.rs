@@ -14,10 +14,50 @@
 //!    inlined into the Layer-2 HLO.
 //!
 //! Python never runs on the request path: the `eafl` binary is
-//! self-contained once `artifacts/` exists.
+//! self-contained once `artifacts/` exists (build with `--features xla`;
+//! the default offline build substitutes a stub and runs on the
+//! analytic mock runtime via `--mock`).
+//!
+//! ## The staged RoundEngine
+//!
+//! A training round is six explicit phases with typed inputs/outputs
+//! ([`coordinator::PlanPhase`] … [`coordinator::RecordPhase`]), wired
+//! together by [`Coordinator::run_round`]:
+//!
+//! ```text
+//! PlanPhase ──RoundPlan──► SimPhase ──SimulatedRound──► ExecPhase
+//!  (candidates,             (event-driven               (parallel local
+//!   selector picks K,        timing, deaths,             SGD, per-worker
+//!   deadline T)              stragglers)                 TrainerBufs)
+//!                                                            │
+//!                                                   ExecutionOutcome
+//!                                                            ▼
+//! RecordPhase ◄── FeedbackPhase ◄── BatteryAccounting ◄── CommitPhase
+//!  (metrics row)   (stats, miss      + RechargePolicy      (quorum rule,
+//!                   blacklist,       (participants,         YoGi/FedAvg
+//!                   selector fb)     bystanders, revival)   aggregate)
+//! ```
+//!
+//! The execution phase trains the round's completing clients across
+//! worker threads (`EAFL_WORKERS`, default = available parallelism)
+//! and commits results in simulation order, so seeded runs are
+//! bit-identical at any worker count.
+//!
+//! ## Campaigns
+//!
+//! The paper's figures are grids, not runs. [`campaign`] expands
+//! selectors × seeds × f-values × client-counts against a base config
+//! and runs the experiments across threads, merging the summaries into
+//! one `campaign.json` + `campaign.csv`:
+//!
+//! ```text
+//! eafl sweep --mock --selectors eafl,oort,random --seeds 1,2,3 \
+//!            --f 0.0,0.25,1.0 --rounds 150 --out results/campaign
+//! ```
 
 pub mod aggregation;
 pub mod benchkit;
+pub mod campaign;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -5,6 +5,8 @@
 //!   run          one experiment (selector × config) → CSV + summary JSON
 //!   compare      EAFL vs Oort vs Random under one seed (the paper's
 //!                headline comparison, Figs. 3 & 4)
+//!   sweep        a whole campaign: selectors × seeds × f × clients grid
+//!                run across threads, merged into campaign.json/.csv
 //!   gen-config   write the paper-default TOML config
 //!   energy-table print the Table 1 / Table 2 reproduction
 //!
@@ -15,6 +17,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
+use eafl::campaign::{run_campaign, CampaignGrid, CampaignSpec};
 use eafl::config::{ExperimentConfig, SelectorKind};
 use eafl::coordinator::Coordinator;
 use eafl::device::{DeviceSpec, ALL_TIERS};
@@ -30,13 +33,45 @@ USAGE:
   eafl run [--config FILE] [--selector random|oort|eafl] [--rounds N]
            [--clients N] [--f F] [--out DIR] [--mock]
   eafl compare [--config FILE] [--rounds N] [--clients N] [--out DIR] [--mock]
+  eafl sweep [--config FILE] [--selectors LIST] [--seeds LIST] [--f LIST]
+             [--clients LIST] [--rounds N] [--jobs N] [--out DIR] [--mock]
   eafl gen-config [--out FILE]
   eafl energy-table
   eafl help
 
+  sweep runs the full LIST-product as one campaign across --jobs threads
+  (LIST is comma-separated, e.g. --selectors eafl,oort,random --seeds
+  1,2,3 --f 0.0,0.25,1.0); defaults to the headline grid of all three
+  selectors x seeds 1,2,3. Per-run CSVs plus the merged campaign
+  summary land in --out (default results/campaign).
+
+  EAFL_WORKERS=N sets the per-round parallel-training worker count for
+  run/compare (seeded results are bit-identical at any N).
+
   --mock uses the analytic mock runtime instead of the PJRT artifacts
   (fast; coordinator dynamics only — no real SGD).
 ";
+
+/// Parse a comma-separated flag value into a typed list.
+fn parse_list<T: std::str::FromStr>(raw: Option<&str>, flag: &str) -> Result<Option<Vec<T>>>
+where
+    T::Err: std::fmt::Display,
+{
+    let Some(raw) = raw else { return Ok(None) };
+    let mut out = Vec::new();
+    for part in raw.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(
+            part.parse::<T>()
+                .map_err(|e| anyhow::anyhow!("invalid --{flag} element {part:?}: {e}"))?,
+        );
+    }
+    anyhow::ensure!(!out.is_empty(), "--{flag} needs at least one element");
+    Ok(Some(out))
+}
 
 /// Tiny flag parser: `--key value` pairs plus boolean switches.
 struct Args {
@@ -182,6 +217,59 @@ fn main() -> Result<()> {
             for s in &summaries {
                 print_summary(s);
             }
+        }
+        "sweep" => {
+            let args = Args::parse(rest, &["mock"])?;
+            let mut base = match args.get("config") {
+                Some(p) => ExperimentConfig::from_toml_file(&PathBuf::from(p))?,
+                None => ExperimentConfig::paper_default(SelectorKind::Eafl),
+            };
+            if let Some(r) = args.get_parsed::<usize>("rounds")? {
+                base.federation.rounds = r;
+            }
+            let mut spec = CampaignSpec::new("sweep", base);
+            let defaults = CampaignGrid::default();
+            spec.grid = CampaignGrid {
+                selectors: parse_list::<SelectorKind>(args.get("selectors"), "selectors")?
+                    .unwrap_or(defaults.selectors),
+                seeds: parse_list::<u64>(args.get("seeds"), "seeds")?
+                    .unwrap_or(defaults.seeds),
+                f_values: parse_list::<f64>(args.get("f"), "f")?.unwrap_or_default(),
+                client_counts: parse_list::<usize>(args.get("clients"), "clients")?
+                    .unwrap_or_default(),
+            };
+            if let Some(j) = args.get_parsed::<usize>("jobs")? {
+                spec.jobs = j.max(1);
+            }
+            let out = PathBuf::from(args.get("out").unwrap_or("results/campaign"));
+            let runtime = load_runtime(args.has("mock"))?;
+            let total = eafl::campaign::expand(&spec).len();
+            // Not printed as a product: the f axis only applies to the
+            // EAFL selector, so total is usually less than the naive
+            // cross of the axis sizes.
+            println!(
+                "campaign: {total} runs over {} selectors, {} seeds, {} f value(s) \
+                 (EAFL only), {} client count(s); {} jobs -> {}",
+                spec.grid.selectors.len(),
+                spec.grid.seeds.len(),
+                spec.grid.f_values.len().max(1),
+                spec.grid.client_counts.len().max(1),
+                spec.jobs.min(total.max(1)),
+                out.display()
+            );
+            let report = run_campaign(&spec, runtime.as_ref(), Some(&out))?;
+            println!("\n=== campaign results ===");
+            for run in &report.runs {
+                print_summary(&run.summary);
+            }
+            println!("\nmean final accuracy by selector:");
+            for (kind, acc) in report.mean_accuracy_by_selector() {
+                println!("  {kind:<8} {acc:.4}");
+            }
+            println!(
+                "\nmerged summary: {}",
+                out.join(format!("{}.campaign.json", report.name)).display()
+            );
         }
         "gen-config" => {
             let args = Args::parse(rest, &[])?;

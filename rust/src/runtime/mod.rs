@@ -14,11 +14,17 @@
 
 mod manifest;
 mod mock;
+#[cfg(feature = "xla")]
 mod xla_runtime;
+#[cfg(not(feature = "xla"))]
+mod xla_stub;
 
 pub use manifest::{Manifest, ParamSpecEntry};
 pub use mock::MockRuntime;
+#[cfg(feature = "xla")]
 pub use xla_runtime::XlaRuntime;
+#[cfg(not(feature = "xla"))]
+pub use xla_stub::XlaRuntime;
 
 use anyhow::Result;
 
@@ -46,7 +52,15 @@ pub struct EvalOutput {
 ///
 /// Implementations must be deterministic for a given input so that
 /// simulation runs are reproducible under a fixed seed.
-pub trait ModelRuntime: Send {
+///
+/// `Send + Sync` is part of the contract: the round engine's execution
+/// phase ([`crate::coordinator::ExecPhase`]) trains clients on
+/// worker threads that share one `&dyn ModelRuntime`, and the campaign
+/// runner shares one runtime across concurrent experiments. Step calls
+/// take `&self` and must be safe to invoke from multiple threads
+/// (internally serializing if the backend is single-threaded, as the
+/// PJRT-backed runtime does).
+pub trait ModelRuntime: Send + Sync {
     /// Flat parameter vector length `P`.
     fn param_count(&self) -> usize;
     /// Train-step batch size baked into the executable.

@@ -6,6 +6,7 @@
 //! at load time; the per-step path is literal-marshal + execute only.
 
 use std::path::Path;
+use std::sync::Mutex;
 
 use anyhow::{anyhow, ensure, Result};
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
@@ -18,13 +19,27 @@ pub struct XlaRuntime {
     train: PjRtLoadedExecutable,
     eval: PjRtLoadedExecutable,
     init: PjRtLoadedExecutable,
+    /// Serializes every step end to end: the xla crate's wrappers are
+    /// not thread-safe, so concurrent `ModelRuntime` callers (the
+    /// parallel execution phase, campaign threads) hold this lock for
+    /// the WHOLE step — literal marshal, execute, and result unmarshal
+    /// all go through the same C++ bridge. The mock runtime
+    /// parallelizes for real; here workers simply queue — correctness
+    /// over concurrency for the bridge.
+    exec_lock: Mutex<()>,
     // Client must outlive executables; keep it last in drop order.
     _client: PjRtClient,
 }
 
-// The xla crate's raw pointers are not Sync; the coordinator owns the
-// runtime exclusively and drives it from one thread at a time.
+// SAFETY: the xla crate's raw pointers are neither Send nor Sync by
+// declaration. Every `ModelRuntime` entry point (`init_params`,
+// `train_step`, `eval_step`) acquires `exec_lock` before its first
+// bridge call (Literal construction included) and releases it after
+// the last (output `to_vec`/`get_first_element`), so at most one
+// thread touches xla-crate state at a time; the remaining field
+// (manifest) is plain data.
 unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
 
 impl XlaRuntime {
     /// Load `manifest.json` + all HLO artifacts from `dir` and compile
@@ -46,7 +61,7 @@ impl XlaRuntime {
         let train = compile("train_step")?;
         let eval = compile("eval_step")?;
         let init = compile("init_params")?;
-        Ok(Self { manifest, train, eval, init, _client: client })
+        Ok(Self { manifest, train, eval, init, exec_lock: Mutex::new(()), _client: client })
     }
 
     /// Default artifact location relative to the repo root, overridable
@@ -69,8 +84,15 @@ impl XlaRuntime {
             .map_err(|e| anyhow!("reshape i32{dims:?}: {e}"))
     }
 
+    /// Take the step lock (poison-tolerant: the runtime itself is
+    /// stateless between calls, so a panicked sibling can't corrupt it).
+    fn lock(&self) -> std::sync::MutexGuard<'_, ()> {
+        self.exec_lock.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// Execute and unpack the (tupled) result into its element literals.
-    fn run(exe: &PjRtLoadedExecutable, args: &[Literal]) -> Result<Vec<Literal>> {
+    /// Caller must hold `exec_lock` (see the `Sync` safety comment).
+    fn run(&self, exe: &PjRtLoadedExecutable, args: &[Literal]) -> Result<Vec<Literal>> {
         let bufs = exe.execute::<Literal>(args).map_err(|e| anyhow!("execute: {e}"))?;
         let lit = bufs[0][0]
             .to_literal_sync()
@@ -98,7 +120,8 @@ impl ModelRuntime for XlaRuntime {
     }
 
     fn init_params(&self, seed: u32) -> Result<Vec<f32>> {
-        let out = Self::run(&self.init, &[Literal::scalar(seed)])?;
+        let _guard = self.lock();
+        let out = self.run(&self.init, &[Literal::scalar(seed)])?;
         ensure!(out.len() == 1, "init_params returned {} outputs", out.len());
         let params = out[0].to_vec::<f32>().map_err(|e| anyhow!("init to_vec: {e}"))?;
         ensure!(params.len() == self.param_count(), "init param length mismatch");
@@ -106,6 +129,7 @@ impl ModelRuntime for XlaRuntime {
     }
 
     fn train_step(&self, params: &[f32], x: &[f32], y: &[i32], lr: f32) -> Result<TrainOutput> {
+        let _guard = self.lock();
         let b = self.train_batch() as i64;
         let hw = self.input_hw() as i64;
         ensure!(params.len() == self.param_count(), "params length mismatch");
@@ -117,7 +141,7 @@ impl ModelRuntime for XlaRuntime {
             Self::literal_i32(y, &[b])?,
             Literal::scalar(lr),
         ];
-        let out = Self::run(&self.train, &args)?;
+        let out = self.run(&self.train, &args)?;
         ensure!(out.len() == 3, "train_step returned {} outputs", out.len());
         Ok(TrainOutput {
             params: out[0].to_vec::<f32>().map_err(|e| anyhow!("params out: {e}"))?,
@@ -131,6 +155,7 @@ impl ModelRuntime for XlaRuntime {
     }
 
     fn eval_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOutput> {
+        let _guard = self.lock();
         let b = self.eval_batch() as i64;
         let hw = self.input_hw() as i64;
         ensure!(params.len() == self.param_count(), "params length mismatch");
@@ -141,7 +166,7 @@ impl ModelRuntime for XlaRuntime {
             Self::literal_f32(x, &[b, hw, hw, 1])?,
             Self::literal_i32(y, &[b])?,
         ];
-        let out = Self::run(&self.eval, &args)?;
+        let out = self.run(&self.eval, &args)?;
         ensure!(out.len() == 2, "eval_step returned {} outputs", out.len());
         Ok(EvalOutput {
             correct: out[0]

@@ -1,0 +1,91 @@
+//! Offline stand-in for the PJRT-backed runtime.
+//!
+//! Compiled when the `xla` cargo feature is OFF (the default): the
+//! build then has no dependency on the `xla` bridge crate, and any
+//! attempt to load the real runtime fails at *load* time with an
+//! actionable message instead of at build time. Keeps `eafl run` /
+//! `compare` / the examples compiling unchanged — they all fall back
+//! to (or are pointed at) [`super::MockRuntime`] via `--mock`.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::{EvalOutput, ModelRuntime, TrainOutput};
+
+/// Unconstructible placeholder for the PJRT runtime. [`XlaRuntime::load`]
+/// always fails in this build; the `ModelRuntime` impl exists only so
+/// call sites type-check identically with and without the feature.
+#[derive(Debug)]
+pub struct XlaRuntime {
+    _unconstructible: std::convert::Infallible,
+}
+
+impl XlaRuntime {
+    /// Always fails: this binary was built without the `xla` feature.
+    pub fn load(dir: &Path) -> Result<Self> {
+        bail!(
+            "eafl was built without the `xla` feature — the PJRT runtime for \
+             artifacts in {dir:?} is unavailable. Rebuild with `cargo build \
+             --features xla` (needs the xla bridge crate and `make artifacts`) \
+             or pass --mock to use the analytic runtime"
+        )
+    }
+
+    /// Default artifact location relative to the repo root, overridable
+    /// via `EAFL_ARTIFACTS` (kept in sync with the real runtime).
+    pub fn default_dir() -> std::path::PathBuf {
+        std::env::var_os("EAFL_ARTIFACTS")
+            .map(Into::into)
+            .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+    }
+}
+
+impl ModelRuntime for XlaRuntime {
+    fn param_count(&self) -> usize {
+        match self._unconstructible {}
+    }
+    fn train_batch(&self) -> usize {
+        match self._unconstructible {}
+    }
+    fn eval_batch(&self) -> usize {
+        match self._unconstructible {}
+    }
+    fn num_classes(&self) -> usize {
+        match self._unconstructible {}
+    }
+    fn input_hw(&self) -> usize {
+        match self._unconstructible {}
+    }
+    fn init_params(&self, _seed: u32) -> Result<Vec<f32>> {
+        match self._unconstructible {}
+    }
+    fn train_step(&self, _params: &[f32], _x: &[f32], _y: &[i32], _lr: f32) -> Result<TrainOutput> {
+        match self._unconstructible {}
+    }
+    fn eval_step(&self, _params: &[f32], _x: &[f32], _y: &[i32]) -> Result<EvalOutput> {
+        match self._unconstructible {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_fails_with_actionable_message() {
+        let err = XlaRuntime::load(Path::new("artifacts")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--mock"), "must route users to the mock: {msg}");
+        assert!(msg.contains("xla"), "must name the missing feature: {msg}");
+    }
+
+    #[test]
+    fn default_dir_honors_env_override() {
+        // Don't mutate the env (tests run in parallel); just check the
+        // non-overridden default.
+        if std::env::var_os("EAFL_ARTIFACTS").is_none() {
+            assert_eq!(XlaRuntime::default_dir(), std::path::PathBuf::from("artifacts"));
+        }
+    }
+}

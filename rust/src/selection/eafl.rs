@@ -20,7 +20,7 @@ use crate::util::rng::Rng;
 use crate::config::SelectorConfig;
 
 use super::utility::{eafl_reward, min_max_normalize, oort_utility, power_term, staleness_bonus};
-use super::{percentile, Candidate, OortSelector, RoundFeedback, Selector};
+use super::{Candidate, OortSelector, RoundFeedback, Selector};
 
 pub struct EaflSelector {
     cfg: SelectorConfig,
@@ -139,13 +139,7 @@ impl Selector for EaflSelector {
     fn deadline_s(&self, candidates: &[Candidate]) -> f64 {
         // Same pacer as Oort (Fig. 4b: EAFL and Oort round durations
         // are nearly identical early on).
-        let durations: Vec<f64> = candidates
-            .iter()
-            .map(|c| c.measured_duration_s.unwrap_or(c.expected_duration_s))
-            .collect();
-        percentile(&durations, self.cfg.pacer_percentile).max(1.0)
-            + (self.oort.deadline_s(candidates)
-                - percentile(&durations, self.cfg.pacer_percentile).max(1.0))
+        self.oort.deadline_s(candidates)
     }
 
     fn name(&self) -> &'static str {

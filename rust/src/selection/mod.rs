@@ -101,20 +101,31 @@ pub fn make_selector(cfg: &SelectorConfig) -> Box<dyn Selector> {
 }
 
 /// Percentile (0..=1) of an unsorted slice; linear interpolation.
-pub(crate) fn percentile(values: &[f64], p: f64) -> f64 {
+///
+/// Convenience wrapper that clones into a scratch buffer; the per-round
+/// hot paths call [`percentile_in_place`] on buffers they already own.
+pub fn percentile(values: &[f64], p: f64) -> f64 {
+    percentile_in_place(&mut values.to_vec(), p)
+}
+
+/// Percentile (0..=1) via `select_nth_unstable_by` — O(n) instead of
+/// the former clone + full O(n log n) sort on every selection call.
+/// Reorders `values` (partitioned around the order statistic); returns
+/// the same interpolated value a sort-based implementation would.
+pub fn percentile_in_place(values: &mut [f64], p: f64) -> f64 {
     if values.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f64> = values.to_vec();
-    v.sort_by(f64::total_cmp);
-    let pos = p.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let pos = p.clamp(0.0, 1.0) * (values.len() - 1) as f64;
     let lo = pos.floor() as usize;
-    let hi = pos.ceil() as usize;
-    if lo == hi {
-        v[lo]
-    } else {
-        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    let (_, &mut lo_val, above) = values.select_nth_unstable_by(lo, f64::total_cmp);
+    if pos == lo as f64 {
+        return lo_val;
     }
+    // hi = lo + 1: the minimum of the partition above the lo-th order
+    // statistic (non-empty here, since pos < len-1 when it's fractional).
+    let hi_val = above.iter().copied().fold(f64::INFINITY, f64::min);
+    lo_val + (hi_val - lo_val) * (pos - lo as f64)
 }
 
 #[cfg(test)]
@@ -129,6 +140,32 @@ mod tests {
         assert!((percentile(&v, 0.5) - 25.0).abs() < 1e-12);
         assert_eq!(percentile(&[], 0.5), 0.0);
         assert_eq!(percentile(&[7.0], 0.9), 7.0);
+    }
+
+    #[test]
+    fn percentile_in_place_matches_sort_based_reference() {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(99);
+        for n in [1usize, 2, 3, 7, 100, 1001] {
+            let values: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(-50.0, 900.0)).collect();
+            for p in [0.0, 0.1, 0.25, 0.5, 0.8, 0.95, 1.0] {
+                let reference = {
+                    let mut v = values.clone();
+                    v.sort_by(f64::total_cmp);
+                    let pos = p * (v.len() - 1) as f64;
+                    let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+                    if lo == hi { v[lo] } else { v[lo] + (v[hi] - v[lo]) * (pos - lo as f64) }
+                };
+                let mut scratch = values.clone();
+                let got = percentile_in_place(&mut scratch, p);
+                assert_eq!(got, reference, "n={n} p={p}");
+                // The buffer is reordered, never mutated as a set.
+                let mut a = scratch;
+                let mut b = values.clone();
+                a.sort_by(f64::total_cmp);
+                b.sort_by(f64::total_cmp);
+                assert_eq!(a, b);
+            }
+        }
     }
 
     #[test]

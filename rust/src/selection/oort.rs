@@ -20,7 +20,7 @@ use crate::util::rng::Rng;
 use crate::config::SelectorConfig;
 
 use super::utility::{oort_utility, staleness_bonus};
-use super::{percentile, Candidate, RoundFeedback, Selector};
+use super::{percentile_in_place, Candidate, RoundFeedback, Selector};
 
 /// Width of the exploitation cutoff band (fraction of k over-sampled
 /// before the final weighted draw).
@@ -109,9 +109,9 @@ impl Selector for OortSelector {
         // Exploitation: weighted draw from the top utility band.
         let k_exploit = k - selected.len();
         if k_exploit > 0 && !explored.is_empty() {
-            let utils: Vec<f64> =
+            let mut utils: Vec<f64> =
                 explored.iter().map(|c| c.stat_util.unwrap_or(0.0)).collect();
-            let util_scale = percentile(&utils, 0.95).max(1e-9);
+            let util_scale = percentile_in_place(&mut utils, 0.95).max(1e-9);
             let mut scored: Vec<(usize, f64)> = explored
                 .iter()
                 .map(|c| (c.id, self.score(c, round, deadline, util_scale)))
@@ -161,11 +161,12 @@ impl Selector for OortSelector {
     }
 
     fn deadline_s(&self, candidates: &[Candidate]) -> f64 {
-        let durations: Vec<f64> = candidates
+        let mut durations: Vec<f64> = candidates
             .iter()
             .map(|c| c.measured_duration_s.unwrap_or(c.expected_duration_s))
             .collect();
-        percentile(&durations, self.cfg.pacer_percentile).max(1.0) + self.pacer_relax_s
+        percentile_in_place(&mut durations, self.cfg.pacer_percentile).max(1.0)
+            + self.pacer_relax_s
     }
 
     fn name(&self) -> &'static str {

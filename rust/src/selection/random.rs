@@ -7,7 +7,7 @@ use crate::util::rng::Rng;
 
 use crate::config::SelectorConfig;
 
-use super::{percentile, Candidate, RoundFeedback, Selector};
+use super::{percentile_in_place, Candidate, RoundFeedback, Selector};
 
 pub struct RandomSelector {
     cfg: SelectorConfig,
@@ -39,9 +39,9 @@ impl Selector for RandomSelector {
         // Random has no pacer; it waits for (almost) everyone — the
         // paper's Fig. 4b shows its rounds are the longest. Deadline is
         // the slow tail of the expected-duration distribution.
-        let durations: Vec<f64> =
+        let mut durations: Vec<f64> =
             candidates.iter().map(|c| c.expected_duration_s).collect();
-        percentile(&durations, 0.95).max(self.cfg.pacer_step_s)
+        percentile_in_place(&mut durations, 0.95).max(self.cfg.pacer_step_s)
     }
 
     fn name(&self) -> &'static str {

@@ -1,0 +1,116 @@
+//! Campaign runner integration: grid expansion, threaded execution,
+//! determinism across job counts, and the merged on-disk artifacts.
+
+use eafl::campaign::{expand, run_campaign, CampaignGrid, CampaignSpec};
+use eafl::config::{ExperimentConfig, SelectorKind};
+use eafl::runtime::MockRuntime;
+use eafl::util::json::Json;
+
+fn tiny_base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+    cfg.federation.rounds = 6;
+    cfg.federation.num_clients = 16;
+    cfg.federation.participants_per_round = 4;
+    cfg.federation.eval_interval = 3;
+    cfg.data.min_samples = 5;
+    cfg.data.max_samples = 15;
+    cfg.data.test_samples = 256;
+    cfg
+}
+
+fn spec(jobs: usize) -> CampaignSpec {
+    let mut spec = CampaignSpec::new("itest", tiny_base());
+    spec.grid = CampaignGrid {
+        selectors: vec![SelectorKind::Eafl, SelectorKind::Oort, SelectorKind::Random],
+        seeds: vec![1, 2, 3],
+        f_values: Vec::new(),
+        client_counts: Vec::new(),
+    };
+    spec.jobs = jobs;
+    spec
+}
+
+#[test]
+fn full_grid_runs_every_cell() {
+    let runtime = MockRuntime::default();
+    let report = run_campaign(&spec(4), &runtime, None).unwrap();
+    assert_eq!(report.runs.len(), 9, "3 selectors x 3 seeds");
+    for run in &report.runs {
+        assert_eq!(run.summary.rounds, 6, "{}: every run completes", run.selector);
+    }
+    // Every grid cell is distinct.
+    let mut cells: Vec<(String, u64)> =
+        report.runs.iter().map(|r| (r.selector.to_string(), r.seed)).collect();
+    cells.sort();
+    cells.dedup();
+    assert_eq!(cells.len(), 9);
+}
+
+#[test]
+fn job_count_does_not_change_results() {
+    let runtime = MockRuntime::default();
+    let sequential = run_campaign(&spec(1), &runtime, None).unwrap();
+    let parallel = run_campaign(&spec(4), &runtime, None).unwrap();
+    assert_eq!(sequential.runs.len(), parallel.runs.len());
+    for (a, b) in sequential.runs.iter().zip(&parallel.runs) {
+        assert_eq!(a.selector, b.selector);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.summary.final_accuracy, b.summary.final_accuracy);
+        assert_eq!(a.summary.total_dropouts, b.summary.total_dropouts);
+        assert_eq!(a.summary.wall_clock_h, b.summary.wall_clock_h);
+        assert_eq!(a.summary.total_fl_energy_j, b.summary.total_fl_energy_j);
+    }
+    assert_eq!(sequential.to_csv(), parallel.to_csv());
+}
+
+#[test]
+fn seeds_actually_vary_the_runs() {
+    let runtime = MockRuntime::default();
+    let mut s = spec(2);
+    s.grid.selectors = vec![SelectorKind::Eafl];
+    let report = run_campaign(&s, &runtime, None).unwrap();
+    assert_eq!(report.runs.len(), 3);
+    // Different seeds must not all produce the same trajectory.
+    let walls: Vec<f64> = report.runs.iter().map(|r| r.summary.wall_clock_h).collect();
+    assert!(
+        walls.windows(2).any(|w| w[0] != w[1]),
+        "three seeds produced identical wall clocks: {walls:?}"
+    );
+}
+
+#[test]
+fn merged_artifacts_land_on_disk() {
+    let dir = std::env::temp_dir().join(format!("eafl-campaign-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let runtime = MockRuntime::default();
+    let mut s = spec(2);
+    s.grid.seeds = vec![5];
+    let report = run_campaign(&s, &runtime, Some(&dir)).unwrap();
+    assert_eq!(report.runs.len(), 3);
+
+    // Merged JSON parses and counts the runs.
+    let json_text = std::fs::read_to_string(dir.join("itest.campaign.json")).unwrap();
+    let parsed = Json::parse(&json_text).unwrap();
+    assert_eq!(parsed.field("total_runs").unwrap().as_usize(), Some(3));
+    assert_eq!(parsed.field("runs").unwrap().as_arr().unwrap().len(), 3);
+
+    // Merged CSV: header + one row per run.
+    let csv = std::fs::read_to_string(dir.join("itest.campaign.csv")).unwrap();
+    assert_eq!(csv.lines().count(), 4);
+
+    // Per-run series files exist under the campaign's naming scheme.
+    for run in &report.runs {
+        let per_run = dir.join(format!("itest-{}-n16-f0.25-s5.csv", run.selector));
+        assert!(per_run.exists(), "missing {per_run:?}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn expansion_order_is_stable_for_resume_tooling() {
+    let s = spec(1);
+    let a: Vec<String> = expand(&s).into_iter().map(|r| r.cfg.name).collect();
+    let b: Vec<String> = expand(&s).into_iter().map(|r| r.cfg.name).collect();
+    assert_eq!(a, b);
+    assert!(a[0].starts_with("itest-eafl-"), "selector is the outermost axis: {}", a[0]);
+}

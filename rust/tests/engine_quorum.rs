@@ -1,0 +1,111 @@
+//! Round-commit quorum edge cases and worker-count determinism over
+//! the staged RoundEngine (mock runtime).
+
+use eafl::config::{ExperimentConfig, FederationConfig, SelectorKind};
+use eafl::coordinator::{quorum_required, CommitPhase, Coordinator};
+use eafl::runtime::MockRuntime;
+
+fn fed(k: usize, frac: f64) -> FederationConfig {
+    FederationConfig {
+        participants_per_round: k,
+        min_report_fraction: frac,
+        ..FederationConfig::default()
+    }
+}
+
+// --- quorum_required / CommitPhase::decide boundaries ----------------------
+
+#[test]
+fn exactly_at_quorum_commits_and_one_below_fails() {
+    let f = fed(10, 0.5);
+    assert_eq!(quorum_required(10, 0.5, 10), 5);
+    assert!(CommitPhase::decide(&f, 10, 5).committed, "exactly at quorum must commit");
+    assert!(!CommitPhase::decide(&f, 10, 4).committed, "one below quorum must fail");
+    assert!(CommitPhase::decide(&f, 10, 10).committed);
+}
+
+#[test]
+fn all_drop_never_commits_even_at_zero_fraction() {
+    // min_report_fraction = 0 still demands >= 1 report: a round where
+    // everyone dropped has nothing to aggregate and must not commit.
+    let f = fed(10, 0.0);
+    assert_eq!(quorum_required(10, 0.0, 10), 1);
+    assert!(!CommitPhase::decide(&f, 10, 0).committed);
+    assert!(CommitPhase::decide(&f, 10, 1).committed);
+}
+
+#[test]
+fn empty_selection_cannot_commit() {
+    for frac in [0.0, 0.5, 1.0] {
+        let f = fed(10, frac);
+        let d = CommitPhase::decide(&f, 0, 0);
+        assert_eq!(d.required, 1);
+        assert!(!d.committed, "an empty round must fail (frac={frac})");
+    }
+}
+
+#[test]
+fn required_exceeding_selected_is_capped() {
+    // K=10 at 90% wants 9 reports, but the candidate pool only yielded
+    // 4 participants: all 4 reporting must still commit (otherwise a
+    // thin population makes every round unwinnable).
+    let f = fed(10, 0.9);
+    assert_eq!(quorum_required(10, 0.9, 4), 4);
+    assert!(CommitPhase::decide(&f, 4, 4).committed);
+    assert!(!CommitPhase::decide(&f, 4, 3).committed);
+}
+
+#[test]
+fn fractional_quorum_rounds_up() {
+    // ceil(7 * 0.5) = 4, not 3.
+    let f = fed(7, 0.5);
+    assert_eq!(quorum_required(7, 0.5, 7), 4);
+    assert!(!CommitPhase::decide(&f, 7, 3).committed);
+    assert!(CommitPhase::decide(&f, 7, 4).committed);
+}
+
+// --- worker-count determinism ----------------------------------------------
+
+/// The acceptance bar for the parallel execution phase: the SAME seeded
+/// experiment must produce byte-identical per-round metrics whether the
+/// round trains clients on 1 worker thread or 8.
+#[test]
+fn metrics_identical_at_1_and_8_workers() {
+    let run_with = |workers: usize| {
+        let runtime = MockRuntime::default();
+        let mut cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+        cfg.federation.rounds = 25;
+        cfg.federation.participants_per_round = 8;
+        let coord = Coordinator::new(cfg, &runtime).unwrap().with_workers(workers);
+        assert_eq!(coord.workers(), workers);
+        coord.run().unwrap()
+    };
+    let a = run_with(1);
+    let b = run_with(8);
+    assert_eq!(a.to_csv(), b.to_csv(), "worker count must not change seeded metrics");
+    // And not only the formatted CSV — the summaries' raw floats too.
+    let (sa, sb) = (a.summary(), b.summary());
+    assert_eq!(sa.final_accuracy, sb.final_accuracy);
+    assert_eq!(sa.final_train_loss.is_nan(), sb.final_train_loss.is_nan());
+    assert_eq!(sa.wall_clock_h, sb.wall_clock_h);
+    assert_eq!(sa.total_fl_energy_j, sb.total_fl_energy_j);
+}
+
+/// Same property for every selector, with an intermediate worker count
+/// that does not divide K evenly (uneven chunking).
+#[test]
+fn uneven_worker_chunks_stay_deterministic() {
+    for kind in [SelectorKind::Random, SelectorKind::Oort, SelectorKind::Eafl] {
+        let run_with = |workers: usize| {
+            let runtime = MockRuntime::default();
+            let mut cfg = ExperimentConfig::smoke(kind);
+            cfg.federation.rounds = 12;
+            cfg.federation.participants_per_round = 7;
+            Coordinator::new(cfg, &runtime).unwrap().with_workers(workers).run().unwrap()
+        };
+        let csv1 = run_with(1).to_csv();
+        for workers in [2, 3, 5] {
+            assert_eq!(csv1, run_with(workers).to_csv(), "{kind:?} at {workers} workers");
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Minimal in-tree `anyhow` (DESIGN.md §2: the build is fully offline,
+//! so crates.io dependencies are vendored from scratch).
+//!
+//! Implements exactly the surface eafl uses:
+//!  - [`Error`]: an opaque error carrying a context chain of messages,
+//!    convertible from any `std::error::Error` (source chain preserved
+//!    as flattened messages).
+//!  - [`Result`]: `std::result::Result` with `Error` as the default
+//!    error type.
+//!  - [`anyhow!`], [`bail!`], [`ensure!`]: formatted construction.
+//!  - [`Context`]: `.context(..)` / `.with_context(..)` on `Result`
+//!    (both std-error and `Error` payloads) and `Option`.
+//!
+//! Not implemented (unused here): downcasting, backtraces, `#[source]`
+//! derive interop.
+
+use std::error::Error as StdError;
+use std::fmt::{self, Debug, Display};
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: a non-empty chain of messages, outermost context
+/// first, root cause last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message.
+    pub fn msg<M: Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, colon-separated (anyhow's style).
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`; that is what makes this blanket `From` (and the
+// `?` operator on any std error) coherent.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        let mut chain = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+mod private {
+    pub trait Sealed {}
+    impl<T, E> Sealed for std::result::Result<T, E> {}
+    impl<T> Sealed for Option<T> {}
+}
+
+mod ext {
+    /// Unifies "a std error" and "already an `Error`" for `Context`.
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on fallible values.
+pub trait Context<T>: private::Sealed {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// [`bail!`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn from_std_error_and_question_mark() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "gone");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_and_option() {
+        let r: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+
+        let o: Option<u8> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(3u8).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+    }
+
+    #[test]
+    fn debug_renders_cause_chain() {
+        let e = Error::msg("root").context("mid").context("top");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("top"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("root"));
+    }
+}
