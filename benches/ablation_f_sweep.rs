@@ -27,6 +27,7 @@ fn spec(jobs: usize) -> CampaignSpec {
     let mut spec = CampaignSpec::new("f-ablation", cfg);
     spec.grid = CampaignGrid {
         selectors: vec![SelectorKind::Eafl],
+        scenarios: Vec::new(),
         seeds: vec![7],
         f_values: F_VALUES.to_vec(),
         client_counts: Vec::new(),

@@ -63,6 +63,22 @@ fn main() {
         });
     }
 
+    // Satellite: `deadline_s` used to clone a durations Vec per call;
+    // the Selector trait now takes `&mut self` and reuses an internal
+    // scratch buffer, so steady-state calls are allocation-free. The
+    // 100k-client population is where the win shows.
+    {
+        let cands = candidates(100_000);
+        for kind in [SelectorKind::Random, SelectorKind::Oort, SelectorKind::Eafl] {
+            let mut cfg = SelectorConfig::default();
+            cfg.kind = kind;
+            let mut selector = make_selector(&cfg);
+            bench.run(&format!("{kind} deadline_s N=100000 (scratch reuse)"), || {
+                bb(selector.deadline_s(bb(&cands)));
+            });
+        }
+    }
+
     for n in [100usize, 1_000, 10_000, 100_000] {
         let cands = candidates(n);
         for kind in [SelectorKind::Random, SelectorKind::Oort, SelectorKind::Eafl] {

@@ -18,6 +18,23 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+# Scenario sweep smoke: 2 rounds over two scenarios x two selectors on
+# the mock runtime must produce a merged CSV with a scenario column and
+# exactly header + 4 rows (2 selectors x 2 scenarios x 1 seed).
+echo "==> scenario sweep smoke"
+SMOKE_OUT="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_OUT"' EXIT
+./target/release/eafl sweep --mock --scenario steady,diurnal \
+  --selectors random,eafl --seeds 1 --rounds 2 --clients 16 --jobs 2 \
+  --out "$SMOKE_OUT" >/dev/null
+SMOKE_CSV="$SMOKE_OUT/sweep.campaign.csv"
+head -1 "$SMOKE_CSV" | grep -q "^selector,scenario," \
+  || { echo "FAIL: merged CSV is missing the scenario column"; exit 1; }
+rows="$(wc -l < "$SMOKE_CSV")"
+[ "$rows" -eq 5 ] \
+  || { echo "FAIL: expected 5 CSV lines (header + 4 runs), got $rows"; exit 1; }
+echo "    sweep smoke OK ($rows lines in $(basename "$SMOKE_CSV"))"
+
 if cargo clippy --version >/dev/null 2>&1; then
   echo "==> cargo clippy --all-targets -- -D warnings"
   cargo clippy --all-targets -- -D warnings

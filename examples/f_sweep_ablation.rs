@@ -51,6 +51,7 @@ fn main() -> Result<()> {
     let mut spec = CampaignSpec::new("fsweep", cfg);
     spec.grid = CampaignGrid {
         selectors: vec![SelectorKind::Eafl],
+        scenarios: Vec::new(),
         seeds: vec![spec.base.data.seed],
         f_values: vec![0.0, 0.25, 0.5, 0.75, 1.0],
         client_counts: Vec::new(),

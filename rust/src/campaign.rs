@@ -2,9 +2,9 @@
 //! not single runs (Figs. 3–4 are selector × seed sweeps, the ablation
 //! is an f sweep), so the unit of work here is a whole *campaign*:
 //!
-//!  1. [`CampaignGrid`] expands selectors × seeds × f-values × client
-//!     counts against a base [`ExperimentConfig`] into named run
-//!     configs (empty axes inherit the base value);
+//!  1. [`CampaignGrid`] expands selectors × scenarios × seeds ×
+//!     f-values × client counts against a base [`ExperimentConfig`]
+//!     into named run configs (empty axes inherit the base value);
 //!  2. [`run_campaign`] executes the runs across `jobs` worker threads
 //!     — experiments are embarrassingly parallel, each gets its own
 //!     [`Coordinator`] pinned to 1 execution worker so threads × runs
@@ -14,9 +14,14 @@
 //!
 //! Deterministic: a run's seeds derive only from its grid coordinates,
 //! so any subset of a campaign reproduces bit-identically, at any job
-//! count, in any execution order.
+//! count, in any execution order. That is also what makes **resume**
+//! sound: when the output directory already holds a partial campaign
+//! (a merged campaign.json and/or per-run summary.json files), grid
+//! cells whose names match are reloaded instead of recomputed — the
+//! cell name encodes every coordinate, and summaries round-trip through
+//! JSON bit-exactly.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
@@ -28,11 +33,13 @@ use crate::metrics::Summary;
 use crate::runtime::ModelRuntime;
 use crate::util::json::Json;
 
-/// The sweep axes. Empty `f_values` / `client_counts` inherit the base
-/// config's value (a single grid point on that axis).
+/// The sweep axes. Empty `scenarios` / `f_values` / `client_counts`
+/// inherit the base config's value (a single grid point on that axis).
 #[derive(Debug, Clone)]
 pub struct CampaignGrid {
     pub selectors: Vec<SelectorKind>,
+    /// Scenario names or TOML file paths (see `scenario::Scenario`).
+    pub scenarios: Vec<String>,
     pub seeds: Vec<u64>,
     pub f_values: Vec<f64>,
     pub client_counts: Vec<usize>,
@@ -40,10 +47,11 @@ pub struct CampaignGrid {
 
 impl Default for CampaignGrid {
     /// The headline comparison grid: all three selectors × three seeds
-    /// at the base config's f and population.
+    /// at the base config's scenario, f and population.
     fn default() -> Self {
         Self {
             selectors: vec![SelectorKind::Eafl, SelectorKind::Oort, SelectorKind::Random],
+            scenarios: Vec::new(),
             seeds: vec![1, 2, 3],
             f_values: Vec::new(),
             client_counts: Vec::new(),
@@ -63,6 +71,9 @@ pub struct CampaignSpec {
     /// Execution-phase worker threads inside each experiment (the
     /// campaign default of 1 makes experiments the parallel unit).
     pub workers_per_run: usize,
+    /// Skip grid cells the output directory already holds summaries
+    /// for (on by default; `--fresh` recomputes everything).
+    pub resume: bool,
 }
 
 impl CampaignSpec {
@@ -73,6 +84,7 @@ impl CampaignSpec {
             grid: CampaignGrid::default(),
             jobs: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             workers_per_run: 1,
+            resume: true,
         }
     }
 }
@@ -81,6 +93,7 @@ impl CampaignSpec {
 #[derive(Debug, Clone)]
 pub struct RunSpec {
     pub selector: SelectorKind,
+    pub scenario: String,
     pub seed: u64,
     pub f: f64,
     pub clients: usize,
@@ -91,6 +104,7 @@ pub struct RunSpec {
 #[derive(Debug, Clone)]
 pub struct CampaignRun {
     pub selector: SelectorKind,
+    pub scenario: String,
     pub seed: u64,
     pub f: f64,
     pub clients: usize,
@@ -114,9 +128,16 @@ fn apply_seed(cfg: &mut ExperimentConfig, seed: u64) {
 }
 
 /// Expand the grid into fully resolved, uniquely named run configs.
-/// Order: selector (outermost) → clients → f → seed; the f axis only
-/// applies to EAFL (other selectors ignore f and get a single point).
+/// Order: selector (outermost) → scenario → clients → f → seed; the f
+/// axis only applies to EAFL (other selectors ignore f and get a single
+/// point). Scenario file paths are carried verbatim into `cfg.scenario`
+/// but their display name (file stem) goes into the run name.
 pub fn expand(spec: &CampaignSpec) -> Vec<RunSpec> {
+    let scenarios: Vec<String> = if spec.grid.scenarios.is_empty() {
+        vec![spec.base.scenario.clone()]
+    } else {
+        spec.grid.scenarios.clone()
+    };
     let f_values: Vec<f64> = if spec.grid.f_values.is_empty() {
         vec![spec.base.selector.eafl_f]
     } else {
@@ -126,6 +147,26 @@ pub fn expand(spec: &CampaignSpec) -> Vec<RunSpec> {
         vec![spec.base.federation.num_clients]
     } else {
         spec.grid.client_counts.clone()
+    };
+    // Labels must be unique per scenario axis value: two files that
+    // share a stem (configs/a/night.toml, configs/b/night.toml) would
+    // otherwise collide on run names and overwrite each other's output.
+    let labels: Vec<String> = {
+        let mut seen: Vec<String> = Vec::new();
+        scenarios
+            .iter()
+            .map(|s| {
+                let base = scenario_label(s);
+                let mut label = base.clone();
+                let mut n = 2;
+                while seen.contains(&label) {
+                    label = format!("{base}-{n}");
+                    n += 1;
+                }
+                seen.push(label.clone());
+                label
+            })
+            .collect()
     };
     let mut runs = Vec::new();
     for &selector in &spec.grid.selectors {
@@ -137,23 +178,58 @@ pub fn expand(spec: &CampaignSpec) -> Vec<RunSpec> {
         } else {
             &f_values[..1]
         };
-        for &clients in &client_counts {
-            for &f in selector_f {
-                for &seed in &spec.grid.seeds {
-                    let mut cfg = spec.base.clone();
-                    cfg.selector.kind = selector;
-                    cfg.selector.eafl_f = f;
-                    cfg.federation.num_clients = clients;
-                    cfg.federation.participants_per_round =
-                        cfg.federation.participants_per_round.min(clients);
-                    apply_seed(&mut cfg, seed);
-                    cfg.name = format!("{}-{selector}-n{clients}-f{f}-s{seed}", spec.name);
-                    runs.push(RunSpec { selector, seed, f, clients, cfg });
+        for (scenario, label) in scenarios.iter().zip(&labels) {
+            for &clients in &client_counts {
+                for &f in selector_f {
+                    for &seed in &spec.grid.seeds {
+                        let mut cfg = spec.base.clone();
+                        cfg.selector.kind = selector;
+                        cfg.selector.eafl_f = f;
+                        cfg.scenario = scenario.clone();
+                        cfg.federation.num_clients = clients;
+                        cfg.federation.participants_per_round =
+                            cfg.federation.participants_per_round.min(clients);
+                        apply_seed(&mut cfg, seed);
+                        cfg.name = format!(
+                            "{}-{selector}-{label}-n{clients}-f{f}-s{seed}",
+                            spec.name
+                        );
+                        runs.push(RunSpec {
+                            selector,
+                            scenario: label.clone(),
+                            seed,
+                            f,
+                            clients,
+                            cfg,
+                        });
+                    }
                 }
             }
         }
     }
     runs
+}
+
+/// Display label for a scenario axis value: preset names pass through,
+/// file paths collapse to their stem so run names stay filesystem-safe.
+fn scenario_label(scenario: &str) -> String {
+    Path::new(scenario)
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or(scenario)
+        .to_string()
+}
+
+/// Byte-exact identity of a grid cell: the run's config plus the
+/// *resolved* scenario. A file-based scenario contributes its contents,
+/// not just its path, so editing the file invalidates cached cells.
+fn cell_fingerprint(cfg: &ExperimentConfig) -> Result<String> {
+    let scenario = crate::scenario::Scenario::resolve(&cfg.scenario)?;
+    Ok(format!(
+        "{}\n# --- resolved scenario ---\n{}",
+        cfg.to_toml(),
+        scenario.to_toml()
+    ))
 }
 
 fn run_one(
@@ -172,9 +248,16 @@ fn run_one(
     if let Some(dir) = out_dir {
         log.write_csv(&dir.join(format!("{name}.csv")))?;
         log.write_summary_json(&dir.join(format!("{name}.summary.json")))?;
+        // The resolved config + scenario is the cell's fingerprint:
+        // resume only reuses a summary whose stored fingerprint matches
+        // byte-for-byte, so editing any knob — including the contents
+        // of a scenario file — invalidates the cache.
+        std::fs::write(dir.join(format!("{name}.config.toml")), cell_fingerprint(&run.cfg)?)
+            .with_context(|| format!("writing config fingerprint for {name}"))?;
     }
     Ok(CampaignRun {
         selector: run.selector,
+        scenario: run.scenario.clone(),
         seed: run.seed,
         f: run.f,
         clients: run.clients,
@@ -182,8 +265,46 @@ fn run_one(
     })
 }
 
+/// Summaries a previous (partial) campaign already produced in `dir`,
+/// keyed by run name: the merged campaign.json when present, and — for
+/// campaigns killed mid-grid, before the merge was written — each
+/// run's own `<name>.summary.json`.
+fn load_finished(dir: &Path, campaign: &str, runs: &[RunSpec]) -> HashMap<String, Summary> {
+    let mut out = HashMap::new();
+    if let Ok(text) = std::fs::read_to_string(dir.join(format!("{campaign}.campaign.json"))) {
+        if let Ok(json) = Json::parse(&text) {
+            if let Some(merged) = json.get("runs").and_then(|r| r.as_arr()) {
+                for r in merged {
+                    if let Some(s) =
+                        r.get("summary").and_then(|s| Summary::from_json(s).ok())
+                    {
+                        out.insert(s.name.clone(), s);
+                    }
+                }
+            }
+        }
+    }
+    for run in runs {
+        if out.contains_key(&run.cfg.name) {
+            continue;
+        }
+        let path = dir.join(format!("{}.summary.json", run.cfg.name));
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Some(s) = Json::parse(&text).ok().and_then(|j| Summary::from_json(&j).ok())
+            {
+                out.insert(run.cfg.name.clone(), s);
+            }
+        }
+    }
+    out
+}
+
 /// Run the whole campaign; `out_dir` (if given) receives per-run CSVs
 /// and the merged `<name>.campaign.json` / `<name>.campaign.csv`.
+/// With `spec.resume` (the default), grid cells whose summaries already
+/// exist in `out_dir` are reloaded instead of recomputed — the
+/// deterministic grid order and bit-exact summary round-trip make the
+/// merged report identical to a from-scratch run.
 pub fn run_campaign(
     spec: &CampaignSpec,
     runtime: &dyn ModelRuntime,
@@ -193,15 +314,67 @@ pub fn run_campaign(
     if let Some(dir) = out_dir {
         std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
     }
-    let jobs = spec.jobs.max(1).min(runs.len().max(1));
+
+    let mut results: Vec<Option<Result<CampaignRun>>> = Vec::new();
+    results.resize_with(runs.len(), || None);
+    if spec.resume {
+        if let Some(dir) = out_dir {
+            let finished = load_finished(dir, &spec.name, &runs);
+            if !finished.is_empty() {
+                for (slot, run) in results.iter_mut().zip(&runs) {
+                    if let Some(summary) = finished.get(&run.cfg.name).cloned() {
+                        // The cell name only encodes selector/scenario/
+                        // clients/f/seed; the stored fingerprint covers
+                        // every other knob (rounds, learning rates,
+                        // device mix, scenario-file contents, ...). A
+                        // missing or mismatched fingerprint means the
+                        // summary came from a different experiment —
+                        // recompute.
+                        let path = dir.join(format!("{}.config.toml", run.cfg.name));
+                        let same_config = match cell_fingerprint(&run.cfg) {
+                            Ok(expected) => std::fs::read_to_string(&path)
+                                .map(|text| text == expected)
+                                .unwrap_or(false),
+                            Err(_) => false,
+                        };
+                        if !same_config {
+                            continue;
+                        }
+                        *slot = Some(Ok(CampaignRun {
+                            selector: run.selector,
+                            scenario: run.scenario.clone(),
+                            seed: run.seed,
+                            f: run.f,
+                            clients: run.clients,
+                            summary,
+                        }));
+                    }
+                }
+                let done = results.iter().filter(|r| r.is_some()).count();
+                if done > 0 {
+                    eprintln!(
+                        "[campaign] resume: {done}/{} grid cells already complete in {}; \
+                         skipping them",
+                        runs.len(),
+                        dir.display()
+                    );
+                }
+            }
+        }
+    }
+
+    let pending: Vec<usize> = (0..runs.len()).filter(|&i| results[i].is_none()).collect();
+    let jobs = spec.jobs.max(1).min(pending.len().max(1));
 
     // First failure aborts the rest of the grid: experiments can take
     // hours each, so nobody wants 26 more runs after run 1 errored.
     let failed = AtomicBool::new(false);
-    let mut collected: Vec<(usize, Result<CampaignRun>)> = if jobs <= 1 {
+    let collected: Vec<(usize, Result<CampaignRun>)> = if pending.is_empty() {
+        Vec::new()
+    } else if jobs <= 1 {
         let mut out = Vec::new();
-        for (i, r) in runs.iter().enumerate() {
-            let res = run_one(r, runtime, out_dir, spec.workers_per_run);
+        for &i in &pending {
+            let res = run_one(&runs[i], runtime, out_dir, spec.workers_per_run);
             let is_err = res.is_err();
             out.push((i, res));
             if is_err {
@@ -223,9 +396,10 @@ pub fn run_campaign(
                             if failed.load(Ordering::Relaxed) {
                                 break;
                             }
-                            let i = next.fetch_add(1, Ordering::Relaxed);
-                            let Some(run) = runs.get(i) else { break };
-                            let res = run_one(run, runtime, out_dir, spec.workers_per_run);
+                            let p = next.fetch_add(1, Ordering::Relaxed);
+                            let Some(&i) = pending.get(p) else { break };
+                            let res =
+                                run_one(&runs[i], runtime, out_dir, spec.workers_per_run);
                             if res.is_err() {
                                 failed.store(true, Ordering::Relaxed);
                             }
@@ -241,11 +415,23 @@ pub fn run_campaign(
                 .collect()
         })
     };
-    collected.sort_by_key(|(i, _)| *i);
+    for (i, res) in collected {
+        results[i] = Some(res);
+    }
 
-    let mut finished = Vec::with_capacity(collected.len());
-    for (_, r) in collected {
-        finished.push(r?);
+    let mut finished = Vec::with_capacity(runs.len());
+    for (i, slot) in results.into_iter().enumerate() {
+        match slot {
+            Some(Ok(run)) => finished.push(run),
+            Some(Err(e)) => return Err(e),
+            // Only reachable when an earlier cell failed and aborted
+            // the grid — and that error returns first (the cursor pops
+            // indices in order), so this is a defensive backstop.
+            None => anyhow::bail!(
+                "campaign aborted before grid cell {i} ({}) ran",
+                runs[i].cfg.name
+            ),
+        }
     }
     let report = CampaignReport { name: spec.name.clone(), runs: finished };
     if let Some(dir) = out_dir {
@@ -268,6 +454,7 @@ impl CampaignReport {
             .map(|r| {
                 let mut m = BTreeMap::new();
                 m.insert("selector".to_string(), Json::Str(r.selector.to_string()));
+                m.insert("scenario".to_string(), Json::Str(r.scenario.clone()));
                 m.insert("seed".to_string(), Json::Num(r.seed as f64));
                 m.insert("f".to_string(), Json::Num(r.f));
                 m.insert("clients".to_string(), Json::Num(r.clients as f64));
@@ -285,15 +472,16 @@ impl CampaignReport {
     /// One CSV row per run (the merged table the plots consume).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "selector,seed,f,clients,rounds,committed_rounds,final_accuracy,\
+            "selector,scenario,seed,f,clients,rounds,committed_rounds,final_accuracy,\
              best_accuracy,final_fairness,total_dropouts,mean_round_duration_s,\
              wall_clock_h,total_fl_energy_j\n",
         );
         for r in &self.runs {
             let s = &r.summary;
             out.push_str(&format!(
-                "{},{},{},{},{},{},{:.6},{:.6},{:.6},{},{:.3},{:.6},{:.3}\n",
+                "{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{},{:.3},{:.6},{:.3}\n",
                 r.selector,
+                r.scenario,
                 r.seed,
                 r.f,
                 r.clients,
@@ -325,6 +513,23 @@ impl CampaignReport {
         }
         acc.into_iter().map(|(k, sum, n)| (k, sum / n as f64)).collect()
     }
+
+    /// Total drop-outs per (scenario, selector) — the environment-
+    /// differentiation signal (does `diurnal` kill a different number
+    /// of clients than `steady` under the same seeds?).
+    pub fn dropouts_by_scenario(&self) -> Vec<(String, SelectorKind, usize)> {
+        let mut acc: Vec<(String, SelectorKind, usize)> = Vec::new();
+        for r in &self.runs {
+            match acc
+                .iter_mut()
+                .find(|(s, k, _)| *s == r.scenario && *k == r.selector)
+            {
+                Some(slot) => slot.2 += r.summary.total_dropouts,
+                None => acc.push((r.scenario.clone(), r.selector, r.summary.total_dropouts)),
+            }
+        }
+        acc
+    }
 }
 
 #[cfg(test)]
@@ -346,6 +551,7 @@ mod tests {
         let mut spec = CampaignSpec::new("t", base());
         spec.grid = CampaignGrid {
             selectors: vec![SelectorKind::Eafl, SelectorKind::Random],
+            scenarios: Vec::new(),
             seeds: vec![7, 8],
             f_values: vec![0.25, 0.5],
             client_counts: vec![10, 20],
@@ -365,6 +571,9 @@ mod tests {
         assert_eq!(names.len(), runs.len());
         // Seeds land in the config.
         assert!(runs.iter().all(|r| r.cfg.data.seed == r.seed));
+        // The scenario axis inherits the base config.
+        assert!(runs.iter().all(|r| r.scenario == "steady"));
+        assert!(runs.iter().all(|r| r.cfg.scenario == "steady"));
         // K is clamped to the population.
         assert!(runs
             .iter()
@@ -375,12 +584,68 @@ mod tests {
     }
 
     #[test]
+    fn scenario_axis_multiplies_the_grid() {
+        let mut spec = CampaignSpec::new("t", base());
+        spec.grid = CampaignGrid {
+            selectors: vec![SelectorKind::Random, SelectorKind::Eafl],
+            scenarios: vec!["steady".into(), "diurnal".into()],
+            seeds: vec![1],
+            f_values: Vec::new(),
+            client_counts: Vec::new(),
+        };
+        let runs = expand(&spec);
+        assert_eq!(runs.len(), 4, "2 selectors x 2 scenarios x 1 seed");
+        // Scenario is inside selector in the nesting order.
+        assert_eq!(runs[0].scenario, "steady");
+        assert_eq!(runs[1].scenario, "diurnal");
+        assert!(runs[..2].iter().all(|r| r.selector == SelectorKind::Random));
+        // The scenario lands in each run's config and name.
+        for r in &runs {
+            assert_eq!(r.cfg.scenario, r.scenario);
+            assert!(r.cfg.name.contains(&format!("-{}-", r.scenario)), "{}", r.cfg.name);
+        }
+    }
+
+    #[test]
+    fn scenario_file_paths_collapse_to_stems_in_names() {
+        assert_eq!(scenario_label("steady"), "steady");
+        assert_eq!(scenario_label("configs/night-shift.toml"), "night-shift");
+        let mut spec = CampaignSpec::new("t", base());
+        spec.base.scenario = "some/dir/custom.toml".into();
+        let runs = expand(&spec);
+        assert!(runs.iter().all(|r| r.scenario == "custom"));
+        assert!(
+            runs.iter().all(|r| r.cfg.scenario == "some/dir/custom.toml"),
+            "the config keeps the full path for resolution"
+        );
+    }
+
+    #[test]
+    fn colliding_scenario_stems_get_disambiguated_labels() {
+        let mut spec = CampaignSpec::new("t", base());
+        spec.grid = CampaignGrid {
+            selectors: vec![SelectorKind::Random],
+            scenarios: vec!["configs/a/night.toml".into(), "configs/b/night.toml".into()],
+            seeds: vec![1],
+            f_values: Vec::new(),
+            client_counts: Vec::new(),
+        };
+        let runs = expand(&spec);
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].scenario, "night");
+        assert_eq!(runs[1].scenario, "night-2");
+        assert_ne!(runs[0].cfg.name, runs[1].cfg.name, "no output-file collisions");
+        assert_eq!(runs[1].cfg.scenario, "configs/b/night.toml");
+    }
+
+    #[test]
     fn empty_axes_inherit_base() {
         let spec = CampaignSpec::new("t", base());
         let runs = expand(&spec);
         assert_eq!(runs.len(), 3 * 3); // default grid: 3 selectors × 3 seeds
         assert!(runs.iter().all(|r| r.f == spec.base.selector.eafl_f));
         assert!(runs.iter().all(|r| r.clients == spec.base.federation.num_clients));
+        assert!(runs.iter().all(|r| r.scenario == spec.base.scenario));
     }
 
     #[test]
@@ -389,6 +654,7 @@ mod tests {
             name: "t".into(),
             runs: vec![CampaignRun {
                 selector: SelectorKind::Eafl,
+                scenario: "steady".into(),
                 seed: 1,
                 f: 0.25,
                 clients: 10,
@@ -397,8 +663,32 @@ mod tests {
         };
         let csv = report.to_csv();
         assert_eq!(csv.lines().count(), 2);
-        assert!(csv.starts_with("selector,seed,f,clients,"));
+        assert!(csv.starts_with("selector,scenario,seed,f,clients,"));
+        assert!(csv.lines().nth(1).unwrap().starts_with("eafl,steady,1,"));
         let parsed = Json::parse(&report.to_json().to_string_pretty()).unwrap();
         assert_eq!(parsed.field("total_runs").unwrap().as_usize(), Some(1));
+        let run0 = &parsed.field("runs").unwrap().as_arr().unwrap()[0];
+        assert_eq!(run0.field("scenario").unwrap().as_str(), Some("steady"));
+    }
+
+    #[test]
+    fn dropouts_by_scenario_groups_cells() {
+        let mk = |scenario: &str, selector, dropouts| {
+            let mut summary = crate::metrics::MetricsLog::new("x").summary();
+            summary.total_dropouts = dropouts;
+            CampaignRun { selector, scenario: scenario.into(), seed: 1, f: 0.25, clients: 10, summary }
+        };
+        let report = CampaignReport {
+            name: "t".into(),
+            runs: vec![
+                mk("steady", SelectorKind::Eafl, 3),
+                mk("steady", SelectorKind::Eafl, 4),
+                mk("diurnal", SelectorKind::Eafl, 9),
+            ],
+        };
+        let groups = report.dropouts_by_scenario();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0], ("steady".to_string(), SelectorKind::Eafl, 7));
+        assert_eq!(groups[1], ("diurnal".to_string(), SelectorKind::Eafl, 9));
     }
 }

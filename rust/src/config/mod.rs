@@ -272,16 +272,35 @@ impl Default for NetworkConfig {
 }
 
 /// Top-level experiment configuration.
-#[derive(Debug, Clone, Default, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
     /// Experiment name (used in output file names).
     pub name: String,
+    /// Environment scenario: a preset name (`steady`, `diurnal`,
+    /// `commuter`, `solar-edge`) or a path to a scenario TOML file —
+    /// resolved by the coordinator via `scenario::Scenario::resolve`.
+    pub scenario: String,
     pub federation: FederationConfig,
     pub training: TrainingConfig,
     pub selector: SelectorConfig,
     pub data: DataConfig,
     pub devices: DeviceConfig,
     pub network: NetworkConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            name: String::new(),
+            scenario: "steady".to_string(),
+            federation: FederationConfig::default(),
+            training: TrainingConfig::default(),
+            selector: SelectorConfig::default(),
+            data: DataConfig::default(),
+            devices: DeviceConfig::default(),
+            network: NetworkConfig::default(),
+        }
+    }
 }
 
 impl ExperimentConfig {
@@ -321,6 +340,9 @@ impl ExperimentConfig {
         let mut c = Self::default();
         if let Some(v) = doc.get_str("name") {
             c.name = v.to_string();
+        }
+        if let Some(v) = doc.get_str("scenario") {
+            c.scenario = v.to_string();
         }
 
         let f = &mut c.federation;
@@ -476,6 +498,7 @@ impl ExperimentConfig {
         }
         let mut w = TomlWriter::new();
         w.str("name", &self.name);
+        w.str("scenario", &self.scenario);
 
         w.table("federation");
         w.num("num_clients", self.federation.num_clients as f64)
@@ -537,6 +560,10 @@ impl ExperimentConfig {
 
     /// Sanity checks; call after construction or deserialization.
     pub fn validate(&self) -> Result<()> {
+        ensure!(
+            !self.scenario.trim().is_empty(),
+            "scenario must not be empty (use \"steady\" for the baseline)"
+        );
         let f = &self.federation;
         ensure!(f.num_clients > 0, "num_clients must be > 0");
         ensure!(
@@ -584,12 +611,14 @@ mod tests {
         assert_eq!(c.selector.eafl_f, 0.25);
         assert_eq!(c.data.labels_per_client, 4);
         assert_eq!(c.federation.aggregator, AggregatorKind::Yogi);
+        assert_eq!(c.scenario, "steady", "default environment is the paper's baseline");
         c.validate().unwrap();
     }
 
     #[test]
     fn toml_roundtrip_exact() {
         let mut c = ExperimentConfig::paper_default(SelectorKind::Oort);
+        c.scenario = "diurnal".to_string();
         c.devices.recharge_after_hours = 2.5;
         c.network.sigma = 0.33;
         let text = c.to_toml();
@@ -604,6 +633,7 @@ mod tests {
         assert_eq!(cfg.selector.kind, SelectorKind::Oort);
         assert_eq!(cfg.federation.participants_per_round, 10);
         assert_eq!(cfg.data.batch_size, 20);
+        assert_eq!(cfg.scenario, "steady");
     }
 
     #[test]
@@ -618,6 +648,10 @@ mod tests {
 
         let mut c = ExperimentConfig::default();
         c.devices.tier_fractions = [0.5, 0.5, 0.5];
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.scenario = String::new();
         assert!(c.validate().is_err());
     }
 

@@ -4,9 +4,10 @@
 //! touching the engine: [`BatteryAccounting`] applies the simulated
 //! round's energy draws to the registry (participants per the event
 //! simulation, bystanders per the background idle/busy model), and a
-//! [`RechargePolicy`] decides whether dead devices come back. New
-//! recharge models (overnight charging windows, solar traces, fleet
-//! rotation) implement the trait and slot into the coordinator.
+//! [`RechargePolicy`] decides whether dead devices come back. The
+//! wall-clock recharge models (overnight charging windows, solar
+//! traces) live in `scenario::recharge` and slot in through the same
+//! trait via the experiment's scenario.
 
 use std::collections::HashSet;
 
@@ -60,9 +61,22 @@ impl BatteryAccounting {
 }
 
 /// Pluggable device-recovery model, applied once at the end of every
-/// round with the round's end time.
+/// round with the round's wall-clock window `[start_clock_h,
+/// end_clock_h)` — wall-clock-keyed policies (overnight charging
+/// windows, solar traces in `scenario::recharge`) integrate their
+/// charge rate over that span; state-keyed ones (cooldown) only need
+/// the end time.
 pub trait RechargePolicy: Send {
-    fn apply(&self, registry: &mut Registry, end_clock_h: f64);
+    fn apply(&self, registry: &mut Registry, start_clock_h: f64, end_clock_h: f64);
+
+    /// Whether this policy can ever bring a dead device back. When
+    /// true, the server keeps simulating an all-dead fleet (rounds
+    /// still elapse, clocks still advance) so the next charging window
+    /// can revive it instead of stopping the experiment early.
+    fn can_revive(&self) -> bool {
+        false
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -70,7 +84,7 @@ pub trait RechargePolicy: Send {
 pub struct NoRecharge;
 
 impl RechargePolicy for NoRecharge {
-    fn apply(&self, _registry: &mut Registry, _end_clock_h: f64) {}
+    fn apply(&self, _registry: &mut Registry, _start_clock_h: f64, _end_clock_h: f64) {}
     fn name(&self) -> &'static str {
         "none"
     }
@@ -85,7 +99,7 @@ pub struct CooldownRecharge {
 }
 
 impl RechargePolicy for CooldownRecharge {
-    fn apply(&self, registry: &mut Registry, end_clock_h: f64) {
+    fn apply(&self, registry: &mut Registry, _start_clock_h: f64, end_clock_h: f64) {
         for c in &mut registry.clients {
             if let Some(died) = c.battery.died_at_h {
                 if end_clock_h - died >= self.after_hours {
@@ -93,6 +107,9 @@ impl RechargePolicy for CooldownRecharge {
                 }
             }
         }
+    }
+    fn can_revive(&self) -> bool {
+        self.to_fraction > 0.0
     }
     fn name(&self) -> &'static str {
         "cooldown"
@@ -175,9 +192,9 @@ mod tests {
         let cap = r.clients[0].battery.capacity_joules();
         r.clients[0].battery.drain_fl(cap * 2.0, 5.0);
         let policy = CooldownRecharge { after_hours: 2.0, to_fraction: 0.8 };
-        policy.apply(&mut r, 6.0); // only 1 h dead
+        policy.apply(&mut r, 5.5, 6.0); // only 1 h dead
         assert!(!r.clients[0].battery.is_alive());
-        policy.apply(&mut r, 7.5); // 2.5 h dead
+        policy.apply(&mut r, 7.0, 7.5); // 2.5 h dead
         assert!(r.clients[0].battery.is_alive());
         assert!((r.clients[0].battery.fraction() - 0.8).abs() < 1e-12);
     }
@@ -189,5 +206,12 @@ mod tests {
         assert_eq!(recharge_policy_from(&cfg.devices).name(), "none");
         cfg.devices.recharge_after_hours = 3.0;
         assert_eq!(recharge_policy_from(&cfg.devices).name(), "cooldown");
+    }
+
+    #[test]
+    fn revival_capability_matches_policy() {
+        assert!(!NoRecharge.can_revive());
+        assert!(CooldownRecharge { after_hours: 2.0, to_fraction: 0.8 }.can_revive());
+        assert!(!CooldownRecharge { after_hours: 2.0, to_fraction: 0.0 }.can_revive());
     }
 }

@@ -25,9 +25,14 @@
 //! ```
 //!
 //! Each phase is a plain struct whose `run` takes exactly the state it
-//! reads and returns a typed result, so alternative scenarios
-//! (availability churn in planning, degraded networks in simulation,
-//! different quorum rules in commit) swap a single phase without
+//! reads and returns a typed result. The environment enters through the
+//! scenario seams: `PlanPhase` intersects candidates with the
+//! scenario's [`AvailabilityModel`](crate::scenario::AvailabilityModel)
+//! (diurnal presence, trace churn), `SimPhase` resolves timing and
+//! energy on the scenario's effective
+//! [`NetworkModel`](crate::scenario::NetworkModel) links (degraded
+//! tails, congestion windows), and the accounting step applies the
+//! scenario's recharge policy — so whole environments swap without
 //! touching the loop in `server.rs`.
 //!
 //! **Determinism:** the execution phase trains the round's K completing
@@ -42,8 +47,10 @@ use anyhow::Result;
 use crate::aggregation::{Aggregator, ClientUpdate};
 use crate::config::{ExperimentConfig, FederationConfig, TrainingConfig};
 use crate::data::SyntheticSpeech;
+use crate::energy::RoundEnergy;
 use crate::metrics::{jain_index, RoundRecord};
 use crate::runtime::ModelRuntime;
+use crate::scenario::ScenarioEnv;
 use crate::selection::{ParticipantOutcome, RoundFeedback, Selector};
 use crate::sim::{simulate_round, FailureKind, ParticipantPlan, RoundSimOutcome};
 use crate::training::{LocalTrainResult, Trainer, TrainerBufs};
@@ -55,6 +62,12 @@ use super::registry::Registry;
 pub const MISS_BLACKLIST_THRESHOLD: u32 = 3;
 /// Rounds a benched client stays ineligible.
 pub const MISS_BLACKLIST_COOLDOWN: u64 = 10;
+/// Wall-clock seconds attributed to a round nobody was eligible for:
+/// the server backs off to a re-poll cadence instead of spinning on
+/// ~1 s empty-pool deadlines, so simulated time can actually reach the
+/// next availability or charging window (diurnal troughs, overnight
+/// recharge) within a realistic round budget.
+pub const EMPTY_ROUND_WAIT_S: f64 = 300.0;
 
 // ---------------------------------------------------------------------------
 // Phase 1: candidate planning
@@ -72,8 +85,12 @@ pub struct RoundPlan {
     pub deadline_s: f64,
 }
 
-/// Builds candidates from the registry, runs the selector, and projects
-/// each pick's download/compute/upload timeline and energy demand.
+/// Builds candidates from the registry, intersects them with the
+/// scenario's availability model (a client that is offline at round
+/// start cannot be selected, whatever its utility), runs the selector,
+/// and projects each pick's download/compute/upload timeline and energy
+/// demand. An empty eligible pool yields an empty plan — the round is
+/// skipped downstream, never a panic.
 pub struct PlanPhase;
 
 impl PlanPhase {
@@ -81,15 +98,18 @@ impl PlanPhase {
         registry: &Registry,
         selector: &mut dyn Selector,
         cfg: &ExperimentConfig,
+        env: &ScenarioEnv,
         round: u64,
+        clock_h: f64,
         rng: &mut Rng,
     ) -> RoundPlan {
         let k = cfg.federation.participants_per_round;
         let local_steps = cfg.training.local_steps;
         let batch = cfg.data.batch_size;
 
-        let candidates =
+        let mut candidates =
             registry.candidates(round, cfg.selector.min_battery_frac, local_steps, batch);
+        candidates.retain(|c| env.availability.available(c.id, clock_h));
         let selected = selector.select(round, &candidates, k, rng);
         let deadline_s = selector.deadline_s(&candidates);
 
@@ -129,15 +149,55 @@ pub struct SimulatedRound {
 }
 
 /// Resolves the round on the deterministic event queue.
+///
+/// The *plan* carries the server's estimates (registered link
+/// profiles); the simulation replaces them with the scenario's
+/// effective links at round start, so a degraded or congested network
+/// surfaces as longer transfers, more comm energy and more deadline
+/// misses than the selector budgeted for. Under the static network
+/// model the plan's timings are reused verbatim.
 pub struct SimPhase;
 
 impl SimPhase {
-    pub fn run(plan: &RoundPlan) -> SimulatedRound {
-        let outcome = simulate_round(&plan.plans, plan.deadline_s);
-        // An empty round still advances time by the deadline (the
-        // server waits before concluding nobody is coming).
+    pub fn run(
+        plan: &RoundPlan,
+        registry: &Registry,
+        env: &ScenarioEnv,
+        clock_h: f64,
+    ) -> SimulatedRound {
+        let outcome = if env.network.is_static() {
+            simulate_round(&plan.plans, plan.deadline_s)
+        } else {
+            let adjusted: Vec<ParticipantPlan> = plan
+                .plans
+                .iter()
+                .map(|p| {
+                    let c = &registry.clients[p.id];
+                    let link = env.network.link_at(c.id, &c.link, clock_h);
+                    let energy = RoundEnergy::for_participation(
+                        &c.device.spec,
+                        &link,
+                        registry.payload_bytes,
+                        p.compute_s,
+                    )
+                    .total();
+                    ParticipantPlan {
+                        id: p.id,
+                        download_s: link.download_secs(registry.payload_bytes),
+                        compute_s: p.compute_s,
+                        upload_s: link.upload_secs(registry.payload_bytes),
+                        round_energy_j: energy,
+                        charge_j: p.charge_j,
+                    }
+                })
+                .collect();
+            simulate_round(&adjusted, plan.deadline_s)
+        };
+        // An empty round still advances time: the server waits out the
+        // deadline, then backs off to the re-poll cadence rather than
+        // burning a round per simulated second.
         let round_duration_s = if plan.selected.is_empty() {
-            plan.deadline_s.max(1.0)
+            plan.deadline_s.max(EMPTY_ROUND_WAIT_S)
         } else {
             outcome.duration_s.max(1.0)
         };
@@ -437,23 +497,40 @@ mod tests {
     use super::*;
     use crate::config::SelectorKind;
     use crate::runtime::MockRuntime;
+    use crate::scenario::{CongestionWindow, DiurnalAvailability};
     use crate::selection::make_selector;
 
-    fn fixture() -> (ExperimentConfig, Registry, MockRuntime) {
+    fn fixture() -> (ExperimentConfig, Registry, MockRuntime, ScenarioEnv) {
         let mut cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
         cfg.data.min_samples = 5;
         cfg.data.max_samples = 20;
         let rt = MockRuntime { train_batch: cfg.data.batch_size, ..MockRuntime::default() };
         let registry = Registry::build(&cfg, rt.num_classes, rt.param_count);
-        (cfg, registry, rt)
+        let env = ScenarioEnv::steady(&cfg.devices);
+        (cfg, registry, rt, env)
+    }
+
+    /// An environment whose diurnal availability admits nobody, ever.
+    fn blackout_env(cfg: &ExperimentConfig) -> ScenarioEnv {
+        let mut env = ScenarioEnv::steady(&cfg.devices);
+        env.name = "blackout".to_string();
+        env.availability = Box::new(DiurnalAvailability {
+            seed: 1,
+            peak_hour: 12.0,
+            min_available: 0.0,
+            max_available: 0.0,
+            phase_jitter_h: 0.0,
+        });
+        env
     }
 
     #[test]
     fn plan_phase_projects_each_selected_client() {
-        let (cfg, registry, _rt) = fixture();
+        let (cfg, registry, _rt, env) = fixture();
         let mut selector = make_selector(&cfg.selector);
         let mut rng = Rng::seed_from_u64(1);
-        let plan = PlanPhase::run(&registry, selector.as_mut(), &cfg, 1, &mut rng);
+        let plan =
+            PlanPhase::run(&registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
         assert_eq!(plan.selected.len(), plan.plans.len());
         assert!(plan.selected.len() <= cfg.federation.participants_per_round);
         assert!(plan.deadline_s > 0.0);
@@ -465,20 +542,94 @@ mod tests {
     }
 
     #[test]
-    fn sim_phase_empty_round_still_waits_out_deadline() {
-        let plan = RoundPlan { round: 3, selected: vec![], plans: vec![], deadline_s: 42.0 };
-        let sim = SimPhase::run(&plan);
-        assert_eq!(sim.round_duration_s, 42.0);
+    fn plan_phase_with_zero_availability_selects_nobody() {
+        let (cfg, registry, _rt, _) = fixture();
+        let env = blackout_env(&cfg);
+        let mut selector = make_selector(&cfg.selector);
+        let mut rng = Rng::seed_from_u64(2);
+        let plan =
+            PlanPhase::run(&registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
+        assert!(plan.selected.is_empty(), "offline population must yield an empty plan");
+        assert!(plan.plans.is_empty());
+        // And the empty plan flows through the sim without panicking.
+        let sim = SimPhase::run(&plan, &registry, &env, 0.0);
         assert!(sim.outcome.results.is_empty());
+        assert!(sim.round_duration_s >= 1.0);
+    }
+
+    #[test]
+    fn sim_phase_empty_round_advances_by_repoll_or_deadline() {
+        let (_cfg, registry, _rt, env) = fixture();
+        // A short empty-pool deadline is stretched to the re-poll wait…
+        let plan = RoundPlan { round: 3, selected: vec![], plans: vec![], deadline_s: 42.0 };
+        let sim = SimPhase::run(&plan, &registry, &env, 0.0);
+        assert_eq!(sim.round_duration_s, EMPTY_ROUND_WAIT_S);
+        assert!(sim.outcome.results.is_empty());
+        // …while a deadline longer than the re-poll wait still wins.
+        let plan =
+            RoundPlan { round: 4, selected: vec![], plans: vec![], deadline_s: 900.0 };
+        let sim = SimPhase::run(&plan, &registry, &env, 0.0);
+        assert_eq!(sim.round_duration_s, 900.0);
+    }
+
+    #[test]
+    fn sim_phase_congestion_slows_and_drains_more_than_static() {
+        let (cfg, registry, _rt, steady) = fixture();
+        let mut selector = make_selector(&cfg.selector);
+        let mut rng = Rng::seed_from_u64(5);
+        let plan =
+            PlanPhase::run(&registry, selector.as_mut(), &cfg, &steady, 1, 0.0, &mut rng);
+        assert!(!plan.selected.is_empty());
+
+        let mut congested = ScenarioEnv::steady(&cfg.devices);
+        congested.network =
+            Box::new(CongestionWindow { start_hour: 0.0, end_hour: 24.0, factor: 0.1 });
+
+        let a = SimPhase::run(&plan, &registry, &steady, 0.0);
+        let b = SimPhase::run(&plan, &registry, &congested, 0.0);
+        // 10x slower links: every participant is active at least as
+        // long, and whoever moves bytes spends more comm energy.
+        let active_a: f64 = a.outcome.results.iter().map(|r| r.active_s).sum();
+        let active_b: f64 = b.outcome.results.iter().map(|r| r.active_s).sum();
+        assert!(
+            active_b > active_a,
+            "congestion must lengthen activity: {active_b} vs {active_a}"
+        );
+
+        // The static path reuses the plan's exact timings.
+        let replan = SimPhase::run(&plan, &registry, &steady, 0.0);
+        for (x, y) in a.outcome.results.iter().zip(&replan.outcome.results) {
+            assert_eq!(x.active_s, y.active_s);
+            assert_eq!(x.energy_spent_j, y.energy_spent_j);
+        }
+    }
+
+    #[test]
+    fn static_scenario_matches_plan_timings_exactly() {
+        let (cfg, registry, _rt, env) = fixture();
+        let mut selector = make_selector(&cfg.selector);
+        let mut rng = Rng::seed_from_u64(8);
+        let plan =
+            PlanPhase::run(&registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
+        assert!(env.network.is_static());
+        let sim = SimPhase::run(&plan, &registry, &env, 0.0);
+        // Completed clients' active time equals the planned timeline —
+        // the steady scenario reproduces the pre-scenario engine.
+        for (r, p) in sim.outcome.results.iter().zip(&plan.plans) {
+            if r.completed {
+                assert!((r.active_s - p.total_duration_s()).abs() < 1e-9);
+            }
+        }
     }
 
     #[test]
     fn exec_phase_identical_at_1_and_4_workers() {
-        let (cfg, registry, rt) = fixture();
+        let (cfg, registry, rt, env) = fixture();
         let mut selector = make_selector(&cfg.selector);
         let mut rng = Rng::seed_from_u64(9);
-        let plan = PlanPhase::run(&registry, selector.as_mut(), &cfg, 1, &mut rng);
-        let sim = SimPhase::run(&plan);
+        let plan =
+            PlanPhase::run(&registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
+        let sim = SimPhase::run(&plan, &registry, &env, 0.0);
         let global = rt.init_params(0).unwrap();
         let data = SyntheticSpeech::new(rt.input_hw, rt.num_classes, 0.3, cfg.data.seed);
 
@@ -505,7 +656,7 @@ mod tests {
 
     #[test]
     fn feedback_phase_bans_after_repeated_misses() {
-        let (cfg, mut registry, _rt) = fixture();
+        let (cfg, mut registry, _rt, _env) = fixture();
         let mut selector = make_selector(&cfg.selector);
         let miss =
             ParticipantOutcome { id: 0, stat_util: None, duration_s: 1e4, completed: false };

@@ -1,16 +1,19 @@
 //! The FL server loop (paper Fig. 1 / Fig. 2), assembled from the
 //! staged [`RoundEngine`](super::engine) phases.
 //!
-//! Per round: [`PlanPhase`] builds candidates and the selector picks K
-//! → [`SimPhase`] resolves timing, battery deaths and stragglers on the
-//! event queue → [`ExecPhase`] runs REAL local SGD for completing
-//! clients (parallel across worker threads, deterministic commit
-//! order) → [`CommitPhase`] applies the quorum rule and aggregates
-//! (YoGi/FedAvg) → [`BatteryAccounting`] + the [`RechargePolicy`] drain
-//! participants and bystanders → [`FeedbackPhase`] updates utilities
-//! and the miss blacklist → [`RecordPhase`] emits the metrics row.
-//! Rounds with fewer than `min_report_fraction·K` completions fail and
-//! are not aggregated (FedScale semantics); their time still elapses.
+//! Per round: [`PlanPhase`] builds candidates (gated by the scenario's
+//! availability model) and the selector picks K → [`SimPhase`] resolves
+//! timing, battery deaths and stragglers on the event queue over the
+//! scenario's effective links → [`ExecPhase`] runs REAL local SGD for
+//! completing clients (parallel across worker threads, deterministic
+//! commit order) → [`CommitPhase`] applies the quorum rule and
+//! aggregates (YoGi/FedAvg) → [`BatteryAccounting`] + the scenario's
+//! recharge policy drain participants and bystanders → [`FeedbackPhase`]
+//! updates utilities and the miss blacklist → [`RecordPhase`] emits the
+//! metrics row. Rounds with fewer than `min_report_fraction·K`
+//! completions fail and are not aggregated (FedScale semantics); their
+//! time still elapses. The environment models come from
+//! `cfg.scenario` (preset name or TOML file, see [`crate::scenario`]).
 
 use anyhow::Result;
 
@@ -19,11 +22,12 @@ use crate::config::ExperimentConfig;
 use crate::data::SyntheticSpeech;
 use crate::metrics::MetricsLog;
 use crate::runtime::ModelRuntime;
+use crate::scenario::{Scenario, ScenarioEnv};
 use crate::selection::{make_selector, Selector};
 use crate::training::{Trainer, TrainerBufs};
 use crate::util::rng::Rng;
 
-use super::accounting::{recharge_policy_from, BatteryAccounting, RechargePolicy};
+use super::accounting::BatteryAccounting;
 use super::engine::{CommitPhase, ExecPhase, FeedbackPhase, PlanPhase, RecordPhase, SimPhase};
 use super::registry::Registry;
 
@@ -39,6 +43,18 @@ fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
 }
 
+/// Scenario models get their own deterministic stream derived from the
+/// experiment seeds, so a campaign's grid seed pins the environment
+/// (availability draws, trace churn, degraded-tail membership) exactly
+/// like it pins the data and devices.
+fn scenario_seed(cfg: &ExperimentConfig) -> u64 {
+    cfg.data
+        .seed
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(cfg.devices.seed.rotate_left(17))
+        ^ 0x5CE9_A210_C0FF_EE00
+}
+
 /// The coordinator owns the full experiment state and drives the
 /// engine phases round by round.
 pub struct Coordinator<'r> {
@@ -47,7 +63,9 @@ pub struct Coordinator<'r> {
     registry: Registry,
     selector: Box<dyn Selector>,
     aggregator: Box<dyn Aggregator>,
-    recharge: Box<dyn RechargePolicy>,
+    /// The experiment's environment: availability + network + recharge
+    /// models resolved from `cfg.scenario`.
+    env: ScenarioEnv,
     data: SyntheticSpeech,
     global_params: Vec<f32>,
     /// Simulated wall clock, hours.
@@ -66,6 +84,11 @@ pub struct Coordinator<'r> {
 
 impl<'r> Coordinator<'r> {
     pub fn new(cfg: ExperimentConfig, runtime: &'r dyn ModelRuntime) -> Result<Self> {
+        let mut cfg = cfg;
+        // Resolve the environment first: a scenario may override device
+        // knobs, and the combined config is what gets validated.
+        let scenario = Scenario::resolve(&cfg.scenario)?;
+        scenario.apply_overrides(&mut cfg);
         cfg.validate()?;
         anyhow::ensure!(
             cfg.data.batch_size == runtime.train_batch(),
@@ -86,7 +109,11 @@ impl<'r> Coordinator<'r> {
             runtime.param_count(),
             cfg.training.server_learning_rate,
         );
-        let recharge = recharge_policy_from(&cfg.devices);
+        let env = scenario.build_env(
+            scenario_seed(&cfg),
+            cfg.federation.num_clients,
+            &cfg.devices,
+        );
         let global_params = runtime.init_params(cfg.training.init_seed)?;
         let bufs_pool = vec![TrainerBufs::new(runtime)];
         let rng = Rng::seed_from_u64(cfg.data.seed ^ cfg.devices.seed ^ 0x5EED);
@@ -97,7 +124,7 @@ impl<'r> Coordinator<'r> {
             registry,
             selector,
             aggregator,
-            recharge,
+            env,
             data,
             global_params,
             clock_h: 0.0,
@@ -132,6 +159,11 @@ impl<'r> Coordinator<'r> {
         &self.registry
     }
 
+    /// Name of the resolved environment scenario.
+    pub fn scenario_name(&self) -> &str {
+        &self.env.name
+    }
+
     pub fn clock_h(&self) -> f64 {
         self.clock_h
     }
@@ -145,7 +177,11 @@ impl<'r> Coordinator<'r> {
         let rounds = self.cfg.federation.rounds;
         for round in 1..=rounds as u64 {
             self.run_round(round)?;
-            if self.registry.alive_count() == 0 {
+            // An all-dead fleet only ends the experiment when nothing
+            // can revive it; under a reviving policy (cooldown,
+            // overnight window, solar) empty rounds keep elapsing so
+            // the clock reaches the next charging opportunity.
+            if self.registry.alive_count() == 0 && !self.env.recharge.can_revive() {
                 eprintln!("[eafl] round {round}: entire population dead; stopping early");
                 break;
             }
@@ -155,12 +191,19 @@ impl<'r> Coordinator<'r> {
 
     /// Execute one round end to end through the engine phases.
     pub fn run_round(&mut self, round: u64) -> Result<()> {
-        // --- Phase 1: candidate planning ----------------------------------
-        let plan =
-            PlanPhase::run(&self.registry, self.selector.as_mut(), &self.cfg, round, &mut self.rng);
+        // --- Phase 1: candidate planning (availability-gated) -------------
+        let plan = PlanPhase::run(
+            &self.registry,
+            self.selector.as_mut(),
+            &self.cfg,
+            &self.env,
+            round,
+            self.clock_h,
+            &mut self.rng,
+        );
 
-        // --- Phase 2: event-driven round simulation -----------------------
-        let sim = SimPhase::run(&plan);
+        // --- Phase 2: event-driven round simulation on effective links ----
+        let sim = SimPhase::run(&plan, &self.registry, &self.env, self.clock_h);
         let end_clock_h = self.clock_h + sim.round_hours;
 
         // --- Phase 3: real local training (parallel) ----------------------
@@ -196,7 +239,7 @@ impl<'r> Coordinator<'r> {
             sim.round_hours,
             end_clock_h,
         );
-        self.recharge.apply(&mut self.registry, end_clock_h);
+        self.env.recharge.apply(&mut self.registry, self.clock_h, end_clock_h);
 
         // --- Phase 6: stats + selector feedback ---------------------------
         FeedbackPhase::run(&mut self.registry, self.selector.as_mut(), round, &exec.outcomes);

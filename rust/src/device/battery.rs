@@ -112,6 +112,21 @@ impl Battery {
         }
     }
 
+    /// Add `energy_j` of charge, clamped at capacity. A dead battery
+    /// that receives charge revives — the wall-clock recharge policies'
+    /// (overnight window, solar trace) entry point, where charging is a
+    /// rate over time rather than a jump to a fixed level.
+    pub fn charge_add(&mut self, energy_j: f64) {
+        if energy_j <= 0.0 {
+            return;
+        }
+        self.charge_j = (self.charge_j + energy_j).min(self.capacity_j);
+        if self.charge_j > 0.0 {
+            self.state = BatteryState::Alive;
+            self.died_at_h = None;
+        }
+    }
+
     /// Recharge to `fraction` of capacity and revive (recharge model).
     pub fn recharge_to(&mut self, fraction: f64) {
         self.charge_j = self.capacity_j * fraction.clamp(0.0, 1.0);
@@ -177,6 +192,25 @@ mod tests {
         assert!(b.is_alive());
         assert!((b.fraction() - 0.8).abs() < 1e-12);
         assert_eq!(b.died_at_h, None);
+    }
+
+    #[test]
+    fn charge_add_accumulates_caps_and_revives() {
+        let mut b = batt(0.5);
+        let cap = b.capacity_joules();
+        b.charge_add(cap * 0.25);
+        assert!((b.fraction() - 0.75).abs() < 1e-12);
+        b.charge_add(cap); // overshoot clamps at capacity
+        assert!((b.fraction() - 1.0).abs() < 1e-12);
+
+        b.drain_fl(cap * 2.0, 3.0);
+        assert!(!b.is_alive());
+        b.charge_add(-5.0); // negative is a no-op, stays dead
+        assert!(!b.is_alive());
+        b.charge_add(cap * 0.1);
+        assert!(b.is_alive());
+        assert_eq!(b.died_at_h, None);
+        assert!((b.fraction() - 0.1).abs() < 1e-12);
     }
 
     #[test]

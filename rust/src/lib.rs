@@ -43,16 +43,60 @@
 //! and commits results in simulation order, so seeded runs are
 //! bit-identical at any worker count.
 //!
+//! ## Scenarios
+//!
+//! The environment is data, not code: a [`scenario::Scenario`] bundles
+//! an availability model (consumed by the plan phase), a network model
+//! (consumed by the sim phase), a recharge policy and optional device
+//! overrides. Select one with `--scenario NAME|FILE` (or the
+//! `scenario` config key); `eafl scenarios` lists the presets:
+//!
+//! | preset       | availability            | network                  | recharge            |
+//! |--------------|-------------------------|--------------------------|---------------------|
+//! | `steady`     | always-on               | static                   | from device config  |
+//! | `diurnal`    | sine wave, peak 20:00   | static                   | from device config  |
+//! | `commuter`   | Markov on/off traces    | 17–21h congestion 0.35×  | overnight 22–6h     |
+//! | `solar-edge` | always-on               | 30% tail at 0.25×        | solar daylight trace|
+//!
+//! Custom scenarios are TOML files on the same schema
+//! (`eafl scenarios --show NAME` prints a template):
+//!
+//! ```text
+//! name = "night-shift"
+//! [availability]
+//! kind = "diurnal"          # always-on | diurnal | trace
+//! peak_hour = 2
+//! min_available = 0.1
+//! max_available = 0.9
+//! [network]
+//! kind = "degraded-tail"    # static | degraded-tail | congestion
+//! fraction = 0.4
+//! factor = 0.2
+//! [recharge]
+//! kind = "overnight"        # from-config | none | overnight | solar
+//! start_hour = 8
+//! end_hour = 16
+//! rate_frac_per_h = 0.3
+//! [overrides]
+//! idle_drain_per_hour = 0.01
+//! ```
+//!
+//! Every model is a pure function of (seed, client, simulated time), so
+//! scenarios preserve worker-count invariance: seeded campaigns stay
+//! byte-identical at any `EAFL_WORKERS` / `--jobs` setting.
+//!
 //! ## Campaigns
 //!
 //! The paper's figures are grids, not runs. [`campaign`] expands
-//! selectors × seeds × f-values × client-counts against a base config
-//! and runs the experiments across threads, merging the summaries into
-//! one `campaign.json` + `campaign.csv`:
+//! selectors × scenarios × seeds × f-values × client-counts against a
+//! base config and runs the experiments across threads, merging the
+//! summaries into one `campaign.json` + `campaign.csv`; re-running into
+//! the same `--out` directory resumes a partial campaign by skipping
+//! grid cells that already have summaries:
 //!
 //! ```text
 //! eafl sweep --mock --selectors eafl,oort,random --seeds 1,2,3 \
-//!            --f 0.0,0.25,1.0 --rounds 150 --out results/campaign
+//!            --scenario steady,diurnal --rounds 150 --out results/campaign
 //! ```
 
 pub mod aggregation;
@@ -66,6 +110,7 @@ pub mod energy;
 pub mod metrics;
 pub mod network;
 pub mod runtime;
+pub mod scenario;
 pub mod selection;
 pub mod sim;
 pub mod training;

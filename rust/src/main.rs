@@ -25,25 +25,37 @@ use eafl::energy::{comm_energy_percent, CommDirection};
 use eafl::metrics::Summary;
 use eafl::network::Medium;
 use eafl::runtime::{MockRuntime, ModelRuntime, XlaRuntime};
+use eafl::scenario::Scenario;
 
 const USAGE: &str = "\
 eafl — energy-aware federated learning (MobiCom'22 FedEdge reproduction)
 
 USAGE:
   eafl run [--config FILE] [--selector random|oort|eafl] [--rounds N]
-           [--clients N] [--f F] [--out DIR] [--mock]
-  eafl compare [--config FILE] [--rounds N] [--clients N] [--out DIR] [--mock]
-  eafl sweep [--config FILE] [--selectors LIST] [--seeds LIST] [--f LIST]
-             [--clients LIST] [--rounds N] [--jobs N] [--out DIR] [--mock]
+           [--clients N] [--f F] [--scenario NAME|FILE] [--out DIR] [--mock]
+  eafl compare [--config FILE] [--rounds N] [--clients N]
+           [--scenario NAME|FILE] [--out DIR] [--mock]
+  eafl sweep [--config FILE] [--selectors LIST] [--scenario LIST]
+             [--seeds LIST] [--f LIST] [--clients LIST] [--rounds N]
+             [--jobs N] [--fresh] [--out DIR] [--mock]
+  eafl scenarios [--show NAME]
   eafl gen-config [--out FILE]
   eafl energy-table
   eafl help
 
   sweep runs the full LIST-product as one campaign across --jobs threads
   (LIST is comma-separated, e.g. --selectors eafl,oort,random --seeds
-  1,2,3 --f 0.0,0.25,1.0); defaults to the headline grid of all three
-  selectors x seeds 1,2,3. Per-run CSVs plus the merged campaign
-  summary land in --out (default results/campaign).
+  1,2,3 --f 0.0,0.25,1.0 --scenario steady,diurnal); defaults to the
+  headline grid of all three selectors x seeds 1,2,3. Per-run CSVs plus
+  the merged campaign summary land in --out (default results/campaign).
+  Re-running into the same --out resumes a partial campaign by skipping
+  grid cells that already have summaries; --fresh recomputes everything.
+
+  Scenarios are declarative environment models (availability churn,
+  degraded/congested networks, wall-clock recharge policies) plugged
+  into the round engine's phase seams. --scenario takes a preset name
+  (`eafl scenarios` lists them) or a TOML scenario file
+  (`eafl scenarios --show NAME` prints a template).
 
   EAFL_WORKERS=N sets the per-round parallel-training worker count for
   run/compare (seeded results are bit-identical at any N).
@@ -147,6 +159,11 @@ fn base_config(args: &Args, kind: SelectorKind) -> Result<ExperimentConfig> {
     if let Some(f) = args.get_parsed::<f64>("f")? {
         cfg.selector.eafl_f = f;
     }
+    if let Some(s) = args.get("scenario") {
+        cfg.scenario = s.to_string();
+    }
+    // Fail fast on a bad scenario (before any training starts).
+    Scenario::resolve(&cfg.scenario)?;
     Ok(cfg)
 }
 
@@ -219,7 +236,7 @@ fn main() -> Result<()> {
             }
         }
         "sweep" => {
-            let args = Args::parse(rest, &["mock"])?;
+            let args = Args::parse(rest, &["mock", "fresh"])?;
             let mut base = match args.get("config") {
                 Some(p) => ExperimentConfig::from_toml_file(&PathBuf::from(p))?,
                 None => ExperimentConfig::paper_default(SelectorKind::Eafl),
@@ -232,6 +249,8 @@ fn main() -> Result<()> {
             spec.grid = CampaignGrid {
                 selectors: parse_list::<SelectorKind>(args.get("selectors"), "selectors")?
                     .unwrap_or(defaults.selectors),
+                scenarios: parse_list::<String>(args.get("scenario"), "scenario")?
+                    .unwrap_or_default(),
                 seeds: parse_list::<u64>(args.get("seeds"), "seeds")?
                     .unwrap_or(defaults.seeds),
                 f_values: parse_list::<f64>(args.get("f"), "f")?.unwrap_or_default(),
@@ -241,6 +260,12 @@ fn main() -> Result<()> {
             if let Some(j) = args.get_parsed::<usize>("jobs")? {
                 spec.jobs = j.max(1);
             }
+            spec.resume = !args.has("fresh");
+            // Fail fast on a bad scenario axis (before hours of runs).
+            Scenario::resolve(&spec.base.scenario)?;
+            for s in &spec.grid.scenarios {
+                Scenario::resolve(s)?;
+            }
             let out = PathBuf::from(args.get("out").unwrap_or("results/campaign"));
             let runtime = load_runtime(args.has("mock"))?;
             let total = eafl::campaign::expand(&spec).len();
@@ -248,9 +273,10 @@ fn main() -> Result<()> {
             // EAFL selector, so total is usually less than the naive
             // cross of the axis sizes.
             println!(
-                "campaign: {total} runs over {} selectors, {} seeds, {} f value(s) \
-                 (EAFL only), {} client count(s); {} jobs -> {}",
+                "campaign: {total} runs over {} selectors, {} scenario(s), {} seeds, \
+                 {} f value(s) (EAFL only), {} client count(s); {} jobs -> {}",
                 spec.grid.selectors.len(),
+                spec.grid.scenarios.len().max(1),
                 spec.grid.seeds.len(),
                 spec.grid.f_values.len().max(1),
                 spec.grid.client_counts.len().max(1),
@@ -266,10 +292,34 @@ fn main() -> Result<()> {
             for (kind, acc) in report.mean_accuracy_by_selector() {
                 println!("  {kind:<8} {acc:.4}");
             }
+            if spec.grid.scenarios.len() > 1 {
+                println!("\ntotal drop-outs by scenario x selector:");
+                for (scenario, kind, drops) in report.dropouts_by_scenario() {
+                    println!("  {scenario:<12} {kind:<8} {drops}");
+                }
+            }
             println!(
                 "\nmerged summary: {}",
                 out.join(format!("{}.campaign.json", report.name)).display()
             );
+        }
+        "scenarios" => {
+            let args = Args::parse(rest, &[])?;
+            if let Some(name) = args.get("show") {
+                let s = Scenario::resolve(name)?;
+                print!("{}", s.to_toml());
+            } else {
+                println!(
+                    "built-in scenario presets (use with --scenario NAME or a TOML file):\n"
+                );
+                for s in Scenario::presets() {
+                    println!("  {:<12} {}", s.name, s.description);
+                }
+                println!(
+                    "\n  `eafl scenarios --show NAME` prints a preset as TOML — a \
+                     template for custom scenario files."
+                );
+            }
         }
         "gen-config" => {
             let args = Args::parse(rest, &[])?;

@@ -6,7 +6,7 @@
 use std::io::Write;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::Json;
 
@@ -85,6 +85,41 @@ impl Summary {
         m.insert("committed_rounds".into(), Json::Num(self.committed_rounds as f64));
         m.insert("failed_rounds".into(), Json::Num(self.failed_rounds as f64));
         Json::Obj(m)
+    }
+
+    /// Parse a summary back from its JSON — the inverse of
+    /// [`Summary::to_json`], used by campaign resume to treat a partial
+    /// campaign.json / per-run summary.json as already-done grid cells.
+    /// `final_train_loss: null` maps back to NaN.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        fn num(j: &Json, key: &str) -> Result<f64> {
+            j.field(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow!("summary field {key:?} is not a number"))
+        }
+        Ok(Self {
+            name: j
+                .field("name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("summary name is not a string"))?
+                .to_string(),
+            rounds: num(j, "rounds")? as u64,
+            wall_clock_h: num(j, "wall_clock_h")?,
+            final_accuracy: num(j, "final_accuracy")?,
+            best_accuracy: num(j, "best_accuracy")?,
+            final_train_loss: match j.field("final_train_loss")? {
+                Json::Null => f64::NAN,
+                v => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("final_train_loss is not a number"))?,
+            },
+            final_fairness: num(j, "final_fairness")?,
+            total_dropouts: num(j, "total_dropouts")? as usize,
+            total_fl_energy_j: num(j, "total_fl_energy_j")?,
+            mean_round_duration_s: num(j, "mean_round_duration_s")?,
+            committed_rounds: num(j, "committed_rounds")? as u64,
+            failed_rounds: num(j, "failed_rounds")? as u64,
+        })
     }
 }
 
@@ -238,6 +273,40 @@ mod tests {
         assert_eq!(s.rounds, 0);
         assert_eq!(s.final_accuracy, 0.0);
         assert_eq!(s.mean_round_duration_s, 0.0);
+    }
+
+    #[test]
+    fn summary_json_roundtrips_exactly() {
+        let mut log = MetricsLog::new("rt");
+        log.push(rec(1, 0.123456789, true));
+        log.push(rec(2, 0.5, false));
+        let s = log.summary();
+        let back = Summary::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.name, s.name);
+        assert_eq!(back.rounds, s.rounds);
+        assert_eq!(back.wall_clock_h, s.wall_clock_h, "f64s survive bit-exactly");
+        assert_eq!(back.final_accuracy, s.final_accuracy);
+        assert_eq!(back.best_accuracy, s.best_accuracy);
+        assert_eq!(back.final_train_loss, s.final_train_loss);
+        assert_eq!(back.final_fairness, s.final_fairness);
+        assert_eq!(back.total_dropouts, s.total_dropouts);
+        assert_eq!(back.total_fl_energy_j, s.total_fl_energy_j);
+        assert_eq!(back.mean_round_duration_s, s.mean_round_duration_s);
+        assert_eq!(back.committed_rounds, s.committed_rounds);
+        assert_eq!(back.failed_rounds, s.failed_rounds);
+
+        // NaN train loss goes through the null encoding.
+        let empty = MetricsLog::new("nan").summary();
+        assert!(empty.final_train_loss.is_nan());
+        let back = Summary::from_json(&empty.to_json()).unwrap();
+        assert!(back.final_train_loss.is_nan());
+
+        // And the re-emitted JSON text is byte-identical (resume writes
+        // merged reports from parsed summaries).
+        assert_eq!(
+            Summary::from_json(&s.to_json()).unwrap().to_json().to_string_pretty(),
+            s.to_json().to_string_pretty()
+        );
     }
 
     #[test]

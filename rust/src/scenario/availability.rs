@@ -1,0 +1,259 @@
+//! Client-presence models — who is reachable when a round is planned.
+//!
+//! [`PlanPhase`](crate::coordinator::PlanPhase) intersects the
+//! selector's candidate pool with the scenario's availability model, so
+//! churn is an environment property, not a selector concern. Every
+//! model is a pure function of (seed, client, simulated time): no
+//! mutable state is touched during a run, which is what keeps campaign
+//! results byte-identical at any worker count.
+
+use crate::util::rng::Rng;
+
+use super::hash01;
+
+/// Presence granularity: availability is resampled once per slot, so
+/// nearby rounds see a coherent on/off state instead of per-call noise.
+const DIURNAL_SLOT_H: f64 = 0.25;
+
+/// Which clients are present (powered on, reachable, willing) at a
+/// point in simulated time. Implementations must be deterministic and
+/// side-effect free — the engine may consult them in any order.
+pub trait AvailabilityModel: Send + Sync {
+    /// Whether client `id` can be planned into a round starting at
+    /// wall-clock `clock_h` (hours since experiment start).
+    fn available(&self, id: usize, clock_h: f64) -> bool;
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's implicit environment: every alive client is reachable
+/// every round.
+pub struct AlwaysOn;
+
+impl AvailabilityModel for AlwaysOn {
+    fn available(&self, _id: usize, _clock_h: f64) -> bool {
+        true
+    }
+    fn name(&self) -> &'static str {
+        "always-on"
+    }
+}
+
+/// Sine-wave diurnal presence: the probability that a client is online
+/// peaks at `peak_hour` (wall-clock hour of day) and bottoms out twelve
+/// hours later, with a per-client phase offset so the population does
+/// not churn in lock-step.
+pub struct DiurnalAvailability {
+    pub seed: u64,
+    /// Hour of day (0..24) at which presence probability is maximal.
+    pub peak_hour: f64,
+    /// Presence probability at the trough / the peak, each in [0, 1].
+    pub min_available: f64,
+    pub max_available: f64,
+    /// Per-client phase offsets are uniform in [0, phase_jitter_h).
+    pub phase_jitter_h: f64,
+}
+
+impl DiurnalAvailability {
+    /// This client's deterministic phase offset, hours.
+    fn phase_offset_h(&self, id: usize) -> f64 {
+        hash01(self.seed, id as u64, 0xD1_0FF5E7) * self.phase_jitter_h
+    }
+
+    /// Presence probability for `id` at `clock_h` (before the slot draw).
+    pub fn presence_prob(&self, id: usize, clock_h: f64) -> f64 {
+        let phase = (clock_h + self.phase_offset_h(id) - self.peak_hour) / 24.0
+            * std::f64::consts::TAU;
+        self.min_available
+            + (self.max_available - self.min_available) * 0.5 * (1.0 + phase.cos())
+    }
+}
+
+impl AvailabilityModel for DiurnalAvailability {
+    fn available(&self, id: usize, clock_h: f64) -> bool {
+        let slot = (clock_h.max(0.0) / DIURNAL_SLOT_H).floor() as u64;
+        hash01(self.seed, id as u64, slot.wrapping_mul(0x9E37_79B9).wrapping_add(0xA7))
+            < self.presence_prob(id, clock_h)
+    }
+    fn name(&self) -> &'static str {
+        "diurnal"
+    }
+}
+
+/// Trace-driven on/off churn: each client gets a periodic boolean
+/// trace generated once from the seed by a two-state Markov chain, so
+/// dwell times are coherent (a client that goes offline stays offline
+/// for a while) instead of i.i.d. per round.
+pub struct TraceAvailability {
+    slot_h: f64,
+    /// One period of on/off slots per client.
+    traces: Vec<Vec<bool>>,
+}
+
+impl TraceAvailability {
+    /// Generate `n` per-client traces covering `period_h` hours at
+    /// `slot_h` resolution. `duty_cycle` is the stationary on-fraction;
+    /// `churn` scales the per-slot switching pressure (0 = frozen at
+    /// the initial state, 1 = maximal flipping at that duty cycle).
+    pub fn generate(
+        seed: u64,
+        n: usize,
+        period_h: f64,
+        slot_h: f64,
+        duty_cycle: f64,
+        churn: f64,
+    ) -> Self {
+        let slots = (period_h / slot_h).ceil().max(1.0) as usize;
+        let duty = duty_cycle.clamp(0.01, 0.99);
+        // Stationary distribution of the chain is exactly `duty`:
+        // P(off->on)/(P(off->on)+P(on->off)) = duty.
+        let p_on_off = (churn * (1.0 - duty)).clamp(0.0, 1.0);
+        let p_off_on = (churn * duty).clamp(0.0, 1.0);
+        let traces = (0..n)
+            .map(|id| {
+                let mut rng = Rng::seed_from_u64(
+                    seed ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0xA11),
+                );
+                let mut on = rng.gen_bool(duty);
+                (0..slots)
+                    .map(|_| {
+                        let cur = on;
+                        let flip_p = if on { p_on_off } else { p_off_on };
+                        if rng.gen_bool(flip_p) {
+                            on = !on;
+                        }
+                        cur
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { slot_h, traces }
+    }
+
+    /// Number of clients the traces were generated for.
+    pub fn len(&self) -> usize {
+        self.traces.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.traces.is_empty()
+    }
+}
+
+impl AvailabilityModel for TraceAvailability {
+    fn available(&self, id: usize, clock_h: f64) -> bool {
+        if self.traces.is_empty() {
+            return true;
+        }
+        let trace = &self.traces[id % self.traces.len()];
+        let slot = (clock_h.max(0.0) / self.slot_h).floor() as u64 as usize % trace.len();
+        trace[slot]
+    }
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diurnal(min: f64, max: f64, jitter: f64) -> DiurnalAvailability {
+        DiurnalAvailability {
+            seed: 9,
+            peak_hour: 20.0,
+            min_available: min,
+            max_available: max,
+            phase_jitter_h: jitter,
+        }
+    }
+
+    #[test]
+    fn always_on_is_always_on() {
+        assert!(AlwaysOn.available(0, 0.0));
+        assert!(AlwaysOn.available(123, 1e6));
+    }
+
+    #[test]
+    fn diurnal_prob_peaks_at_peak_hour_and_troughs_opposite() {
+        let d = diurnal(0.1, 0.9, 0.0);
+        assert!((d.presence_prob(7, 20.0) - 0.9).abs() < 1e-9);
+        assert!((d.presence_prob(7, 8.0) - 0.1).abs() < 1e-9);
+        // 24h-periodic.
+        assert!((d.presence_prob(7, 20.0) - d.presence_prob(7, 44.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diurnal_extremes_gate_everyone() {
+        let none = diurnal(0.0, 0.0, 3.0);
+        let all = diurnal(1.0, 1.0, 3.0);
+        for id in 0..50 {
+            for t in [0.0, 5.3, 12.0, 23.9, 100.7] {
+                assert!(!none.available(id, t), "p=0 must never admit");
+                assert!(all.available(id, t), "p=1 must always admit");
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_is_deterministic_and_slot_coherent() {
+        let d = diurnal(0.2, 0.8, 2.0);
+        for id in 0..20 {
+            for t in [0.0, 3.7, 11.1] {
+                assert_eq!(d.available(id, t), d.available(id, t));
+            }
+        }
+        // With a flat probability the draw depends only on the 0.25 h
+        // slot: times inside one slot agree exactly.
+        let flat = diurnal(0.5, 0.5, 2.0);
+        for id in 0..20 {
+            for t in [0.0, 3.7, 11.1] {
+                assert_eq!(flat.available(id, t), flat.available(id, t + 0.01));
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_population_tracks_probability() {
+        let d = diurnal(0.05, 0.95, 0.0);
+        let frac_at = |t: f64| {
+            (0..1000).filter(|&id| d.available(id, t)).count() as f64 / 1000.0
+        };
+        let peak = frac_at(20.0);
+        let trough = frac_at(8.0);
+        assert!(peak > 0.8, "peak-hour presence {peak}");
+        assert!(trough < 0.2, "trough presence {trough}");
+    }
+
+    #[test]
+    fn trace_is_periodic_and_deterministic() {
+        let t = TraceAvailability::generate(5, 30, 24.0, 0.5, 0.6, 0.2);
+        assert_eq!(t.len(), 30);
+        for id in 0..30 {
+            for h in [0.0, 1.3, 13.7, 23.9] {
+                assert_eq!(t.available(id, h), t.available(id, h));
+                assert_eq!(t.available(id, h), t.available(id, h + 24.0), "periodic");
+            }
+        }
+        let t2 = TraceAvailability::generate(5, 30, 24.0, 0.5, 0.6, 0.2);
+        for id in 0..30 {
+            assert_eq!(t.available(id, 7.25), t2.available(id, 7.25));
+        }
+    }
+
+    #[test]
+    fn trace_duty_cycle_holds_on_average() {
+        let t = TraceAvailability::generate(11, 200, 24.0, 0.5, 0.6, 0.15);
+        let mut on = 0usize;
+        let mut total = 0usize;
+        for id in 0..200 {
+            for slot in 0..48 {
+                total += 1;
+                if t.available(id, slot as f64 * 0.5) {
+                    on += 1;
+                }
+            }
+        }
+        let frac = on as f64 / total as f64;
+        assert!((frac - 0.6).abs() < 0.08, "duty cycle drifted: {frac}");
+    }
+}

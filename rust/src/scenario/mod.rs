@@ -1,0 +1,792 @@
+//! Scenario subsystem — declarative, seed-deterministic environment
+//! models plugged into the RoundEngine's phase seams.
+//!
+//! The paper evaluates EAFL in a *static* environment: every client is
+//! always reachable, links never change, and recharge is at most a
+//! cooldown. Related work makes the environment the variable (AutoFL's
+//! runtime variance, "Learn More by Using Less"'s hard energy budgets),
+//! so this module turns the environment into data:
+//!
+//!  - [`AvailabilityModel`] — who is present when a round is planned
+//!    (consumed by `PlanPhase`): always-on, diurnal sine-wave presence
+//!    with per-client phase offsets, trace-driven on/off churn;
+//!  - [`NetworkModel`] — how link profiles evolve over simulated time
+//!    (consumed by `SimPhase`): static, degraded-tail, congestion
+//!    windows;
+//!  - recharge policies keyed to the simulated wall clock ([`recharge`]):
+//!    overnight charging windows, piecewise-linear solar traces —
+//!    implementing the accounting module's `RechargePolicy`;
+//!  - [`Scenario`] — a named bundle of all three plus device overrides,
+//!    loadable from TOML (`util::toml`) with built-in presets
+//!    ([`Scenario::preset`]): `steady`, `diurnal`, `commuter`,
+//!    `solar-edge`.
+//!
+//! Every model is a pure function of (seed, client, simulated time) —
+//! no RNG state advances during a run — so scenarios preserve the
+//! engine's worker-count invariance: seeded campaigns are byte-identical
+//! at any `EAFL_WORKERS` / job count.
+
+mod availability;
+mod network;
+pub mod recharge;
+
+pub use availability::{AlwaysOn, AvailabilityModel, DiurnalAvailability, TraceAvailability};
+pub use network::{in_daily_window, CongestionWindow, DegradedTail, NetworkModel, StaticNetwork};
+pub use recharge::{daily_window_overlap_h, OvernightRecharge, SolarRecharge};
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::{DeviceConfig, ExperimentConfig};
+use crate::coordinator::{recharge_policy_from, NoRecharge, RechargePolicy};
+use crate::util::toml::{TomlDoc, TomlWriter};
+
+/// Stateless hash → uniform f64 in [0, 1): the scenario models' source
+/// of per-(client, time-slot) randomness. splitmix64-style finalizer so
+/// nearby inputs give uncorrelated outputs.
+pub(crate) fn hash01(seed: u64, a: u64, b: u64) -> f64 {
+    let mut x = seed
+        .wrapping_add(a.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add(b.wrapping_mul(0xD1B5_4A32_D192_ED03));
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Declarative availability-model choice.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AvailabilitySpec {
+    AlwaysOn,
+    Diurnal {
+        peak_hour: f64,
+        min_available: f64,
+        max_available: f64,
+        phase_jitter_h: f64,
+    },
+    Trace {
+        period_h: f64,
+        slot_h: f64,
+        duty_cycle: f64,
+        churn: f64,
+    },
+}
+
+/// Declarative network-model choice.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetworkSpec {
+    Static,
+    DegradedTail { fraction: f64, factor: f64 },
+    Congestion { start_hour: f64, end_hour: f64, factor: f64 },
+}
+
+/// Declarative recharge-policy choice.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RechargeSpec {
+    /// Defer to the device config (cooldown model, or none) — what the
+    /// seed system always did.
+    FromConfig,
+    /// Dead devices never return regardless of config.
+    None,
+    Overnight {
+        start_hour: f64,
+        end_hour: f64,
+        rate_frac_per_h: f64,
+    },
+    Solar {
+        /// (hour_of_day, frac_per_h) points, sorted by hour.
+        trace: Vec<(f64, f64)>,
+    },
+}
+
+/// Optional device-config overrides a scenario carries (e.g. an edge
+/// deployment with heavier background drain).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DeviceOverrides {
+    pub idle_drain_per_hour: Option<f64>,
+    pub busy_drain_per_hour: Option<f64>,
+    pub busy_probability: Option<f64>,
+    pub min_init_battery: Option<f64>,
+    pub max_init_battery: Option<f64>,
+}
+
+/// A named environment: availability + network + recharge + overrides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub description: String,
+    pub availability: AvailabilitySpec,
+    pub network: NetworkSpec,
+    pub recharge: RechargeSpec,
+    pub overrides: DeviceOverrides,
+}
+
+/// The built-in preset names, in listing order.
+pub const PRESET_NAMES: [&str; 4] = ["steady", "diurnal", "commuter", "solar-edge"];
+
+impl Scenario {
+    /// Look up a built-in preset by name.
+    pub fn preset(name: &str) -> Option<Scenario> {
+        let base = |name: &str, description: &str| Scenario {
+            name: name.to_string(),
+            description: description.to_string(),
+            availability: AvailabilitySpec::AlwaysOn,
+            network: NetworkSpec::Static,
+            recharge: RechargeSpec::FromConfig,
+            overrides: DeviceOverrides::default(),
+        };
+        match name {
+            "steady" => Some(base(
+                "steady",
+                "always-on clients, static links, recharge from the device config \
+                 (the paper's baseline environment)",
+            )),
+            "diurnal" => {
+                let mut s = base(
+                    "diurnal",
+                    "sine-wave client presence peaking at 20:00 with per-client phase \
+                     offsets; links and recharge unchanged",
+                );
+                s.availability = AvailabilitySpec::Diurnal {
+                    peak_hour: 20.0,
+                    min_available: 0.15,
+                    max_available: 0.95,
+                    phase_jitter_h: 3.0,
+                };
+                Some(s)
+            }
+            "commuter" => {
+                let mut s = base(
+                    "commuter",
+                    "trace-driven on/off churn, evening congestion window (17-21h, 0.35x \
+                     bandwidth), overnight charging 22-6h",
+                );
+                s.availability = AvailabilitySpec::Trace {
+                    period_h: 24.0,
+                    slot_h: 0.5,
+                    duty_cycle: 0.6,
+                    churn: 0.15,
+                };
+                s.network = NetworkSpec::Congestion {
+                    start_hour: 17.0,
+                    end_hour: 21.0,
+                    factor: 0.35,
+                };
+                s.recharge = RechargeSpec::Overnight {
+                    start_hour: 22.0,
+                    end_hour: 6.0,
+                    rate_frac_per_h: 0.25,
+                };
+                Some(s)
+            }
+            "solar-edge" => {
+                let mut s = base(
+                    "solar-edge",
+                    "solar-harvesting edge fleet: 30% of clients on a 0.25x degraded \
+                     link tail, daylight piecewise-linear recharge, heavier background \
+                     drain",
+                );
+                s.network = NetworkSpec::DegradedTail { fraction: 0.3, factor: 0.25 };
+                s.recharge = RechargeSpec::Solar { trace: default_solar_trace() };
+                s.overrides.idle_drain_per_hour = Some(0.008);
+                s.overrides.busy_drain_per_hour = Some(0.05);
+                Some(s)
+            }
+            _ => None,
+        }
+    }
+
+    /// All built-in presets, in listing order.
+    pub fn presets() -> Vec<Scenario> {
+        PRESET_NAMES
+            .iter()
+            .map(|n| Self::preset(n).expect("preset table is consistent"))
+            .collect()
+    }
+
+    /// Resolve a `--scenario` argument: a preset name, a TOML file
+    /// path, or empty (⇒ `steady`).
+    pub fn resolve(arg: &str) -> Result<Scenario> {
+        let arg = arg.trim();
+        if arg.is_empty() {
+            return Ok(Self::preset("steady").expect("steady preset exists"));
+        }
+        if let Some(s) = Self::preset(arg) {
+            return Ok(s);
+        }
+        let path = Path::new(arg);
+        if path.exists() {
+            return Self::from_toml_file(path);
+        }
+        bail!(
+            "unknown scenario {arg:?}: not a preset ({}) and no such file",
+            PRESET_NAMES.join(", ")
+        )
+    }
+
+    pub fn from_toml_file(path: &Path) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario {path:?}"))?;
+        Self::from_toml(&text).with_context(|| format!("parsing scenario {path:?}"))
+    }
+
+    /// Parse from TOML text. Missing sections fall back to the `steady`
+    /// defaults, so a file holding just `[availability]` is valid.
+    pub fn from_toml(text: &str) -> Result<Scenario> {
+        let doc = TomlDoc::parse(text).context("parsing scenario TOML")?;
+        let mut s = Self::preset("steady").expect("steady preset exists");
+        s.name = doc.get_str("name").unwrap_or("custom").to_string();
+        s.description =
+            doc.get_str("description").unwrap_or("user-defined scenario").to_string();
+
+        if let Some(kind) = doc.get_str("availability.kind") {
+            s.availability = match kind {
+                "always-on" => AvailabilitySpec::AlwaysOn,
+                "diurnal" => AvailabilitySpec::Diurnal {
+                    peak_hour: doc.get_f64("availability.peak_hour").unwrap_or(20.0),
+                    min_available: doc
+                        .get_f64("availability.min_available")
+                        .unwrap_or(0.15),
+                    max_available: doc
+                        .get_f64("availability.max_available")
+                        .unwrap_or(0.95),
+                    phase_jitter_h: doc
+                        .get_f64("availability.phase_jitter_h")
+                        .unwrap_or(3.0),
+                },
+                "trace" => AvailabilitySpec::Trace {
+                    period_h: doc.get_f64("availability.period_h").unwrap_or(24.0),
+                    slot_h: doc.get_f64("availability.slot_h").unwrap_or(0.5),
+                    duty_cycle: doc.get_f64("availability.duty_cycle").unwrap_or(0.6),
+                    churn: doc.get_f64("availability.churn").unwrap_or(0.15),
+                },
+                other => {
+                    bail!("unknown availability.kind {other:?} (always-on|diurnal|trace)")
+                }
+            };
+        }
+
+        if let Some(kind) = doc.get_str("network.kind") {
+            s.network = match kind {
+                "static" => NetworkSpec::Static,
+                "degraded-tail" => NetworkSpec::DegradedTail {
+                    fraction: doc.get_f64("network.fraction").unwrap_or(0.3),
+                    factor: doc.get_f64("network.factor").unwrap_or(0.25),
+                },
+                "congestion" => NetworkSpec::Congestion {
+                    start_hour: doc.get_f64("network.start_hour").unwrap_or(17.0),
+                    end_hour: doc.get_f64("network.end_hour").unwrap_or(21.0),
+                    factor: doc.get_f64("network.factor").unwrap_or(0.35),
+                },
+                other => {
+                    bail!("unknown network.kind {other:?} (static|degraded-tail|congestion)")
+                }
+            };
+        }
+
+        if let Some(kind) = doc.get_str("recharge.kind") {
+            s.recharge = match kind {
+                "from-config" => RechargeSpec::FromConfig,
+                "none" => RechargeSpec::None,
+                "overnight" => RechargeSpec::Overnight {
+                    start_hour: doc.get_f64("recharge.start_hour").unwrap_or(22.0),
+                    end_hour: doc.get_f64("recharge.end_hour").unwrap_or(6.0),
+                    rate_frac_per_h: doc
+                        .get_f64("recharge.rate_frac_per_h")
+                        .unwrap_or(0.25),
+                },
+                "solar" => {
+                    let trace = match (
+                        doc.get_num_array("recharge.trace_hours"),
+                        doc.get_num_array("recharge.trace_rates"),
+                    ) {
+                        (Some(hours), Some(rates)) => {
+                            ensure!(
+                                hours.len() == rates.len() && !hours.is_empty(),
+                                "recharge.trace_hours and recharge.trace_rates must be \
+                                 equal-length and non-empty"
+                            );
+                            hours.iter().zip(rates).map(|(&h, &r)| (h, r)).collect()
+                        }
+                        (None, None) => default_solar_trace(),
+                        _ => bail!(
+                            "recharge.trace_hours and recharge.trace_rates must be \
+                             provided together (or both omitted for the default curve)"
+                        ),
+                    };
+                    RechargeSpec::Solar { trace }
+                }
+                other => {
+                    bail!("unknown recharge.kind {other:?} (from-config|none|overnight|solar)")
+                }
+            };
+        }
+
+        s.overrides = DeviceOverrides {
+            idle_drain_per_hour: doc.get_f64("overrides.idle_drain_per_hour"),
+            busy_drain_per_hour: doc.get_f64("overrides.busy_drain_per_hour"),
+            busy_probability: doc.get_f64("overrides.busy_probability"),
+            min_init_battery: doc.get_f64("overrides.min_init_battery"),
+            max_init_battery: doc.get_f64("overrides.max_init_battery"),
+        };
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Emit the scenario as TOML (templates for custom files; inverse
+    /// of [`Scenario::from_toml`]).
+    pub fn to_toml(&self) -> String {
+        let mut w = TomlWriter::new();
+        w.str("name", &self.name);
+        w.str("description", &self.description);
+
+        w.table("availability");
+        match &self.availability {
+            AvailabilitySpec::AlwaysOn => {
+                w.str("kind", "always-on");
+            }
+            AvailabilitySpec::Diurnal {
+                peak_hour,
+                min_available,
+                max_available,
+                phase_jitter_h,
+            } => {
+                w.str("kind", "diurnal");
+                w.num("peak_hour", *peak_hour)
+                    .num("min_available", *min_available)
+                    .num("max_available", *max_available)
+                    .num("phase_jitter_h", *phase_jitter_h);
+            }
+            AvailabilitySpec::Trace { period_h, slot_h, duty_cycle, churn } => {
+                w.str("kind", "trace");
+                w.num("period_h", *period_h)
+                    .num("slot_h", *slot_h)
+                    .num("duty_cycle", *duty_cycle)
+                    .num("churn", *churn);
+            }
+        }
+
+        w.table("network");
+        match &self.network {
+            NetworkSpec::Static => {
+                w.str("kind", "static");
+            }
+            NetworkSpec::DegradedTail { fraction, factor } => {
+                w.str("kind", "degraded-tail");
+                w.num("fraction", *fraction).num("factor", *factor);
+            }
+            NetworkSpec::Congestion { start_hour, end_hour, factor } => {
+                w.str("kind", "congestion");
+                w.num("start_hour", *start_hour)
+                    .num("end_hour", *end_hour)
+                    .num("factor", *factor);
+            }
+        }
+
+        w.table("recharge");
+        match &self.recharge {
+            RechargeSpec::FromConfig => {
+                w.str("kind", "from-config");
+            }
+            RechargeSpec::None => {
+                w.str("kind", "none");
+            }
+            RechargeSpec::Overnight { start_hour, end_hour, rate_frac_per_h } => {
+                w.str("kind", "overnight");
+                w.num("start_hour", *start_hour)
+                    .num("end_hour", *end_hour)
+                    .num("rate_frac_per_h", *rate_frac_per_h);
+            }
+            RechargeSpec::Solar { trace } => {
+                w.str("kind", "solar");
+                let hours: Vec<f64> = trace.iter().map(|(h, _)| *h).collect();
+                let rates: Vec<f64> = trace.iter().map(|(_, r)| *r).collect();
+                w.num_array("trace_hours", &hours).num_array("trace_rates", &rates);
+            }
+        }
+
+        w.table("overrides");
+        let o = &self.overrides;
+        if let Some(v) = o.idle_drain_per_hour {
+            w.num("idle_drain_per_hour", v);
+        }
+        if let Some(v) = o.busy_drain_per_hour {
+            w.num("busy_drain_per_hour", v);
+        }
+        if let Some(v) = o.busy_probability {
+            w.num("busy_probability", v);
+        }
+        if let Some(v) = o.min_init_battery {
+            w.num("min_init_battery", v);
+        }
+        if let Some(v) = o.max_init_battery {
+            w.num("max_init_battery", v);
+        }
+        w.finish()
+    }
+
+    /// Range checks; called after parsing and before building an env.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.name.trim().is_empty(), "scenario name must not be empty");
+        match &self.availability {
+            AvailabilitySpec::AlwaysOn => {}
+            AvailabilitySpec::Diurnal {
+                min_available, max_available, phase_jitter_h, ..
+            } => {
+                ensure!(
+                    (0.0..=1.0).contains(min_available)
+                        && (0.0..=1.0).contains(max_available)
+                        && min_available <= max_available,
+                    "diurnal availability needs 0 <= min_available <= max_available <= 1"
+                );
+                ensure!(*phase_jitter_h >= 0.0, "phase_jitter_h must be >= 0");
+            }
+            AvailabilitySpec::Trace { period_h, slot_h, duty_cycle, churn } => {
+                ensure!(
+                    *period_h > 0.0 && *slot_h > 0.0 && *slot_h <= *period_h,
+                    "trace availability needs 0 < slot_h <= period_h"
+                );
+                ensure!((0.0..=1.0).contains(duty_cycle), "duty_cycle must be in [0,1]");
+                ensure!((0.0..=1.0).contains(churn), "churn must be in [0,1]");
+            }
+        }
+        // Daily windows interpret hours of day and wrap midnight via
+        // start > end; an hour like 30 would be silently clipped at 24
+        // instead, so reject it (encode 22:00→06:00 as start 22, end 6).
+        let check_window = |what: &str, start: f64, end: f64| -> Result<()> {
+            ensure!(
+                (0.0..24.0).contains(&start) && (0.0..24.0).contains(&end),
+                "{what} start_hour/end_hour must be in [0, 24) \
+                 (a window crossing midnight uses start > end)"
+            );
+            Ok(())
+        };
+        match &self.network {
+            NetworkSpec::Static => {}
+            NetworkSpec::DegradedTail { fraction, factor } => {
+                ensure!(
+                    (0.0..=1.0).contains(fraction),
+                    "degraded-tail fraction must be in [0,1]"
+                );
+                ensure!(*factor > 0.0, "degraded-tail factor must be > 0");
+            }
+            NetworkSpec::Congestion { start_hour, end_hour, factor } => {
+                check_window("congestion", *start_hour, *end_hour)?;
+                ensure!(*factor > 0.0, "congestion factor must be > 0");
+            }
+        }
+        match &self.recharge {
+            RechargeSpec::Overnight { start_hour, end_hour, rate_frac_per_h } => {
+                check_window("overnight", *start_hour, *end_hour)?;
+                ensure!(*rate_frac_per_h >= 0.0, "overnight rate_frac_per_h must be >= 0");
+            }
+            RechargeSpec::Solar { trace } => {
+                ensure!(!trace.is_empty(), "solar trace must not be empty");
+                ensure!(
+                    trace.windows(2).all(|w| w[0].0 <= w[1].0),
+                    "solar trace hours must be sorted ascending"
+                );
+                // rate_at interpolates within one day and wraps from the
+                // last point back to the first; an out-of-range hour
+                // would extrapolate with a negative parameter instead.
+                ensure!(
+                    trace.iter().all(|(h, _)| (0.0..24.0).contains(h)),
+                    "solar trace hours must be in [0, 24) (encode midnight as 0)"
+                );
+            }
+            _ => {}
+        }
+        let o = &self.overrides;
+        for (key, v) in [
+            ("idle_drain_per_hour", o.idle_drain_per_hour),
+            ("busy_drain_per_hour", o.busy_drain_per_hour),
+        ] {
+            if let Some(v) = v {
+                ensure!(v >= 0.0, "override {key} must be >= 0");
+            }
+        }
+        for (key, v) in [
+            ("busy_probability", o.busy_probability),
+            ("min_init_battery", o.min_init_battery),
+            ("max_init_battery", o.max_init_battery),
+        ] {
+            if let Some(v) = v {
+                ensure!((0.0..=1.0).contains(&v), "override {key} must be in [0,1]");
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply the scenario's device overrides onto an experiment config
+    /// (before `validate`, so the combined result is still checked).
+    pub fn apply_overrides(&self, cfg: &mut ExperimentConfig) {
+        let o = &self.overrides;
+        let d = &mut cfg.devices;
+        if let Some(v) = o.idle_drain_per_hour {
+            d.idle_drain_per_hour = v;
+        }
+        if let Some(v) = o.busy_drain_per_hour {
+            d.busy_drain_per_hour = v;
+        }
+        if let Some(v) = o.busy_probability {
+            d.busy_probability = v;
+        }
+        if let Some(v) = o.min_init_battery {
+            d.min_init_battery = v;
+        }
+        if let Some(v) = o.max_init_battery {
+            d.max_init_battery = v;
+        }
+    }
+
+    /// Instantiate the runtime models for one experiment. `seed` must
+    /// derive from the experiment seeds only (the coordinator's job),
+    /// `num_clients` sizes trace generation, and `dev` backs the
+    /// `FromConfig` recharge choice.
+    pub fn build_env(
+        &self,
+        seed: u64,
+        num_clients: usize,
+        dev: &DeviceConfig,
+    ) -> ScenarioEnv {
+        let availability: Box<dyn AvailabilityModel> = match &self.availability {
+            AvailabilitySpec::AlwaysOn => Box::new(AlwaysOn),
+            AvailabilitySpec::Diurnal {
+                peak_hour,
+                min_available,
+                max_available,
+                phase_jitter_h,
+            } => Box::new(DiurnalAvailability {
+                seed: seed ^ 0xA11A_B177,
+                peak_hour: *peak_hour,
+                min_available: *min_available,
+                max_available: *max_available,
+                phase_jitter_h: *phase_jitter_h,
+            }),
+            AvailabilitySpec::Trace { period_h, slot_h, duty_cycle, churn } => {
+                Box::new(TraceAvailability::generate(
+                    seed ^ 0x7124_CE00,
+                    num_clients,
+                    *period_h,
+                    *slot_h,
+                    *duty_cycle,
+                    *churn,
+                ))
+            }
+        };
+        let network: Box<dyn NetworkModel> = match &self.network {
+            NetworkSpec::Static => Box::new(StaticNetwork),
+            NetworkSpec::DegradedTail { fraction, factor } => Box::new(DegradedTail {
+                seed: seed ^ 0x0E77_0A1C,
+                fraction: *fraction,
+                factor: *factor,
+            }),
+            NetworkSpec::Congestion { start_hour, end_hour, factor } => {
+                Box::new(CongestionWindow {
+                    start_hour: *start_hour,
+                    end_hour: *end_hour,
+                    factor: *factor,
+                })
+            }
+        };
+        let recharge: Box<dyn RechargePolicy> = match &self.recharge {
+            RechargeSpec::FromConfig => recharge_policy_from(dev),
+            RechargeSpec::None => Box::new(NoRecharge),
+            RechargeSpec::Overnight { start_hour, end_hour, rate_frac_per_h } => {
+                Box::new(OvernightRecharge {
+                    start_hour: *start_hour,
+                    end_hour: *end_hour,
+                    rate_frac_per_h: *rate_frac_per_h,
+                })
+            }
+            RechargeSpec::Solar { trace } => {
+                Box::new(SolarRecharge { trace: trace.clone() })
+            }
+        };
+        ScenarioEnv { name: self.name.clone(), availability, network, recharge }
+    }
+}
+
+/// Default daylight curve for the `solar-edge` preset (fraction of
+/// battery capacity harvested per hour).
+fn default_solar_trace() -> Vec<(f64, f64)> {
+    vec![(0.0, 0.0), (6.0, 0.0), (9.0, 0.12), (13.0, 0.3), (17.0, 0.12), (19.0, 0.0)]
+}
+
+/// A scenario instantiated for one experiment: the concrete models the
+/// engine consults every round.
+pub struct ScenarioEnv {
+    pub name: String,
+    pub availability: Box<dyn AvailabilityModel>,
+    pub network: Box<dyn NetworkModel>,
+    pub recharge: Box<dyn RechargePolicy>,
+}
+
+impl ScenarioEnv {
+    /// The baseline environment (always-on, static links, config
+    /// recharge) — what every pre-scenario experiment ran under.
+    pub fn steady(dev: &DeviceConfig) -> Self {
+        Scenario::preset("steady")
+            .expect("steady preset exists")
+            .build_env(0, 0, dev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SelectorKind;
+
+    #[test]
+    fn hash01_is_deterministic_and_bounded() {
+        for seed in [0u64, 1, u64::MAX] {
+            for a in 0..50u64 {
+                let v = hash01(seed, a, 7);
+                assert_eq!(v, hash01(seed, a, 7));
+                assert!((0.0..1.0).contains(&v), "hash01 out of range: {v}");
+            }
+        }
+        // Different inputs decorrelate.
+        assert_ne!(hash01(1, 2, 3), hash01(1, 2, 4));
+        assert_ne!(hash01(1, 2, 3), hash01(2, 2, 3));
+    }
+
+    #[test]
+    fn every_preset_resolves_and_validates() {
+        for name in PRESET_NAMES {
+            let s = Scenario::resolve(name).unwrap();
+            assert_eq!(s.name, name);
+            s.validate().unwrap();
+        }
+        assert_eq!(Scenario::presets().len(), PRESET_NAMES.len());
+        // Empty arg means steady.
+        assert_eq!(Scenario::resolve("").unwrap().name, "steady");
+        assert_eq!(Scenario::resolve("  ").unwrap().name, "steady");
+    }
+
+    #[test]
+    fn unknown_scenario_is_a_helpful_error() {
+        let err = Scenario::resolve("no-such-thing").unwrap_err().to_string();
+        assert!(err.contains("no-such-thing"));
+        assert!(err.contains("steady"), "error should list presets: {err}");
+    }
+
+    #[test]
+    fn presets_roundtrip_through_toml() {
+        for preset in Scenario::presets() {
+            let text = preset.to_toml();
+            let back = Scenario::from_toml(&text).unwrap();
+            assert_eq!(back, preset, "roundtrip broke preset {}", preset.name);
+        }
+    }
+
+    #[test]
+    fn partial_toml_defaults_to_steady_shape() {
+        let s = Scenario::from_toml("name = \"just-named\"\n").unwrap();
+        assert_eq!(s.availability, AvailabilitySpec::AlwaysOn);
+        assert_eq!(s.network, NetworkSpec::Static);
+        assert_eq!(s.recharge, RechargeSpec::FromConfig);
+
+        let s = Scenario::from_toml(
+            "[availability]\nkind = \"diurnal\"\nmin_available = 0\nmax_available = 0\n",
+        )
+        .unwrap();
+        match s.availability {
+            AvailabilitySpec::Diurnal { min_available, max_available, .. } => {
+                assert_eq!(min_available, 0.0);
+                assert_eq!(max_available, 0.0);
+            }
+            other => panic!("expected diurnal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_toml_is_rejected() {
+        assert!(Scenario::from_toml("[availability]\nkind = \"bogus\"\n").is_err());
+        assert!(Scenario::from_toml("[network]\nkind = \"bogus\"\n").is_err());
+        assert!(Scenario::from_toml("[recharge]\nkind = \"bogus\"\n").is_err());
+        // min > max availability.
+        assert!(Scenario::from_toml(
+            "[availability]\nkind = \"diurnal\"\nmin_available = 0.9\nmax_available = 0.1\n"
+        )
+        .is_err());
+        // Mismatched solar arrays.
+        assert!(Scenario::from_toml(
+            "[recharge]\nkind = \"solar\"\ntrace_hours = [1, 2]\ntrace_rates = [0.1]\n"
+        )
+        .is_err());
+        // One array without the other must not silently fall back to
+        // the default curve.
+        assert!(Scenario::from_toml(
+            "[recharge]\nkind = \"solar\"\ntrace_hours = [6, 12, 18]\n"
+        )
+        .is_err());
+        // Solar hours outside one day: rate_at wraps at 24, so a 28
+        // would interpolate with a negative parameter — rejected.
+        assert!(Scenario::from_toml(
+            "[recharge]\nkind = \"solar\"\ntrace_hours = [20, 28]\ntrace_rates = [0.1, 0.2]\n"
+        )
+        .is_err());
+        // Daily windows wrap via start > end; hours >= 24 would be
+        // silently clipped, so they are rejected too.
+        assert!(Scenario::from_toml(
+            "[recharge]\nkind = \"overnight\"\nstart_hour = 22\nend_hour = 30\n"
+        )
+        .is_err());
+        assert!(Scenario::from_toml(
+            "[network]\nkind = \"congestion\"\nstart_hour = 17\nend_hour = 25\n"
+        )
+        .is_err());
+        // The wrap encoding itself is fine.
+        assert!(Scenario::from_toml(
+            "[recharge]\nkind = \"overnight\"\nstart_hour = 22\nend_hour = 6\n"
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn overrides_apply_onto_config() {
+        let mut s = Scenario::preset("solar-edge").unwrap();
+        s.overrides.busy_probability = Some(0.7);
+        let mut cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+        s.apply_overrides(&mut cfg);
+        assert_eq!(cfg.devices.idle_drain_per_hour, 0.008);
+        assert_eq!(cfg.devices.busy_drain_per_hour, 0.05);
+        assert_eq!(cfg.devices.busy_probability, 0.7);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn build_env_matches_spec_choices() {
+        let dev = ExperimentConfig::smoke(SelectorKind::Eafl).devices;
+        let steady = Scenario::preset("steady").unwrap().build_env(1, 10, &dev);
+        assert_eq!(steady.availability.name(), "always-on");
+        assert_eq!(steady.network.name(), "static");
+        assert!(steady.network.is_static());
+
+        let commuter = Scenario::preset("commuter").unwrap().build_env(1, 10, &dev);
+        assert_eq!(commuter.availability.name(), "trace");
+        assert_eq!(commuter.network.name(), "congestion");
+        assert_eq!(commuter.recharge.name(), "overnight");
+
+        let solar = Scenario::preset("solar-edge").unwrap().build_env(1, 10, &dev);
+        assert_eq!(solar.network.name(), "degraded-tail");
+        assert_eq!(solar.recharge.name(), "solar");
+
+        // FromConfig honours the device knobs.
+        let mut dev2 = dev.clone();
+        dev2.recharge_after_hours = 2.0;
+        let env = Scenario::preset("steady").unwrap().build_env(1, 10, &dev2);
+        assert_eq!(env.recharge.name(), "cooldown");
+    }
+
+    #[test]
+    fn steady_env_admits_everyone() {
+        let dev = ExperimentConfig::smoke(SelectorKind::Eafl).devices;
+        let env = ScenarioEnv::steady(&dev);
+        for id in 0..100 {
+            assert!(env.availability.available(id, 3.7));
+        }
+    }
+}

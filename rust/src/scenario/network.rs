@@ -1,0 +1,194 @@
+//! Network-evolution models — how a client's [`LinkProfile`] looks at a
+//! given point in simulated time.
+//!
+//! [`SimPhase`](crate::coordinator::SimPhase) consults the scenario's
+//! network model when resolving a round: the *plan* (and therefore the
+//! selector's deadline) is built from the server's registered profiles,
+//! but the *simulated reality* uses the effective link — so degraded
+//! networks surface as extra stragglers and extra communication energy,
+//! exactly the failure mode a static simulator cannot show.
+//!
+//! Like the availability models, every implementation is a pure
+//! function of (seed, client, time).
+
+use crate::network::LinkProfile;
+
+use super::hash01;
+
+/// Evolves per-client link profiles over simulated time. Must be
+/// deterministic and side-effect free.
+pub trait NetworkModel: Send + Sync {
+    /// Effective link for client `id` at wall-clock `clock_h`, derived
+    /// from its registered `base` profile.
+    fn link_at(&self, id: usize, base: &LinkProfile, clock_h: f64) -> LinkProfile;
+
+    /// True when `link_at` is the identity — lets the sim phase reuse
+    /// the plan's timings without re-deriving them.
+    fn is_static(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Scale both directions of a link, flooring the factor so a
+/// misconfigured scenario cannot produce a zero-bandwidth link (the
+/// transfer-time math divides by it).
+fn scale_link(base: &LinkProfile, factor: f64) -> LinkProfile {
+    let f = factor.max(0.01);
+    LinkProfile {
+        medium: base.medium,
+        down_mbps: base.down_mbps * f,
+        up_mbps: base.up_mbps * f,
+    }
+}
+
+/// Hour-of-day containment for a daily window; `start > end` wraps
+/// midnight (e.g. 22→6).
+pub fn in_daily_window(hour_of_day: f64, start: f64, end: f64) -> bool {
+    if start <= end {
+        hour_of_day >= start && hour_of_day < end
+    } else {
+        hour_of_day >= start || hour_of_day < end
+    }
+}
+
+/// The seed environment: links never change.
+pub struct StaticNetwork;
+
+impl NetworkModel for StaticNetwork {
+    fn link_at(&self, _id: usize, base: &LinkProfile, _clock_h: f64) -> LinkProfile {
+        *base
+    }
+    fn is_static(&self) -> bool {
+        true
+    }
+    fn name(&self) -> &'static str {
+        "static"
+    }
+}
+
+/// A fixed, seed-deterministic fraction of clients runs on links far
+/// slower than their registered profile — the server's estimates are
+/// systematically optimistic for the degraded tail.
+pub struct DegradedTail {
+    pub seed: u64,
+    /// Fraction of the population in the degraded tail, [0, 1].
+    pub fraction: f64,
+    /// Bandwidth multiplier applied to degraded clients (e.g. 0.25).
+    pub factor: f64,
+}
+
+impl DegradedTail {
+    /// Whether `id` is in the degraded tail (stable over the whole run).
+    pub fn is_degraded(&self, id: usize) -> bool {
+        hash01(self.seed, id as u64, 0xDE_617AD) < self.fraction
+    }
+}
+
+impl NetworkModel for DegradedTail {
+    fn link_at(&self, id: usize, base: &LinkProfile, _clock_h: f64) -> LinkProfile {
+        if self.is_degraded(id) {
+            scale_link(base, self.factor)
+        } else {
+            *base
+        }
+    }
+    fn name(&self) -> &'static str {
+        "degraded-tail"
+    }
+}
+
+/// Everyone's bandwidth collapses during a daily congestion window
+/// (rush hour, evening streaming peak): a population-wide, wall-clock
+/// keyed effect rather than a per-client one.
+pub struct CongestionWindow {
+    /// Daily window [start_hour, end_hour) in hours of day; wraps
+    /// midnight when start > end.
+    pub start_hour: f64,
+    pub end_hour: f64,
+    /// Bandwidth multiplier inside the window.
+    pub factor: f64,
+}
+
+impl NetworkModel for CongestionWindow {
+    fn link_at(&self, _id: usize, base: &LinkProfile, clock_h: f64) -> LinkProfile {
+        if in_daily_window(clock_h.rem_euclid(24.0), self.start_hour, self.end_hour) {
+            scale_link(base, self.factor)
+        } else {
+            *base
+        }
+    }
+    fn name(&self) -> &'static str {
+        "congestion"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::Medium;
+
+    fn base() -> LinkProfile {
+        LinkProfile { medium: Medium::Wifi, down_mbps: 20.0, up_mbps: 8.0 }
+    }
+
+    #[test]
+    fn static_network_is_identity() {
+        let l = StaticNetwork.link_at(3, &base(), 17.5);
+        assert_eq!(l.down_mbps, 20.0);
+        assert_eq!(l.up_mbps, 8.0);
+        assert!(StaticNetwork.is_static());
+    }
+
+    #[test]
+    fn degraded_tail_hits_roughly_the_configured_fraction() {
+        let m = DegradedTail { seed: 3, fraction: 0.5, factor: 0.25 };
+        let degraded = (0..1000).filter(|&id| m.is_degraded(id)).count();
+        assert!((350..=650).contains(&degraded), "got {degraded}/1000");
+        // Stable per client, applied to both directions.
+        for id in 0..50 {
+            let l = m.link_at(id, &base(), 0.0);
+            let l2 = m.link_at(id, &base(), 999.0);
+            assert_eq!(l.down_mbps, l2.down_mbps, "tail membership is time-invariant");
+            if m.is_degraded(id) {
+                assert!((l.down_mbps - 5.0).abs() < 1e-12);
+                assert!((l.up_mbps - 2.0).abs() < 1e-12);
+            } else {
+                assert_eq!(l.down_mbps, 20.0);
+            }
+        }
+    }
+
+    #[test]
+    fn degraded_fraction_extremes() {
+        let none = DegradedTail { seed: 1, fraction: 0.0, factor: 0.1 };
+        let all = DegradedTail { seed: 1, fraction: 1.0, factor: 0.1 };
+        assert!((0..200).all(|id| !none.is_degraded(id)));
+        assert!((0..200).all(|id| all.is_degraded(id)));
+    }
+
+    #[test]
+    fn congestion_window_keys_on_hour_of_day() {
+        let m = CongestionWindow { start_hour: 17.0, end_hour: 21.0, factor: 0.5 };
+        assert_eq!(m.link_at(0, &base(), 18.0).down_mbps, 10.0);
+        assert_eq!(m.link_at(0, &base(), 18.0 + 48.0).down_mbps, 10.0, "daily repeat");
+        assert_eq!(m.link_at(0, &base(), 10.0).down_mbps, 20.0);
+        assert_eq!(m.link_at(0, &base(), 21.0).down_mbps, 20.0, "end exclusive");
+    }
+
+    #[test]
+    fn midnight_wrapping_window() {
+        assert!(in_daily_window(23.0, 22.0, 6.0));
+        assert!(in_daily_window(2.0, 22.0, 6.0));
+        assert!(!in_daily_window(12.0, 22.0, 6.0));
+        assert!(in_daily_window(22.0, 22.0, 6.0));
+        assert!(!in_daily_window(6.0, 22.0, 6.0));
+    }
+
+    #[test]
+    fn scale_floors_pathological_factors() {
+        let l = scale_link(&base(), 0.0);
+        assert!(l.down_mbps > 0.0 && l.up_mbps > 0.0);
+    }
+}

@@ -1,0 +1,244 @@
+//! Scenario recharge policies — wall-clock-keyed alternatives to the
+//! config's cooldown model (ROADMAP "Scenario phases": overnight
+//! charging windows, solar traces).
+//!
+//! Both implement [`RechargePolicy`] from the accounting module and are
+//! applied once per round with the round's wall-clock window, charging
+//! *every* device (alive ones top up, dead ones revive once they have
+//! charge again) — recharge is a property of the environment, not of
+//! the death state.
+
+use crate::coordinator::{RechargePolicy, Registry};
+
+/// Overlap (hours) of the span `[a, b)` with the daily wall-clock
+/// window `[start, end)`, summed over every day the span touches;
+/// `start > end` wraps midnight (22→6).
+pub fn daily_window_overlap_h(a: f64, b: f64, start: f64, end: f64) -> f64 {
+    if b <= a {
+        return 0.0;
+    }
+    // Normalize the daily window into segments within [0, 24).
+    let segments: [(f64, f64); 2] = if start <= end {
+        [(start, end), (0.0, 0.0)]
+    } else {
+        [(start, 24.0), (0.0, end)]
+    };
+    let mut total = 0.0;
+    let mut day = (a / 24.0).floor();
+    while day * 24.0 < b {
+        for &(s, e) in &segments {
+            let lo = (day * 24.0 + s).max(a);
+            let hi = (day * 24.0 + e).min(b);
+            if hi > lo {
+                total += hi - lo;
+            }
+        }
+        day += 1.0;
+    }
+    total
+}
+
+/// Devices plugged in during a nightly charging window: every device
+/// gains `rate_frac_per_h` of its own capacity per hour of overlap
+/// between the round's span and the window.
+pub struct OvernightRecharge {
+    /// Daily charging window in hours of day; wraps midnight.
+    pub start_hour: f64,
+    pub end_hour: f64,
+    /// Charge rate as battery-fraction per hour (0.25 ⇒ empty→full in 4 h).
+    pub rate_frac_per_h: f64,
+}
+
+impl RechargePolicy for OvernightRecharge {
+    fn apply(&self, registry: &mut Registry, start_clock_h: f64, end_clock_h: f64) {
+        let overlap =
+            daily_window_overlap_h(start_clock_h, end_clock_h, self.start_hour, self.end_hour);
+        if overlap <= 0.0 || self.rate_frac_per_h <= 0.0 {
+            return;
+        }
+        for c in &mut registry.clients {
+            let joules = c.battery.capacity_joules() * self.rate_frac_per_h * overlap;
+            c.battery.charge_add(joules);
+        }
+    }
+    fn can_revive(&self) -> bool {
+        self.rate_frac_per_h > 0.0
+    }
+    fn name(&self) -> &'static str {
+        "overnight"
+    }
+}
+
+/// Solar harvesting: a piecewise-linear daily trace of charge rate
+/// (battery-fraction per hour) sampled at the round's midpoint — the
+/// edge-deployment story where devices live or die by daylight.
+pub struct SolarRecharge {
+    /// `(hour_of_day, frac_per_h)` points sorted by hour; the curve is
+    /// linear between points and wraps from the last point back to the
+    /// first (24 h later).
+    pub trace: Vec<(f64, f64)>,
+}
+
+impl SolarRecharge {
+    /// Interpolated charge rate (fraction/hour) at an hour of day.
+    pub fn rate_at(&self, hour_of_day: f64) -> f64 {
+        let t = &self.trace;
+        if t.is_empty() {
+            return 0.0;
+        }
+        if t.len() == 1 {
+            return t[0].1.max(0.0);
+        }
+        let h = hour_of_day.rem_euclid(24.0);
+        for w in t.windows(2) {
+            let (h0, r0) = w[0];
+            let (h1, r1) = w[1];
+            if h >= h0 && h <= h1 && h1 > h0 {
+                return (r0 + (r1 - r0) * (h - h0) / (h1 - h0)).max(0.0);
+            }
+        }
+        // Wrap-around segment: last point → first point + 24 h.
+        let (hl, rl) = *t.last().unwrap();
+        let (hf, rf) = t[0];
+        let span = hf + 24.0 - hl;
+        if span <= 0.0 {
+            return rl.max(0.0);
+        }
+        let x = if h >= hl { h - hl } else { h + 24.0 - hl };
+        (rl + (rf - rl) * x / span).max(0.0)
+    }
+}
+
+impl RechargePolicy for SolarRecharge {
+    fn apply(&self, registry: &mut Registry, start_clock_h: f64, end_clock_h: f64) {
+        let hours = (end_clock_h - start_clock_h).max(0.0);
+        if hours <= 0.0 {
+            return;
+        }
+        // Rounds are short relative to the solar curve, so the midpoint
+        // rate is an adequate quadrature.
+        let rate = self.rate_at((start_clock_h + end_clock_h) * 0.5);
+        if rate <= 0.0 {
+            return;
+        }
+        for c in &mut registry.clients {
+            let joules = c.battery.capacity_joules() * rate * hours;
+            c.battery.charge_add(joules);
+        }
+    }
+    fn can_revive(&self) -> bool {
+        self.trace.iter().any(|(_, r)| *r > 0.0)
+    }
+    fn name(&self) -> &'static str {
+        "solar"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, SelectorKind};
+
+    fn registry() -> Registry {
+        let cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+        Registry::build(&cfg, 35, 1000)
+    }
+
+    #[test]
+    fn window_overlap_math() {
+        // Full day against a wrapped 22→6 window: 8 hours.
+        assert!((daily_window_overlap_h(0.0, 24.0, 22.0, 6.0) - 8.0).abs() < 1e-9);
+        // 23:00→01:00 next day: one hour each side of midnight.
+        assert!((daily_window_overlap_h(23.0, 25.0, 22.0, 6.0) - 2.0).abs() < 1e-9);
+        // Entirely inside the early-morning half.
+        assert!((daily_window_overlap_h(2.0, 4.0, 22.0, 6.0) - 2.0).abs() < 1e-9);
+        // Entirely outside.
+        assert_eq!(daily_window_overlap_h(7.0, 8.0, 22.0, 6.0), 0.0);
+        // Non-wrapping window.
+        assert!((daily_window_overlap_h(8.0, 20.0, 9.0, 17.0) - 8.0).abs() < 1e-9);
+        // Degenerate span.
+        assert_eq!(daily_window_overlap_h(5.0, 5.0, 22.0, 6.0), 0.0);
+        // Multi-day span accumulates every night.
+        assert!((daily_window_overlap_h(0.0, 72.0, 22.0, 6.0) - 24.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overnight_charges_inside_window_only() {
+        let policy =
+            OvernightRecharge { start_hour: 22.0, end_hour: 6.0, rate_frac_per_h: 0.25 };
+        let mut r = registry();
+        // Kill client 0 outright.
+        let cap = r.clients[0].battery.capacity_joules();
+        r.clients[0].battery.drain_fl(cap * 2.0, 9.0);
+        assert!(!r.clients[0].battery.is_alive());
+
+        // Daytime round: nothing happens.
+        policy.apply(&mut r, 10.0, 11.0);
+        assert!(!r.clients[0].battery.is_alive());
+
+        // One full hour inside the window: +0.25 of capacity, revived.
+        policy.apply(&mut r, 22.0, 23.0);
+        assert!(r.clients[0].battery.is_alive());
+        assert!((r.clients[0].battery.fraction() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overnight_tops_up_alive_clients_and_caps_at_capacity() {
+        let policy =
+            OvernightRecharge { start_hour: 22.0, end_hour: 6.0, rate_frac_per_h: 1.0 };
+        let mut r = registry();
+        policy.apply(&mut r, 22.0, 30.0); // 8 h at 1.0/h ≫ capacity
+        for c in &r.clients {
+            assert!((c.battery.fraction() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn solar_rate_interpolates_and_wraps() {
+        let s = SolarRecharge {
+            trace: vec![
+                (0.0, 0.0),
+                (6.0, 0.0),
+                (9.0, 0.12),
+                (13.0, 0.3),
+                (17.0, 0.12),
+                (19.0, 0.0),
+            ],
+        };
+        assert!((s.rate_at(13.0) - 0.3).abs() < 1e-12);
+        assert!((s.rate_at(11.0) - 0.21).abs() < 1e-12, "midpoint of 9→13 segment");
+        assert_eq!(s.rate_at(21.0), 0.0, "wrap segment 19→24 stays at 0");
+        assert_eq!(s.rate_at(3.0), 0.0);
+        assert!((s.rate_at(13.0 + 24.0) - 0.3).abs() < 1e-12, "24 h periodic");
+    }
+
+    #[test]
+    fn revival_capability_tracks_rates() {
+        let on = OvernightRecharge { start_hour: 22.0, end_hour: 6.0, rate_frac_per_h: 0.25 };
+        let off = OvernightRecharge { start_hour: 22.0, end_hour: 6.0, rate_frac_per_h: 0.0 };
+        assert!(on.can_revive());
+        assert!(!off.can_revive());
+        let sun = SolarRecharge { trace: vec![(6.0, 0.0), (12.0, 0.4)] };
+        let dark = SolarRecharge { trace: vec![(6.0, 0.0), (12.0, 0.0)] };
+        assert!(sun.can_revive());
+        assert!(!dark.can_revive());
+    }
+
+    #[test]
+    fn solar_charges_at_noon_not_midnight() {
+        let s = SolarRecharge { trace: vec![(6.0, 0.0), (12.0, 0.4), (18.0, 0.0)] };
+        let mut r = registry();
+        let before: Vec<f64> =
+            r.clients.iter().map(|c| c.battery.charge_joules()).collect();
+        s.apply(&mut r, 23.9, 24.1); // midnight: rate 0
+        for (c, b) in r.clients.iter().zip(&before) {
+            assert_eq!(c.battery.charge_joules(), *b);
+        }
+        // Drain someone below full so the noon charge is observable.
+        let cap = r.clients[1].battery.capacity_joules();
+        r.clients[1].battery.drain_fl(cap * 0.5, 0.0);
+        let drained = r.clients[1].battery.charge_joules();
+        s.apply(&mut r, 11.5, 12.5); // solar noon
+        assert!(r.clients[1].battery.charge_joules() > drained);
+    }
+}

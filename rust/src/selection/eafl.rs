@@ -136,9 +136,9 @@ impl Selector for EaflSelector {
         self.oort.feedback(fb);
     }
 
-    fn deadline_s(&self, candidates: &[Candidate]) -> f64 {
-        // Same pacer as Oort (Fig. 4b: EAFL and Oort round durations
-        // are nearly identical early on).
+    fn deadline_s(&mut self, candidates: &[Candidate]) -> f64 {
+        // Same pacer (and scratch buffer) as Oort (Fig. 4b: EAFL and
+        // Oort round durations are nearly identical early on).
         self.oort.deadline_s(candidates)
     }
 

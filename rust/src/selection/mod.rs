@@ -85,8 +85,12 @@ pub trait Selector: Send {
 
     /// The straggler deadline T (seconds) this selector wants for the
     /// upcoming round, given candidate timing estimates. Also the T in
-    /// Oort's Eq. (2) system penalty.
-    fn deadline_s(&self, candidates: &[Candidate]) -> f64;
+    /// Oort's Eq. (2) system penalty. Takes `&mut self` so
+    /// implementations can reuse an internal scratch buffer for the
+    /// percentile computation instead of allocating a durations Vec per
+    /// call (measurable at 100k-client populations — see
+    /// `benches/selection_micro.rs`).
+    fn deadline_s(&mut self, candidates: &[Candidate]) -> f64;
 
     fn name(&self) -> &'static str;
 }

@@ -32,11 +32,15 @@ pub struct OortSelector {
     pacer_relax_s: f64,
     /// Sum of selected-client utilities in recent rounds (pacer signal).
     recent_utils: Vec<f64>,
+    /// Reusable percentile buffer: `deadline_s` and the utility-scale
+    /// computation run once per round over the whole candidate pool, so
+    /// a per-call Vec allocation is pure waste at 100k clients.
+    scratch: Vec<f64>,
 }
 
 impl OortSelector {
     pub fn new(cfg: SelectorConfig) -> Self {
-        Self { cfg, pacer_relax_s: 0.0, recent_utils: Vec::new() }
+        Self { cfg, pacer_relax_s: 0.0, recent_utils: Vec::new(), scratch: Vec::new() }
     }
 
     /// Current exploration fraction ε for `round` (1-based).
@@ -109,9 +113,9 @@ impl Selector for OortSelector {
         // Exploitation: weighted draw from the top utility band.
         let k_exploit = k - selected.len();
         if k_exploit > 0 && !explored.is_empty() {
-            let mut utils: Vec<f64> =
-                explored.iter().map(|c| c.stat_util.unwrap_or(0.0)).collect();
-            let util_scale = percentile_in_place(&mut utils, 0.95).max(1e-9);
+            self.scratch.clear();
+            self.scratch.extend(explored.iter().map(|c| c.stat_util.unwrap_or(0.0)));
+            let util_scale = percentile_in_place(&mut self.scratch, 0.95).max(1e-9);
             let mut scored: Vec<(usize, f64)> = explored
                 .iter()
                 .map(|c| (c.id, self.score(c, round, deadline, util_scale)))
@@ -160,12 +164,14 @@ impl Selector for OortSelector {
         }
     }
 
-    fn deadline_s(&self, candidates: &[Candidate]) -> f64 {
-        let mut durations: Vec<f64> = candidates
-            .iter()
-            .map(|c| c.measured_duration_s.unwrap_or(c.expected_duration_s))
-            .collect();
-        percentile_in_place(&mut durations, self.cfg.pacer_percentile).max(1.0)
+    fn deadline_s(&mut self, candidates: &[Candidate]) -> f64 {
+        self.scratch.clear();
+        self.scratch.extend(
+            candidates
+                .iter()
+                .map(|c| c.measured_duration_s.unwrap_or(c.expected_duration_s)),
+        );
+        percentile_in_place(&mut self.scratch, self.cfg.pacer_percentile).max(1.0)
             + self.pacer_relax_s
     }
 

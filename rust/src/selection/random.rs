@@ -11,11 +11,13 @@ use super::{percentile_in_place, Candidate, RoundFeedback, Selector};
 
 pub struct RandomSelector {
     cfg: SelectorConfig,
+    /// Reusable percentile buffer for `deadline_s` (no per-round Vec).
+    scratch: Vec<f64>,
 }
 
 impl RandomSelector {
     pub fn new(cfg: SelectorConfig) -> Self {
-        Self { cfg }
+        Self { cfg, scratch: Vec::new() }
     }
 }
 
@@ -35,13 +37,13 @@ impl Selector for RandomSelector {
 
     fn feedback(&mut self, _fb: &RoundFeedback<'_>) {}
 
-    fn deadline_s(&self, candidates: &[Candidate]) -> f64 {
+    fn deadline_s(&mut self, candidates: &[Candidate]) -> f64 {
         // Random has no pacer; it waits for (almost) everyone — the
         // paper's Fig. 4b shows its rounds are the longest. Deadline is
         // the slow tail of the expected-duration distribution.
-        let mut durations: Vec<f64> =
-            candidates.iter().map(|c| c.expected_duration_s).collect();
-        percentile_in_place(&mut durations, 0.95).max(self.cfg.pacer_step_s)
+        self.scratch.clear();
+        self.scratch.extend(candidates.iter().map(|c| c.expected_duration_s));
+        percentile_in_place(&mut self.scratch, 0.95).max(self.cfg.pacer_step_s)
     }
 
     fn name(&self) -> &'static str {
@@ -110,8 +112,11 @@ mod tests {
 
     #[test]
     fn deadline_covers_slow_tail() {
-        let s = RandomSelector::new(SelectorConfig::default());
+        let mut s = RandomSelector::new(SelectorConfig::default());
         let d = s.deadline_s(&cands(100));
         assert!(d >= 190.0, "95th percentile of 100..200 ≈ 195, got {d}");
+        // The scratch buffer makes repeated calls allocation-free and
+        // identical.
+        assert_eq!(s.deadline_s(&cands(100)), d);
     }
 }

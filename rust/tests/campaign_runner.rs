@@ -22,6 +22,7 @@ fn spec(jobs: usize) -> CampaignSpec {
     let mut spec = CampaignSpec::new("itest", tiny_base());
     spec.grid = CampaignGrid {
         selectors: vec![SelectorKind::Eafl, SelectorKind::Oort, SelectorKind::Random],
+        scenarios: Vec::new(),
         seeds: vec![1, 2, 3],
         f_values: Vec::new(),
         client_counts: Vec::new(),
@@ -98,9 +99,10 @@ fn merged_artifacts_land_on_disk() {
     let csv = std::fs::read_to_string(dir.join("itest.campaign.csv")).unwrap();
     assert_eq!(csv.lines().count(), 4);
 
-    // Per-run series files exist under the campaign's naming scheme.
+    // Per-run series files exist under the campaign's naming scheme
+    // (selector-scenario-clients-f-seed).
     for run in &report.runs {
-        let per_run = dir.join(format!("itest-{}-n16-f0.25-s5.csv", run.selector));
+        let per_run = dir.join(format!("itest-{}-steady-n16-f0.25-s5.csv", run.selector));
         assert!(per_run.exists(), "missing {per_run:?}");
     }
     std::fs::remove_dir_all(&dir).ok();

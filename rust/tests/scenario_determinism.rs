@@ -1,0 +1,241 @@
+//! Scenario subsystem acceptance: environment models must be
+//! seed-deterministic (byte-identical campaign reports at any worker /
+//! job count), must actually differentiate environments (diurnal ≠
+//! steady under the same seed), must never panic when availability
+//! empties a round, and must make partial campaigns resumable.
+
+use eafl::campaign::{run_campaign, CampaignGrid, CampaignSpec};
+use eafl::config::{ExperimentConfig, SelectorKind};
+use eafl::coordinator::Coordinator;
+use eafl::metrics::MetricsLog;
+use eafl::runtime::MockRuntime;
+
+fn tiny_base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+    cfg.federation.rounds = 6;
+    cfg.federation.num_clients = 16;
+    cfg.federation.participants_per_round = 4;
+    cfg.federation.eval_interval = 3;
+    cfg.data.min_samples = 5;
+    cfg.data.max_samples = 15;
+    cfg.data.test_samples = 256;
+    cfg
+}
+
+fn all_scenario_spec(workers_per_run: usize, jobs: usize) -> CampaignSpec {
+    let mut spec = CampaignSpec::new("scn", tiny_base());
+    spec.grid = CampaignGrid {
+        selectors: vec![SelectorKind::Random, SelectorKind::Eafl],
+        scenarios: vec![
+            "steady".into(),
+            "diurnal".into(),
+            "commuter".into(),
+            "solar-edge".into(),
+        ],
+        seeds: vec![1, 2],
+        f_values: Vec::new(),
+        client_counts: Vec::new(),
+    };
+    spec.jobs = jobs;
+    spec.workers_per_run = workers_per_run;
+    spec
+}
+
+/// Same seed + scenario name ⇒ byte-identical campaign report whether
+/// each experiment trains on 1 worker thread or 8, and whatever the
+/// campaign job count — scenarios must not break the engine's
+/// worker-count invariance.
+#[test]
+fn campaign_reports_byte_identical_across_worker_and_job_counts() {
+    let runtime = MockRuntime::default();
+    let a = run_campaign(&all_scenario_spec(1, 1), &runtime, None).unwrap();
+    let b = run_campaign(&all_scenario_spec(8, 4), &runtime, None).unwrap();
+    assert_eq!(a.runs.len(), 2 * 4 * 2, "selectors x scenarios x seeds");
+    assert_eq!(a.to_csv(), b.to_csv(), "scenario campaigns must be worker-invariant");
+    assert_eq!(a.to_json().to_string_pretty(), b.to_json().to_string_pretty());
+}
+
+fn battery_tight(scenario: &str, seed: u64) -> MetricsLog {
+    let runtime = MockRuntime::default();
+    let mut cfg = tiny_base();
+    cfg.name = format!("dd-{scenario}-{seed}");
+    cfg.scenario = scenario.to_string();
+    cfg.federation.rounds = 40;
+    cfg.federation.num_clients = 24;
+    cfg.federation.participants_per_round = 8;
+    cfg.devices.min_init_battery = 0.08;
+    cfg.devices.max_init_battery = 0.35;
+    cfg.devices.busy_drain_per_hour = 0.08;
+    cfg.data.seed = seed;
+    cfg.devices.seed = seed.wrapping_mul(31).wrapping_add(7);
+    Coordinator::new(cfg, &runtime).unwrap().run().unwrap()
+}
+
+/// The environment axis must have teeth: under the same seeds, the
+/// diurnal scenario produces a different trajectory — and a different
+/// drop-out count — than steady.
+#[test]
+fn diurnal_differs_from_steady_under_the_same_seed() {
+    let mut any_dropout_diff = false;
+    for seed in [1u64, 2, 3] {
+        let steady = battery_tight("steady", seed);
+        let diurnal = battery_tight("diurnal", seed);
+        assert_ne!(
+            steady.to_csv(),
+            diurnal.to_csv(),
+            "seed {seed}: availability gating must change the round series"
+        );
+        // And reruns of the same scenario reproduce exactly.
+        assert_eq!(steady.to_csv(), battery_tight("steady", seed).to_csv());
+        assert_eq!(diurnal.to_csv(), battery_tight("diurnal", seed).to_csv());
+        any_dropout_diff |=
+            steady.summary().total_dropouts != diurnal.summary().total_dropouts;
+    }
+    assert!(
+        any_dropout_diff,
+        "diurnal must change the drop-out count for at least one seed"
+    );
+}
+
+/// Edge case from the issue: a scenario whose availability admits
+/// nobody at round start. The engine must skip such rounds (selected =
+/// 0, not committed, clock still advances) — never panic.
+#[test]
+fn zero_eligible_round_is_skipped_not_a_panic() {
+    let dir = std::env::temp_dir().join(format!("eafl-blackout-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("blackout.toml");
+    std::fs::write(
+        &path,
+        "name = \"blackout\"\n\
+         [availability]\n\
+         kind = \"diurnal\"\n\
+         min_available = 0\n\
+         max_available = 0\n",
+    )
+    .unwrap();
+
+    let runtime = MockRuntime::default();
+    let mut cfg = tiny_base();
+    cfg.federation.rounds = 3;
+    cfg.scenario = path.to_string_lossy().to_string();
+    let log = Coordinator::new(cfg, &runtime).unwrap().run().unwrap();
+    assert_eq!(log.records.len(), 3, "rounds still elapse");
+    let mut last_wall = 0.0;
+    for r in &log.records {
+        assert_eq!(r.selected, 0, "nobody is available, nobody is selected");
+        assert_eq!(r.completed, 0);
+        assert!(!r.committed);
+        assert!(r.wall_clock_h > last_wall, "the clock must keep advancing");
+        last_wall = r.wall_clock_h;
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A reviving recharge policy must keep an all-dead fleet simulating:
+/// empty rounds elapse until the charging window arrives and brings
+/// devices back, instead of the server stopping the experiment early.
+#[test]
+fn reviving_policy_keeps_an_all_dead_fleet_running() {
+    let dir = std::env::temp_dir().join(format!("eafl-revive-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plugged-in.toml");
+    std::fs::write(
+        &path,
+        "name = \"plugged-in\"\n\
+         [recharge]\n\
+         kind = \"overnight\"\n\
+         start_hour = 1\n\
+         end_hour = 23\n\
+         rate_frac_per_h = 0.3\n",
+    )
+    .unwrap();
+
+    let runtime = MockRuntime::default();
+    let mut cfg = tiny_base();
+    cfg.scenario = path.to_string_lossy().to_string();
+    cfg.selector.kind = SelectorKind::Random;
+    cfg.selector.min_battery_frac = 0.0;
+    // Empty rounds advance by the 5-minute re-poll wait, so 60 rounds
+    // comfortably cover death (well before 1:00 sim time) plus the
+    // wait until the charging window opens.
+    cfg.federation.rounds = 60;
+    // Brutal background drain: the whole fleet dies within the first
+    // simulated hour, before the 1:00 charging window opens.
+    cfg.devices.min_init_battery = 0.02;
+    cfg.devices.max_init_battery = 0.04;
+    cfg.devices.busy_drain_per_hour = 5.0;
+    cfg.devices.busy_probability = 1.0;
+    let log = Coordinator::new(cfg, &runtime).unwrap().run().unwrap();
+
+    assert_eq!(log.records.len(), 60, "a reviving policy must not stop the run early");
+    assert!(
+        log.records.iter().any(|r| r.alive_fraction == 0.0),
+        "the fleet should have fully died before the window opened"
+    );
+    assert!(
+        log.records.last().unwrap().alive_fraction > 0.0,
+        "the charging window must have revived the fleet by the end"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Campaign resume: a partial campaign in the output directory is
+/// continued, not recomputed — completed grid cells are reloaded from
+/// their summaries and the final merged report is byte-identical to a
+/// from-scratch run of the full grid.
+#[test]
+fn resume_skips_completed_cells_and_reproduces_the_report() {
+    let dir = std::env::temp_dir().join(format!("eafl-resume-{}", std::process::id()));
+    let fresh_dir =
+        std::env::temp_dir().join(format!("eafl-resume-fresh-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&fresh_dir).ok();
+    let runtime = MockRuntime::default();
+
+    // First, a partial campaign: one seed only.
+    let mut partial = all_scenario_spec(1, 2);
+    partial.grid.scenarios = vec!["steady".into(), "diurnal".into()];
+    partial.grid.seeds = vec![1];
+    run_campaign(&partial, &runtime, Some(&dir)).unwrap();
+
+    // Now the full grid into the same directory: the seed-1 cells must
+    // be reloaded (their summary files already exist), the seed-2 cells
+    // computed fresh.
+    let mut full = partial.clone();
+    full.grid.seeds = vec![1, 2];
+    let resumed = run_campaign(&full, &runtime, Some(&dir)).unwrap();
+
+    // Reference: the same full grid in a clean directory.
+    let scratch = run_campaign(&full, &runtime, Some(&fresh_dir)).unwrap();
+    assert_eq!(resumed.to_csv(), scratch.to_csv(), "resume must not change results");
+    assert_eq!(
+        resumed.to_json().to_string_pretty(),
+        scratch.to_json().to_string_pretty()
+    );
+
+    // And a second rerun over the now-complete directory recomputes
+    // nothing at all (every cell cached) yet still writes the same
+    // merged report.
+    let rerun = run_campaign(&full, &runtime, Some(&dir)).unwrap();
+    assert_eq!(rerun.to_csv(), scratch.to_csv());
+
+    // --fresh semantics: resume off recomputes and still matches.
+    let mut fresh = full.clone();
+    fresh.resume = false;
+    let recomputed = run_campaign(&fresh, &runtime, Some(&dir)).unwrap();
+    assert_eq!(recomputed.to_csv(), scratch.to_csv());
+
+    // A different --rounds into the same directory must NOT reuse the
+    // old summaries: cell names match but the round count disagrees.
+    let mut shorter = full.clone();
+    shorter.base.federation.rounds = 4;
+    let short = run_campaign(&shorter, &runtime, Some(&dir)).unwrap();
+    assert!(
+        short.runs.iter().all(|r| r.summary.rounds == 4),
+        "stale summaries with a different round count were reused"
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&fresh_dir).ok();
+}
