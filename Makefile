@@ -10,6 +10,9 @@ build:
 test:
 	cargo test -q
 
+# Runs every bench; plan_path_throughput records the perf trajectory
+# into BENCH_plan.json at the repo root (eafl-bench-v1 schema, default
+# --out of that bench).
 bench:
 	cargo bench
 

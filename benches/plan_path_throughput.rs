@@ -1,0 +1,402 @@
+//! Non-training round-path throughput at deployment scale: one
+//! plan → select → record pass per iteration, fast path vs the
+//! pre-refactor baseline, at 10k / 100k / 1M clients under the steady
+//! and diurnal scenarios.
+//!
+//! The fast path is what the engine runs today: SoA pool filtered into
+//! a reused candidate arena, band-partition + Fenwick selection, O(1)
+//! metrics from the incremental aggregates. The baseline reproduces the
+//! pre-refactor behaviour — allocate + recompute every projection via
+//! `Registry::candidates`, full sort of the explored pool, O(k·N)
+//! linear weighted draws, and five O(N) scans for the metrics row — so
+//! the speedup is measured against the real old code path, not a straw
+//! man.
+//!
+//! Run: cargo bench --bench plan_path_throughput -- \
+//!        [--clients 10000,100000,1000000] [--scenarios steady,diurnal] \
+//!        [--out BENCH_plan.json] [--smoke]
+//!
+//! Always writes the `eafl-bench-v1` JSON document (results + derived
+//! per-size speedups) to `--out`; `make bench` targets the repo root's
+//! `BENCH_plan.json`.
+
+use eafl::benchkit::{bb, Bench};
+use eafl::config::{ExperimentConfig, SelectorConfig, SelectorKind};
+use eafl::coordinator::Registry;
+use eafl::metrics::{jain_index, jain_index_from_moments};
+use eafl::scenario::{Scenario, ScenarioEnv};
+use eafl::selection::utility::{
+    eafl_reward, min_max_normalize, oort_utility, power_term, staleness_bonus,
+};
+use eafl::selection::{make_selector, percentile, Candidate, Selector};
+use eafl::sim::ParticipantPlan;
+use eafl::util::rng::Rng;
+
+const K: usize = 10;
+const CLOCK_H: f64 = 12.0;
+
+struct Args {
+    clients: Vec<usize>,
+    scenarios: Vec<String>,
+    out: String,
+    smoke: bool,
+}
+
+fn parse_args() -> Args {
+    let mut args = Args {
+        clients: vec![10_000, 100_000, 1_000_000],
+        scenarios: vec!["steady".to_string(), "diurnal".to_string()],
+        out: "BENCH_plan.json".to_string(),
+        smoke: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(flag) = it.next() {
+        match flag.as_str() {
+            "--clients" => {
+                let v = it.next().expect("--clients needs a comma-separated list");
+                args.clients = v
+                    .split(',')
+                    .map(|s| s.trim().parse().expect("bad client count"))
+                    .collect();
+            }
+            "--scenarios" => {
+                let v = it.next().expect("--scenarios needs a comma-separated list");
+                args.scenarios = v.split(',').map(|s| s.trim().to_string()).collect();
+            }
+            "--out" => args.out = it.next().expect("--out needs a path"),
+            "--smoke" => args.smoke = true,
+            // cargo bench may forward its own flags (e.g. --bench);
+            // ignore anything we don't recognize.
+            _ => {}
+        }
+    }
+    args
+}
+
+/// Population with a realistic mix of explored/unexplored clients and
+/// tiny data shards (the plan path never touches samples).
+fn build_registry(n: usize) -> (ExperimentConfig, Registry) {
+    let mut cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+    cfg.federation.num_clients = n;
+    cfg.federation.participants_per_round = K;
+    cfg.data.min_samples = 1;
+    cfg.data.max_samples = 2;
+    cfg.data.test_samples = 16;
+    let mut registry = Registry::build(&cfg, 35, 1000);
+    let mut rng = Rng::seed_from_u64(99);
+    for id in 0..n {
+        if rng.gen_bool(0.7) {
+            let stat_util = Some(rng.gen_range_f64(1.0, 400.0));
+            let duration = Some(rng.gen_range_f64(60.0, 900.0));
+            let last = rng.gen_range_usize(0, 50) as u64;
+            let times = rng.gen_range_usize(0, 20) as u64;
+            let mut s = registry.stats_mut(id);
+            s.stat_util = stat_util;
+            s.measured_duration_s = duration;
+            s.last_selected_round = last;
+            s.times_selected = times;
+        }
+    }
+    (cfg, registry)
+}
+
+// ---------------------------------------------------------------------------
+// Baseline: the pre-refactor plan+select+record path, reproduced.
+// ---------------------------------------------------------------------------
+
+/// Pre-refactor EAFL selection: full sort of the explored pool plus
+/// O(k·N) linear weighted draws with per-pick total recomputation.
+fn baseline_select_eafl(
+    cfg: &SelectorConfig,
+    round: u64,
+    candidates: &[Candidate],
+    k: usize,
+    deadline: f64,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    if candidates.is_empty() || k == 0 {
+        return Vec::new();
+    }
+    let eps = (cfg.explore_init * cfg.explore_decay.powi(round.saturating_sub(1) as i32))
+        .max(cfg.min_explore);
+    let (unexplored, explored): (Vec<&Candidate>, Vec<&Candidate>) =
+        candidates.iter().partition(|c| c.stat_util.is_none());
+
+    fn linear_weighted_pick(
+        pool: &mut Vec<(usize, f64)>,
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        let mut picked = Vec::with_capacity(k);
+        while picked.len() < k && !pool.is_empty() {
+            let total: f64 = pool.iter().map(|(_, w)| w.max(1e-12)).sum();
+            let mut r = rng.gen_f64() * total;
+            let mut idx = pool.len() - 1;
+            for (i, (_, w)) in pool.iter().enumerate() {
+                r -= w.max(1e-12);
+                if r <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            picked.push(pool.swap_remove(idx).0);
+        }
+        picked
+    }
+
+    let k_explore =
+        ((eps * k as f64).round() as usize).min(unexplored.len()).min(k);
+    let mut pool: Vec<(usize, f64)> = unexplored
+        .iter()
+        .map(|c| (c.id, power_term(c.battery_frac, c.projected_drain_frac).max(1e-6)))
+        .collect();
+    let mut selected = linear_weighted_pick(&mut pool, k_explore, rng);
+
+    let k_exploit = k - selected.len();
+    if k_exploit > 0 && !explored.is_empty() {
+        let utils: Vec<f64> = explored
+            .iter()
+            .map(|c| {
+                let duration = c.measured_duration_s.unwrap_or(c.expected_duration_s);
+                oort_utility(c.stat_util.unwrap_or(0.0), deadline, duration, cfg.alpha)
+            })
+            .collect();
+        let normed = min_max_normalize(&utils);
+        let mut scored: Vec<(usize, f64)> = explored
+            .iter()
+            .zip(&normed)
+            .map(|(c, &u)| {
+                let power = power_term(c.battery_frac, c.projected_drain_frac);
+                let reward = eafl_reward(cfg.eafl_f, u, power)
+                    + staleness_bonus(round, c.last_selected_round, cfg.ucb_weight) * 0.25;
+                (c.id, reward.max(1e-9))
+            })
+            .collect();
+        scored.sort_by(|a, b| b.1.total_cmp(&a.1));
+        let band = ((k_exploit as f64) * 3.0).ceil() as usize;
+        scored.truncate(band.max(k_exploit));
+        selected.extend(linear_weighted_pick(&mut scored, k_exploit, rng));
+    } else if k_exploit > 0 {
+        let mut rest: Vec<usize> = unexplored
+            .iter()
+            .map(|c| c.id)
+            .filter(|id| !selected.contains(id))
+            .collect();
+        rng.shuffle(&mut rest);
+        selected.extend(rest.into_iter().take(k_exploit));
+    }
+    selected
+}
+
+/// Pre-refactor record pass: the ~5 full population scans the old
+/// RecordPhase performed (dead_count and alive_fraction each rescanned
+/// independently, mean-battery collected into a fresh Vec).
+fn baseline_record(registry: &Registry) -> (f64, usize, f64, f64, f64) {
+    let counts = registry.selection_counts();
+    let fairness = jain_index(&counts);
+    let dead = registry.len()
+        - registry.clients().iter().filter(|c| c.battery.is_alive()).count();
+    let alive = registry.clients().iter().filter(|c| c.battery.is_alive()).count();
+    let alive_batt: Vec<f64> = registry
+        .clients()
+        .iter()
+        .filter(|c| c.battery.is_alive())
+        .map(|c| c.battery.fraction())
+        .collect();
+    let mean_battery = if alive_batt.is_empty() {
+        0.0
+    } else {
+        alive_batt.iter().sum::<f64>() / alive_batt.len() as f64
+    };
+    let total_fl: f64 = registry.clients().iter().map(|c| c.battery.fl_energy_j).sum();
+    (fairness, dead, alive as f64 / registry.len().max(1) as f64, mean_battery, total_fl)
+}
+
+fn baseline_round(
+    cfg: &ExperimentConfig,
+    registry: &Registry,
+    env: &ScenarioEnv,
+    round: u64,
+    rng: &mut Rng,
+) -> usize {
+    let mut candidates = registry.candidates(
+        round,
+        cfg.selector.min_battery_frac,
+        cfg.training.local_steps,
+        cfg.data.batch_size,
+    );
+    candidates.retain(|c| env.availability.available(c.id, CLOCK_H));
+    // The old selector computed the deadline inside select() AND the
+    // old PlanPhase asked for it again afterwards — keep both passes.
+    let durations: Vec<f64> = candidates
+        .iter()
+        .map(|c| c.measured_duration_s.unwrap_or(c.expected_duration_s))
+        .collect();
+    let deadline = percentile(&durations, cfg.selector.pacer_percentile).max(1.0);
+    let selected =
+        baseline_select_eafl(&cfg.selector, round, &candidates, K, deadline, rng);
+    let durations2: Vec<f64> = candidates
+        .iter()
+        .map(|c| c.measured_duration_s.unwrap_or(c.expected_duration_s))
+        .collect();
+    bb(percentile(&durations2, cfg.selector.pacer_percentile).max(1.0));
+    let plans: Vec<ParticipantPlan> = selected
+        .iter()
+        .map(|&id| {
+            let c = registry.client(id);
+            let energy = c
+                .projected_energy(
+                    registry.payload_bytes(),
+                    cfg.training.local_steps,
+                    cfg.data.batch_size,
+                )
+                .total();
+            ParticipantPlan {
+                id,
+                download_s: c.link.download_secs(registry.payload_bytes()),
+                compute_s: c.compute_secs(cfg.training.local_steps, cfg.data.batch_size),
+                upload_s: c.link.upload_secs(registry.payload_bytes()),
+                round_energy_j: energy,
+                charge_j: c.battery.charge_joules(),
+            }
+        })
+        .collect();
+    let record = baseline_record(registry);
+    bb(&record);
+    bb(&plans);
+    selected.len()
+}
+
+// ---------------------------------------------------------------------------
+// Fast path: what the engine actually runs now.
+// ---------------------------------------------------------------------------
+
+fn fast_round(
+    cfg: &ExperimentConfig,
+    registry: &Registry,
+    env: &ScenarioEnv,
+    selector: &mut dyn Selector,
+    arena: &mut Vec<Candidate>,
+    round: u64,
+    rng: &mut Rng,
+) -> usize {
+    if env.availability.is_always_available() {
+        registry.fill_candidates(round, cfg.selector.min_battery_frac, |_| true, arena);
+    } else {
+        let availability = &env.availability;
+        registry.fill_candidates(
+            round,
+            cfg.selector.min_battery_frac,
+            |id| availability.available(id, CLOCK_H),
+            arena,
+        );
+    }
+    let (selected, deadline) = selector.plan(round, arena, K, rng);
+    bb(deadline);
+    let pool = registry.pool();
+    let plans: Vec<ParticipantPlan> = selected
+        .iter()
+        .map(|&id| ParticipantPlan {
+            id,
+            download_s: pool.download_s[id],
+            compute_s: pool.compute_s[id],
+            upload_s: pool.upload_s[id],
+            round_energy_j: pool.round_energy_j[id],
+            charge_j: pool.charge_j[id],
+        })
+        .collect();
+    let agg = registry.aggregates();
+    let record = (
+        jain_index_from_moments(registry.len(), agg.selected_sum, agg.selected_sum_sq),
+        registry.dead_count(),
+        registry.alive_count() as f64 / registry.len().max(1) as f64,
+        registry.mean_battery_alive(),
+        registry.total_fl_energy_j(),
+    );
+    bb(&record);
+    bb(&plans);
+    selected.len()
+}
+
+fn main() {
+    let args = parse_args();
+    let mut bench = if args.smoke { Bench::smoke() } else { Bench::new() };
+    // (label stems, fast mean, baseline mean) for the derived speedups.
+    let mut derived: Vec<(String, f64)> = Vec::new();
+
+    for &n in &args.clients {
+        let (cfg, registry) = build_registry(n);
+        println!("== population {n} built ==");
+        for scenario_name in &args.scenarios {
+            let scenario = Scenario::preset(scenario_name)
+                .unwrap_or_else(|| panic!("unknown preset {scenario_name}"));
+            let env = scenario.build_env(7, n, &cfg.devices);
+            let label = format!("N={n} {scenario_name}");
+
+            let mut selector = make_selector(&cfg.selector);
+            let mut arena: Vec<Candidate> = Vec::new();
+            let mut rng = Rng::seed_from_u64(11);
+            let mut round = 100u64; // past the ε-decay knee: exploit-heavy
+            let fast_name = format!("fast plan+select+record {label}");
+            let base_name = format!("baseline plan+select+record {label}");
+
+            // 1M rounds are seconds-long on the baseline; a single
+            // measured pass per variant is the honest budget there.
+            if n >= 1_000_000 && !args.smoke {
+                bench.run_once(&fast_name, || {
+                    round += 1;
+                    fast_round(
+                        &cfg,
+                        &registry,
+                        &env,
+                        selector.as_mut(),
+                        &mut arena,
+                        round,
+                        &mut rng,
+                    )
+                });
+                bench.run_once(&base_name, || {
+                    round += 1;
+                    baseline_round(&cfg, &registry, &env, round, &mut rng)
+                });
+            } else {
+                bench.run(&fast_name, || {
+                    round += 1;
+                    bb(fast_round(
+                        &cfg,
+                        &registry,
+                        &env,
+                        selector.as_mut(),
+                        &mut arena,
+                        round,
+                        &mut rng,
+                    ));
+                });
+                bench.run(&base_name, || {
+                    round += 1;
+                    bb(baseline_round(&cfg, &registry, &env, round, &mut rng));
+                });
+            }
+
+            let mean_of = |name: &str| {
+                bench
+                    .results()
+                    .iter()
+                    .find(|s| s.name == name)
+                    .map(|s| s.mean_ns)
+                    .unwrap_or(f64::NAN)
+            };
+            let speedup = mean_of(&base_name) / mean_of(&fast_name);
+            println!("--> {label}: speedup {speedup:.1}x");
+            derived.push((format!("speedup_{scenario_name}_{n}"), speedup));
+        }
+    }
+
+    let derived_refs: Vec<(&str, f64)> =
+        derived.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let path = std::path::Path::new(&args.out);
+    bench
+        .write_json("plan_path_throughput", &derived_refs, path)
+        .expect("writing bench JSON");
+    println!("wrote {}", path.display());
+}

@@ -6,7 +6,9 @@
 
 use eafl::benchkit::{bb, Bench};
 use eafl::config::{SelectorConfig, SelectorKind};
-use eafl::selection::{make_selector, percentile_in_place, Candidate};
+use eafl::selection::{
+    make_selector, percentile_in_place, weighted_sample_linear, Candidate, FenwickSampler,
+};
 use eafl::util::rng::Rng;
 
 fn candidates(n: usize) -> Vec<Candidate> {
@@ -60,6 +62,20 @@ fn main() {
         bench.run(&format!("percentile select_nth (in place) N={n}"), || {
             scratch.copy_from_slice(&durations);
             bb(percentile_in_place(bb(&mut scratch), 0.8));
+        });
+    }
+
+    // The selectors' shared weighted-draw primitive: Fenwick build +
+    // O(log n) draws vs the O(k·n) linear reference scan.
+    for n in [1_000usize, 100_000] {
+        let mut wrng = Rng::seed_from_u64(5);
+        let weights: Vec<f64> = (0..n).map(|_| wrng.gen_range_f64(0.01, 10.0)).collect();
+        bench.run(&format!("weighted draw k=10 linear N={n}"), || {
+            bb(weighted_sample_linear(bb(&weights), 10, &mut Rng::seed_from_u64(1)));
+        });
+        bench.run(&format!("weighted draw k=10 fenwick N={n}"), || {
+            let mut sampler = FenwickSampler::new(bb(&weights));
+            bb(sampler.sample_distinct(10, &mut Rng::seed_from_u64(1)));
         });
     }
 

@@ -18,6 +18,10 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+# Benches must always compile, even though CI never runs the heavy ones.
+echo "==> cargo bench --no-run"
+cargo bench --no-run
+
 # Scenario sweep smoke: 2 rounds over two scenarios x two selectors on
 # the mock runtime must produce a merged CSV with a scenario column and
 # exactly header + 4 rows (2 selectors x 2 scenarios x 1 seed).
@@ -34,6 +38,24 @@ rows="$(wc -l < "$SMOKE_CSV")"
 [ "$rows" -eq 5 ] \
   || { echo "FAIL: expected 5 CSV lines (header + 4 runs), got $rows"; exit 1; }
 echo "    sweep smoke OK ($rows lines in $(basename "$SMOKE_CSV"))"
+
+# Plan-path bench smoke: a 10k-client pass must run and emit a
+# machine-readable eafl-bench-v1 JSON with the expected shape.
+echo "==> plan-path bench smoke (10k clients)"
+BENCH_JSON="$SMOKE_OUT/BENCH_plan.json"
+cargo bench --bench plan_path_throughput -- \
+  --smoke --clients 10000 --scenarios steady --out "$BENCH_JSON" >/dev/null
+grep -q '"schema": "eafl-bench-v1"' "$BENCH_JSON" \
+  || { echo "FAIL: bench JSON missing schema tag"; exit 1; }
+grep -q '"bench": "plan_path_throughput"' "$BENCH_JSON" \
+  || { echo "FAIL: bench JSON missing bench name"; exit 1; }
+for key in results derived mean_ns median_ns min_ns p95_ns iterations; do
+  grep -q "\"$key\"" "$BENCH_JSON" \
+    || { echo "FAIL: bench JSON missing \"$key\""; exit 1; }
+done
+grep -q '"speedup_steady_10000"' "$BENCH_JSON" \
+  || { echo "FAIL: bench JSON missing derived speedup"; exit 1; }
+echo "    bench smoke OK ($(basename "$BENCH_JSON"))"
 
 if cargo clippy --version >/dev/null 2>&1; then
   echo "==> cargo clippy --all-targets -- -D warnings"

@@ -4,9 +4,24 @@
 //! warmup + measured batches, and reports min/mean/median/p95 per
 //! iteration. Used by every target in `benches/` (declared with
 //! `harness = false`).
+//!
+//! Results can be emitted as machine-readable `BENCH_*.json`
+//! ([`Bench::write_json`], schema [`BENCH_SCHEMA`]) so the repo's perf
+//! trajectory is recorded run over run instead of scrolling away in a
+//! terminal — `make bench` writes `BENCH_plan.json` at the repo root
+//! and ci.sh smoke-checks the schema.
 
+use std::collections::BTreeMap;
 use std::hint::black_box;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Schema tag stamped into every emitted bench JSON document.
+pub const BENCH_SCHEMA: &str = "eafl-bench-v1";
 
 /// One benchmark's timing statistics (nanoseconds per iteration).
 #[derive(Debug, Clone)]
@@ -20,6 +35,18 @@ pub struct BenchStats {
 }
 
 impl BenchStats {
+    /// One JSON row of the emitted results array.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("iterations".to_string(), Json::Num(self.iterations as f64));
+        m.insert("min_ns".to_string(), Json::Num(self.min_ns));
+        m.insert("mean_ns".to_string(), Json::Num(self.mean_ns));
+        m.insert("median_ns".to_string(), Json::Num(self.median_ns));
+        m.insert("p95_ns".to_string(), Json::Num(self.p95_ns));
+        Json::Obj(m)
+    }
+
     pub fn report(&self) {
         println!(
             "{:<44} {:>10} iters  min {:>12}  mean {:>12}  median {:>12}  p95 {:>12}",
@@ -78,6 +105,17 @@ impl Bench {
             measure_time: Duration::from_secs(4),
             warmup_time: Duration::from_millis(0),
             samples: 3,
+            results: Vec::new(),
+        }
+    }
+
+    /// Sub-second budget for CI smoke runs (numbers are indicative
+    /// only — the point is that the path executes and emits JSON).
+    pub fn smoke() -> Self {
+        Self {
+            measure_time: Duration::from_millis(400),
+            warmup_time: Duration::from_millis(50),
+            samples: 4,
             results: Vec::new(),
         }
     }
@@ -143,6 +181,35 @@ impl Bench {
     pub fn results(&self) -> &[BenchStats] {
         &self.results
     }
+
+    /// The collected results as a `eafl-bench-v1` JSON document:
+    /// `{"schema", "bench", "results": [...], "derived": {...}}`.
+    /// `derived` carries bench-specific computed figures (speedups,
+    /// per-round costs) keyed by name; pass an empty slice when there
+    /// are none.
+    pub fn to_json(&self, bench: &str, derived: &[(&str, f64)]) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("schema".to_string(), Json::Str(BENCH_SCHEMA.to_string()));
+        m.insert("bench".to_string(), Json::Str(bench.to_string()));
+        m.insert(
+            "results".to_string(),
+            Json::Arr(self.results.iter().map(BenchStats::to_json).collect()),
+        );
+        let mut d = BTreeMap::new();
+        for (k, v) in derived {
+            d.insert(k.to_string(), Json::Num(*v));
+        }
+        m.insert("derived".to_string(), Json::Obj(d));
+        Json::Obj(m)
+    }
+
+    /// Write the `eafl-bench-v1` document to `path`.
+    pub fn write_json(&self, bench: &str, derived: &[(&str, f64)], path: &Path) -> Result<()> {
+        let doc = self.to_json(bench, derived).to_string_pretty();
+        std::fs::write(path, doc.as_bytes())
+            .with_context(|| format!("writing bench JSON to {}", path.display()))?;
+        Ok(())
+    }
 }
 
 /// Re-export for benches to keep the optimizer honest.
@@ -183,5 +250,24 @@ mod tests {
         assert!(fmt_ns(5e4).contains("µs"));
         assert!(fmt_ns(5e7).contains("ms"));
         assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    #[test]
+    fn json_emission_matches_schema() {
+        let mut b = Bench::heavy();
+        b.run_once("unit", || 1 + 1);
+        let doc = b.to_json("smoke", &[("speedup", 12.5)]);
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(BENCH_SCHEMA));
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("smoke"));
+        let results = doc.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), 1);
+        for key in ["name", "iterations", "min_ns", "mean_ns", "median_ns", "p95_ns"] {
+            assert!(results[0].get(key).is_some(), "missing results[].{key}");
+        }
+        let derived = doc.get("derived").and_then(Json::as_obj).unwrap();
+        assert_eq!(derived.get("speedup").and_then(Json::as_f64), Some(12.5));
+        // The document round-trips through the in-tree parser.
+        let reparsed = Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(reparsed, doc);
     }
 }

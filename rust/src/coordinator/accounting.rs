@@ -8,8 +8,12 @@
 //! wall-clock recharge models (overnight charging windows, solar
 //! traces) live in `scenario::recharge` and slot in through the same
 //! trait via the experiment's scenario.
-
-use std::collections::HashSet;
+//!
+//! All battery mutation goes through the registry's guard API
+//! (`drain_fl` / `drain_background` / `charge_add` / `recharge_to`), so
+//! the SoA pool mirrors and the incremental population aggregates can
+//! never drift from the authoritative state — accounting is one of the
+//! mutation sites those aggregates are maintained at.
 
 use crate::config::DeviceConfig;
 use crate::sim::ParticipantResult;
@@ -23,30 +27,42 @@ impl BatteryAccounting {
     /// Drain each participant by the energy the event simulation says
     /// it actually spent. `clock_h` is the round's *start* time; a
     /// death lands at the proportional point of the client's timeline.
+    /// O(selected).
     pub fn drain_participants(
         registry: &mut Registry,
         results: &[ParticipantResult],
         clock_h: f64,
     ) {
         for r in results {
-            let c = &mut registry.clients[r.id];
             let death_time_h = clock_h + r.active_s / 3600.0;
-            c.battery.drain_fl(r.energy_spent_j, death_time_h);
+            registry.drain_fl(r.id, r.energy_spent_j, death_time_h);
         }
     }
 
     /// Background idle/busy drain for every alive non-participant over
     /// the round's wall-clock span ending at `end_clock_h`.
+    ///
+    /// `sorted_selected` must be sorted ascending (the coordinator
+    /// keeps a reusable scratch buffer for this) — participants are
+    /// skipped via binary search instead of the former per-round
+    /// HashSet allocation.
     pub fn drain_background(
         registry: &mut Registry,
-        selected: &[usize],
+        sorted_selected: &[usize],
         dev: &DeviceConfig,
         round_hours: f64,
         end_clock_h: f64,
     ) {
-        let selected_set: HashSet<usize> = selected.iter().copied().collect();
-        for c in &mut registry.clients {
-            if selected_set.contains(&c.id) || !c.battery.is_alive() {
+        debug_assert!(
+            sorted_selected.windows(2).all(|w| w[0] < w[1]),
+            "drain_background requires sorted, deduplicated participant ids"
+        );
+        for id in 0..registry.len() {
+            if sorted_selected.binary_search(&id).is_ok() {
+                continue;
+            }
+            let c = registry.client(id);
+            if !c.battery.is_alive() {
                 continue;
             }
             let rate = if c.device.background_busy {
@@ -55,7 +71,7 @@ impl BatteryAccounting {
                 dev.idle_drain_per_hour
             };
             let e = crate::energy::background_energy_joules(&c.device.spec, rate, round_hours);
-            c.battery.drain_background(e, end_clock_h);
+            registry.drain_background(id, e, end_clock_h);
         }
     }
 }
@@ -100,10 +116,10 @@ pub struct CooldownRecharge {
 
 impl RechargePolicy for CooldownRecharge {
     fn apply(&self, registry: &mut Registry, _start_clock_h: f64, end_clock_h: f64) {
-        for c in &mut registry.clients {
-            if let Some(died) = c.battery.died_at_h {
+        for id in 0..registry.len() {
+            if let Some(died) = registry.client(id).battery.died_at_h {
                 if end_clock_h - died >= self.after_hours {
-                    c.battery.recharge_to(self.to_fraction);
+                    registry.recharge_to(id, self.to_fraction);
                 }
             }
         }
@@ -132,6 +148,7 @@ pub fn recharge_policy_from(dev: &DeviceConfig) -> Box<dyn RechargePolicy> {
 mod tests {
     use super::*;
     use crate::config::{ExperimentConfig, SelectorKind};
+    use crate::coordinator::PoolAggregates;
     use crate::sim::FailureKind;
 
     fn registry() -> Registry {
@@ -142,7 +159,7 @@ mod tests {
     #[test]
     fn participants_drain_what_the_sim_spent() {
         let mut r = registry();
-        let before = r.clients[2].battery.charge_joules();
+        let before = r.client(2).battery.charge_joules();
         let results = vec![ParticipantResult {
             id: 2,
             completed: true,
@@ -151,14 +168,15 @@ mod tests {
             energy_spent_j: 50.0,
         }];
         BatteryAccounting::drain_participants(&mut r, &results, 1.0);
-        assert!((before - r.clients[2].battery.charge_joules() - 50.0).abs() < 1e-9);
-        assert!((r.clients[2].battery.fl_energy_j - 50.0).abs() < 1e-9);
+        assert!((before - r.client(2).battery.charge_joules() - 50.0).abs() < 1e-9);
+        assert!((r.client(2).battery.fl_energy_j - 50.0).abs() < 1e-9);
+        assert_eq!(*r.aggregates(), PoolAggregates::recompute(&r));
     }
 
     #[test]
     fn death_timestamp_lands_mid_round() {
         let mut r = registry();
-        let cap = r.clients[0].battery.capacity_joules();
+        let cap = r.client(0).battery.capacity_joules();
         let results = vec![ParticipantResult {
             id: 0,
             completed: false,
@@ -167,8 +185,9 @@ mod tests {
             energy_spent_j: cap * 2.0,
         }];
         BatteryAccounting::drain_participants(&mut r, &results, 10.0);
-        assert!(!r.clients[0].battery.is_alive());
-        assert_eq!(r.clients[0].battery.died_at_h, Some(10.5));
+        assert!(!r.client(0).battery.is_alive());
+        assert_eq!(r.client(0).battery.died_at_h, Some(10.5));
+        assert_eq!(r.dead_count(), 1);
     }
 
     #[test]
@@ -176,27 +195,29 @@ mod tests {
         let mut r = registry();
         let cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
         // Kill client 1.
-        let cap = r.clients[1].battery.capacity_joules();
-        r.clients[1].battery.drain_fl(cap * 2.0, 0.0);
-        let charge0 = r.clients[0].battery.charge_joules();
-        let charge2 = r.clients[2].battery.charge_joules();
+        let cap = r.client(1).battery.capacity_joules();
+        r.drain_fl(1, cap * 2.0, 0.0);
+        let charge0 = r.client(0).battery.charge_joules();
+        let charge2 = r.client(2).battery.charge_joules();
         BatteryAccounting::drain_background(&mut r, &[0], &cfg.devices, 1.0, 1.0);
-        assert_eq!(r.clients[0].battery.charge_joules(), charge0, "participant skipped");
-        assert!(r.clients[2].battery.charge_joules() < charge2, "bystander drained");
-        assert_eq!(r.clients[1].battery.background_energy_j, 0.0, "dead skipped");
+        assert_eq!(r.client(0).battery.charge_joules(), charge0, "participant skipped");
+        assert!(r.client(2).battery.charge_joules() < charge2, "bystander drained");
+        assert_eq!(r.client(1).battery.background_energy_j, 0.0, "dead skipped");
+        assert_eq!(*r.aggregates(), PoolAggregates::recompute(&r));
     }
 
     #[test]
     fn cooldown_recharge_waits_out_the_cooldown() {
         let mut r = registry();
-        let cap = r.clients[0].battery.capacity_joules();
-        r.clients[0].battery.drain_fl(cap * 2.0, 5.0);
+        let cap = r.client(0).battery.capacity_joules();
+        r.drain_fl(0, cap * 2.0, 5.0);
         let policy = CooldownRecharge { after_hours: 2.0, to_fraction: 0.8 };
         policy.apply(&mut r, 5.5, 6.0); // only 1 h dead
-        assert!(!r.clients[0].battery.is_alive());
+        assert!(!r.client(0).battery.is_alive());
         policy.apply(&mut r, 7.0, 7.5); // 2.5 h dead
-        assert!(r.clients[0].battery.is_alive());
-        assert!((r.clients[0].battery.fraction() - 0.8).abs() < 1e-12);
+        assert!(r.client(0).battery.is_alive());
+        assert!((r.client(0).battery.fraction() - 0.8).abs() < 1e-12);
+        assert_eq!(*r.aggregates(), PoolAggregates::recompute(&r));
     }
 
     #[test]

@@ -48,10 +48,10 @@ use crate::aggregation::{Aggregator, ClientUpdate};
 use crate::config::{ExperimentConfig, FederationConfig, TrainingConfig};
 use crate::data::SyntheticSpeech;
 use crate::energy::RoundEnergy;
-use crate::metrics::{jain_index, RoundRecord};
+use crate::metrics::{jain_index_from_moments, RoundRecord};
 use crate::runtime::ModelRuntime;
 use crate::scenario::ScenarioEnv;
-use crate::selection::{ParticipantOutcome, RoundFeedback, Selector};
+use crate::selection::{Candidate, ParticipantOutcome, RoundFeedback, Selector};
 use crate::sim::{simulate_round, FailureKind, ParticipantPlan, RoundSimOutcome};
 use crate::training::{LocalTrainResult, Trainer, TrainerBufs};
 use crate::util::rng::Rng;
@@ -91,9 +91,18 @@ pub struct RoundPlan {
 /// and projects each pick's download/compute/upload timeline and energy
 /// demand. An empty eligible pool yields an empty plan — the round is
 /// skipped downstream, never a panic.
+///
+/// Fast path: candidates are filtered straight out of the registry's
+/// SoA [`ClientPool`](super::registry::ClientPool) into the
+/// caller-owned `arena` (reused across rounds — no per-round Vec), the
+/// availability gate is fused into the filter (and skipped entirely
+/// when the model is always-on), and the selected clients' timing and
+/// energy plans are copied from the build-time projection cache instead
+/// of re-running the energy model.
 pub struct PlanPhase;
 
 impl PlanPhase {
+    #[allow(clippy::too_many_arguments)]
     pub fn run(
         registry: &Registry,
         selector: &mut dyn Selector,
@@ -102,32 +111,36 @@ impl PlanPhase {
         round: u64,
         clock_h: f64,
         rng: &mut Rng,
+        arena: &mut Vec<Candidate>,
     ) -> RoundPlan {
         let k = cfg.federation.participants_per_round;
-        let local_steps = cfg.training.local_steps;
-        let batch = cfg.data.batch_size;
+        let floor = cfg.selector.min_battery_frac;
 
-        let mut candidates =
-            registry.candidates(round, cfg.selector.min_battery_frac, local_steps, batch);
-        candidates.retain(|c| env.availability.available(c.id, clock_h));
-        let selected = selector.select(round, &candidates, k, rng);
-        let deadline_s = selector.deadline_s(&candidates);
+        if env.availability.is_always_available() {
+            registry.fill_candidates(round, floor, |_| true, arena);
+        } else {
+            let availability = &env.availability;
+            registry.fill_candidates(
+                round,
+                floor,
+                |id| availability.available(id, clock_h),
+                arena,
+            );
+        }
+        // One call yields both picks and deadline, so the pacer
+        // percentile runs once per round instead of twice.
+        let (selected, deadline_s) = selector.plan(round, arena, k, rng);
 
+        let pool = registry.pool();
         let plans: Vec<ParticipantPlan> = selected
             .iter()
-            .map(|&id| {
-                let c = &registry.clients[id];
-                let energy = c
-                    .projected_energy(registry.payload_bytes, local_steps, batch)
-                    .total();
-                ParticipantPlan {
-                    id,
-                    download_s: c.link.download_secs(registry.payload_bytes),
-                    compute_s: c.compute_secs(local_steps, batch),
-                    upload_s: c.link.upload_secs(registry.payload_bytes),
-                    round_energy_j: energy,
-                    charge_j: c.battery.charge_joules(),
-                }
+            .map(|&id| ParticipantPlan {
+                id,
+                download_s: pool.download_s[id],
+                compute_s: pool.compute_s[id],
+                upload_s: pool.upload_s[id],
+                round_energy_j: pool.round_energy_j[id],
+                charge_j: pool.charge_j[id],
             })
             .collect();
         RoundPlan { round, selected, plans, deadline_s }
@@ -172,20 +185,20 @@ impl SimPhase {
                 .plans
                 .iter()
                 .map(|p| {
-                    let c = &registry.clients[p.id];
+                    let c = registry.client(p.id);
                     let link = env.network.link_at(c.id, &c.link, clock_h);
                     let energy = RoundEnergy::for_participation(
                         &c.device.spec,
                         &link,
-                        registry.payload_bytes,
+                        registry.payload_bytes(),
                         p.compute_s,
                     )
                     .total();
                     ParticipantPlan {
                         id: p.id,
-                        download_s: link.download_secs(registry.payload_bytes),
+                        download_s: link.download_secs(registry.payload_bytes()),
                         compute_s: p.compute_s,
-                        upload_s: link.upload_secs(registry.payload_bytes),
+                        upload_s: link.upload_secs(registry.payload_bytes()),
                         round_energy_j: energy,
                         charge_j: p.charge_j,
                     }
@@ -251,6 +264,7 @@ impl ExecPhase<'_> {
         bufs_pool: &mut Vec<TrainerBufs>,
     ) -> Result<ExecutionOutcome> {
         let results = &sim.outcome.results;
+        let clients = registry.clients();
         // Indices (into `results`) of clients that completed, in order.
         let tasks: Vec<usize> = results
             .iter()
@@ -273,7 +287,7 @@ impl ExecPhase<'_> {
                 std::mem::replace(&mut bufs_pool[0], TrainerBufs::empty()),
             );
             for (slot, &ti) in slots.iter_mut().zip(&tasks) {
-                let client = &registry.clients[results[ti].id];
+                let client = &clients[results[ti].id];
                 *slot = Some(trainer.train_client(
                     global,
                     &client.shard,
@@ -301,7 +315,7 @@ impl ExecPhase<'_> {
                             std::mem::replace(buf, TrainerBufs::empty()),
                         );
                         for (slot, &ti) in slot_chunk.iter_mut().zip(task_chunk) {
-                            let client = &registry.clients[results[ti].id];
+                            let client = &clients[results[ti].id];
                             *slot = Some(trainer.train_client(
                                 global,
                                 &client.shard,
@@ -413,7 +427,10 @@ impl CommitPhase {
 
 /// Writes per-client stats (selection counts, measured durations,
 /// utilities, the Oort-style miss blacklist) and feeds the outcomes
-/// back to the selector.
+/// back to the selector. Stats go through [`Registry::stats_mut`]
+/// guards, which keep the SoA pool mirrors and the Jain moments
+/// (Σc, Σc²) incrementally up to date — O(selected) total, no
+/// population rescans downstream.
 pub struct FeedbackPhase;
 
 impl FeedbackPhase {
@@ -424,7 +441,7 @@ impl FeedbackPhase {
         outcomes: &[ParticipantOutcome],
     ) {
         for o in outcomes {
-            let stats = &mut registry.clients[o.id].stats;
+            let mut stats = registry.stats_mut(o.id);
             stats.times_selected += 1;
             stats.last_selected_round = round;
             stats.measured_duration_s = Some(o.duration_s);
@@ -452,6 +469,13 @@ impl FeedbackPhase {
 
 /// Assembles the round's [`RoundRecord`] row from the phase outputs and
 /// the post-accounting registry state.
+///
+/// O(1) in the population size: the alive count, mean alive battery,
+/// total FL energy and the Jain fairness moments all come from the
+/// registry's incrementally maintained
+/// [`PoolAggregates`](super::registry::PoolAggregates) — this phase
+/// used to rescan the registry ~5 times (including an N-element
+/// selection-counts Vec per round just to feed Jain's index).
 pub struct RecordPhase;
 
 impl RecordPhase {
@@ -483,7 +507,11 @@ impl RecordPhase {
             },
             test_accuracy,
             test_loss,
-            fairness: jain_index(&registry.selection_counts()),
+            fairness: jain_index_from_moments(
+                registry.len(),
+                registry.aggregates().selected_sum,
+                registry.aggregates().selected_sum_sq,
+            ),
             cumulative_dead: registry.dead_count(),
             alive_fraction: registry.alive_count() as f64 / registry.len().max(1) as f64,
             mean_battery: registry.mean_battery_alive(),
@@ -524,13 +552,28 @@ mod tests {
         env
     }
 
+    /// PlanPhase::run with a throwaway arena (tests don't care about
+    /// arena reuse).
+    fn run_plan(
+        registry: &Registry,
+        selector: &mut dyn Selector,
+        cfg: &ExperimentConfig,
+        env: &ScenarioEnv,
+        round: u64,
+        clock_h: f64,
+        rng: &mut Rng,
+    ) -> RoundPlan {
+        let mut arena = Vec::new();
+        PlanPhase::run(registry, selector, cfg, env, round, clock_h, rng, &mut arena)
+    }
+
     #[test]
     fn plan_phase_projects_each_selected_client() {
         let (cfg, registry, _rt, env) = fixture();
         let mut selector = make_selector(&cfg.selector);
         let mut rng = Rng::seed_from_u64(1);
         let plan =
-            PlanPhase::run(&registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
+            run_plan(&registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
         assert_eq!(plan.selected.len(), plan.plans.len());
         assert!(plan.selected.len() <= cfg.federation.participants_per_round);
         assert!(plan.deadline_s > 0.0);
@@ -548,7 +591,7 @@ mod tests {
         let mut selector = make_selector(&cfg.selector);
         let mut rng = Rng::seed_from_u64(2);
         let plan =
-            PlanPhase::run(&registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
+            run_plan(&registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
         assert!(plan.selected.is_empty(), "offline population must yield an empty plan");
         assert!(plan.plans.is_empty());
         // And the empty plan flows through the sim without panicking.
@@ -578,7 +621,7 @@ mod tests {
         let mut selector = make_selector(&cfg.selector);
         let mut rng = Rng::seed_from_u64(5);
         let plan =
-            PlanPhase::run(&registry, selector.as_mut(), &cfg, &steady, 1, 0.0, &mut rng);
+            run_plan(&registry, selector.as_mut(), &cfg, &steady, 1, 0.0, &mut rng);
         assert!(!plan.selected.is_empty());
 
         let mut congested = ScenarioEnv::steady(&cfg.devices);
@@ -610,7 +653,7 @@ mod tests {
         let mut selector = make_selector(&cfg.selector);
         let mut rng = Rng::seed_from_u64(8);
         let plan =
-            PlanPhase::run(&registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
+            run_plan(&registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
         assert!(env.network.is_static());
         let sim = SimPhase::run(&plan, &registry, &env, 0.0);
         // Completed clients' active time equals the planned timeline —
@@ -628,7 +671,7 @@ mod tests {
         let mut selector = make_selector(&cfg.selector);
         let mut rng = Rng::seed_from_u64(9);
         let plan =
-            PlanPhase::run(&registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
+            run_plan(&registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
         let sim = SimPhase::run(&plan, &registry, &env, 0.0);
         let global = rt.init_params(0).unwrap();
         let data = SyntheticSpeech::new(rt.input_hw, rt.num_classes, 0.3, cfg.data.seed);
@@ -663,7 +706,7 @@ mod tests {
         for round in 1..=MISS_BLACKLIST_THRESHOLD as u64 {
             FeedbackPhase::run(&mut registry, selector.as_mut(), round, &[miss]);
         }
-        let stats = &registry.clients[0].stats;
+        let stats = &registry.client(0).stats;
         assert_eq!(stats.consecutive_misses, 0, "reset after the ban fires");
         assert_eq!(
             stats.banned_until_round,

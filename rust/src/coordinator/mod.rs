@@ -5,7 +5,11 @@
 //!    → execute → commit → feedback → record) with typed IO; the
 //!    execution phase trains clients in parallel.
 //!  - [`accounting`](self) — battery drain + pluggable recharge policy.
-//!  - [`Registry`] — per-client device/link/battery/shard state.
+//!  - [`Registry`] — per-client device/link/battery/shard state, with
+//!    the SoA [`ClientPool`] projection cache and the incrementally
+//!    maintained [`PoolAggregates`] that make the non-training round
+//!    path allocation-free and O(selected) (see the crate docs' "fast
+//!    path" section).
 //!  - [`Coordinator`] — owns the experiment state and drives the
 //!    phases round by round.
 
@@ -21,5 +25,8 @@ pub use engine::{
     quorum_required, CommitDecision, CommitPhase, ExecPhase, ExecutionOutcome, FeedbackPhase,
     PlanPhase, RecordPhase, RoundPlan, SimPhase, SimulatedRound,
 };
-pub use registry::{ClientState, ClientStats, Registry};
+pub use registry::{
+    BatteryMut, ClientPool, ClientState, ClientStats, LinkMut, PoolAggregates, Registry,
+    StatsMut,
+};
 pub use server::Coordinator;

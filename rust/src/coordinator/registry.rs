@@ -3,7 +3,43 @@
 //! see read-only [`Candidate`] projections built here (paper Fig. 2:
 //! the coordinator "registers each client's profile ... and forwards
 //! the characteristics to the server running EAFL").
+//!
+//! ## The million-client fast path
+//!
+//! At deployment scale (the regimes AutoFL and global-energy-budget FL
+//! operate in) the per-round cost of this module is what bounds the
+//! whole simulator, so the registry is structured as two synchronized
+//! views:
+//!
+//!  - `clients: Vec<ClientState>` — the authoritative array-of-structs
+//!    state (device, link, battery, shard, stats). Private: every
+//!    mutation goes through [`Registry::battery_mut`] /
+//!    [`Registry::stats_mut`] guards (or the convenience wrappers), so
+//!    the derived views below can never go stale.
+//!  - [`ClientPool`] — a struct-of-arrays cache of everything the plan
+//!    path reads per round. The *static* projections (link transfer
+//!    times, compute time, projected round energy/drain — invariant
+//!    under a static network) are computed once at build time and only
+//!    recomputed for a client whose device/link state actually changes
+//!    ([`Registry::refresh_projection`]); the *dynamic* mirrors
+//!    (battery fraction, liveness, selection stats) are updated by the
+//!    mutation guards.
+//!  - [`PoolAggregates`] — population sums maintained incrementally at
+//!    the mutation sites, so the per-round metrics row is O(1) instead
+//!    of five O(N) scans: alive count, Σ battery fraction over alive
+//!    clients, Σ FL energy, and the Σc / Σc² moments Jain's fairness
+//!    index needs. Float sums use [`FixedSum`] (exact i128 fixed-point)
+//!    so the incremental state is *bit-identical* to a brute-force
+//!    rebuild after any mutation sequence — see
+//!    `rust/tests/pool_aggregates.rs`.
+//!
+//! [`Registry::fill_candidates`] filters the pool into a caller-owned
+//! candidate arena with zero allocation and zero energy-model
+//! recomputation; the allocating [`Registry::candidates`] recomputes
+//! everything from the AoS state and is kept as the reference (and as
+//! the pre-refactor baseline in `benches/plan_path_throughput.rs`).
 
+use std::ops::{Deref, DerefMut};
 
 use crate::config::ExperimentConfig;
 use crate::data::{partition_clients, ClientShard};
@@ -11,6 +47,7 @@ use crate::device::{generate_profiles, Battery, DeviceProfile};
 use crate::energy::RoundEnergy;
 use crate::network::{generate_links, LinkProfile};
 use crate::selection::Candidate;
+use crate::util::fixed::FixedSum;
 
 /// Mutable per-client selection statistics.
 #[derive(Debug, Clone, Default)]
@@ -74,23 +111,123 @@ impl ClientState {
     }
 }
 
+/// Struct-of-arrays projection cache — everything the plan path reads,
+/// one contiguous array per field (all indexed by client id).
+///
+/// Invariant: entry `i` always equals what a fresh recomputation from
+/// `clients[i]` (with the registry's build-time `local_steps` / `batch`
+/// / `payload_bytes`) would produce. Static fields change only through
+/// [`Registry::refresh_projection`]; dynamic fields are written by the
+/// mutation guards.
+#[derive(Debug, Clone, Default)]
+pub struct ClientPool {
+    // --- static projections (build time / refresh_projection) ---
+    pub download_s: Vec<f64>,
+    pub compute_s: Vec<f64>,
+    pub upload_s: Vec<f64>,
+    pub expected_duration_s: Vec<f64>,
+    /// Total projected participation energy for one round, joules.
+    pub round_energy_j: Vec<f64>,
+    /// `round_energy_j / capacity` — the candidate's projected drain.
+    pub drain_frac: Vec<f64>,
+    // --- dynamic mirrors (mutation guards) ---
+    pub alive: Vec<bool>,
+    pub battery_frac: Vec<f64>,
+    pub charge_j: Vec<f64>,
+    pub stat_util: Vec<Option<f64>>,
+    pub measured_duration_s: Vec<Option<f64>>,
+    pub last_selected_round: Vec<u64>,
+    pub banned_until_round: Vec<u64>,
+}
+
+impl ClientPool {
+    fn with_capacity(n: usize) -> Self {
+        let mut p = Self::default();
+        macro_rules! reserve {
+            ($($f:ident),*) => { $( p.$f.reserve_exact(n); )* };
+        }
+        reserve!(
+            download_s,
+            compute_s,
+            upload_s,
+            expected_duration_s,
+            round_energy_j,
+            drain_frac,
+            alive,
+            battery_frac,
+            charge_j,
+            stat_util,
+            measured_duration_s,
+            last_selected_round,
+            banned_until_round
+        );
+        p
+    }
+}
+
+/// Population aggregates maintained incrementally at every mutation
+/// site; the O(1) source for the per-round metrics row.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolAggregates {
+    /// Clients whose battery is currently alive.
+    pub alive: usize,
+    /// Σ battery fraction over *alive* clients (exact fixed-point).
+    pub battery_frac_sum: FixedSum,
+    /// Σ cumulative FL energy over all clients, joules (exact).
+    pub fl_energy_j: FixedSum,
+    /// Σ times_selected over all clients (Jain numerator moment).
+    pub selected_sum: u64,
+    /// Σ times_selected² over all clients (Jain denominator moment).
+    pub selected_sum_sq: u128,
+}
+
+impl PoolAggregates {
+    /// Brute-force rebuild from per-client state — the reference the
+    /// incremental state must equal *exactly* (FixedSum makes the float
+    /// sums order-independent, so `==` is the right comparison).
+    pub fn recompute(registry: &Registry) -> Self {
+        let mut agg = Self::default();
+        for c in registry.clients() {
+            if c.battery.is_alive() {
+                agg.alive += 1;
+                agg.battery_frac_sum.add(c.battery.fraction());
+            }
+            agg.fl_energy_j.add(c.battery.fl_energy_j);
+            agg.selected_sum += c.stats.times_selected;
+            agg.selected_sum_sq += (c.stats.times_selected as u128).pow(2);
+        }
+        agg
+    }
+}
+
 /// The full client population.
 pub struct Registry {
-    pub clients: Vec<ClientState>,
+    clients: Vec<ClientState>,
+    pool: ClientPool,
+    aggregates: PoolAggregates,
     /// Model payload exchanged each round (flat params as f32 bytes).
-    pub payload_bytes: usize,
+    /// Private like `clients`: it feeds every cached projection, so
+    /// mutating it without a pool rebuild would silently stale the
+    /// transfer-time and energy entries.
+    payload_bytes: usize,
+    /// Local steps the cached projections were built for.
+    local_steps: usize,
+    /// Batch size the cached projections were built for.
+    batch: usize,
 }
 
 impl Registry {
     /// Build the population from the experiment config: device traces,
     /// link traces and the non-IID partition are all seeded and merged
-    /// 1:1 by client index.
+    /// 1:1 by client index. Per-client projections are cached in the
+    /// SoA pool for the config's `training.local_steps` ×
+    /// `data.batch_size` workload.
     pub fn build(cfg: &ExperimentConfig, num_classes: usize, param_count: usize) -> Self {
         let n = cfg.federation.num_clients;
         let devices = generate_profiles(&cfg.devices, n);
         let links = generate_links(&cfg.network, n);
         let partition = partition_clients(&cfg.data, num_classes, n);
-        let clients = devices
+        let clients: Vec<ClientState> = devices
             .into_iter()
             .zip(links)
             .zip(partition.shards)
@@ -100,7 +237,70 @@ impl Registry {
                 ClientState { id, device, link, battery, shard, stats: ClientStats::default() }
             })
             .collect();
-        Self { clients, payload_bytes: param_count * 4 }
+        let mut registry = Self {
+            clients,
+            // Placeholder only: rebuild_pool constructs the real pool.
+            pool: ClientPool::default(),
+            aggregates: PoolAggregates::default(),
+            payload_bytes: param_count * 4,
+            local_steps: cfg.training.local_steps,
+            batch: cfg.data.batch_size,
+        };
+        registry.rebuild_pool();
+        registry
+    }
+
+    /// Populate the SoA pool and the aggregates from scratch.
+    fn rebuild_pool(&mut self) {
+        let (payload, steps, batch) = (self.payload_bytes, self.local_steps, self.batch);
+        let mut pool = ClientPool::with_capacity(self.clients.len());
+        for c in &self.clients {
+            let energy = c.projected_energy(payload, steps, batch).total();
+            pool.download_s.push(c.link.download_secs(payload));
+            pool.compute_s.push(c.compute_secs(steps, batch));
+            pool.upload_s.push(c.link.upload_secs(payload));
+            pool.expected_duration_s.push(c.expected_duration_s(payload, steps, batch));
+            pool.round_energy_j.push(energy);
+            pool.drain_frac.push(energy / c.battery.capacity_joules());
+            pool.alive.push(c.battery.is_alive());
+            pool.battery_frac.push(c.battery.fraction());
+            pool.charge_j.push(c.battery.charge_joules());
+            pool.stat_util.push(c.stats.stat_util);
+            pool.measured_duration_s.push(c.stats.measured_duration_s);
+            pool.last_selected_round.push(c.stats.last_selected_round);
+            pool.banned_until_round.push(c.stats.banned_until_round);
+        }
+        self.pool = pool;
+        self.aggregates = PoolAggregates::recompute(self);
+    }
+
+    /// Recompute one client's *static* projections after its device or
+    /// link profile changed (a scenario hot-swapping hardware, a future
+    /// link-migration event). The static network assumption makes this
+    /// the only place static pool entries are ever rewritten — O(1) per
+    /// changed client instead of an O(N) rebuild.
+    pub fn refresh_projection(&mut self, id: usize) {
+        let (payload, steps, batch) = (self.payload_bytes, self.local_steps, self.batch);
+        let c = &self.clients[id];
+        let energy = c.projected_energy(payload, steps, batch).total();
+        let download_s = c.link.download_secs(payload);
+        let compute_s = c.compute_secs(steps, batch);
+        let upload_s = c.link.upload_secs(payload);
+        let expected = c.expected_duration_s(payload, steps, batch);
+        let drain_frac = energy / c.battery.capacity_joules();
+        let p = &mut self.pool;
+        p.download_s[id] = download_s;
+        p.compute_s[id] = compute_s;
+        p.upload_s[id] = upload_s;
+        p.expected_duration_s[id] = expected;
+        p.round_energy_j[id] = energy;
+        p.drain_frac[id] = drain_frac;
+    }
+
+    /// Mutable access to a client's link profile; the projection cache
+    /// entry is refreshed when the guard drops.
+    pub fn link_mut(&mut self, id: usize) -> LinkMut<'_> {
+        LinkMut { registry: self, id }
     }
 
     pub fn len(&self) -> usize {
@@ -111,45 +311,187 @@ impl Registry {
         self.clients.is_empty()
     }
 
-    /// Clients currently alive (battery not dead).
+    /// Read-only view of one client.
+    pub fn client(&self, id: usize) -> &ClientState {
+        &self.clients[id]
+    }
+
+    /// Read-only view of the whole population.
+    pub fn clients(&self) -> &[ClientState] {
+        &self.clients
+    }
+
+    /// Model payload exchanged each round (flat params as f32 bytes).
+    pub fn payload_bytes(&self) -> usize {
+        self.payload_bytes
+    }
+
+    /// The SoA projection cache (read-only; kept in sync by the
+    /// mutation guards).
+    pub fn pool(&self) -> &ClientPool {
+        &self.pool
+    }
+
+    /// The incrementally maintained population aggregates.
+    pub fn aggregates(&self) -> &PoolAggregates {
+        &self.aggregates
+    }
+
+    // --- mutation guards ---------------------------------------------------
+
+    /// Mutable access to a client's battery. Aggregates and pool
+    /// mirrors are re-synced when the guard drops, so arbitrary battery
+    /// mutations (drain, charge, revive) stay consistent.
+    pub fn battery_mut(&mut self, id: usize) -> BatteryMut<'_> {
+        let b = &self.clients[id].battery;
+        BatteryMut {
+            was_alive: b.is_alive(),
+            old_frac: b.fraction(),
+            old_fl_energy: b.fl_energy_j,
+            registry: self,
+            id,
+        }
+    }
+
+    /// Mutable access to a client's selection statistics. The Jain
+    /// moments (Σc, Σc²) and pool mirrors are re-synced on drop.
+    pub fn stats_mut(&mut self, id: usize) -> StatsMut<'_> {
+        let old_times_selected = self.clients[id].stats.times_selected;
+        StatsMut { old_times_selected, registry: self, id }
+    }
+
+    /// Drain `energy_j` of FL work from client `id` at simulation time
+    /// `now_h`; returns the supplied fraction (see
+    /// [`Battery::drain_fl`]).
+    pub fn drain_fl(&mut self, id: usize, energy_j: f64, now_h: f64) -> f64 {
+        self.battery_mut(id).drain_fl(energy_j, now_h)
+    }
+
+    /// Drain background (idle/busy) energy from client `id`.
+    pub fn drain_background(&mut self, id: usize, energy_j: f64, now_h: f64) -> f64 {
+        self.battery_mut(id).drain_background(energy_j, now_h)
+    }
+
+    /// Add charge to client `id` (revives a dead battery with charge).
+    pub fn charge_add(&mut self, id: usize, energy_j: f64) {
+        self.battery_mut(id).charge_add(energy_j);
+    }
+
+    /// Recharge client `id` to `fraction` of capacity and revive it.
+    pub fn recharge_to(&mut self, id: usize, fraction: f64) {
+        self.battery_mut(id).recharge_to(fraction);
+    }
+
+    fn sync_battery(&mut self, id: usize, was_alive: bool, old_frac: f64, old_fl: f64) {
+        let b = &self.clients[id].battery;
+        let (alive, frac, fl) = (b.is_alive(), b.fraction(), b.fl_energy_j);
+        let agg = &mut self.aggregates;
+        if was_alive {
+            agg.alive -= 1;
+            agg.battery_frac_sum.sub(old_frac);
+        }
+        if alive {
+            agg.alive += 1;
+            agg.battery_frac_sum.add(frac);
+        }
+        agg.fl_energy_j.sub(old_fl);
+        agg.fl_energy_j.add(fl);
+        self.pool.alive[id] = alive;
+        self.pool.battery_frac[id] = frac;
+        self.pool.charge_j[id] = b.charge_joules();
+    }
+
+    fn sync_stats(&mut self, id: usize, old_times_selected: u64) {
+        let s = &self.clients[id].stats;
+        let agg = &mut self.aggregates;
+        agg.selected_sum = agg.selected_sum - old_times_selected + s.times_selected;
+        agg.selected_sum_sq = agg.selected_sum_sq - (old_times_selected as u128).pow(2)
+            + (s.times_selected as u128).pow(2);
+        self.pool.stat_util[id] = s.stat_util;
+        self.pool.measured_duration_s[id] = s.measured_duration_s;
+        self.pool.last_selected_round[id] = s.last_selected_round;
+        self.pool.banned_until_round[id] = s.banned_until_round;
+    }
+
+    // --- O(1) population metrics (incremental aggregates) ------------------
+
+    /// Clients currently alive (battery not dead). O(1).
     pub fn alive_count(&self) -> usize {
-        self.clients.iter().filter(|c| c.battery.is_alive()).count()
+        self.aggregates.alive
     }
 
     /// Clients whose battery has died so far (Fig. 4a's cumulative
-    /// drop-out count).
+    /// drop-out count). O(1).
     pub fn dead_count(&self) -> usize {
         self.len() - self.alive_count()
     }
 
-    /// Mean battery fraction over alive clients (1.0 if none alive).
+    /// Mean battery fraction over alive clients; **0.0 when none are
+    /// alive** (an exhausted fleet reports zero usable charge). O(1).
     pub fn mean_battery_alive(&self) -> f64 {
-        let alive: Vec<f64> = self
-            .clients
-            .iter()
-            .filter(|c| c.battery.is_alive())
-            .map(|c| c.battery.fraction())
-            .collect();
-        if alive.is_empty() {
+        if self.aggregates.alive == 0 {
             0.0
         } else {
-            alive.iter().sum::<f64>() / alive.len() as f64
+            self.aggregates.battery_frac_sum.value() / self.aggregates.alive as f64
         }
     }
 
-    /// Total FL energy drawn across the population, joules.
+    /// Total FL energy drawn across the population, joules. O(1).
     pub fn total_fl_energy_j(&self) -> f64 {
-        self.clients.iter().map(|c| c.battery.fl_energy_j).sum()
+        self.aggregates.fl_energy_j.value()
     }
 
-    /// Per-client selection counts (Jain's fairness input).
+    /// Per-client selection counts (allocating; kept for tests and
+    /// offline analysis — the metrics row reads the Jain moments from
+    /// [`Registry::aggregates`] instead).
     pub fn selection_counts(&self) -> Vec<u64> {
         self.clients.iter().map(|c| c.stats.times_selected).collect()
     }
 
-    /// Build selector candidates: alive clients above the battery
-    /// floor and not blacklisted, with timing and energy projections
-    /// attached. `round` is the upcoming round (1-based).
+    // --- candidate construction --------------------------------------------
+
+    /// Fast path: filter eligible clients into `out` (cleared first)
+    /// straight from the SoA pool — no allocation in steady state, no
+    /// energy-model recomputation. `available` gates on the scenario's
+    /// availability model; eligibility is alive ∧ above the battery
+    /// floor ∧ not blacklisted. Produces exactly what
+    /// [`Registry::candidates`] (with the registry's build-time
+    /// steps/batch) followed by an availability `retain` would.
+    pub fn fill_candidates<F: FnMut(usize) -> bool>(
+        &self,
+        round: u64,
+        min_battery_frac: f64,
+        mut available: F,
+        out: &mut Vec<Candidate>,
+    ) {
+        out.clear();
+        let p = &self.pool;
+        for id in 0..self.clients.len() {
+            if !p.alive[id]
+                || p.battery_frac[id] <= min_battery_frac
+                || p.banned_until_round[id] > round
+                || !available(id)
+            {
+                continue;
+            }
+            out.push(Candidate {
+                id,
+                stat_util: p.stat_util[id],
+                measured_duration_s: p.measured_duration_s[id],
+                expected_duration_s: p.expected_duration_s[id],
+                last_selected_round: p.last_selected_round[id],
+                battery_frac: p.battery_frac[id],
+                projected_drain_frac: p.drain_frac[id],
+            });
+        }
+    }
+
+    /// Reference path: build selector candidates by recomputing every
+    /// projection from the AoS state. Semantically identical to
+    /// [`Registry::fill_candidates`] when called with the registry's
+    /// build-time `local_steps`/`batch`; kept allocating and
+    /// recomputing on purpose as the property-test reference and the
+    /// pre-refactor baseline in `benches/plan_path_throughput.rs`.
     pub fn candidates(
         &self,
         round: u64,
@@ -185,6 +527,88 @@ impl Registry {
     }
 }
 
+/// Guard for battery mutation: dereferences to [`Battery`]; re-syncs
+/// the pool mirrors and aggregates when dropped.
+pub struct BatteryMut<'a> {
+    registry: &'a mut Registry,
+    id: usize,
+    was_alive: bool,
+    old_frac: f64,
+    old_fl_energy: f64,
+}
+
+impl Deref for BatteryMut<'_> {
+    type Target = Battery;
+    fn deref(&self) -> &Battery {
+        &self.registry.clients[self.id].battery
+    }
+}
+
+impl DerefMut for BatteryMut<'_> {
+    fn deref_mut(&mut self) -> &mut Battery {
+        &mut self.registry.clients[self.id].battery
+    }
+}
+
+impl Drop for BatteryMut<'_> {
+    fn drop(&mut self) {
+        self.registry.sync_battery(self.id, self.was_alive, self.old_frac, self.old_fl_energy);
+    }
+}
+
+/// Guard for stats mutation: dereferences to [`ClientStats`]; re-syncs
+/// the Jain moments and pool mirrors when dropped.
+pub struct StatsMut<'a> {
+    registry: &'a mut Registry,
+    id: usize,
+    old_times_selected: u64,
+}
+
+impl Deref for StatsMut<'_> {
+    type Target = ClientStats;
+    fn deref(&self) -> &ClientStats {
+        &self.registry.clients[self.id].stats
+    }
+}
+
+impl DerefMut for StatsMut<'_> {
+    fn deref_mut(&mut self) -> &mut ClientStats {
+        &mut self.registry.clients[self.id].stats
+    }
+}
+
+impl Drop for StatsMut<'_> {
+    fn drop(&mut self) {
+        self.registry.sync_stats(self.id, self.old_times_selected);
+    }
+}
+
+/// Guard for link-profile mutation: dereferences to [`LinkProfile`];
+/// recomputes the client's static projections when dropped.
+pub struct LinkMut<'a> {
+    registry: &'a mut Registry,
+    id: usize,
+}
+
+impl Deref for LinkMut<'_> {
+    type Target = LinkProfile;
+    fn deref(&self) -> &LinkProfile {
+        &self.registry.clients[self.id].link
+    }
+}
+
+impl DerefMut for LinkMut<'_> {
+    fn deref_mut(&mut self) -> &mut LinkProfile {
+        &mut self.registry.clients[self.id].link
+    }
+}
+
+impl Drop for LinkMut<'_> {
+    fn drop(&mut self) {
+        self.registry.refresh_projection(self.id);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,22 +623,23 @@ mod tests {
     fn build_merges_profiles_one_to_one() {
         let r = registry();
         assert_eq!(r.len(), 40);
-        assert_eq!(r.payload_bytes, 4000);
-        for (i, c) in r.clients.iter().enumerate() {
+        assert_eq!(r.payload_bytes(), 4000);
+        for (i, c) in r.clients().iter().enumerate() {
             assert_eq!(c.id, i);
             assert!(!c.shard.samples.is_empty());
             assert!(c.battery.is_alive());
         }
+        assert_eq!(r.alive_count(), 40);
     }
 
     #[test]
     fn expected_duration_decomposes() {
         let r = registry();
-        let c = &r.clients[0];
-        let d = c.expected_duration_s(r.payload_bytes, 5, 20);
-        let manual = c.link.download_secs(r.payload_bytes)
+        let c = r.client(0);
+        let d = c.expected_duration_s(r.payload_bytes(), 5, 20);
+        let manual = c.link.download_secs(r.payload_bytes())
             + c.compute_secs(5, 20)
-            + c.link.upload_secs(r.payload_bytes);
+            + c.link.upload_secs(r.payload_bytes());
         assert!((d - manual).abs() < 1e-12);
         assert!(d > 0.0);
     }
@@ -223,9 +648,9 @@ mod tests {
     fn candidates_respect_battery_floor() {
         let mut r = registry();
         // Kill half the clients.
-        let cap = r.clients[0].battery.capacity_joules();
-        for c in r.clients.iter_mut().take(20) {
-            c.battery.drain_fl(cap * 2.0, 0.0);
+        let cap = r.client(0).battery.capacity_joules();
+        for id in 0..20 {
+            r.drain_fl(id, cap * 2.0, 0.0);
         }
         let cands = r.candidates(1, 0.02, 5, 20);
         assert!(cands.len() <= 20);
@@ -246,9 +671,94 @@ mod tests {
     #[test]
     fn selection_counts_track_stats() {
         let mut r = registry();
-        r.clients[3].stats.times_selected = 7;
+        r.stats_mut(3).times_selected = 7;
         let counts = r.selection_counts();
         assert_eq!(counts[3], 7);
         assert_eq!(counts.iter().sum::<u64>(), 7);
+        assert_eq!(r.aggregates().selected_sum, 7);
+        assert_eq!(r.aggregates().selected_sum_sq, 49);
+    }
+
+    #[test]
+    fn fill_candidates_matches_reference() {
+        let cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+        let mut r = Registry::build(&cfg, 35, 1000);
+        // Perturb state: kill some, ban some, give some stats.
+        let cap = r.client(0).battery.capacity_joules();
+        r.drain_fl(2, cap * 2.0, 1.0);
+        r.drain_fl(5, cap * 0.6, 1.0);
+        r.stats_mut(7).banned_until_round = 9;
+        {
+            let mut s = r.stats_mut(11);
+            s.stat_util = Some(42.0);
+            s.measured_duration_s = Some(120.0);
+            s.last_selected_round = 3;
+            s.times_selected = 2;
+        }
+        let reference =
+            r.candidates(4, 0.01, cfg.training.local_steps, cfg.data.batch_size);
+        let mut fast = Vec::new();
+        r.fill_candidates(4, 0.01, |_| true, &mut fast);
+        assert_eq!(fast.len(), reference.len());
+        for (a, b) in fast.iter().zip(&reference) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.stat_util, b.stat_util);
+            assert_eq!(a.measured_duration_s, b.measured_duration_s);
+            assert_eq!(a.expected_duration_s, b.expected_duration_s);
+            assert_eq!(a.last_selected_round, b.last_selected_round);
+            assert_eq!(a.battery_frac, b.battery_frac);
+            assert_eq!(a.projected_drain_frac, b.projected_drain_frac);
+        }
+        // Availability gate filters within the fast path.
+        let mut gated = Vec::new();
+        r.fill_candidates(4, 0.01, |id| id % 2 == 0, &mut gated);
+        assert!(gated.iter().all(|c| c.id % 2 == 0));
+        assert!(gated.len() < fast.len());
+    }
+
+    #[test]
+    fn mean_battery_alive_is_zero_when_none_alive() {
+        let mut r = registry();
+        for id in 0..r.len() {
+            let cap = r.client(id).battery.capacity_joules();
+            r.drain_fl(id, cap * 2.0, 0.0);
+        }
+        assert_eq!(r.alive_count(), 0);
+        // Documented contract: an exhausted fleet reports 0.0 usable
+        // charge, not the vacuous 1.0.
+        assert_eq!(r.mean_battery_alive(), 0.0);
+    }
+
+    #[test]
+    fn aggregates_follow_mutations_exactly() {
+        let mut r = registry();
+        let cap = r.client(0).battery.capacity_joules();
+        r.drain_fl(0, cap * 0.5, 1.0);
+        r.drain_background(1, cap * 0.25, 1.0);
+        r.charge_add(1, cap * 0.1);
+        r.drain_fl(3, cap * 5.0, 2.0); // kills client 3
+        r.recharge_to(3, 0.8);
+        r.stats_mut(4).times_selected = 3;
+        r.stats_mut(9).times_selected = 1;
+        assert_eq!(*r.aggregates(), PoolAggregates::recompute(&r));
+        assert_eq!(r.aggregates().selected_sum, 4);
+        assert_eq!(r.aggregates().selected_sum_sq, 10);
+    }
+
+    #[test]
+    fn link_mut_refreshes_projection() {
+        let mut r = registry();
+        let before = r.pool().expected_duration_s[5];
+        {
+            let mut link = r.link_mut(5);
+            link.down_mbps *= 0.5;
+            link.up_mbps *= 0.5;
+        }
+        let after = r.pool().expected_duration_s[5];
+        assert!(after > before, "halved bandwidth must lengthen the projection");
+        // And the pool matches a fresh reference projection.
+        let cands = r.candidates(1, 0.0, r.local_steps, r.batch);
+        let c5 = cands.iter().find(|c| c.id == 5).unwrap();
+        assert_eq!(c5.expected_duration_s, after);
     }
 }

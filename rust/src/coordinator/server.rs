@@ -23,7 +23,7 @@ use crate::data::SyntheticSpeech;
 use crate::metrics::MetricsLog;
 use crate::runtime::ModelRuntime;
 use crate::scenario::{Scenario, ScenarioEnv};
-use crate::selection::{make_selector, Selector};
+use crate::selection::{make_selector, Candidate, Selector};
 use crate::training::{Trainer, TrainerBufs};
 use crate::util::rng::Rng;
 
@@ -75,6 +75,11 @@ pub struct Coordinator<'r> {
     /// Reused batch buffers, one per execution worker (§Perf L3: no
     /// per-round allocation; slot 0 doubles as the eval buffers).
     bufs_pool: Vec<TrainerBufs>,
+    /// Reusable candidate arena the plan phase filters the pool into —
+    /// no fresh N-element Vec per round.
+    candidate_arena: Vec<Candidate>,
+    /// Reusable sorted-participant scratch for background accounting.
+    selected_scratch: Vec<usize>,
     /// Execution-phase worker threads.
     workers: usize,
     /// Carried between eval points.
@@ -131,6 +136,8 @@ impl<'r> Coordinator<'r> {
             rng,
             log,
             bufs_pool,
+            candidate_arena: Vec::new(),
+            selected_scratch: Vec::new(),
             workers: default_workers(),
             last_accuracy: 0.0,
             last_test_loss: f64::NAN,
@@ -200,6 +207,7 @@ impl<'r> Coordinator<'r> {
             round,
             self.clock_h,
             &mut self.rng,
+            &mut self.candidate_arena,
         );
 
         // --- Phase 2: event-driven round simulation on effective links ----
@@ -232,9 +240,12 @@ impl<'r> Coordinator<'r> {
             &sim.outcome.results,
             self.clock_h,
         );
+        self.selected_scratch.clear();
+        self.selected_scratch.extend_from_slice(&plan.selected);
+        self.selected_scratch.sort_unstable();
         BatteryAccounting::drain_background(
             &mut self.registry,
-            &plan.selected,
+            &self.selected_scratch,
             &self.cfg.devices,
             sim.round_hours,
             end_clock_h,

@@ -43,6 +43,50 @@
 //! and commits results in simulation order, so seeded runs are
 //! bit-identical at any worker count.
 //!
+//! ## The million-client fast path
+//!
+//! The non-training round path (plan → select → account → record) is
+//! sized for populations in the millions — the cross-device regimes
+//! AutoFL-style systems operate in. Per-round complexity, N = clients,
+//! E = eligible candidates, k = participants:
+//!
+//! | stage                | before                                   | after                                    |
+//! |----------------------|------------------------------------------|------------------------------------------|
+//! | candidate build      | O(N) recompute + fresh `Vec<Candidate>`  | O(N) filter of cached SoA pool, reused arena, zero alloc |
+//! | selection (Oort/EAFL)| O(E log E) full sort + O(k·E) linear draws | O(E) band partition + O(k·log band) Fenwick draws |
+//! | selection (Random)   | O(E) full shuffle                        | O(k) partial Fisher–Yates                |
+//! | participant drain    | O(k)                                     | O(k) (through aggregate guards)          |
+//! | background drain     | O(N) + per-round HashSet                 | O(N), allocation-free (sorted scratch + binary search) |
+//! | metrics record       | ~5 × O(N) scans + counts Vec             | O(1) from incremental aggregates         |
+//!
+//! The machinery (see [`coordinator::Registry`]):
+//!
+//!  - **SoA `ClientPool`** — per-client projections (transfer times,
+//!    compute time, round energy, drain fraction) cached at build time;
+//!    static entries recompute only when a client's device/link state
+//!    actually changes (`refresh_projection` / `link_mut`).
+//!  - **Incremental `PoolAggregates`** — alive count, Σ alive-battery
+//!    fraction, Σ FL energy and the Σc/Σc² Jain moments maintained at
+//!    the mutation sites (`drain_fl`, `charge_add`, feedback stats)
+//!    through guard types. Float sums use exact i128 fixed-point
+//!    (`util::fixed::FixedSum`), so incremental state is bit-identical
+//!    to brute-force recomputation — property-tested in
+//!    `rust/tests/pool_aggregates.rs`.
+//!  - **Pool invariants** — every battery/stats mutation goes through
+//!    `Registry::battery_mut` / `stats_mut` guards; `clients` is
+//!    private, so pool mirrors and aggregates can never drift.
+//!  - **Fenwick sampler** — one weighted-draw implementation
+//!    ([`selection::FenwickSampler`]) for Oort exploitation and EAFL
+//!    exploration, provably identical to the linear-scan reference on
+//!    the same RNG stream (quantized integer weights make prefix sums
+//!    exact), at O(log n) per draw.
+//!
+//! `benches/plan_path_throughput.rs` measures the whole path at
+//! 10k/100k/1M clients (steady + diurnal), keeps the pre-refactor
+//! baseline alongside for an honest speedup, and emits machine-readable
+//! `BENCH_plan.json` (`eafl-bench-v1` schema via [`benchkit`]);
+//! `make bench` writes it at the repo root and ci.sh smoke-checks it.
+//!
 //! ## Scenarios
 //!
 //! The environment is data, not code: a [`scenario::Scenario`] bundles

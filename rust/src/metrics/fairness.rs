@@ -9,15 +9,22 @@
 /// Jain's fairness index of `counts`. Returns 1.0 for an empty or
 /// all-zero population (vacuously fair).
 pub fn jain_index(counts: &[u64]) -> f64 {
-    if counts.is_empty() {
+    let sum: u64 = counts.iter().sum();
+    let sum_sq: u128 = counts.iter().map(|&c| (c as u128) * (c as u128)).sum();
+    jain_index_from_moments(counts.len(), sum, sum_sq)
+}
+
+/// Jain's index straight from the Σc / Σc² moments the registry
+/// maintains incrementally — the O(1) fast path for the per-round
+/// metrics row (no N-element counts Vec, no O(N) rescan). Exact
+/// integer moments mean this agrees with [`jain_index`] on the same
+/// population by construction.
+pub fn jain_index_from_moments(n: usize, sum: u64, sum_sq: u128) -> f64 {
+    if n == 0 || sum == 0 {
         return 1.0;
     }
-    let sum: f64 = counts.iter().map(|&c| c as f64).sum();
-    if sum == 0.0 {
-        return 1.0;
-    }
-    let sum_sq: f64 = counts.iter().map(|&c| (c as f64) * (c as f64)).sum();
-    (sum * sum) / (counts.len() as f64 * sum_sq)
+    let s = sum as f64;
+    (s * s) / (n as f64 * sum_sq as f64)
 }
 
 #[cfg(test)]
@@ -51,5 +58,24 @@ mod tests {
     #[test]
     fn more_even_is_fairer() {
         assert!(jain_index(&[5, 5, 4, 6]) > jain_index(&[1, 9, 0, 10]));
+    }
+
+    #[test]
+    fn moments_path_agrees_with_counts_path() {
+        for counts in [
+            vec![],
+            vec![0, 0],
+            vec![3, 3, 3],
+            vec![10, 0, 0, 0, 0],
+            vec![7, 1, 0, 4, 2, 9],
+        ] {
+            let sum: u64 = counts.iter().sum();
+            let sum_sq: u128 = counts.iter().map(|&c| (c as u128) * (c as u128)).sum();
+            assert_eq!(
+                jain_index(&counts),
+                jain_index_from_moments(counts.len(), sum, sum_sq),
+                "{counts:?}"
+            );
+        }
     }
 }

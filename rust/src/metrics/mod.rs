@@ -4,5 +4,5 @@
 mod fairness;
 mod timeseries;
 
-pub use fairness::jain_index;
+pub use fairness::{jain_index, jain_index_from_moments};
 pub use timeseries::{MetricsLog, RoundRecord, Summary};

@@ -22,6 +22,15 @@ pub trait AvailabilityModel: Send + Sync {
     /// Whether client `id` can be planned into a round starting at
     /// wall-clock `clock_h` (hours since experiment start).
     fn available(&self, id: usize, clock_h: f64) -> bool;
+
+    /// Hint that `available` is constantly true — lets the plan phase
+    /// skip the per-client dynamic dispatch entirely on the steady
+    /// scenario's million-client candidate scan (the analogue of
+    /// `NetworkModel::is_static`).
+    fn is_always_available(&self) -> bool {
+        false
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -31,6 +40,9 @@ pub struct AlwaysOn;
 
 impl AvailabilityModel for AlwaysOn {
     fn available(&self, _id: usize, _clock_h: f64) -> bool {
+        true
+    }
+    fn is_always_available(&self) -> bool {
         true
     }
     fn name(&self) -> &'static str {

@@ -56,9 +56,11 @@ impl RechargePolicy for OvernightRecharge {
         if overlap <= 0.0 || self.rate_frac_per_h <= 0.0 {
             return;
         }
-        for c in &mut registry.clients {
-            let joules = c.battery.capacity_joules() * self.rate_frac_per_h * overlap;
-            c.battery.charge_add(joules);
+        for id in 0..registry.len() {
+            let joules = registry.client(id).battery.capacity_joules()
+                * self.rate_frac_per_h
+                * overlap;
+            registry.charge_add(id, joules);
         }
     }
     fn can_revive(&self) -> bool {
@@ -121,9 +123,9 @@ impl RechargePolicy for SolarRecharge {
         if rate <= 0.0 {
             return;
         }
-        for c in &mut registry.clients {
-            let joules = c.battery.capacity_joules() * rate * hours;
-            c.battery.charge_add(joules);
+        for id in 0..registry.len() {
+            let joules = registry.client(id).battery.capacity_joules() * rate * hours;
+            registry.charge_add(id, joules);
         }
     }
     fn can_revive(&self) -> bool {
@@ -168,18 +170,18 @@ mod tests {
             OvernightRecharge { start_hour: 22.0, end_hour: 6.0, rate_frac_per_h: 0.25 };
         let mut r = registry();
         // Kill client 0 outright.
-        let cap = r.clients[0].battery.capacity_joules();
-        r.clients[0].battery.drain_fl(cap * 2.0, 9.0);
-        assert!(!r.clients[0].battery.is_alive());
+        let cap = r.client(0).battery.capacity_joules();
+        r.drain_fl(0, cap * 2.0, 9.0);
+        assert!(!r.client(0).battery.is_alive());
 
         // Daytime round: nothing happens.
         policy.apply(&mut r, 10.0, 11.0);
-        assert!(!r.clients[0].battery.is_alive());
+        assert!(!r.client(0).battery.is_alive());
 
         // One full hour inside the window: +0.25 of capacity, revived.
         policy.apply(&mut r, 22.0, 23.0);
-        assert!(r.clients[0].battery.is_alive());
-        assert!((r.clients[0].battery.fraction() - 0.25).abs() < 1e-9);
+        assert!(r.client(0).battery.is_alive());
+        assert!((r.client(0).battery.fraction() - 0.25).abs() < 1e-9);
     }
 
     #[test]
@@ -188,7 +190,7 @@ mod tests {
             OvernightRecharge { start_hour: 22.0, end_hour: 6.0, rate_frac_per_h: 1.0 };
         let mut r = registry();
         policy.apply(&mut r, 22.0, 30.0); // 8 h at 1.0/h ≫ capacity
-        for c in &r.clients {
+        for c in r.clients() {
             assert!((c.battery.fraction() - 1.0).abs() < 1e-12);
         }
     }
@@ -229,16 +231,16 @@ mod tests {
         let s = SolarRecharge { trace: vec![(6.0, 0.0), (12.0, 0.4), (18.0, 0.0)] };
         let mut r = registry();
         let before: Vec<f64> =
-            r.clients.iter().map(|c| c.battery.charge_joules()).collect();
+            r.clients().iter().map(|c| c.battery.charge_joules()).collect();
         s.apply(&mut r, 23.9, 24.1); // midnight: rate 0
-        for (c, b) in r.clients.iter().zip(&before) {
+        for (c, b) in r.clients().iter().zip(&before) {
             assert_eq!(c.battery.charge_joules(), *b);
         }
         // Drain someone below full so the noon charge is observable.
-        let cap = r.clients[1].battery.capacity_joules();
-        r.clients[1].battery.drain_fl(cap * 0.5, 0.0);
-        let drained = r.clients[1].battery.charge_joules();
+        let cap = r.client(1).battery.capacity_joules();
+        r.drain_fl(1, cap * 0.5, 0.0);
+        let drained = r.client(1).battery.charge_joules();
         s.apply(&mut r, 11.5, 12.5); // solar noon
-        assert!(r.clients[1].battery.charge_joules() > drained);
+        assert!(r.client(1).battery.charge_joules() > drained);
     }
 }

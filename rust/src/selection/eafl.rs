@@ -13,47 +13,142 @@
 //!
 //! Exploration of unmeasured clients and the pacer are inherited from
 //! the Oort machinery (EAFL is a drop-in replacement for the reward
-//! inside Oort's selector loop).
+//! inside Oort's selector loop). Both the energy-weighted exploration
+//! draw and the exploitation-band draw route through the ONE weighted
+//! sampler — [`OortSelector::weighted_pick`], backed by the Fenwick
+//! inverse-CDF sampler — which replaced this module's former inline
+//! O(k·N) linear scan.
 
 use crate::util::rng::Rng;
 
 use crate::config::SelectorConfig;
 
-use super::utility::{eafl_reward, min_max_normalize, oort_utility, power_term, staleness_bonus};
-use super::{Candidate, OortSelector, RoundFeedback, Selector};
+use super::sampler::FenwickSampler;
+use super::utility::{
+    eafl_reward, min_max_normalize_in_place, oort_utility, power_term, staleness_bonus,
+};
+use super::{rank_top_band, Candidate, OortSelector, RoundFeedback, Selector};
 
 pub struct EaflSelector {
     cfg: SelectorConfig,
     /// Inner Oort machinery reused for ε schedule + pacer state.
     oort: OortSelector,
+    /// Reusable per-round scratch (candidate index partitions, the
+    /// normalized-utility buffer, the weighted-draw pool, and the
+    /// Fenwick sampler).
+    explored_idx: Vec<u32>,
+    unexplored_idx: Vec<u32>,
+    utils: Vec<f64>,
+    pool_scratch: Vec<(usize, f64)>,
+    sampler: FenwickSampler,
 }
 
 impl EaflSelector {
     pub fn new(cfg: SelectorConfig) -> Self {
         let oort = OortSelector::new(cfg.clone());
-        Self { cfg, oort }
+        Self {
+            cfg,
+            oort,
+            explored_idx: Vec::new(),
+            unexplored_idx: Vec::new(),
+            utils: Vec::new(),
+            pool_scratch: Vec::new(),
+            sampler: FenwickSampler::empty(),
+        }
     }
 
-    /// Eq. (1) rewards for the explored candidates (parallel array).
-    fn rewards(&self, round: u64, explored: &[&Candidate], deadline: f64) -> Vec<f64> {
-        let utils: Vec<f64> = explored
-            .iter()
-            .map(|c| {
+    /// The select body with the round deadline already computed —
+    /// shared by `select` and the single-percentile `plan` path.
+    fn select_with_deadline(
+        &mut self,
+        round: u64,
+        candidates: &[Candidate],
+        k: usize,
+        deadline: f64,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        if candidates.is_empty() || k == 0 {
+            return Vec::new();
+        }
+        let eps = self.oort.epsilon(round);
+
+        self.explored_idx.clear();
+        self.unexplored_idx.clear();
+        for (i, c) in candidates.iter().enumerate() {
+            if c.stat_util.is_none() {
+                self.unexplored_idx.push(i as u32);
+            } else {
+                self.explored_idx.push(i as u32);
+            }
+        }
+
+        // Exploration — but energy-aware even here: prefer high-power
+        // unexplored clients (weighted by the Eq. (1) power term),
+        // drawn through the shared Fenwick sampler.
+        let k_explore = ((eps * k as f64).round() as usize)
+            .min(self.unexplored_idx.len())
+            .min(k);
+        let mut selected: Vec<usize> = if k_explore > 0 {
+            self.pool_scratch.clear();
+            for &i in &self.unexplored_idx {
+                let c = &candidates[i as usize];
+                self.pool_scratch.push((
+                    c.id,
+                    power_term(c.battery_frac, c.projected_drain_frac).max(1e-6),
+                ));
+            }
+            OortSelector::weighted_pick(&mut self.sampler, &self.pool_scratch, k_explore, rng)
+        } else {
+            Vec::new()
+        };
+
+        // Exploitation by Eq. (1) reward: weighted draw from the top
+        // reward band (Oort's randomized-cutoff idiom) rather than a
+        // hard top-k — keeps near-ties rotating, which is what keeps
+        // EAFL's Jain fairness at Random-like levels (paper Fig. 3c).
+        let k_exploit = k - selected.len();
+        if k_exploit > 0 && !self.explored_idx.is_empty() {
+            self.utils.clear();
+            for &i in &self.explored_idx {
+                let c = &candidates[i as usize];
                 let duration = c.measured_duration_s.unwrap_or(c.expected_duration_s);
-                oort_utility(c.stat_util.unwrap_or(0.0), deadline, duration, self.cfg.alpha)
-            })
-            .collect();
-        let normed = min_max_normalize(&utils);
-        explored
-            .iter()
-            .zip(&normed)
-            .map(|(c, &u)| {
+                self.utils.push(oort_utility(
+                    c.stat_util.unwrap_or(0.0),
+                    deadline,
+                    duration,
+                    self.cfg.alpha,
+                ));
+            }
+            min_max_normalize_in_place(&mut self.utils);
+            self.pool_scratch.clear();
+            for (&i, &u) in self.explored_idx.iter().zip(&self.utils) {
+                let c = &candidates[i as usize];
                 let power = power_term(c.battery_frac, c.projected_drain_frac);
                 // Staleness bonus operates in normalized-reward space.
-                eafl_reward(self.cfg.eafl_f, u, power)
-                    + staleness_bonus(round, c.last_selected_round, self.cfg.ucb_weight) * 0.25
-            })
-            .collect()
+                let reward = eafl_reward(self.cfg.eafl_f, u, power)
+                    + staleness_bonus(round, c.last_selected_round, self.cfg.ucb_weight)
+                        * 0.25;
+                self.pool_scratch.push((c.id, reward.max(1e-9)));
+            }
+            let band = ((k_exploit as f64) * 3.0).ceil() as usize;
+            rank_top_band(&mut self.pool_scratch, band.max(k_exploit));
+            selected.extend(OortSelector::weighted_pick(
+                &mut self.sampler,
+                &self.pool_scratch,
+                k_exploit,
+                rng,
+            ));
+        } else if k_exploit > 0 {
+            let mut rest: Vec<usize> = self
+                .unexplored_idx
+                .iter()
+                .map(|&i| candidates[i as usize].id)
+                .filter(|id| !selected.contains(id))
+                .collect();
+            rng.shuffle(&mut rest);
+            selected.extend(rest.into_iter().take(k_exploit));
+        }
+        selected
     }
 }
 
@@ -65,71 +160,22 @@ impl Selector for EaflSelector {
         k: usize,
         rng: &mut Rng,
     ) -> Vec<usize> {
-        if candidates.is_empty() || k == 0 {
-            return Vec::new();
-        }
         let deadline = self.deadline_s(candidates);
-        let eps = self.oort.epsilon(round);
+        self.select_with_deadline(round, candidates, k, deadline, rng)
+    }
 
-        let (unexplored, explored): (Vec<&Candidate>, Vec<&Candidate>) =
-            candidates.iter().partition(|c| c.stat_util.is_none());
-
-        // Exploration — but energy-aware even here: prefer high-power
-        // unexplored clients (weighted by the Eq. (1) power term).
-        let k_explore = ((eps * k as f64).round() as usize)
-            .min(unexplored.len())
-            .min(k);
-        let mut selected: Vec<usize> = {
-            let mut pool: Vec<(usize, f64)> = unexplored
-                .iter()
-                .map(|c| {
-                    (c.id, power_term(c.battery_frac, c.projected_drain_frac).max(1e-6))
-                })
-                .collect();
-            let mut picked = Vec::with_capacity(k_explore);
-            while picked.len() < k_explore && !pool.is_empty() {
-                let total: f64 = pool.iter().map(|(_, w)| w).sum();
-                let mut r = rng.gen_f64() * total;
-                let mut idx = pool.len() - 1;
-                for (i, (_, w)) in pool.iter().enumerate() {
-                    r -= w;
-                    if r <= 0.0 {
-                        idx = i;
-                        break;
-                    }
-                }
-                picked.push(pool.swap_remove(idx).0);
-            }
-            picked
-        };
-
-        // Exploitation by Eq. (1) reward: weighted draw from the top
-        // reward band (Oort's randomized-cutoff idiom) rather than a
-        // hard top-k — keeps near-ties rotating, which is what keeps
-        // EAFL's Jain fairness at Random-like levels (paper Fig. 3c).
-        let k_exploit = k - selected.len();
-        if k_exploit > 0 && !explored.is_empty() {
-            let rewards = self.rewards(round, &explored, deadline);
-            let mut scored: Vec<(usize, f64)> = explored
-                .iter()
-                .zip(&rewards)
-                .map(|(c, &r)| (c.id, r.max(1e-9)))
-                .collect();
-            scored.sort_by(|a, b| b.1.total_cmp(&a.1));
-            let band = ((k_exploit as f64) * 3.0).ceil() as usize;
-            scored.truncate(band.max(k_exploit));
-            let mut pool = scored;
-            selected.extend(OortSelector::weighted_pick(&mut pool, k_exploit, rng));
-        } else if k_exploit > 0 {
-            let mut rest: Vec<usize> = unexplored
-                .iter()
-                .map(|c| c.id)
-                .filter(|id| !selected.contains(id))
-                .collect();
-            rng.shuffle(&mut rest);
-            selected.extend(rest.into_iter().take(k_exploit));
-        }
-        selected
+    fn plan(
+        &mut self,
+        round: u64,
+        candidates: &[Candidate],
+        k: usize,
+        rng: &mut Rng,
+    ) -> (Vec<usize>, f64) {
+        // One pacer-percentile pass serves both the reward computation
+        // and the round deadline the engine needs.
+        let deadline = self.deadline_s(candidates);
+        let selected = self.select_with_deadline(round, candidates, k, deadline, rng);
+        (selected, deadline)
     }
 
     fn feedback(&mut self, fb: &RoundFeedback<'_>) {
@@ -150,7 +196,7 @@ impl Selector for EaflSelector {
 #[cfg(test)]
 mod tests {
     use super::*;
-    
+
     fn cand(id: usize, util: Option<f64>, dur: f64, battery: f64) -> Candidate {
         Candidate {
             id,

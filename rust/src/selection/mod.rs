@@ -16,11 +16,13 @@
 mod eafl;
 mod oort;
 mod random;
+pub mod sampler;
 pub mod utility;
 
 pub use eafl::EaflSelector;
 pub use oort::OortSelector;
 pub use random::RandomSelector;
+pub use sampler::{weighted_sample_linear, FenwickSampler};
 
 use crate::util::rng::Rng;
 
@@ -92,6 +94,23 @@ pub trait Selector: Send {
     /// `benches/selection_micro.rs`).
     fn deadline_s(&mut self, candidates: &[Candidate]) -> f64;
 
+    /// Selection and deadline in one call — the engine's per-round
+    /// entry point. The default composes `select` + `deadline_s` and is
+    /// correct for any selector; Oort/EAFL override it so the pacer
+    /// percentile (an O(E) pass over the candidate pool) runs once per
+    /// round instead of twice.
+    fn plan(
+        &mut self,
+        round: u64,
+        candidates: &[Candidate],
+        k: usize,
+        rng: &mut Rng,
+    ) -> (Vec<usize>, f64) {
+        let selected = self.select(round, candidates, k, rng);
+        let deadline_s = self.deadline_s(candidates);
+        (selected, deadline_s)
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -110,6 +129,24 @@ pub fn make_selector(cfg: &SelectorConfig) -> Box<dyn Selector> {
 /// hot paths call [`percentile_in_place`] on buffers they already own.
 pub fn percentile(values: &[f64], p: f64) -> f64 {
     percentile_in_place(&mut values.to_vec(), p)
+}
+
+/// Keep only the top `band` entries of `scored` by (score desc, id
+/// asc), sorted in that order — the selectors' exploitation-band
+/// primitive. A full sort of the explored pool is O(E log E); this
+/// partitions the top band out with `select_nth_unstable_by` (O(E))
+/// and only orders the band itself (O(band log band), band ≈ 1.5–3 k).
+/// The composite key is a strict total order (ids are distinct), so
+/// the result is exactly what a full stable sort of an id-ascending
+/// pool would keep — input order no longer matters at all.
+pub(crate) fn rank_top_band(scored: &mut Vec<(usize, f64)>, band: usize) {
+    let cmp =
+        |a: &(usize, f64), b: &(usize, f64)| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0));
+    if band < scored.len() && band > 0 {
+        scored.select_nth_unstable_by(band - 1, cmp);
+        scored.truncate(band);
+    }
+    scored.sort_unstable_by(cmp);
 }
 
 /// Percentile (0..=1) via `select_nth_unstable_by` — O(n) instead of

@@ -14,13 +14,22 @@
 //!
 //! Deliberately battery-oblivious: this is precisely the behaviour the
 //! paper's Fig. 4a shows causing mass drop-outs.
+//!
+//! **Fast path:** only the top band ever needs ordering, so the former
+//! full `sort_by` of the explored pool is a `select_nth_unstable_by`
+//! partition + band sort ([`rank_top_band`]), and the weighted draw
+//! goes through the shared Fenwick sampler
+//! ([`crate::selection::sampler`]) — O(E + band·log band + k·log band)
+//! per round instead of O(E log E + k·E). All intermediate buffers are
+//! selector-owned scratch, reused across rounds.
 
 use crate::util::rng::Rng;
 
 use crate::config::SelectorConfig;
 
+use super::sampler::FenwickSampler;
 use super::utility::{oort_utility, staleness_bonus};
-use super::{percentile_in_place, Candidate, RoundFeedback, Selector};
+use super::{percentile_in_place, rank_top_band, Candidate, RoundFeedback, Selector};
 
 /// Width of the exploitation cutoff band (fraction of k over-sampled
 /// before the final weighted draw).
@@ -36,11 +45,43 @@ pub struct OortSelector {
     /// computation run once per round over the whole candidate pool, so
     /// a per-call Vec allocation is pure waste at 100k clients.
     scratch: Vec<f64>,
+    /// Reusable candidate-index partitions and the scored band.
+    explored_idx: Vec<u32>,
+    unexplored_ids: Vec<usize>,
+    scored: Vec<(usize, f64)>,
+    /// Reusable Fenwick sampler (tree + quantized weights) for the
+    /// per-round weighted draws.
+    sampler: FenwickSampler,
+}
+
+/// Score an explored candidate: Eq. (2) + staleness bonus scaled by the
+/// candidate pool's utility range. Free function so the hot loop can
+/// split-borrow the selector's scratch buffers.
+fn score(
+    cfg: &SelectorConfig,
+    c: &Candidate,
+    round: u64,
+    deadline: f64,
+    util_scale: f64,
+) -> f64 {
+    let stat = c.stat_util.unwrap_or(0.0);
+    let duration = c.measured_duration_s.unwrap_or(c.expected_duration_s);
+    oort_utility(stat, deadline, duration, cfg.alpha)
+        + staleness_bonus(round, c.last_selected_round, cfg.ucb_weight) * util_scale
 }
 
 impl OortSelector {
     pub fn new(cfg: SelectorConfig) -> Self {
-        Self { cfg, pacer_relax_s: 0.0, recent_utils: Vec::new(), scratch: Vec::new() }
+        Self {
+            cfg,
+            pacer_relax_s: 0.0,
+            recent_utils: Vec::new(),
+            scratch: Vec::new(),
+            explored_idx: Vec::new(),
+            unexplored_ids: Vec::new(),
+            scored: Vec::new(),
+            sampler: FenwickSampler::empty(),
+        }
     }
 
     /// Current exploration fraction ε for `round` (1-based).
@@ -49,36 +90,85 @@ impl OortSelector {
             .max(self.cfg.min_explore)
     }
 
-    /// Score an explored candidate: Eq. (2) + staleness bonus scaled by
-    /// the candidate pool's utility range.
-    fn score(&self, c: &Candidate, round: u64, deadline: f64, util_scale: f64) -> f64 {
-        let stat = c.stat_util.unwrap_or(0.0);
-        let duration = c.measured_duration_s.unwrap_or(c.expected_duration_s);
-        oort_utility(stat, deadline, duration, self.cfg.alpha)
-            + staleness_bonus(round, c.last_selected_round, self.cfg.ucb_weight) * util_scale
-    }
-
-    /// Weighted sample of `k` distinct ids from `(id, weight)` pairs.
+    /// Weighted sample of `k` distinct ids from `(id, weight)` pairs —
+    /// THE draw primitive for both selectors (EAFL's exploration loop
+    /// routes here too). One `gen_f64` per pick; Fenwick inverse-CDF
+    /// descent, provably identical to the linear-scan reference
+    /// (`sampler::weighted_sample_linear`) over the same pool. The
+    /// caller passes its own reusable sampler, and weights are
+    /// quantized straight out of the pool, so steady-state draws
+    /// allocate nothing pool-sized.
     pub(super) fn weighted_pick(
-        pool: &mut Vec<(usize, f64)>,
+        sampler: &mut FenwickSampler,
+        pool: &[(usize, f64)],
         k: usize,
         rng: &mut Rng,
     ) -> Vec<usize> {
-        let mut picked = Vec::with_capacity(k);
-        while picked.len() < k && !pool.is_empty() {
-            let total: f64 = pool.iter().map(|(_, w)| w.max(1e-12)).sum();
-            let mut r = rng.gen_f64() * total;
-            let mut idx = pool.len() - 1;
-            for (i, (_, w)) in pool.iter().enumerate() {
-                r -= w.max(1e-12);
-                if r <= 0.0 {
-                    idx = i;
-                    break;
-                }
-            }
-            picked.push(pool.swap_remove(idx).0);
+        sampler.rebuild_from(pool.iter().map(|&(_, w)| w));
+        sampler.sample_distinct(k, rng).into_iter().map(|i| pool[i].0).collect()
+    }
+
+    /// The select body with the round deadline already computed —
+    /// shared by `select` (computes it fresh) and `plan` (computes it
+    /// once for both selection and the returned deadline).
+    fn select_with_deadline(
+        &mut self,
+        round: u64,
+        candidates: &[Candidate],
+        k: usize,
+        deadline: f64,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        if candidates.is_empty() || k == 0 {
+            return Vec::new();
         }
-        picked
+        let eps = self.epsilon(round);
+
+        self.explored_idx.clear();
+        self.unexplored_ids.clear();
+        for (i, c) in candidates.iter().enumerate() {
+            if c.stat_util.is_none() {
+                self.unexplored_ids.push(c.id);
+            } else {
+                self.explored_idx.push(i as u32);
+            }
+        }
+
+        // Exploration quota: ε·k, but never more than available. One
+        // shuffle covers both the quota and the thin-pool fallback.
+        let k_explore = ((eps * k as f64).round() as usize)
+            .min(self.unexplored_ids.len())
+            .min(k);
+        rng.shuffle(&mut self.unexplored_ids);
+        let mut selected: Vec<usize> = self.unexplored_ids[..k_explore].to_vec();
+
+        // Exploitation: weighted draw from the top utility band.
+        let k_exploit = k - selected.len();
+        if k_exploit > 0 && !self.explored_idx.is_empty() {
+            self.scratch.clear();
+            self.scratch.extend(
+                self.explored_idx
+                    .iter()
+                    .map(|&i| candidates[i as usize].stat_util.unwrap_or(0.0)),
+            );
+            let util_scale = percentile_in_place(&mut self.scratch, 0.95).max(1e-9);
+            self.scored.clear();
+            for &i in &self.explored_idx {
+                let c = &candidates[i as usize];
+                self.scored.push((c.id, score(&self.cfg, c, round, deadline, util_scale)));
+            }
+            let band = ((k_exploit as f64) * (1.0 + CUTOFF_BAND)).ceil() as usize;
+            rank_top_band(&mut self.scored, band.max(k_exploit));
+            selected.extend(Self::weighted_pick(&mut self.sampler, &self.scored, k_exploit, rng));
+        } else if k_exploit > 0 {
+            // Nothing explored yet: fill from the unexplored remainder
+            // (already uniformly shuffled above, disjoint from the
+            // exploration picks by construction).
+            selected.extend(
+                self.unexplored_ids[k_explore..].iter().take(k_exploit).copied(),
+            );
+        }
+        selected
     }
 }
 
@@ -90,52 +180,22 @@ impl Selector for OortSelector {
         k: usize,
         rng: &mut Rng,
     ) -> Vec<usize> {
-        if candidates.is_empty() || k == 0 {
-            return Vec::new();
-        }
         let deadline = self.deadline_s(candidates);
-        let eps = self.epsilon(round);
+        self.select_with_deadline(round, candidates, k, deadline, rng)
+    }
 
-        let (unexplored, explored): (Vec<&Candidate>, Vec<&Candidate>) =
-            candidates.iter().partition(|c| c.stat_util.is_none());
-
-        // Exploration quota: ε·k, but never more than available.
-        let k_explore = ((eps * k as f64).round() as usize)
-            .min(unexplored.len())
-            .min(k);
-        let mut selected: Vec<usize> = {
-            let mut ids: Vec<usize> = unexplored.iter().map(|c| c.id).collect();
-            rng.shuffle(&mut ids);
-            ids.truncate(k_explore);
-            ids
-        };
-
-        // Exploitation: weighted draw from the top utility band.
-        let k_exploit = k - selected.len();
-        if k_exploit > 0 && !explored.is_empty() {
-            self.scratch.clear();
-            self.scratch.extend(explored.iter().map(|c| c.stat_util.unwrap_or(0.0)));
-            let util_scale = percentile_in_place(&mut self.scratch, 0.95).max(1e-9);
-            let mut scored: Vec<(usize, f64)> = explored
-                .iter()
-                .map(|c| (c.id, self.score(c, round, deadline, util_scale)))
-                .collect();
-            scored.sort_by(|a, b| b.1.total_cmp(&a.1));
-            let band = ((k_exploit as f64) * (1.0 + CUTOFF_BAND)).ceil() as usize;
-            scored.truncate(band.max(k_exploit));
-            let mut pool = scored;
-            selected.extend(Self::weighted_pick(&mut pool, k_exploit, rng));
-        } else if k_exploit > 0 {
-            // Nothing explored yet: fill from unexplored remainder.
-            let mut rest: Vec<usize> = unexplored
-                .iter()
-                .map(|c| c.id)
-                .filter(|id| !selected.contains(id))
-                .collect();
-            rng.shuffle(&mut rest);
-            selected.extend(rest.into_iter().take(k_exploit));
-        }
-        selected
+    fn plan(
+        &mut self,
+        round: u64,
+        candidates: &[Candidate],
+        k: usize,
+        rng: &mut Rng,
+    ) -> (Vec<usize>, f64) {
+        // One pacer-percentile pass serves both the Eq. (2) penalty
+        // inside selection and the round deadline the engine needs.
+        let deadline = self.deadline_s(candidates);
+        let selected = self.select_with_deadline(round, candidates, k, deadline, rng);
+        (selected, deadline)
     }
 
     fn feedback(&mut self, fb: &RoundFeedback<'_>) {
@@ -184,7 +244,7 @@ impl Selector for OortSelector {
 mod tests {
     use super::*;
     use crate::selection::ParticipantOutcome;
-    
+
     fn cand(id: usize, util: Option<f64>, dur: f64, battery: f64) -> Candidate {
         Candidate {
             id,
@@ -223,6 +283,25 @@ mod tests {
         // Top band is ids 13..20 (utility 14..20 within 1.5x cutoff);
         // high-utility clients must dominate selections.
         assert!(hits > 150, "high-utility ids picked {hits}/250 times");
+    }
+
+    #[test]
+    fn band_partition_matches_full_sort() {
+        // The select_nth band must hold exactly what a full sort would
+        // keep, in the same (score desc, id asc) order — including ties.
+        let mut rng = Rng::seed_from_u64(42);
+        for n in [1usize, 5, 40, 500] {
+            for band in [1usize, 3, 10, n, n + 7] {
+                let mut scored: Vec<(usize, f64)> = (0..n)
+                    .map(|id| (id, (rng.gen_range_usize(0, 8) as f64) * 0.5))
+                    .collect();
+                let mut reference = scored.clone();
+                reference.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+                reference.truncate(band);
+                rank_top_band(&mut scored, band);
+                assert_eq!(scored, reference, "n={n} band={band}");
+            }
+        }
     }
 
     #[test]

@@ -13,11 +13,13 @@ pub struct RandomSelector {
     cfg: SelectorConfig,
     /// Reusable percentile buffer for `deadline_s` (no per-round Vec).
     scratch: Vec<f64>,
+    /// Reusable id buffer for `select` (no per-round Vec).
+    ids: Vec<usize>,
 }
 
 impl RandomSelector {
     pub fn new(cfg: SelectorConfig) -> Self {
-        Self { cfg, scratch: Vec::new() }
+        Self { cfg, scratch: Vec::new(), ids: Vec::new() }
     }
 }
 
@@ -29,10 +31,17 @@ impl Selector for RandomSelector {
         k: usize,
         rng: &mut Rng,
     ) -> Vec<usize> {
-        let mut ids: Vec<usize> = candidates.iter().map(|c| c.id).collect();
-        rng.shuffle(&mut ids);
-        ids.truncate(k);
-        ids
+        self.ids.clear();
+        self.ids.extend(candidates.iter().map(|c| c.id));
+        let n = self.ids.len();
+        let k = k.min(n);
+        // Partial Fisher–Yates: a uniform k-prefix costs k draws, not
+        // the E−1 a full shuffle of the candidate pool would.
+        for i in 0..k {
+            let j = rng.gen_range_usize(i, n - 1);
+            self.ids.swap(i, j);
+        }
+        self.ids[..k].to_vec()
     }
 
     fn feedback(&mut self, _fb: &RoundFeedback<'_>) {}

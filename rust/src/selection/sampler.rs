@@ -1,0 +1,301 @@
+//! Weighted sampling without replacement — the one draw primitive both
+//! selectors use (Oort's exploitation band and EAFL's energy-weighted
+//! exploration previously carried separate inline O(k·N) linear scans).
+//!
+//! Weights are quantized to u64 grid units relative to the pool
+//! maximum, which makes every prefix sum *exact and associative*: the
+//! O(log n) Fenwick inverse-CDF descent is then provably identical to a
+//! linear scan over the same quantized weights — not merely close in
+//! distribution. [`weighted_sample_linear`] is that linear-scan
+//! reference, kept for the equivalence property test
+//! (`rust/tests/pool_aggregates.rs`) and as the baseline in
+//! `benches/plan_path_throughput.rs`. Both consume exactly one
+//! `rng.gen_f64()` per draw, so swapping implementations never perturbs
+//! the RNG stream.
+
+use crate::util::rng::Rng;
+
+/// Quantization grid: the largest weight maps to 2³² units, so relative
+/// resolution is ~2.3e-10 and a million-entry pool tops out near 2⁵²
+/// total units — comfortably inside u64.
+const WEIGHT_GRID: f64 = (1u64 << 32) as f64;
+
+/// Map raw weights onto the exact integer grid, into a reused buffer.
+/// Non-positive and non-finite weights get the minimal representable
+/// weight (1 unit), so every entry stays drawable — matching the old
+/// linear scans' clamp semantics where no candidate had literally zero
+/// probability. The max is floored at 1e-290 so a subnormal pool can
+/// never overflow `scale` (and with it the u64 grid) to infinity.
+/// Takes a cloneable iterator (two passes: max, then map) so callers
+/// can feed weights straight out of their pools without staging them
+/// in a `Vec<f64>` first.
+fn quantize_weights_into<I>(weights: I, out: &mut Vec<u64>)
+where
+    I: Iterator<Item = f64> + Clone,
+{
+    out.clear();
+    let max = weights.clone().filter(|w| w.is_finite()).fold(0.0f64, f64::max);
+    if max <= 0.0 {
+        out.extend(weights.map(|_| 1));
+        return;
+    }
+    let scale = WEIGHT_GRID / max.max(1e-290);
+    out.extend(weights.map(|w| {
+        if w.is_finite() && w > 0.0 {
+            ((w * scale).ceil() as u64).max(1)
+        } else {
+            1
+        }
+    }));
+}
+
+/// One draw's target grid position from a single uniform variate.
+fn target_units(r: f64, total: u64) -> u64 {
+    ((r * total as f64) as u64).min(total - 1)
+}
+
+/// Fenwick-tree (binary indexed) inverse-CDF sampler over quantized
+/// weights. Build is O(n); each draw-without-replacement is O(log n).
+pub struct FenwickSampler {
+    /// 1-indexed Fenwick tree over quantized weights.
+    tree: Vec<u64>,
+    /// Current weight of each (0-indexed) item; 0 = removed.
+    weights: Vec<u64>,
+    /// Sum of all remaining weights.
+    total: u64,
+    /// Largest power of two ≤ n (descent mask).
+    top_bit: usize,
+}
+
+impl FenwickSampler {
+    /// An empty sampler — the reusable-scratch starting point; call
+    /// [`FenwickSampler::rebuild`] to load a pool.
+    pub fn empty() -> Self {
+        Self { tree: Vec::new(), weights: Vec::new(), total: 0, top_bit: 0 }
+    }
+
+    /// Build a sampler over `weights` (see [`quantize_weights_into`]
+    /// for the clamp semantics).
+    pub fn new(weights: &[f64]) -> Self {
+        let mut sampler = Self::empty();
+        sampler.rebuild(weights);
+        sampler
+    }
+
+    /// Reload the sampler with a fresh pool, reusing the tree and
+    /// weight buffers — steady-state O(n) with zero allocation, which
+    /// is what keeps the selectors' per-round draws allocation-free.
+    pub fn rebuild(&mut self, weights: &[f64]) {
+        self.rebuild_from(weights.iter().copied());
+    }
+
+    /// [`FenwickSampler::rebuild`] from a cloneable weight iterator —
+    /// lets the selectors quantize straight out of their `(id, weight)`
+    /// pools with no staging buffer.
+    pub fn rebuild_from<I>(&mut self, weights: I)
+    where
+        I: Iterator<Item = f64> + Clone,
+    {
+        quantize_weights_into(weights, &mut self.weights);
+        let n = self.weights.len();
+        self.tree.clear();
+        self.tree.resize(n + 1, 0);
+        // O(n) Fenwick construction.
+        for i in 0..n {
+            let pos = i + 1;
+            self.tree[pos] += self.weights[i];
+            let parent = pos + (pos & pos.wrapping_neg());
+            if parent <= n {
+                let subtotal = self.tree[pos];
+                self.tree[parent] += subtotal;
+            }
+        }
+        self.total = self.weights.iter().sum();
+        let top_exp =
+            if n == 0 { 0 } else { usize::BITS as usize - 1 - n.leading_zeros() as usize };
+        self.top_bit = 1usize << top_exp;
+    }
+
+    /// Remaining (non-removed) total weight in grid units.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Draw one index without replacement; `None` once the pool is
+    /// exhausted. Consumes exactly one `gen_f64` per successful draw.
+    pub fn draw(&mut self, rng: &mut Rng) -> Option<usize> {
+        if self.total == 0 {
+            return None;
+        }
+        let target = target_units(rng.gen_f64(), self.total);
+        // Descent: find the largest pos with prefix_sum(pos) <= target;
+        // the picked item is then `pos` (0-indexed), the owner of the
+        // grid interval containing `target`.
+        let n = self.weights.len();
+        let mut pos = 0usize;
+        let mut rem = target;
+        let mut mask = self.top_bit;
+        while mask != 0 {
+            let next = pos + mask;
+            if next <= n && self.tree[next] <= rem {
+                pos = next;
+                rem -= self.tree[next];
+            }
+            mask >>= 1;
+        }
+        let idx = pos; // prefix_sum(idx) <= target < prefix_sum(idx + 1)
+        self.remove(idx);
+        Some(idx)
+    }
+
+    /// Zero out `idx`'s weight so it cannot be drawn again.
+    fn remove(&mut self, idx: usize) {
+        let w = self.weights[idx];
+        debug_assert!(w > 0, "drew an already-removed index");
+        self.weights[idx] = 0;
+        self.total -= w;
+        let n = self.weights.len();
+        let mut pos = idx + 1;
+        while pos <= n {
+            self.tree[pos] -= w;
+            pos += pos & pos.wrapping_neg();
+        }
+    }
+
+    /// Draw up to `k` distinct indices (fewer if the pool runs out).
+    pub fn sample_distinct(&mut self, k: usize, rng: &mut Rng) -> Vec<usize> {
+        let mut picked = Vec::with_capacity(k.min(self.weights.len()));
+        while picked.len() < k {
+            match self.draw(rng) {
+                Some(idx) => picked.push(idx),
+                None => break,
+            }
+        }
+        picked
+    }
+}
+
+/// Linear-scan reference: identical quantization, identical RNG
+/// consumption, O(k·n) — the executable specification the Fenwick
+/// sampler is tested against.
+pub fn weighted_sample_linear(weights: &[f64], k: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut q = Vec::new();
+    quantize_weights_into(weights.iter().copied(), &mut q);
+    let mut total: u64 = q.iter().sum();
+    let mut picked = Vec::with_capacity(k.min(q.len()));
+    while picked.len() < k && total > 0 {
+        let target = target_units(rng.gen_f64(), total);
+        let mut cum = 0u64;
+        let mut idx = 0usize;
+        for (i, &w) in q.iter().enumerate() {
+            cum += w;
+            if target < cum {
+                idx = i;
+                break;
+            }
+        }
+        picked.push(idx);
+        total -= q[idx];
+        q[idx] = 0;
+    }
+    picked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fenwick_matches_linear_reference() {
+        let mut rng = Rng::seed_from_u64(1);
+        for n in [1usize, 2, 3, 17, 100, 1000] {
+            let weights: Vec<f64> =
+                (0..n).map(|_| rng.gen_range_f64(1e-9, 50.0)).collect();
+            for k in [1usize, 2, n / 2 + 1, n, n + 5] {
+                for seed in 0..5 {
+                    let mut s = FenwickSampler::new(&weights);
+                    let a = s.sample_distinct(k, &mut Rng::seed_from_u64(seed));
+                    let b =
+                        weighted_sample_linear(&weights, k, &mut Rng::seed_from_u64(seed));
+                    assert_eq!(a, b, "n={n} k={k} seed={seed}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn draws_are_distinct_and_exhaustive() {
+        let weights = vec![5.0, 1.0, 3.0, 0.0, 2.0];
+        let mut s = FenwickSampler::new(&weights);
+        let mut rng = Rng::seed_from_u64(7);
+        let picked = s.sample_distinct(10, &mut rng);
+        let mut sorted = picked.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4], "exhausts the pool, no repeats");
+        assert!(s.draw(&mut rng).is_none());
+    }
+
+    #[test]
+    fn heavy_weight_dominates() {
+        let weights = vec![1.0, 1000.0, 1.0];
+        let mut first_pick_heavy = 0;
+        for seed in 0..200 {
+            let mut s = FenwickSampler::new(&weights);
+            let p = s.sample_distinct(1, &mut Rng::seed_from_u64(seed));
+            if p == vec![1] {
+                first_pick_heavy += 1;
+            }
+        }
+        assert!(first_pick_heavy > 180, "got {first_pick_heavy}/200");
+    }
+
+    #[test]
+    fn zero_and_negative_weights_stay_drawable() {
+        // Degenerate pools (all-zero, negatives, NaN) fall back to
+        // uniform minimal weights rather than dividing by zero.
+        for weights in [vec![0.0, 0.0, 0.0], vec![-1.0, 0.0, f64::NAN]] {
+            let mut s = FenwickSampler::new(&weights);
+            let picked = s.sample_distinct(3, &mut Rng::seed_from_u64(3));
+            let mut sorted = picked;
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2]);
+        }
+    }
+
+    #[test]
+    fn empty_pool_yields_nothing() {
+        let mut s = FenwickSampler::new(&[]);
+        assert!(s.draw(&mut Rng::seed_from_u64(0)).is_none());
+        assert!(weighted_sample_linear(&[], 3, &mut Rng::seed_from_u64(0)).is_empty());
+    }
+
+    #[test]
+    fn subnormal_pools_do_not_overflow_the_grid() {
+        // A pool whose max weight is subnormal must not blow the scale
+        // (and with it every quantized weight) up to infinity/u64::MAX.
+        let weights = vec![1e-305, 5e-306, 1e-320];
+        let mut s = FenwickSampler::new(&weights);
+        assert!(s.total() < u64::MAX / 2, "grid overflowed: {}", s.total());
+        let picked = s.sample_distinct(3, &mut Rng::seed_from_u64(1));
+        let mut sorted = picked;
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn rebuild_reuses_cleanly() {
+        let mut s = FenwickSampler::new(&[1.0, 2.0, 3.0]);
+        s.sample_distinct(2, &mut Rng::seed_from_u64(2));
+        // Reloading with a different pool behaves exactly like a fresh
+        // sampler over that pool.
+        let weights = vec![4.0, 1.0, 0.5, 9.0];
+        s.rebuild(&weights);
+        for seed in 0..10 {
+            let mut fresh = FenwickSampler::new(&weights);
+            let a = fresh.sample_distinct(4, &mut Rng::seed_from_u64(seed));
+            s.rebuild(&weights);
+            let b = s.sample_distinct(4, &mut Rng::seed_from_u64(seed));
+            assert_eq!(a, b);
+        }
+    }
+}

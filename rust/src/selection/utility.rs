@@ -51,15 +51,27 @@ pub fn eafl_reward(f: f64, util_norm: f64, power: f64) -> f64 {
 /// Min-max normalize `values` into [0,1]; all-equal values map to 0.5
 /// (no preference signal either way).
 pub fn min_max_normalize(values: &[f64]) -> Vec<f64> {
+    let mut out = values.to_vec();
+    min_max_normalize_in_place(&mut out);
+    out
+}
+
+/// In-place variant of [`min_max_normalize`] — the selectors' hot path
+/// normalizes a reused scratch buffer once per round, so the allocating
+/// version above is only for one-shot callers.
+pub fn min_max_normalize_in_place(values: &mut [f64]) {
     if values.is_empty() {
-        return Vec::new();
+        return;
     }
     let min = values.iter().cloned().fold(f64::MAX, f64::min);
     let max = values.iter().cloned().fold(f64::MIN, f64::max);
     if (max - min).abs() < 1e-12 {
-        return vec![0.5; values.len()];
+        values.fill(0.5);
+        return;
     }
-    values.iter().map(|v| (v - min) / (max - min)).collect()
+    for v in values.iter_mut() {
+        *v = (*v - min) / (max - min);
+    }
 }
 
 /// UCB-style staleness bonus: grows with rounds since last selection,

@@ -9,7 +9,10 @@
 //!  - [`toml`] — TOML-subset parser/writer (experiment configs).
 //!  - [`prop`] — tiny property-testing harness (randomized cases with
 //!    seed reporting on failure) used by the invariant tests.
+//!  - [`fixed`] — exact fixed-point accumulator backing the registry's
+//!    incrementally maintained population aggregates.
 
+pub mod fixed;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,191 @@
+//! Fast-path consistency properties: the registry's incrementally
+//! maintained SoA pool + population aggregates must be *exactly* (not
+//! approximately) the state a brute-force rebuild produces after any
+//! mutation sequence, and the Fenwick weighted sampler must pick the
+//! same clients as its linear-scan reference on the same RNG stream.
+
+use eafl::config::{ExperimentConfig, SelectorKind};
+use eafl::coordinator::{Coordinator, PoolAggregates, Registry};
+use eafl::runtime::MockRuntime;
+use eafl::selection::{weighted_sample_linear, Candidate, FenwickSampler};
+use eafl::util::prop::forall;
+use eafl::util::rng::Rng;
+
+fn small_registry(rng: &mut Rng) -> (ExperimentConfig, Registry) {
+    let mut cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+    cfg.federation.num_clients = rng.gen_range_usize(5, 40);
+    cfg.devices.seed = rng.next_u64();
+    cfg.network.seed = rng.next_u64();
+    cfg.data.seed = rng.next_u64();
+    cfg.data.min_samples = 3;
+    cfg.data.max_samples = 8;
+    let registry = Registry::build(&cfg, 35, 1000);
+    (cfg, registry)
+}
+
+/// Apply one random mutation through the registry's guard API.
+fn random_mutation(registry: &mut Registry, rng: &mut Rng, step: u64) {
+    let id = rng.gen_range_usize(0, registry.len() - 1);
+    let cap = registry.client(id).battery.capacity_joules();
+    match rng.gen_range_usize(0, 6) {
+        0 => {
+            // FL drain — sometimes lethal.
+            let e = cap * rng.gen_range_f64(0.0, 1.5);
+            registry.drain_fl(id, e, step as f64 * 0.1);
+        }
+        1 => {
+            let e = cap * rng.gen_range_f64(0.0, 0.2);
+            registry.drain_background(id, e, step as f64 * 0.1);
+        }
+        2 => {
+            registry.charge_add(id, cap * rng.gen_range_f64(0.0, 0.6));
+        }
+        3 => {
+            registry.recharge_to(id, rng.gen_f64());
+        }
+        4 => {
+            // Feedback-style stats update (selection + utility).
+            let util = rng.gen_range_f64(0.0, 300.0);
+            let dur = rng.gen_range_f64(10.0, 2000.0);
+            let mut s = registry.stats_mut(id);
+            s.times_selected += 1;
+            s.last_selected_round = step;
+            s.stat_util = Some(util);
+            s.measured_duration_s = Some(dur);
+        }
+        _ => {
+            // Blacklist-style ban.
+            registry.stats_mut(id).banned_until_round = step + 10;
+        }
+    }
+}
+
+/// Incremental aggregates == brute-force recomputation, bit for bit,
+/// after arbitrary drain/charge/ban/feedback sequences.
+#[test]
+fn prop_aggregates_exactly_match_bruteforce() {
+    forall(64, |rng| {
+        let (_cfg, mut registry) = small_registry(rng);
+        assert_eq!(*registry.aggregates(), PoolAggregates::recompute(&registry));
+        let steps = rng.gen_range_usize(1, 120) as u64;
+        for step in 0..steps {
+            random_mutation(&mut registry, rng, step);
+        }
+        let brute = PoolAggregates::recompute(&registry);
+        assert_eq!(
+            *registry.aggregates(),
+            brute,
+            "incremental aggregates drifted from brute force"
+        );
+        // The O(1) metric accessors agree with O(N) scans.
+        let alive = registry.clients().iter().filter(|c| c.battery.is_alive()).count();
+        assert_eq!(registry.alive_count(), alive);
+        assert_eq!(registry.dead_count(), registry.len() - alive);
+        let fl: f64 = registry.clients().iter().map(|c| c.battery.fl_energy_j).sum();
+        assert!((registry.total_fl_energy_j() - fl).abs() < 1e-6);
+        let counts = registry.selection_counts();
+        assert_eq!(
+            registry.aggregates().selected_sum,
+            counts.iter().sum::<u64>()
+        );
+        assert_eq!(
+            registry.aggregates().selected_sum_sq,
+            counts.iter().map(|&c| (c as u128) * (c as u128)).sum::<u128>()
+        );
+    });
+}
+
+/// The SoA fast path produces the same candidates as the allocating
+/// reference that recomputes every projection, after any mutations.
+#[test]
+fn prop_fill_candidates_matches_reference() {
+    forall(48, |rng| {
+        let (cfg, mut registry) = small_registry(rng);
+        let steps = rng.gen_range_usize(0, 60) as u64;
+        for step in 0..steps {
+            random_mutation(&mut registry, rng, step);
+        }
+        let round = rng.gen_range_usize(1, 30) as u64;
+        let floor = rng.gen_range_f64(0.0, 0.3);
+        // Deterministic pseudo-availability gate, applied to both paths.
+        let avail_seed = rng.next_u64();
+        let gate = |id: usize| (id as u64).wrapping_mul(avail_seed) % 4 != 0;
+
+        let mut reference = registry.candidates(
+            round,
+            floor,
+            cfg.training.local_steps,
+            cfg.data.batch_size,
+        );
+        reference.retain(|c| gate(c.id));
+        let mut fast: Vec<Candidate> = Vec::new();
+        registry.fill_candidates(round, floor, gate, &mut fast);
+
+        assert_eq!(fast.len(), reference.len());
+        for (a, b) in fast.iter().zip(&reference) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.stat_util, b.stat_util);
+            assert_eq!(a.measured_duration_s, b.measured_duration_s);
+            assert_eq!(a.expected_duration_s, b.expected_duration_s);
+            assert_eq!(a.last_selected_round, b.last_selected_round);
+            assert_eq!(a.battery_frac, b.battery_frac);
+            assert_eq!(a.projected_drain_frac, b.projected_drain_frac);
+        }
+    });
+}
+
+/// Fenwick inverse-CDF sampling picks exactly what the linear-scan
+/// reference picks, for the same weights and RNG stream.
+#[test]
+fn prop_fenwick_sampler_matches_linear_reference() {
+    forall(96, |rng| {
+        let n = rng.gen_range_usize(1, 300);
+        let weights: Vec<f64> = (0..n)
+            .map(|_| match rng.gen_range_usize(0, 3) {
+                0 => rng.gen_range_f64(1e-12, 1e-6), // tiny
+                1 => rng.gen_range_f64(0.1, 10.0),   // typical
+                _ => rng.gen_range_f64(100.0, 1e6),  // dominant
+            })
+            .collect();
+        let k = rng.gen_range_usize(1, n + 3);
+        let draw_seed = rng.next_u64();
+        let mut sampler = FenwickSampler::new(&weights);
+        let fenwick = sampler.sample_distinct(k, &mut Rng::seed_from_u64(draw_seed));
+        let linear =
+            weighted_sample_linear(&weights, k, &mut Rng::seed_from_u64(draw_seed));
+        assert_eq!(fenwick, linear, "n={n} k={k}");
+        assert_eq!(fenwick.len(), k.min(n), "must draw k distinct or exhaust");
+        let mut dedup = fenwick.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), fenwick.len(), "duplicate draw");
+    });
+}
+
+/// End to end: a full coordinator run (every engine mutation site —
+/// sim drains, background drains, recharge, feedback, blacklist)
+/// leaves the incremental aggregates exactly equal to brute force.
+#[test]
+fn coordinator_run_keeps_aggregates_exact() {
+    for kind in [SelectorKind::Random, SelectorKind::Oort, SelectorKind::Eafl] {
+        let mut cfg = ExperimentConfig::smoke(kind);
+        cfg.federation.rounds = 8;
+        cfg.data.min_samples = 5;
+        cfg.data.max_samples = 20;
+        cfg.data.test_samples = 128;
+        // Exercise the recharge mutation path too.
+        cfg.devices.recharge_after_hours = 0.5;
+        cfg.devices.recharge_to_fraction = 0.6;
+        let runtime = MockRuntime { train_batch: cfg.data.batch_size, ..MockRuntime::default() };
+        let mut coordinator = Coordinator::new(cfg, &runtime).unwrap();
+        for round in 1..=8u64 {
+            coordinator.run_round(round).unwrap();
+            let registry = coordinator.registry();
+            assert_eq!(
+                *registry.aggregates(),
+                PoolAggregates::recompute(registry),
+                "{kind:?} round {round}: aggregates drifted"
+            );
+        }
+    }
+}

@@ -191,16 +191,16 @@ fn prop_candidates_respect_eligibility() {
         let cfg = random_smoke_config(rng, SelectorKind::Eafl);
         let mut registry = Registry::build(&cfg, 35, 1000);
         // Randomly kill/drain some clients.
-        for c in registry.clients.iter_mut() {
+        for id in 0..registry.len() {
             if rng.gen_bool(0.3) {
-                let cap = c.battery.capacity_joules();
-                c.battery.drain_fl(cap * rng.gen_range_f64(0.5, 2.0), 1.0);
+                let cap = registry.client(id).battery.capacity_joules();
+                registry.drain_fl(id, cap * rng.gen_range_f64(0.5, 2.0), 1.0);
             }
         }
         let floor = rng.gen_range_f64(0.0, 0.3);
         let cands = registry.candidates(1, floor, 5, cfg.data.batch_size);
         for cand in &cands {
-            let c = &registry.clients[cand.id];
+            let c = registry.client(cand.id);
             assert!(c.battery.is_alive());
             assert!(c.battery.fraction() > floor);
             assert!(cand.expected_duration_s > 0.0);
