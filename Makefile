@@ -12,9 +12,11 @@ test:
 
 # Runs every bench; plan_path_throughput records the perf trajectory
 # into BENCH_plan.json at the repo root (eafl-bench-v1 schema, default
-# --out of that bench).
+# --out of that bench), and each run is appended — stamped with the git
+# SHA — to BENCH_history.jsonl so the trend across commits is queryable.
 bench:
 	cargo bench
+	./scripts/append_bench_history.sh BENCH_plan.json BENCH_history.jsonl
 
 # Tier-1 verification: build + tests + (if installed) clippy + fmt.
 verify:

@@ -18,14 +18,24 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+# Worker-count invariance is a contract, not a convention: the whole
+# suite must pass again with 8 execution workers forced, so every test
+# (goldens, campaign bytes, cross-process sharding) enforces it on
+# every commit — not only the dedicated determinism tests. The first
+# pass may bless missing golden files; this pass then pins them.
+echo "==> cargo test -q (EAFL_WORKERS=8)"
+EAFL_WORKERS=8 cargo test -q
+
 # Benches must always compile, even though CI never runs the heavy ones.
 echo "==> cargo bench --no-run"
 cargo bench --no-run
 
 # Scenario sweep smoke: 2 rounds over two scenarios x two selectors on
 # the mock runtime must produce a merged CSV with a scenario column and
-# exactly header + 4 rows (2 selectors x 2 scenarios x 1 seed).
-echo "==> scenario sweep smoke"
+# exactly header + 4 rows (2 selectors x 2 scenarios x 1 seed). With
+# --jobs 2 this now runs through the sharded scale-out path: two shard
+# child processes over one --out, auto-merged on completion.
+echo "==> scenario sweep smoke (2 shard processes)"
 SMOKE_OUT="$(mktemp -d)"
 trap 'rm -rf "$SMOKE_OUT"' EXIT
 ./target/release/eafl sweep --mock --scenario steady,diurnal \
@@ -37,7 +47,14 @@ head -1 "$SMOKE_CSV" | grep -q "^selector,scenario," \
 rows="$(wc -l < "$SMOKE_CSV")"
 [ "$rows" -eq 5 ] \
   || { echo "FAIL: expected 5 CSV lines (header + 4 runs), got $rows"; exit 1; }
-echo "    sweep smoke OK ($rows lines in $(basename "$SMOKE_CSV"))"
+[ -f "$SMOKE_OUT/sweep.manifest.json" ] \
+  || { echo "FAIL: sweep did not write the campaign manifest"; exit 1; }
+# An explicit re-merge must be a no-op: byte-identical merged CSV.
+cp "$SMOKE_CSV" "$SMOKE_OUT/before-merge.csv"
+./target/release/eafl merge "$SMOKE_OUT" >/dev/null
+cmp -s "$SMOKE_CSV" "$SMOKE_OUT/before-merge.csv" \
+  || { echo "FAIL: eafl merge changed the merged CSV bytes"; exit 1; }
+echo "    sweep smoke OK ($rows lines in $(basename "$SMOKE_CSV"), merge stable)"
 
 # Plan-path bench smoke: a 10k-client pass must run and emit a
 # machine-readable eafl-bench-v1 JSON with the expected shape.

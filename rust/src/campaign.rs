@@ -20,18 +20,31 @@
 //! cells whose names match are reloaded instead of recomputed — the
 //! cell name encodes every coordinate, and summaries round-trip through
 //! JSON bit-exactly.
+//!
+//! The same property scales campaigns past one process: a
+//! [`config::ShardSpec`] on the [`CampaignSpec`] restricts execution to
+//! the grid cells whose *name* hashes to this shard ([`shard_of`] —
+//! FNV-1a of the cell name mod shard count, so any process computes the
+//! same partition with zero coordination). Shards write the same
+//! per-run artifacts plus a shared grid manifest
+//! ([`report::Manifest`]); [`report::merge_dirs`] then reassembles the
+//! full campaign in grid order, byte-identical to a single-process
+//! sweep.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 use anyhow::{Context, Result};
 
-use crate::config::{ExperimentConfig, SelectorKind};
+use crate::config::{ExperimentConfig, SelectorKind, ShardSpec};
 use crate::coordinator::Coordinator;
 use crate::metrics::Summary;
+use crate::report::{fnv1a64, CellMeta, Manifest};
 use crate::runtime::ModelRuntime;
 use crate::util::json::Json;
+
+pub use crate::report::{CampaignReport, CampaignRun};
 
 /// The sweep axes. Empty `scenarios` / `f_values` / `client_counts`
 /// inherit the base config's value (a single grid point on that axis).
@@ -74,6 +87,13 @@ pub struct CampaignSpec {
     /// Skip grid cells the output directory already holds summaries
     /// for (on by default; `--fresh` recomputes everything).
     pub resume: bool,
+    /// Run only the grid cells this shard owns (`None` = the whole
+    /// grid). Partitioning is by [`shard_of`] over the cell name, so
+    /// shards compose without coordination; a shard with `count > 1`
+    /// writes per-run artifacts and the grid manifest but *not* the
+    /// merged report — that is `report::merge_dirs`'s job once every
+    /// shard has finished.
+    pub shard: Option<ShardSpec>,
 }
 
 impl CampaignSpec {
@@ -85,8 +105,42 @@ impl CampaignSpec {
             jobs: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             workers_per_run: 1,
             resume: true,
+            shard: None,
         }
     }
+}
+
+/// Which shard of `count` owns the grid cell named `name`: a stable
+/// FNV-1a hash of the name, mod the shard count. Properties the
+/// sharding protocol rests on: (1) deterministic — any process, any
+/// host, computes the same owner; (2) a function of the *name* only, so
+/// it survives grid reorderings and axis insertions as long as the cell
+/// itself (whose name encodes every coordinate) is unchanged.
+pub fn shard_of(name: &str, count: usize) -> usize {
+    if count <= 1 {
+        return 0;
+    }
+    (fnv1a64(name.as_bytes()) % count as u64) as usize
+}
+
+/// Build the campaign's grid [`Manifest`]: every cell of the *full*
+/// expanded grid, in expansion order, with its config-fingerprint hash.
+/// Shards all derive this from the same spec, so their manifest bytes
+/// are identical — which is exactly what `report::merge_dirs` checks.
+pub fn build_manifest(spec: &CampaignSpec, runs: &[RunSpec]) -> Result<Manifest> {
+    let mut cells = Vec::with_capacity(runs.len());
+    for run in runs {
+        cells.push(CellMeta {
+            name: run.cfg.name.clone(),
+            selector: run.selector,
+            scenario: run.scenario.clone(),
+            seed: run.seed,
+            f: run.f,
+            clients: run.clients,
+            fingerprint_fnv: fnv1a64(cell_fingerprint(&run.cfg)?.as_bytes()),
+        });
+    }
+    Ok(Manifest { campaign: spec.name.clone(), cells })
 }
 
 /// One grid point: the coordinates plus the fully resolved config.
@@ -98,24 +152,6 @@ pub struct RunSpec {
     pub f: f64,
     pub clients: usize,
     pub cfg: ExperimentConfig,
-}
-
-/// One finished run: its coordinates plus the end-of-run summary.
-#[derive(Debug, Clone)]
-pub struct CampaignRun {
-    pub selector: SelectorKind,
-    pub scenario: String,
-    pub seed: u64,
-    pub f: f64,
-    pub clients: usize,
-    pub summary: Summary,
-}
-
-/// The merged campaign result, in grid order.
-#[derive(Debug, Clone)]
-pub struct CampaignReport {
-    pub name: String,
-    pub runs: Vec<CampaignRun>,
 }
 
 /// Derive every per-run RNG stream from the grid seed so seeds — not
@@ -299,20 +335,47 @@ fn load_finished(dir: &Path, campaign: &str, runs: &[RunSpec]) -> HashMap<String
     out
 }
 
-/// Run the whole campaign; `out_dir` (if given) receives per-run CSVs
-/// and the merged `<name>.campaign.json` / `<name>.campaign.csv`.
+/// Run the whole campaign; `out_dir` (if given) receives per-run CSVs,
+/// the grid manifest, and — when the spec covers the full grid — the
+/// merged `<name>.campaign.json` / `<name>.campaign.csv`.
 /// With `spec.resume` (the default), grid cells whose summaries already
 /// exist in `out_dir` are reloaded instead of recomputed — the
 /// deterministic grid order and bit-exact summary round-trip make the
 /// merged report identical to a from-scratch run.
+///
+/// With `spec.shard = Some(I/N)`, only the cells [`shard_of`] assigns
+/// to shard I are executed (and returned); the merged report write is
+/// skipped for N > 1 so a partial shard can never masquerade as the
+/// whole campaign — `report::merge_dirs` assembles it once all shards
+/// are done.
 pub fn run_campaign(
     spec: &CampaignSpec,
     runtime: &dyn ModelRuntime,
     out_dir: Option<&Path>,
 ) -> Result<CampaignReport> {
-    let runs = expand(spec);
+    let full_grid = expand(spec);
+    // The manifest records the FULL grid (not this shard's slice): it
+    // is the merge's ordering/completeness authority, and every shard
+    // writing identical bytes is what lets shards share an output
+    // directory with zero coordination. Built before the shard filter
+    // consumes the grid (each RunSpec carries a whole config — don't
+    // deep-clone thousands of them just to keep the Vec alive).
+    let manifest = match out_dir {
+        Some(_) => Some(build_manifest(spec, &full_grid)?),
+        None => None,
+    };
+    let runs: Vec<RunSpec> = match spec.shard {
+        Some(shard) if shard.count > 1 => full_grid
+            .into_iter()
+            .filter(|r| shard_of(&r.cfg.name, shard.count) == shard.index)
+            .collect(),
+        _ => full_grid,
+    };
     if let Some(dir) = out_dir {
         std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+        manifest
+            .expect("manifest built whenever out_dir is set")
+            .write(dir)?;
     }
 
     let mut results: Vec<Option<Result<CampaignRun>>> = Vec::new();
@@ -434,102 +497,15 @@ pub fn run_campaign(
         }
     }
     let report = CampaignReport { name: spec.name.clone(), runs: finished };
-    if let Some(dir) = out_dir {
-        let json_path = dir.join(format!("{}.campaign.json", report.name));
-        std::fs::write(&json_path, report.to_json().to_string_pretty())
-            .with_context(|| format!("writing {json_path:?}"))?;
-        let csv_path = dir.join(format!("{}.campaign.csv", report.name));
-        std::fs::write(&csv_path, report.to_csv())
-            .with_context(|| format!("writing {csv_path:?}"))?;
+    // A true shard (count > 1) holds only its slice of the grid; the
+    // merged artifacts must always describe the whole campaign, so
+    // their emission waits for `eafl merge` / `report::merge_dirs`.
+    if spec.shard.map_or(true, |s| s.count == 1) {
+        if let Some(dir) = out_dir {
+            crate::report::write_report(dir, &report)?;
+        }
     }
     Ok(report)
-}
-
-impl CampaignReport {
-    /// Merged summary as JSON (in-tree codec; offline build, no serde).
-    pub fn to_json(&self) -> Json {
-        let runs: Vec<Json> = self
-            .runs
-            .iter()
-            .map(|r| {
-                let mut m = BTreeMap::new();
-                m.insert("selector".to_string(), Json::Str(r.selector.to_string()));
-                m.insert("scenario".to_string(), Json::Str(r.scenario.clone()));
-                m.insert("seed".to_string(), Json::Num(r.seed as f64));
-                m.insert("f".to_string(), Json::Num(r.f));
-                m.insert("clients".to_string(), Json::Num(r.clients as f64));
-                m.insert("summary".to_string(), r.summary.to_json());
-                Json::Obj(m)
-            })
-            .collect();
-        let mut top = BTreeMap::new();
-        top.insert("campaign".to_string(), Json::Str(self.name.clone()));
-        top.insert("total_runs".to_string(), Json::Num(self.runs.len() as f64));
-        top.insert("runs".to_string(), Json::Arr(runs));
-        Json::Obj(top)
-    }
-
-    /// One CSV row per run (the merged table the plots consume).
-    pub fn to_csv(&self) -> String {
-        let mut out = String::from(
-            "selector,scenario,seed,f,clients,rounds,committed_rounds,final_accuracy,\
-             best_accuracy,final_fairness,total_dropouts,mean_round_duration_s,\
-             wall_clock_h,total_fl_energy_j\n",
-        );
-        for r in &self.runs {
-            let s = &r.summary;
-            out.push_str(&format!(
-                "{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{},{:.3},{:.6},{:.3}\n",
-                r.selector,
-                r.scenario,
-                r.seed,
-                r.f,
-                r.clients,
-                s.rounds,
-                s.committed_rounds,
-                s.final_accuracy,
-                s.best_accuracy,
-                s.final_fairness,
-                s.total_dropouts,
-                s.mean_round_duration_s,
-                s.wall_clock_h,
-                s.total_fl_energy_j,
-            ));
-        }
-        out
-    }
-
-    /// Mean final accuracy per selector (quick cross-seed aggregate).
-    pub fn mean_accuracy_by_selector(&self) -> Vec<(SelectorKind, f64)> {
-        let mut acc: Vec<(SelectorKind, f64, usize)> = Vec::new();
-        for r in &self.runs {
-            match acc.iter_mut().find(|(k, _, _)| *k == r.selector) {
-                Some(slot) => {
-                    slot.1 += r.summary.final_accuracy;
-                    slot.2 += 1;
-                }
-                None => acc.push((r.selector, r.summary.final_accuracy, 1)),
-            }
-        }
-        acc.into_iter().map(|(k, sum, n)| (k, sum / n as f64)).collect()
-    }
-
-    /// Total drop-outs per (scenario, selector) — the environment-
-    /// differentiation signal (does `diurnal` kill a different number
-    /// of clients than `steady` under the same seeds?).
-    pub fn dropouts_by_scenario(&self) -> Vec<(String, SelectorKind, usize)> {
-        let mut acc: Vec<(String, SelectorKind, usize)> = Vec::new();
-        for r in &self.runs {
-            match acc
-                .iter_mut()
-                .find(|(s, k, _)| *s == r.scenario && *k == r.selector)
-            {
-                Some(slot) => slot.2 += r.summary.total_dropouts,
-                None => acc.push((r.scenario.clone(), r.selector, r.summary.total_dropouts)),
-            }
-        }
-        acc
-    }
 }
 
 #[cfg(test)]
@@ -649,46 +625,83 @@ mod tests {
     }
 
     #[test]
-    fn report_csv_has_one_row_per_run_plus_header() {
-        let report = CampaignReport {
-            name: "t".into(),
-            runs: vec![CampaignRun {
-                selector: SelectorKind::Eafl,
-                scenario: "steady".into(),
-                seed: 1,
-                f: 0.25,
-                clients: 10,
-                summary: crate::metrics::MetricsLog::new("x").summary(),
-            }],
-        };
-        let csv = report.to_csv();
-        assert_eq!(csv.lines().count(), 2);
-        assert!(csv.starts_with("selector,scenario,seed,f,clients,"));
-        assert!(csv.lines().nth(1).unwrap().starts_with("eafl,steady,1,"));
-        let parsed = Json::parse(&report.to_json().to_string_pretty()).unwrap();
-        assert_eq!(parsed.field("total_runs").unwrap().as_usize(), Some(1));
-        let run0 = &parsed.field("runs").unwrap().as_arr().unwrap()[0];
-        assert_eq!(run0.field("scenario").unwrap().as_str(), Some("steady"));
+    fn shard_partition_is_total_disjoint_and_stable() {
+        let spec = CampaignSpec::new("t", base());
+        let runs = expand(&spec);
+        for count in [1usize, 2, 3, 4, 7] {
+            let mut owned = vec![0usize; count];
+            for r in &runs {
+                let shard = shard_of(&r.cfg.name, count);
+                assert!(shard < count, "owner out of range");
+                // Stable: recomputation never moves a cell.
+                assert_eq!(shard, shard_of(&r.cfg.name, count));
+                owned[shard] += 1;
+            }
+            // Every cell is owned by exactly one shard (totality +
+            // disjointness follow from shard_of being a function).
+            assert_eq!(owned.iter().sum::<usize>(), runs.len());
+        }
+        assert_eq!(shard_of("anything", 0), 0, "degenerate counts collapse to shard 0");
+        assert_eq!(shard_of("anything", 1), 0);
     }
 
     #[test]
-    fn dropouts_by_scenario_groups_cells() {
-        let mk = |scenario: &str, selector, dropouts| {
-            let mut summary = crate::metrics::MetricsLog::new("x").summary();
-            summary.total_dropouts = dropouts;
-            CampaignRun { selector, scenario: scenario.into(), seed: 1, f: 0.25, clients: 10, summary }
-        };
-        let report = CampaignReport {
-            name: "t".into(),
-            runs: vec![
-                mk("steady", SelectorKind::Eafl, 3),
-                mk("steady", SelectorKind::Eafl, 4),
-                mk("diurnal", SelectorKind::Eafl, 9),
-            ],
-        };
-        let groups = report.dropouts_by_scenario();
-        assert_eq!(groups.len(), 2);
-        assert_eq!(groups[0], ("steady".to_string(), SelectorKind::Eafl, 7));
-        assert_eq!(groups[1], ("diurnal".to_string(), SelectorKind::Eafl, 9));
+    fn sharded_specs_expand_to_the_full_grid_but_run_their_slice() {
+        let runtime = crate::runtime::MockRuntime::default();
+        let mut cfg = base();
+        cfg.federation.rounds = 2;
+        let mut spec = CampaignSpec::new("t", cfg);
+        spec.grid.seeds = vec![1, 2];
+        spec.jobs = 1;
+        let full = run_campaign(&spec, &runtime, None).unwrap();
+        assert_eq!(full.runs.len(), 6, "3 selectors x 2 seeds");
+
+        let mut union: Vec<(SelectorKind, u64)> = Vec::new();
+        for index in 0..2 {
+            let mut shard_spec = spec.clone();
+            shard_spec.shard = Some(ShardSpec { index, count: 2 });
+            let part = run_campaign(&shard_spec, &runtime, None).unwrap();
+            assert!(part.runs.len() <= full.runs.len());
+            for run in &part.runs {
+                // Shard results are bit-identical to the full campaign's
+                // same cell (same config ⇒ same seeded trajectory).
+                let reference = full
+                    .runs
+                    .iter()
+                    .find(|r| r.selector == run.selector && r.seed == run.seed)
+                    .expect("shard ran a cell outside the grid");
+                assert_eq!(reference.summary.wall_clock_h, run.summary.wall_clock_h);
+                assert_eq!(reference.summary.final_accuracy, run.summary.final_accuracy);
+                union.push((run.selector, run.seed));
+            }
+        }
+        union.sort_by_key(|(k, s)| (k.to_string(), *s));
+        union.dedup();
+        assert_eq!(union.len(), full.runs.len(), "shards cover the grid exactly once");
+    }
+
+    #[test]
+    fn manifest_covers_the_full_grid_in_expansion_order() {
+        let spec = CampaignSpec::new("t", base());
+        let runs = expand(&spec);
+        let manifest = build_manifest(&spec, &runs).unwrap();
+        assert_eq!(manifest.campaign, "t");
+        assert_eq!(manifest.cells.len(), runs.len());
+        for (cell, run) in manifest.cells.iter().zip(&runs) {
+            assert_eq!(cell.name, run.cfg.name);
+            assert_eq!(cell.selector, run.selector);
+            assert_eq!(cell.seed, run.seed);
+            // The recorded hash is the hash of the fingerprint the run
+            // will write — what merge verifies per cell.
+            assert_eq!(
+                cell.fingerprint_fnv,
+                fnv1a64(cell_fingerprint(&run.cfg).unwrap().as_bytes())
+            );
+        }
+        // Deterministic: rebuilding yields identical bytes.
+        assert_eq!(
+            manifest.to_json().to_string_pretty(),
+            build_manifest(&spec, &runs).unwrap().to_json().to_string_pretty()
+        );
     }
 }

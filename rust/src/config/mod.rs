@@ -46,6 +46,48 @@ impl std::str::FromStr for SelectorKind {
     }
 }
 
+/// One shard of a sharded campaign: `index` of `count` (0-based), as
+/// written on the command line (`--shard 0/4`). Which grid cells a
+/// shard owns is decided by a stable hash of the cell *name* (see
+/// `campaign::shard_of`), so shards need no coordination: any process
+/// given the same grid and the same `I/N` computes the same partition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// 0-based shard index, `< count`.
+    pub index: usize,
+    /// Total number of shards, `>= 1`.
+    pub count: usize,
+}
+
+impl std::fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+impl std::str::FromStr for ShardSpec {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        let Some((index, count)) = s.split_once('/') else {
+            bail!("shard spec {s:?} must be I/N (0-based index I of N shards, e.g. 0/4)");
+        };
+        let index: usize = index
+            .trim()
+            .parse()
+            .with_context(|| format!("bad shard index in {s:?}"))?;
+        let count: usize = count
+            .trim()
+            .parse()
+            .with_context(|| format!("bad shard count in {s:?}"))?;
+        ensure!(count >= 1, "shard count must be >= 1 (got {s:?})");
+        ensure!(
+            index < count,
+            "shard index must be in 0..count (got {s:?}; the index is 0-based)"
+        );
+        Ok(Self { index, count })
+    }
+}
+
 /// Server-side aggregation rule.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AggregatorKind {
@@ -660,6 +702,22 @@ mod tests {
         assert_eq!("eafl".parse::<SelectorKind>().unwrap(), SelectorKind::Eafl);
         assert_eq!("OORT".parse::<SelectorKind>().unwrap(), SelectorKind::Oort);
         assert!("bogus".parse::<SelectorKind>().is_err());
+    }
+
+    #[test]
+    fn shard_spec_parses_and_validates() {
+        let s: ShardSpec = "0/4".parse().unwrap();
+        assert_eq!(s, ShardSpec { index: 0, count: 4 });
+        assert_eq!(s.to_string(), "0/4");
+        let s: ShardSpec = " 3 / 4 ".trim().parse().unwrap();
+        assert_eq!(s.index, 3);
+        assert_eq!("0/1".parse::<ShardSpec>().unwrap().count, 1);
+        // Index is 0-based and must stay below the count.
+        assert!("4/4".parse::<ShardSpec>().is_err());
+        assert!("1/0".parse::<ShardSpec>().is_err());
+        assert!("2".parse::<ShardSpec>().is_err());
+        assert!("a/b".parse::<ShardSpec>().is_err());
+        assert!("-1/2".parse::<ShardSpec>().is_err());
     }
 
     #[test]

@@ -142,6 +142,41 @@
 //! eafl sweep --mock --selectors eafl,oort,random --seeds 1,2,3 \
 //!            --scenario steady,diurnal --rounds 150 --out results/campaign
 //! ```
+//!
+//! ## Sharded campaigns (the shard/merge protocol)
+//!
+//! One process is not the ceiling: a campaign can be **sharded** across
+//! processes (or hosts sharing a filesystem) with zero coordination,
+//! because every piece of the protocol is a pure function of the grid:
+//!
+//!  - **Partition** — grid cell names are deterministic
+//!    (`<campaign>-<selector>-<scenario>-n<clients>-f<f>-s<seed>`
+//!    encodes every coordinate); shard `I` of `N` owns exactly the
+//!    cells with `fnv1a64(name) % N == I` ([`campaign::shard_of`]).
+//!    `eafl sweep --shard I/N` runs just those cells.
+//!  - **Manifest** — every sweep with an output directory writes
+//!    `<name>.manifest.json`: the *full* grid in expansion order with a
+//!    per-cell config-fingerprint hash. All shards derive it from the
+//!    same grid, so their manifest bytes are identical.
+//!  - **Merge** — `eafl merge <out-dir>...`
+//!    ([`report::merge_dirs`]) reassembles the campaign: cells are
+//!    emitted in manifest order (never shard or completion order), each
+//!    cell's `<name>.config.toml` must hash to the manifest's recorded
+//!    fingerprint, and missing cells fail loudly. Summaries round-trip
+//!    through JSON bit-exactly, so the merged `campaign.json` /
+//!    `campaign.csv` are **byte-identical** to a single-process sweep.
+//!  - **Resume** — a killed shard is rerun with the same `--shard I/N`;
+//!    the PR 2 resume machinery reloads its finished cells (fingerprint-
+//!    checked) and recomputes only the rest. Torn files from the kill
+//!    read as "not finished" and are recomputed.
+//!  - **Self-orchestration** — `eafl sweep --jobs P` spawns `P` shard
+//!    child processes (`--shard 0/P` … `--shard P-1/P`) over one output
+//!    directory and merges when they all finish.
+//!
+//! `rust/tests/campaign_sharding.rs` pins the whole contract across
+//! real processes: any shard count, any completion order, separate or
+//! shared output directories, and kill-then-resume all produce the
+//! byte-identical merged report.
 
 pub mod aggregation;
 pub mod benchkit;
@@ -153,6 +188,7 @@ pub mod device;
 pub mod energy;
 pub mod metrics;
 pub mod network;
+pub mod report;
 pub mod runtime;
 pub mod scenario;
 pub mod selection;

@@ -6,19 +6,23 @@
 //!   compare      EAFL vs Oort vs Random under one seed (the paper's
 //!                headline comparison, Figs. 3 & 4)
 //!   sweep        a whole campaign: selectors × seeds × f × clients grid
-//!                run across threads, merged into campaign.json/.csv
+//!                run across shard processes (--jobs) or as one shard of
+//!                a multi-host campaign (--shard I/N), merged into
+//!                campaign.json/.csv
+//!   merge        order-stable merge of sweep output directories into
+//!                the campaign.json/.csv a single-process sweep writes
 //!   gen-config   write the paper-default TOML config
 //!   energy-table print the Table 1 / Table 2 reproduction
 //!
 //! Python never runs here: the binary loads `artifacts/*.hlo.txt`
 //! produced once by `make artifacts`.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use eafl::campaign::{run_campaign, CampaignGrid, CampaignSpec};
-use eafl::config::{ExperimentConfig, SelectorKind};
+use eafl::campaign::{run_campaign, CampaignGrid, CampaignReport, CampaignSpec};
+use eafl::config::{ExperimentConfig, SelectorKind, ShardSpec};
 use eafl::coordinator::Coordinator;
 use eafl::device::{DeviceSpec, ALL_TIERS};
 use eafl::energy::{comm_energy_percent, CommDirection};
@@ -37,19 +41,31 @@ USAGE:
            [--scenario NAME|FILE] [--out DIR] [--mock]
   eafl sweep [--config FILE] [--selectors LIST] [--scenario LIST]
              [--seeds LIST] [--f LIST] [--clients LIST] [--rounds N]
-             [--jobs N] [--fresh] [--out DIR] [--mock]
+             [--jobs N] [--shard I/N] [--fresh] [--out DIR] [--mock]
+  eafl merge DIR [DIR...] [--out DIR]
   eafl scenarios [--show NAME]
   eafl gen-config [--out FILE]
   eafl energy-table
   eafl help
 
-  sweep runs the full LIST-product as one campaign across --jobs threads
-  (LIST is comma-separated, e.g. --selectors eafl,oort,random --seeds
-  1,2,3 --f 0.0,0.25,1.0 --scenario steady,diurnal); defaults to the
-  headline grid of all three selectors x seeds 1,2,3. Per-run CSVs plus
-  the merged campaign summary land in --out (default results/campaign).
+  sweep runs the full LIST-product as one campaign (LIST is comma-
+  separated, e.g. --selectors eafl,oort,random --seeds 1,2,3 --f
+  0.0,0.25,1.0 --scenario steady,diurnal); defaults to the headline grid
+  of all three selectors x seeds 1,2,3. Per-run CSVs plus the merged
+  campaign summary land in --out (default results/campaign).
   Re-running into the same --out resumes a partial campaign by skipping
   grid cells that already have summaries; --fresh recomputes everything.
+
+  sweep scales out by sharding: --jobs P (P > 1) spawns P shard child
+  processes over one --out directory and merges when they finish; with
+  no --jobs it runs the grid across threads in-process. Both are
+  byte-identical. For multi-host campaigns, run `eafl sweep --shard I/N`
+  (0-based shard I of N) per host — each shard deterministically owns
+  the grid cells whose name hashes to it, so shards need no
+  coordination — then `eafl merge` the output director(ies) once all
+  shards are done. merge is order-stable: the result is byte-identical
+  to a single-process sweep, whatever the shard count, completion
+  order, or directory layout.
 
   Scenarios are declarative environment models (availability churn,
   degraded/congested networks, wall-clock recharge policies) plugged
@@ -93,13 +109,29 @@ struct Args {
 
 impl Args {
     fn parse(argv: &[String], switch_names: &[&str]) -> Result<Self> {
+        let (args, positionals) = Self::parse_with_positionals(argv, switch_names)?;
+        if let Some(arg) = positionals.first() {
+            bail!("unexpected positional argument {arg:?}\n\n{USAGE}");
+        }
+        Ok(args)
+    }
+
+    /// Like [`Args::parse`], but collects non-flag arguments (the merge
+    /// subcommand takes its directories positionally).
+    fn parse_with_positionals(
+        argv: &[String],
+        switch_names: &[&str],
+    ) -> Result<(Self, Vec<String>)> {
         let mut flags = std::collections::HashMap::new();
         let mut switches = std::collections::HashSet::new();
+        let mut positionals = Vec::new();
         let mut i = 0;
         while i < argv.len() {
             let arg = &argv[i];
             let Some(name) = arg.strip_prefix("--") else {
-                bail!("unexpected positional argument {arg:?}\n\n{USAGE}");
+                positionals.push(arg.clone());
+                i += 1;
+                continue;
             };
             if switch_names.contains(&name) {
                 switches.insert(name.to_string());
@@ -112,7 +144,7 @@ impl Args {
                 i += 2;
             }
         }
-        Ok(Self { flags, switches })
+        Ok((Self { flags, switches }, positionals))
     }
 
     fn get(&self, name: &str) -> Option<&str> {
@@ -174,6 +206,81 @@ fn run_one(cfg: ExperimentConfig, runtime: &dyn ModelRuntime, out: &PathBuf) -> 
     log.write_csv(&out.join(format!("{name}.csv")))?;
     log.write_summary_json(&out.join(format!("{name}.summary.json")))?;
     Ok(log.summary())
+}
+
+/// The end-of-sweep console report, shared by the in-process path, the
+/// self-orchestrated multi-process path, and `eafl merge`.
+fn print_campaign_results(report: &CampaignReport, scenario_axis_len: usize) {
+    println!("\n=== campaign results ===");
+    for run in &report.runs {
+        print_summary(&run.summary);
+    }
+    println!("\nmean final accuracy by selector:");
+    for (kind, acc) in report.mean_accuracy_by_selector() {
+        println!("  {kind:<8} {acc:.4}");
+    }
+    if scenario_axis_len > 1 {
+        println!("\ntotal drop-outs by scenario x selector:");
+        for (scenario, kind, drops) in report.dropouts_by_scenario() {
+            println!("  {scenario:<12} {kind:<8} {drops}");
+        }
+    }
+}
+
+/// Self-orchestrated scale-out: re-invoke this binary `procs` times as
+/// `eafl sweep ... --shard i/procs --jobs 1` over one output directory.
+/// The children's argv is the parent's with the orchestration flags
+/// replaced, so every grid/config/scenario flag is forwarded verbatim
+/// and each child derives the identical campaign manifest.
+fn spawn_shard_sweeps(rest: &[String], procs: usize, out: &Path) -> Result<()> {
+    let exe = std::env::current_exe().context("locating the eafl binary for shard spawn")?;
+    let mut forwarded: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < rest.len() {
+        match rest[i].as_str() {
+            // Replaced below; --out is re-appended explicitly (last
+            // occurrence wins in the flag parser).
+            "--jobs" | "--shard" | "--out" => i += 2,
+            other => {
+                forwarded.push(other.to_string());
+                i += 1;
+            }
+        }
+    }
+    let mut children = Vec::with_capacity(procs);
+    for index in 0..procs {
+        let child = std::process::Command::new(&exe)
+            .arg("sweep")
+            .args(&forwarded)
+            .arg("--shard")
+            .arg(format!("{index}/{procs}"))
+            .arg("--jobs")
+            .arg("1")
+            .arg("--out")
+            .arg(out)
+            .stdout(std::process::Stdio::null())
+            .spawn()
+            .with_context(|| format!("spawning shard {index}/{procs}"))?;
+        children.push((index, child));
+    }
+    let mut failures = Vec::new();
+    for (index, mut child) in children {
+        let status = child
+            .wait()
+            .with_context(|| format!("waiting for shard {index}/{procs}"))?;
+        if !status.success() {
+            failures.push(format!("shard {index}/{procs} exited with {status}"));
+        }
+    }
+    if !failures.is_empty() {
+        bail!(
+            "{} of {procs} shard processes failed: {} — rerun the same sweep to \
+             resume (finished cells are skipped)",
+            failures.len(),
+            failures.join("; ")
+        );
+    }
+    Ok(())
 }
 
 fn print_summary(s: &Summary) {
@@ -257,9 +364,11 @@ fn main() -> Result<()> {
                 client_counts: parse_list::<usize>(args.get("clients"), "clients")?
                     .unwrap_or_default(),
             };
-            if let Some(j) = args.get_parsed::<usize>("jobs")? {
+            let jobs_flag = args.get_parsed::<usize>("jobs")?;
+            if let Some(j) = jobs_flag {
                 spec.jobs = j.max(1);
             }
+            spec.shard = args.get_parsed::<ShardSpec>("shard")?;
             spec.resume = !args.has("fresh");
             // Fail fast on a bad scenario axis (before hours of runs).
             Scenario::resolve(&spec.base.scenario)?;
@@ -267,40 +376,88 @@ fn main() -> Result<()> {
                 Scenario::resolve(s)?;
             }
             let out = PathBuf::from(args.get("out").unwrap_or("results/campaign"));
-            let runtime = load_runtime(args.has("mock"))?;
             let total = eafl::campaign::expand(&spec).len();
             // Not printed as a product: the f axis only applies to the
             // EAFL selector, so total is usually less than the naive
             // cross of the axis sizes.
             println!(
                 "campaign: {total} runs over {} selectors, {} scenario(s), {} seeds, \
-                 {} f value(s) (EAFL only), {} client count(s); {} jobs -> {}",
+                 {} f value(s) (EAFL only), {} client count(s) -> {}",
                 spec.grid.selectors.len(),
                 spec.grid.scenarios.len().max(1),
                 spec.grid.seeds.len(),
                 spec.grid.f_values.len().max(1),
                 spec.grid.client_counts.len().max(1),
-                spec.jobs.min(total.max(1)),
                 out.display()
             );
-            let report = run_campaign(&spec, runtime.as_ref(), Some(&out))?;
-            println!("\n=== campaign results ===");
-            for run in &report.runs {
-                print_summary(&run.summary);
-            }
-            println!("\nmean final accuracy by selector:");
-            for (kind, acc) in report.mean_accuracy_by_selector() {
-                println!("  {kind:<8} {acc:.4}");
-            }
-            if spec.grid.scenarios.len() > 1 {
-                println!("\ntotal drop-outs by scenario x selector:");
-                for (scenario, kind, drops) in report.dropouts_by_scenario() {
-                    println!("  {scenario:<12} {kind:<8} {drops}");
+            // Process scale-out is an explicit ask (--jobs P): a plain
+            // `eafl sweep` keeps the in-process work-stealing pool,
+            // which balances uneven cells dynamically and loads the
+            // runtime once. Sharding trades that for multi-process (and
+            // multi-host) composition — byte-identical either way.
+            if spec.shard.is_none() && jobs_flag.map_or(false, |j| j > 1) && total > 1 {
+                let procs = spec.jobs.min(total);
+                println!("sharding across {procs} processes ({procs} x --shard i/{procs})");
+                spawn_shard_sweeps(rest, procs, &out)?;
+                let report = eafl::report::merge_dirs(&[out.clone()])?;
+                eafl::report::write_report(&out, &report)?;
+                print_campaign_results(&report, spec.grid.scenarios.len());
+                println!(
+                    "\nmerged summary: {}",
+                    out.join(format!("{}.campaign.json", report.name)).display()
+                );
+            } else {
+                let runtime = load_runtime(args.has("mock"))?;
+                let report = run_campaign(&spec, runtime.as_ref(), Some(&out))?;
+                print_campaign_results(&report, spec.grid.scenarios.len());
+                match spec.shard {
+                    Some(shard) if shard.count > 1 => println!(
+                        "\nshard {shard} complete: {} of {total} grid cells in {} — run \
+                         `eafl merge {}` once every shard has finished",
+                        report.runs.len(),
+                        out.display(),
+                        out.display()
+                    ),
+                    _ => println!(
+                        "\nmerged summary: {}",
+                        out.join(format!("{}.campaign.json", report.name)).display()
+                    ),
                 }
             }
+        }
+        "merge" => {
+            let (args, dirs) = Args::parse_with_positionals(rest, &[])?;
+            if dirs.is_empty() {
+                bail!("merge needs at least one sweep output directory\n\n{USAGE}");
+            }
+            let dirs: Vec<PathBuf> = dirs.iter().map(PathBuf::from).collect();
+            let report = eafl::report::merge_dirs(&dirs)?;
+            let out = args.get("out").map(PathBuf::from).unwrap_or_else(|| dirs[0].clone());
+            std::fs::create_dir_all(&out).with_context(|| format!("creating {out:?}"))?;
+            let (json_path, csv_path) = eafl::report::write_report(&out, &report)?;
+            // Carry the manifest along so the merged directory is
+            // self-describing like any sweep output: it records which
+            // campaign/grid the report covers. Identical bytes by
+            // construction (all source manifests agreed).
+            let (_, manifest_text) = eafl::report::find_manifest(&dirs[0])?;
+            std::fs::write(
+                out.join(format!("{}.manifest.json", report.name)),
+                manifest_text,
+            )
+            .with_context(|| format!("writing manifest into {out:?}"))?;
+            let scenario_axis_len = {
+                let mut scenarios: Vec<&str> =
+                    report.runs.iter().map(|r| r.scenario.as_str()).collect();
+                scenarios.sort_unstable();
+                scenarios.dedup();
+                scenarios.len()
+            };
+            print_campaign_results(&report, scenario_axis_len);
             println!(
-                "\nmerged summary: {}",
-                out.join(format!("{}.campaign.json", report.name)).display()
+                "\nmerged {} grid cells -> {} + {}",
+                report.runs.len(),
+                json_path.display(),
+                csv_path.display()
             );
         }
         "scenarios" => {

@@ -1,0 +1,583 @@
+//! Campaign report emission and the byte-stable shard merge.
+//!
+//! A campaign's merged artifacts (`<name>.campaign.json` / `.csv`) used
+//! to be written inline by `campaign::run_campaign`; sharded campaigns
+//! (`eafl sweep --shard I/N`) need the same emission *after the fact*,
+//! over per-run files produced by several processes — possibly in
+//! several output directories. This module is that seam:
+//!
+//!  - [`CampaignReport`] / [`CampaignRun`] — the merged result and its
+//!    JSON/CSV encodings (moved here from `campaign`, which re-exports
+//!    them);
+//!  - [`Manifest`] — the full grid in expansion order, written as
+//!    `<name>.manifest.json` by every sweep that has an output
+//!    directory. All shards of one campaign derive the manifest from
+//!    the same grid, so they write byte-identical files and need no
+//!    coordination;
+//!  - [`merge_dirs`] — the order-stable merge: cells are emitted in
+//!    *manifest* order (= single-process grid order), never in shard or
+//!    completion order, and each cell's `<name>.config.toml`
+//!    fingerprint must hash to the manifest's recorded value. Summaries
+//!    round-trip through JSON bit-exactly (see `metrics::Summary`), so
+//!    a shard-then-merge campaign reproduces a single-process
+//!    `eafl sweep` byte for byte — the contract
+//!    `rust/tests/campaign_sharding.rs` pins across real processes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::SelectorKind;
+use crate::metrics::Summary;
+use crate::util::json::Json;
+
+/// Manifest schema tag (bumped on incompatible layout changes).
+pub const MANIFEST_SCHEMA: &str = "eafl-campaign-manifest-v1";
+
+/// FNV-1a 64-bit — the stable hash behind both the shard partition
+/// (`campaign::shard_of`) and the manifest's config fingerprints. Tiny,
+/// dependency-free, and fully specified, so any process (or language)
+/// can recompute the partition.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One finished run: its grid coordinates plus the end-of-run summary.
+#[derive(Debug, Clone)]
+pub struct CampaignRun {
+    pub selector: SelectorKind,
+    pub scenario: String,
+    pub seed: u64,
+    pub f: f64,
+    pub clients: usize,
+    pub summary: Summary,
+}
+
+/// The merged campaign result, in grid order.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    pub name: String,
+    pub runs: Vec<CampaignRun>,
+}
+
+impl CampaignReport {
+    /// Merged summary as JSON (in-tree codec; offline build, no serde).
+    pub fn to_json(&self) -> Json {
+        let runs: Vec<Json> = self
+            .runs
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("selector".to_string(), Json::Str(r.selector.to_string()));
+                m.insert("scenario".to_string(), Json::Str(r.scenario.clone()));
+                m.insert("seed".to_string(), Json::Num(r.seed as f64));
+                m.insert("f".to_string(), Json::Num(r.f));
+                m.insert("clients".to_string(), Json::Num(r.clients as f64));
+                m.insert("summary".to_string(), r.summary.to_json());
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("campaign".to_string(), Json::Str(self.name.clone()));
+        top.insert("total_runs".to_string(), Json::Num(self.runs.len() as f64));
+        top.insert("runs".to_string(), Json::Arr(runs));
+        Json::Obj(top)
+    }
+
+    /// One CSV row per run (the merged table the plots consume).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "selector,scenario,seed,f,clients,rounds,committed_rounds,final_accuracy,\
+             best_accuracy,final_fairness,total_dropouts,mean_round_duration_s,\
+             wall_clock_h,total_fl_energy_j\n",
+        );
+        for r in &self.runs {
+            let s = &r.summary;
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{},{:.3},{:.6},{:.3}\n",
+                r.selector,
+                r.scenario,
+                r.seed,
+                r.f,
+                r.clients,
+                s.rounds,
+                s.committed_rounds,
+                s.final_accuracy,
+                s.best_accuracy,
+                s.final_fairness,
+                s.total_dropouts,
+                s.mean_round_duration_s,
+                s.wall_clock_h,
+                s.total_fl_energy_j,
+            ));
+        }
+        out
+    }
+
+    /// Mean final accuracy per selector (quick cross-seed aggregate).
+    pub fn mean_accuracy_by_selector(&self) -> Vec<(SelectorKind, f64)> {
+        let mut acc: Vec<(SelectorKind, f64, usize)> = Vec::new();
+        for r in &self.runs {
+            match acc.iter_mut().find(|(k, _, _)| *k == r.selector) {
+                Some(slot) => {
+                    slot.1 += r.summary.final_accuracy;
+                    slot.2 += 1;
+                }
+                None => acc.push((r.selector, r.summary.final_accuracy, 1)),
+            }
+        }
+        acc.into_iter().map(|(k, sum, n)| (k, sum / n as f64)).collect()
+    }
+
+    /// Total drop-outs per (scenario, selector) — the environment-
+    /// differentiation signal (does `diurnal` kill a different number
+    /// of clients than `steady` under the same seeds?).
+    pub fn dropouts_by_scenario(&self) -> Vec<(String, SelectorKind, usize)> {
+        let mut acc: Vec<(String, SelectorKind, usize)> = Vec::new();
+        for r in &self.runs {
+            match acc
+                .iter_mut()
+                .find(|(s, k, _)| *s == r.scenario && *k == r.selector)
+            {
+                Some(slot) => slot.2 += r.summary.total_dropouts,
+                None => acc.push((r.scenario.clone(), r.selector, r.summary.total_dropouts)),
+            }
+        }
+        acc
+    }
+}
+
+/// Write the merged `<name>.campaign.json` / `<name>.campaign.csv` into
+/// `dir`. The one emission path for single-process sweeps, shard merges
+/// and `eafl merge` — byte-stability of the merge reduces to "same
+/// [`CampaignReport`] in, same bytes out".
+pub fn write_report(dir: &Path, report: &CampaignReport) -> Result<(PathBuf, PathBuf)> {
+    let json_path = dir.join(format!("{}.campaign.json", report.name));
+    std::fs::write(&json_path, report.to_json().to_string_pretty())
+        .with_context(|| format!("writing {json_path:?}"))?;
+    let csv_path = dir.join(format!("{}.campaign.csv", report.name));
+    std::fs::write(&csv_path, report.to_csv())
+        .with_context(|| format!("writing {csv_path:?}"))?;
+    Ok((json_path, csv_path))
+}
+
+/// One grid cell's identity inside a [`Manifest`]: the coordinates that
+/// name it plus the FNV-1a hash of its resolved config fingerprint
+/// (the `<name>.config.toml` contents a finished run leaves behind).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellMeta {
+    pub name: String,
+    pub selector: SelectorKind,
+    pub scenario: String,
+    pub seed: u64,
+    pub f: f64,
+    pub clients: usize,
+    /// `fnv1a64` of the cell's config fingerprint text, hex-encoded in
+    /// JSON (u64 does not survive an f64 JSON number).
+    pub fingerprint_fnv: u64,
+}
+
+/// The full expanded grid of one campaign, in expansion order — the
+/// merge's ordering and completeness authority. Every shard derives it
+/// from the same grid, so all shards of one campaign write identical
+/// `<name>.manifest.json` bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub campaign: String,
+    pub cells: Vec<CellMeta>,
+}
+
+impl Manifest {
+    pub fn to_json(&self) -> Json {
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(c.name.clone()));
+                m.insert("selector".to_string(), Json::Str(c.selector.to_string()));
+                m.insert("scenario".to_string(), Json::Str(c.scenario.clone()));
+                // Decimal string, not a JSON number: a u64 seed above
+                // 2^53 would round through f64 and break the merged
+                // report's byte-identity with a single-process sweep.
+                m.insert("seed".to_string(), Json::Str(c.seed.to_string()));
+                m.insert("f".to_string(), Json::Num(c.f));
+                m.insert("clients".to_string(), Json::Num(c.clients as f64));
+                m.insert(
+                    "fingerprint_fnv".to_string(),
+                    Json::Str(format!("{:016x}", c.fingerprint_fnv)),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("schema".to_string(), Json::Str(MANIFEST_SCHEMA.to_string()));
+        top.insert("campaign".to_string(), Json::Str(self.campaign.clone()));
+        top.insert("total_cells".to_string(), Json::Num(self.cells.len() as f64));
+        top.insert("cells".to_string(), Json::Arr(cells));
+        Json::Obj(top)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let schema = j.field("schema")?.as_str().unwrap_or("");
+        ensure!(
+            schema == MANIFEST_SCHEMA,
+            "unsupported manifest schema {schema:?} (expected {MANIFEST_SCHEMA})"
+        );
+        let campaign = j
+            .field("campaign")?
+            .as_str()
+            .context("manifest campaign is not a string")?
+            .to_string();
+        let mut cells = Vec::new();
+        for c in j.field("cells")?.as_arr().context("manifest cells is not an array")? {
+            let str_field = |key: &str| -> Result<String> {
+                Ok(c.field(key)?
+                    .as_str()
+                    .with_context(|| format!("manifest cell field {key:?} is not a string"))?
+                    .to_string())
+            };
+            let num_field = |key: &str| -> Result<f64> {
+                c.field(key)?
+                    .as_f64()
+                    .with_context(|| format!("manifest cell field {key:?} is not a number"))
+            };
+            cells.push(CellMeta {
+                name: str_field("name")?,
+                selector: str_field("selector")?.parse()?,
+                scenario: str_field("scenario")?,
+                seed: str_field("seed")?
+                    .parse()
+                    .context("manifest cell seed is not a u64")?,
+                f: num_field("f")?,
+                clients: num_field("clients")? as usize,
+                fingerprint_fnv: u64::from_str_radix(&str_field("fingerprint_fnv")?, 16)
+                    .context("manifest fingerprint_fnv is not hex")?,
+            });
+        }
+        Ok(Self { campaign, cells })
+    }
+
+    /// The manifest's path inside an output directory.
+    pub fn path_in(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("{}.manifest.json", self.campaign))
+    }
+
+    /// Write `<campaign>.manifest.json` into `dir`, atomically (write
+    /// to a temp file, then rename) so concurrent shards never expose a
+    /// torn manifest. Identical content is left untouched; different
+    /// content (the grid changed since a previous sweep into this
+    /// directory) is overwritten with a warning — per-cell fingerprints
+    /// keep stale summaries from leaking into the new campaign.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        let path = self.path_in(dir);
+        let text = self.to_json().to_string_pretty();
+        if let Ok(existing) = std::fs::read_to_string(&path) {
+            if existing == text {
+                return Ok(path);
+            }
+            eprintln!(
+                "[campaign] grid changed: overwriting stale manifest {}",
+                path.display()
+            );
+        }
+        let tmp = dir.join(format!(
+            ".{}.manifest.{}.tmp",
+            self.campaign,
+            std::process::id()
+        ));
+        std::fs::write(&tmp, &text).with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+        Ok(path)
+    }
+}
+
+/// Locate the single `*.manifest.json` in `dir`; returns its path and
+/// raw bytes (the merge compares manifests byte-for-byte across dirs,
+/// and `eafl merge --out` copies them into the merged directory).
+pub fn find_manifest(dir: &Path) -> Result<(PathBuf, String)> {
+    let mut found: Vec<PathBuf> = Vec::new();
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("reading directory {dir:?}"))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .map_or(false, |n| n.ends_with(".manifest.json") && !n.starts_with('.'))
+        {
+            found.push(path);
+        }
+    }
+    found.sort();
+    match found.as_slice() {
+        [] => bail!(
+            "no campaign manifest (*.manifest.json) in {} — was this directory \
+             produced by `eafl sweep`?",
+            dir.display()
+        ),
+        [one] => {
+            let text = std::fs::read_to_string(one)
+                .with_context(|| format!("reading manifest {one:?}"))?;
+            Ok((one.clone(), text))
+        }
+        many => bail!(
+            "multiple campaign manifests in {}: {} — merge one campaign at a time",
+            dir.display(),
+            many.iter()
+                .map(|p| p.display().to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    }
+}
+
+/// Load one cell's summary from `dir` if present *and* provably from
+/// this campaign: the summary must parse and the cell's
+/// `<name>.config.toml` fingerprint must hash to the manifest's value.
+/// Anything else — missing files, torn JSON from a killed shard, stale
+/// artifacts from an older grid — reads as "not here".
+fn load_cell(dir: &Path, cell: &CellMeta) -> Option<Summary> {
+    let fp = std::fs::read_to_string(dir.join(format!("{}.config.toml", cell.name))).ok()?;
+    if fnv1a64(fp.as_bytes()) != cell.fingerprint_fnv {
+        eprintln!(
+            "[merge] {}: config fingerprint mismatch in {} (stale cell from a \
+             different campaign?) — skipping",
+            cell.name,
+            dir.display()
+        );
+        return None;
+    }
+    let text = std::fs::read_to_string(dir.join(format!("{}.summary.json", cell.name))).ok()?;
+    Json::parse(&text).ok().and_then(|j| Summary::from_json(&j).ok())
+}
+
+/// The order-stable merge: combine per-run artifacts from one or more
+/// sweep output directories into the full [`CampaignReport`].
+///
+/// Rules (the shard/merge protocol, see the crate docs):
+///  1. every directory must hold the *byte-identical* manifest — shards
+///     of the same campaign always do; anything else is a user error;
+///  2. cells are emitted in manifest order (= grid expansion order),
+///     regardless of which shard ran them, in which directory they
+///     landed, or when they finished;
+///  3. a cell counts only if its summary parses and its config
+///     fingerprint hashes to the manifest's value; directories are
+///     searched in argument order and the first valid copy wins (all
+///     copies are bit-identical by the determinism contract anyway);
+///  4. missing cells fail the merge loudly — rerun the owning shards
+///     (resume skips the finished cells) and merge again.
+pub fn merge_dirs(dirs: &[PathBuf]) -> Result<CampaignReport> {
+    ensure!(!dirs.is_empty(), "merge needs at least one directory");
+    let (first_path, manifest_text) = find_manifest(&dirs[0])?;
+    for dir in &dirs[1..] {
+        let (path, text) = find_manifest(dir)?;
+        ensure!(
+            text == manifest_text,
+            "campaign manifests disagree: {} vs {} — these directories hold \
+             different campaigns (or different grids of one campaign)",
+            first_path.display(),
+            path.display()
+        );
+    }
+    let manifest = Manifest::from_json(
+        &Json::parse(&manifest_text)
+            .with_context(|| format!("parsing manifest {first_path:?}"))?,
+    )?;
+
+    let mut runs = Vec::with_capacity(manifest.cells.len());
+    let mut missing: Vec<&str> = Vec::new();
+    for cell in &manifest.cells {
+        match dirs.iter().find_map(|d| load_cell(d, cell)) {
+            Some(summary) => runs.push(CampaignRun {
+                selector: cell.selector,
+                scenario: cell.scenario.clone(),
+                seed: cell.seed,
+                f: cell.f,
+                clients: cell.clients,
+                summary,
+            }),
+            None => missing.push(&cell.name),
+        }
+    }
+    if !missing.is_empty() {
+        let shown = missing.iter().take(8).cloned().collect::<Vec<_>>().join(", ");
+        let more = missing.len().saturating_sub(8);
+        let suffix = if more > 0 { format!(" (+{more} more)") } else { String::new() };
+        bail!(
+            "merge incomplete: {}/{} grid cells have no finished summary: {shown}{suffix} \
+             — rerun the owning shards into the same --out (resume skips finished \
+             cells), then merge again",
+            missing.len(),
+            manifest.cells.len()
+        );
+    }
+    Ok(CampaignReport { name: manifest.campaign, runs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::MetricsLog;
+
+    fn run(scenario: &str, selector: SelectorKind, dropouts: usize) -> CampaignRun {
+        let mut summary = MetricsLog::new("x").summary();
+        summary.total_dropouts = dropouts;
+        CampaignRun { selector, scenario: scenario.into(), seed: 1, f: 0.25, clients: 10, summary }
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // Published FNV-1a test vectors — the partition must never
+        // silently change across refactors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+        assert_ne!(fnv1a64(b"cell-1"), fnv1a64(b"cell-2"));
+    }
+
+    #[test]
+    fn report_csv_has_one_row_per_run_plus_header() {
+        let report = CampaignReport {
+            name: "t".into(),
+            runs: vec![run("steady", SelectorKind::Eafl, 0)],
+        };
+        let csv = report.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("selector,scenario,seed,f,clients,"));
+        assert!(csv.lines().nth(1).unwrap().starts_with("eafl,steady,1,"));
+        let parsed = Json::parse(&report.to_json().to_string_pretty()).unwrap();
+        assert_eq!(parsed.field("total_runs").unwrap().as_usize(), Some(1));
+        let run0 = &parsed.field("runs").unwrap().as_arr().unwrap()[0];
+        assert_eq!(run0.field("scenario").unwrap().as_str(), Some("steady"));
+    }
+
+    #[test]
+    fn dropouts_by_scenario_groups_cells() {
+        let report = CampaignReport {
+            name: "t".into(),
+            runs: vec![
+                run("steady", SelectorKind::Eafl, 3),
+                run("steady", SelectorKind::Eafl, 4),
+                run("diurnal", SelectorKind::Eafl, 9),
+            ],
+        };
+        let groups = report.dropouts_by_scenario();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0], ("steady".to_string(), SelectorKind::Eafl, 7));
+        assert_eq!(groups[1], ("diurnal".to_string(), SelectorKind::Eafl, 9));
+    }
+
+    fn manifest() -> Manifest {
+        Manifest {
+            campaign: "m".into(),
+            cells: vec![CellMeta {
+                name: "m-eafl-steady-n10-f0.25-s1".into(),
+                selector: SelectorKind::Eafl,
+                scenario: "steady".into(),
+                seed: 1,
+                f: 0.25,
+                clients: 10,
+                fingerprint_fnv: fnv1a64(b"cfg"),
+            }],
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_through_json() {
+        let mut m = manifest();
+        // Seeds are arbitrary u64s; above 2^53 they no longer fit an
+        // f64 JSON number exactly, which is why the manifest encodes
+        // them as decimal strings.
+        m.cells[0].seed = u64::MAX - 1;
+        let back = Manifest::from_json(&Json::parse(&m.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.cells[0].seed, u64::MAX - 1);
+    }
+
+    #[test]
+    fn manifest_rejects_wrong_schema() {
+        let mut j = manifest().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema".into(), Json::Str("bogus".into()));
+        }
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn manifest_write_is_idempotent_and_detects_grid_changes() {
+        let dir = std::env::temp_dir().join(format!("eafl-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = manifest();
+        let path = m.write(&dir).unwrap();
+        let bytes = std::fs::read_to_string(&path).unwrap();
+        // Re-writing the same manifest leaves the bytes untouched.
+        m.write(&dir).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), bytes);
+        // A changed grid overwrites (with a stderr warning).
+        let mut m2 = m.clone();
+        m2.cells[0].seed = 2;
+        m2.write(&dir).unwrap();
+        assert_ne!(std::fs::read_to_string(&path).unwrap(), bytes);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_requires_manifest_and_complete_cells() {
+        let dir = std::env::temp_dir().join(format!("eafl-merge-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        // No manifest at all.
+        let err = merge_dirs(&[dir.clone()]).unwrap_err().to_string();
+        assert!(err.contains("manifest"), "{err}");
+
+        // Manifest but no cell artifacts: the missing cell is named.
+        let m = manifest();
+        m.write(&dir).unwrap();
+        let err = merge_dirs(&[dir.clone()]).unwrap_err().to_string();
+        assert!(err.contains("m-eafl-steady-n10-f0.25-s1"), "{err}");
+
+        // Cell artifacts with the right fingerprint merge cleanly.
+        let summary = MetricsLog::new("m-eafl-steady-n10-f0.25-s1").summary();
+        std::fs::write(
+            dir.join("m-eafl-steady-n10-f0.25-s1.summary.json"),
+            summary.to_json().to_string_pretty(),
+        )
+        .unwrap();
+        std::fs::write(dir.join("m-eafl-steady-n10-f0.25-s1.config.toml"), "cfg").unwrap();
+        let report = merge_dirs(&[dir.clone()]).unwrap();
+        assert_eq!(report.name, "m");
+        assert_eq!(report.runs.len(), 1);
+        assert_eq!(report.runs[0].scenario, "steady");
+
+        // A wrong fingerprint makes the cell invisible again.
+        std::fs::write(dir.join("m-eafl-steady-n10-f0.25-s1.config.toml"), "other").unwrap();
+        assert!(merge_dirs(&[dir.clone()]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_rejects_disagreeing_manifests() {
+        let base = std::env::temp_dir().join(format!("eafl-mergedis-{}", std::process::id()));
+        let d0 = base.join("a");
+        let d1 = base.join("b");
+        std::fs::create_dir_all(&d0).unwrap();
+        std::fs::create_dir_all(&d1).unwrap();
+        let m = manifest();
+        m.write(&d0).unwrap();
+        let mut m2 = m.clone();
+        m2.cells[0].seed = 9;
+        m2.write(&d1).unwrap();
+        let err = merge_dirs(&[d0, d1]).unwrap_err().to_string();
+        assert!(err.contains("disagree"), "{err}");
+        std::fs::remove_dir_all(&base).ok();
+    }
+}

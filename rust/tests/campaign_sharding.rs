@@ -1,0 +1,296 @@
+//! Cross-process determinism tier: the shard/merge protocol's contract
+//! is that sharding a campaign across real OS processes changes *how*
+//! the grid is computed, never *what* lands on disk. Every test here
+//! drives the actual `eafl` binary (CARGO_BIN_EXE_eafl) and compares
+//! the merged `campaign.json` / `campaign.csv` **bytes** against a
+//! single-process `eafl sweep` reference:
+//!
+//!  - any shard count (N ∈ {1, 2, 4}), run in any completion order;
+//!  - shards sharing one --out directory or scattered across several;
+//!  - `--jobs P` self-orchestration (P child processes + auto-merge);
+//!  - a shard killed mid-campaign and resumed afterwards;
+//!  - and `eafl merge` refusing to pass off a partial grid as done.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+use eafl::campaign::shard_of;
+use eafl::util::json::Json;
+
+const BIN: &str = env!("CARGO_BIN_EXE_eafl");
+
+/// The test grid: 2 selectors x 2 scenarios x 2 seeds = 8 cells.
+/// Chosen so the FNV name partition is non-degenerate: mod 2 splits
+/// 4/4, mod 4 splits 1/1/3/3 (asserted in `partition_is_usable`).
+const GRID: &[&str] = &[
+    "--mock",
+    "--rounds",
+    "4",
+    "--clients",
+    "12",
+    "--selectors",
+    "random,eafl",
+    "--scenario",
+    "steady,diurnal",
+    "--seeds",
+    "1,2",
+];
+
+/// The 8 cell names the grid above expands to (cell names are the
+/// sharding protocol's stable identity, so spelling them out here also
+/// pins the naming scheme).
+fn cell_names(clients: usize) -> Vec<String> {
+    let mut names = Vec::new();
+    for selector in ["random", "eafl"] {
+        for scenario in ["steady", "diurnal"] {
+            for seed in [1, 2] {
+                names.push(format!("sweep-{selector}-{scenario}-n{clients}-f0.25-s{seed}"));
+            }
+        }
+    }
+    names
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("eafl-shard-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn eafl(args: &[&str]) -> Output {
+    Command::new(BIN).args(args).output().expect("spawning eafl")
+}
+
+fn sweep(grid: &[&str], extra: &[&str], out: &Path) -> Output {
+    let mut cmd = Command::new(BIN);
+    cmd.arg("sweep").args(grid).args(extra).arg("--out").arg(out);
+    cmd.output().expect("spawning eafl sweep")
+}
+
+fn assert_ok(output: &Output, what: &str) {
+    assert!(
+        output.status.success(),
+        "{what} failed ({}):\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        output.status,
+        String::from_utf8_lossy(&output.stdout),
+        String::from_utf8_lossy(&output.stderr)
+    );
+}
+
+/// The two merged artifacts whose bytes the whole tier compares.
+fn merged_bytes(dir: &Path) -> (String, String) {
+    let json = std::fs::read_to_string(dir.join("sweep.campaign.json"))
+        .unwrap_or_else(|e| panic!("no merged campaign.json in {dir:?}: {e}"));
+    let csv = std::fs::read_to_string(dir.join("sweep.campaign.csv"))
+        .unwrap_or_else(|e| panic!("no merged campaign.csv in {dir:?}: {e}"));
+    (json, csv)
+}
+
+/// Single-process reference sweep into a fresh directory.
+fn reference(tag: &str, grid: &[&str]) -> (PathBuf, String, String) {
+    let dir = tmp_dir(tag);
+    assert_ok(&sweep(grid, &["--jobs", "1"], &dir), "reference sweep");
+    let (json, csv) = merged_bytes(&dir);
+    (dir, json, csv)
+}
+
+#[test]
+fn partition_is_usable_for_this_grid() {
+    // The other tests lean on every shard owning at least one cell (so
+    // "shard completion order" and "missing shard" mean something).
+    // This is a property of the fixed cell names — deterministic, but
+    // worth failing loudly if the grid is ever edited.
+    for count in [2usize, 4] {
+        let mut owned = vec![0usize; count];
+        for name in cell_names(12) {
+            owned[shard_of(&name, count)] += 1;
+        }
+        assert!(
+            owned.iter().all(|&n| n > 0),
+            "grid leaves an empty shard at N={count} ({owned:?}); pick a different grid"
+        );
+    }
+}
+
+#[test]
+fn single_process_sweep_is_reproducible_and_writes_the_manifest() {
+    let (dir_a, json_a, csv_a) = reference("ref-a", GRID);
+    let (dir_b, json_b, csv_b) = reference("ref-b", GRID);
+    assert_eq!(json_a, json_b, "same grid, same bytes");
+    assert_eq!(csv_a, csv_b);
+
+    let parsed = Json::parse(&json_a).unwrap();
+    assert_eq!(parsed.field("total_runs").unwrap().as_usize(), Some(8));
+    assert_eq!(csv_a.lines().count(), 9, "header + 8 grid cells");
+
+    // Every sweep with an --out writes the grid manifest — and both
+    // processes write identical manifest bytes.
+    let manifest_a = std::fs::read_to_string(dir_a.join("sweep.manifest.json")).unwrap();
+    let manifest_b = std::fs::read_to_string(dir_b.join("sweep.manifest.json")).unwrap();
+    assert_eq!(manifest_a, manifest_b);
+    assert_eq!(
+        Json::parse(&manifest_a).unwrap().field("total_cells").unwrap().as_usize(),
+        Some(8)
+    );
+
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+/// The acceptance criterion: `--shard I/N` for N ∈ {1, 2, 4}, shards
+/// run in *reverse* order (worst case for any accidental order
+/// dependence), sharing one --out; `eafl merge` must reproduce the
+/// single-process bytes exactly.
+#[test]
+fn any_shard_count_merges_byte_identical_in_any_completion_order() {
+    let (ref_dir, ref_json, ref_csv) = reference("count-ref", GRID);
+    for count in [1usize, 2, 4] {
+        let dir = tmp_dir(&format!("count-{count}"));
+        // Reverse completion order: shard N-1 finishes first, shard 0
+        // last. (Sequential spawning makes the order deterministic.)
+        for index in (0..count).rev() {
+            let shard = format!("{index}/{count}");
+            assert_ok(
+                &sweep(GRID, &["--jobs", "1", "--shard", &shard], &dir),
+                &format!("shard {shard}"),
+            );
+        }
+        let dir_str = dir.to_str().unwrap();
+        assert_ok(&eafl(&["merge", dir_str]), &format!("merge N={count}"));
+        let (json, csv) = merged_bytes(&dir);
+        assert_eq!(json, ref_json, "N={count}: merged JSON must match single-process");
+        assert_eq!(csv, ref_csv, "N={count}: merged CSV must match single-process");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let _ = std::fs::remove_dir_all(&ref_dir);
+}
+
+/// Shards do not need to share a directory: each can write to its own
+/// --out (different hosts, different scratch disks) and `eafl merge
+/// DIR...` — in any argument order — reassembles the campaign.
+#[test]
+fn shards_in_separate_dirs_merge_across_directories() {
+    let (ref_dir, ref_json, ref_csv) = reference("dirs-ref", GRID);
+    let d0 = tmp_dir("dirs-0");
+    let d1 = tmp_dir("dirs-1");
+    assert_ok(&sweep(GRID, &["--jobs", "1", "--shard", "0/2"], &d0), "shard 0/2");
+    assert_ok(&sweep(GRID, &["--jobs", "1", "--shard", "1/2"], &d1), "shard 1/2");
+
+    // Merge with the directories in *reverse* order, into a third dir.
+    let out = tmp_dir("dirs-merged");
+    assert_ok(
+        &eafl(&[
+            "merge",
+            d1.to_str().unwrap(),
+            d0.to_str().unwrap(),
+            "--out",
+            out.to_str().unwrap(),
+        ]),
+        "cross-directory merge",
+    );
+    let (json, csv) = merged_bytes(&out);
+    assert_eq!(json, ref_json);
+    assert_eq!(csv, ref_csv);
+    for d in [&ref_dir, &d0, &d1, &out] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+/// `eafl sweep --jobs P` is the one-command version: P shard child
+/// processes over one --out, merged on completion — still byte-stable.
+#[test]
+fn jobs_flag_self_orchestrates_shard_processes() {
+    let (ref_dir, ref_json, ref_csv) = reference("jobs-ref", GRID);
+    let dir = tmp_dir("jobs-3");
+    let output = sweep(GRID, &["--jobs", "3"], &dir);
+    assert_ok(&output, "self-orchestrated sweep --jobs 3");
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    assert!(
+        stdout.contains("sharding across 3 processes"),
+        "expected the orchestration banner, got:\n{stdout}"
+    );
+    let (json, csv) = merged_bytes(&dir);
+    assert_eq!(json, ref_json, "--jobs 3 must be byte-identical to --jobs 1");
+    assert_eq!(csv, ref_csv);
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Kill a shard mid-campaign, then resume it: whatever partial state
+/// the kill left behind (torn JSON, missing fingerprints, half the
+/// cells done), rerunning the same `--shard I/N` into the same --out
+/// must converge to the same merged bytes.
+#[test]
+fn killed_shard_resumes_to_identical_bytes() {
+    // A heavier grid so the shard is plausibly mid-flight when killed
+    // (the test is valid — just weaker — if the child wins the race).
+    let grid: &[&str] = &[
+        "--mock",
+        "--rounds",
+        "30",
+        "--clients",
+        "48",
+        "--selectors",
+        "random,eafl",
+        "--scenario",
+        "steady,diurnal",
+        "--seeds",
+        "1,2",
+    ];
+    let (ref_dir, ref_json, ref_csv) = reference("kill-ref", grid);
+
+    let dir = tmp_dir("kill");
+    let mut child = Command::new(BIN)
+        .arg("sweep")
+        .args(grid)
+        .args(["--jobs", "1", "--shard", "0/2"])
+        .arg("--out")
+        .arg(&dir)
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawning shard to kill");
+    std::thread::sleep(std::time::Duration::from_millis(40));
+    let _ = child.kill();
+    let _ = child.wait();
+
+    // Resume the killed shard, run its sibling, merge.
+    assert_ok(&sweep(grid, &["--jobs", "1", "--shard", "0/2"], &dir), "resumed shard 0/2");
+    assert_ok(&sweep(grid, &["--jobs", "1", "--shard", "1/2"], &dir), "shard 1/2");
+    assert_ok(&eafl(&["merge", dir.to_str().unwrap()]), "merge after kill+resume");
+    let (json, csv) = merged_bytes(&dir);
+    assert_eq!(json, ref_json, "kill+resume must not change a single byte");
+    assert_eq!(csv, ref_csv);
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A merge over an incomplete campaign must fail loudly and name the
+/// missing cells — never emit a partial report that looks complete.
+#[test]
+fn merge_refuses_a_partial_campaign() {
+    let dir = tmp_dir("partial");
+    assert_ok(&sweep(GRID, &["--jobs", "1", "--shard", "0/2"], &dir), "shard 0/2");
+    let output = eafl(&["merge", dir.to_str().unwrap()]);
+    assert!(
+        !output.status.success(),
+        "merge of half a campaign must fail, got:\n{}",
+        String::from_utf8_lossy(&output.stdout)
+    );
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(stderr.contains("merge incomplete"), "unhelpful merge error:\n{stderr}");
+    // At least one shard-1 cell is named (shard 1/2 owns >= 1 cell —
+    // see partition_is_usable_for_this_grid).
+    assert!(
+        cell_names(12)
+            .into_iter()
+            .filter(|name| shard_of(name.as_str(), 2) == 1)
+            .any(|name| stderr.contains(&name)),
+        "error should name a missing cell:\n{stderr}"
+    );
+    assert!(!stderr.contains("panicked"), "clean error, not a panic:\n{stderr}");
+    // And no merged artifacts appeared.
+    assert!(!dir.join("sweep.campaign.json").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}

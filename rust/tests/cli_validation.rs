@@ -1,0 +1,150 @@
+//! CLI error-path coverage: bad scenarios, bad shard specs and bad
+//! flags must surface as clean one-line errors (non-zero exit, message
+//! on stderr, no panic/backtrace) *before* any training starts. Drives
+//! the real binary — validation that only works in-library is no help
+//! to someone on a terminal.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+const BIN: &str = env!("CARGO_BIN_EXE_eafl");
+
+fn eafl(args: &[&str]) -> Output {
+    Command::new(BIN).args(args).output().expect("spawning eafl")
+}
+
+/// Assert a command fails cleanly: non-zero exit, the expected message
+/// fragment on stderr, and no panic machinery in sight.
+fn assert_clean_error(args: &[&str], expect: &str) {
+    let output = eafl(args);
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        !output.status.success(),
+        "{args:?} should fail, but exited {}:\n{stderr}",
+        output.status
+    );
+    assert!(
+        stderr.contains(expect),
+        "{args:?} stderr should mention {expect:?}:\n{stderr}"
+    );
+    assert!(
+        !stderr.contains("panicked") && !stderr.contains("RUST_BACKTRACE"),
+        "{args:?} must fail cleanly, not panic:\n{stderr}"
+    );
+}
+
+fn scenario_file(tag: &str, body: &str) -> (PathBuf, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("eafl-cliv-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("scenario.toml");
+    std::fs::write(&path, body).unwrap();
+    (dir, path)
+}
+
+#[test]
+fn unknown_scenario_preset_is_a_clean_error() {
+    assert_clean_error(&["run", "--mock", "--scenario", "no-such-preset"], "unknown scenario");
+    // The error lists the presets, so the fix is one glance away.
+    let stderr = String::from_utf8_lossy(
+        &eafl(&["run", "--mock", "--scenario", "no-such-preset"]).stderr,
+    )
+    .into_owned();
+    assert!(stderr.contains("steady"), "error should list presets:\n{stderr}");
+    // The sweep path fails fast too — before hours of grid cells.
+    assert_clean_error(
+        &["sweep", "--mock", "--scenario", "steady,bogus", "--rounds", "1"],
+        "unknown scenario",
+    );
+}
+
+#[test]
+fn out_of_day_hours_are_rejected_from_the_cli() {
+    // Daily windows wrap midnight via start > end; an hour >= 24 would
+    // otherwise be silently clipped.
+    let (dir, path) = scenario_file(
+        "overnight",
+        "[recharge]\nkind = \"overnight\"\nstart_hour = 22\nend_hour = 30\n",
+    );
+    assert_clean_error(&["run", "--mock", "--scenario", path.to_str().unwrap()], "[0, 24)");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let (dir, path) = scenario_file(
+        "congestion",
+        "[network]\nkind = \"congestion\"\nstart_hour = 17\nend_hour = 25\n",
+    );
+    assert_clean_error(&["run", "--mock", "--scenario", path.to_str().unwrap()], "[0, 24)");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let (dir, path) = scenario_file(
+        "solar-hours",
+        "[recharge]\nkind = \"solar\"\ntrace_hours = [20, 28]\ntrace_rates = [0.1, 0.2]\n",
+    );
+    assert_clean_error(&["run", "--mock", "--scenario", path.to_str().unwrap()], "[0, 24)");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bad_solar_traces_are_rejected_from_the_cli() {
+    // Unsorted hours.
+    let (dir, path) = scenario_file(
+        "unsorted",
+        "[recharge]\nkind = \"solar\"\ntrace_hours = [12, 6]\ntrace_rates = [0.1, 0.2]\n",
+    );
+    assert_clean_error(
+        &["run", "--mock", "--scenario", path.to_str().unwrap()],
+        "sorted ascending",
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Unpaired arrays (hours without rates must not silently fall back
+    // to the default curve).
+    let (dir, path) = scenario_file(
+        "unpaired",
+        "[recharge]\nkind = \"solar\"\ntrace_hours = [6, 12, 18]\n",
+    );
+    assert_clean_error(
+        &["run", "--mock", "--scenario", path.to_str().unwrap()],
+        "provided together",
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Mismatched lengths.
+    let (dir, path) = scenario_file(
+        "mismatched",
+        "[recharge]\nkind = \"solar\"\ntrace_hours = [6, 12]\ntrace_rates = [0.1]\n",
+    );
+    assert_clean_error(
+        &["run", "--mock", "--scenario", path.to_str().unwrap()],
+        "equal-length",
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bad_shard_specs_are_clean_errors() {
+    assert_clean_error(
+        &["sweep", "--mock", "--rounds", "1", "--shard", "4/4"],
+        "0-based",
+    );
+    assert_clean_error(&["sweep", "--mock", "--rounds", "1", "--shard", "nope"], "I/N");
+    assert_clean_error(&["sweep", "--mock", "--rounds", "1", "--shard", "1/0"], "shard");
+}
+
+#[test]
+fn merge_without_directories_is_a_clean_error() {
+    assert_clean_error(&["merge"], "at least one");
+    // A directory that was never swept has no manifest.
+    let dir = std::env::temp_dir().join(format!("eafl-cliv-empty-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    assert_clean_error(&["merge", dir.to_str().unwrap()], "manifest");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unknown_command_and_flags_are_clean_errors() {
+    assert_clean_error(&["frobnicate"], "unknown command");
+    assert_clean_error(&["run", "--selector", "bogus"], "unknown selector");
+    assert_clean_error(&["run", "--rounds"], "requires a value");
+}

@@ -1,0 +1,112 @@
+//! Golden-report tier: `eafl run` summary.json bytes for all four
+//! scenario presets at a fixed seed, pinned under `rust/tests/golden/`.
+//!
+//! The point is drift detection: a refactor that changes any simulated
+//! number — battery accounting, selection order, RNG stream, JSON
+//! formatting — shows up here as a byte diff against the committed
+//! golden, instead of silently shifting the paper's reproduced figures.
+//!
+//! Bless protocol: when a golden file does not exist yet (or
+//! `EAFL_BLESS=1` is set after an *intentional* behavior change), the
+//! test writes the file and passes; commit the new goldens with the
+//! change that explains them. Every test run — blessing or not — still
+//! proves worker-count invariance by producing each report twice, at
+//! `EAFL_WORKERS=1` and `EAFL_WORKERS=7`, and requiring identical bytes.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+const BIN: &str = env!("CARGO_BIN_EXE_eafl");
+const PRESETS: [&str; 4] = ["steady", "diurnal", "commuter", "solar-edge"];
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust").join("tests").join("golden")
+}
+
+/// One fixed-seed `eafl run` for a preset; returns the summary bytes.
+fn run_summary(preset: &str, workers: &str, out: &Path) -> String {
+    let _ = std::fs::remove_dir_all(out);
+    std::fs::create_dir_all(out).unwrap();
+    let output = Command::new(BIN)
+        .args([
+            "run",
+            "--mock",
+            "--selector",
+            "eafl",
+            "--scenario",
+            preset,
+            "--rounds",
+            "12",
+            "--clients",
+            "16",
+        ])
+        .arg("--out")
+        .arg(out)
+        .env("EAFL_WORKERS", workers)
+        .output()
+        .expect("spawning eafl run");
+    assert!(
+        output.status.success(),
+        "eafl run --scenario {preset} failed:\n{}",
+        String::from_utf8_lossy(&output.stderr)
+    );
+    std::fs::read_to_string(out.join("run-eafl.summary.json"))
+        .expect("run must write run-eafl.summary.json")
+}
+
+#[test]
+fn run_summary_bytes_are_pinned_for_every_preset() {
+    let scratch = std::env::temp_dir().join(format!("eafl-golden-{}", std::process::id()));
+    let bless = std::env::var("EAFL_BLESS").map_or(false, |v| v == "1");
+    std::fs::create_dir_all(golden_dir()).unwrap();
+    let mut blessed = Vec::new();
+    for preset in PRESETS {
+        let produced = run_summary(preset, "1", &scratch.join(preset));
+        // Worker-count invariance is part of the pin: the same bytes
+        // must come out of a differently-threaded process.
+        let reproduced = run_summary(preset, "7", &scratch.join(format!("{preset}-w7")));
+        assert_eq!(
+            produced, reproduced,
+            "{preset}: summary bytes differ between EAFL_WORKERS=1 and =7"
+        );
+
+        let golden_path = golden_dir().join(format!("run-{preset}.summary.json"));
+        if bless || !golden_path.exists() {
+            std::fs::write(&golden_path, &produced).unwrap();
+            blessed.push(golden_path);
+            continue;
+        }
+        let golden = std::fs::read_to_string(&golden_path).unwrap();
+        assert_eq!(
+            produced,
+            golden,
+            "{preset}: `eafl run` summary drifted from {}.\nIf this change is \
+             intentional, re-bless with EAFL_BLESS=1 and commit the new golden \
+             alongside the change that explains it.",
+            golden_path.display()
+        );
+    }
+    for path in &blessed {
+        eprintln!(
+            "[golden] blessed {} — commit it so future runs enforce these bytes",
+            path.display()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&scratch);
+}
+
+/// The presets must actually pin *different* trajectories — if two
+/// scenario presets produced byte-identical summaries the golden tier
+/// would be pinning less than it claims.
+#[test]
+fn presets_produce_distinct_summaries() {
+    let scratch =
+        std::env::temp_dir().join(format!("eafl-golden-distinct-{}", std::process::id()));
+    let steady = run_summary("steady", "1", &scratch.join("steady"));
+    let diurnal = run_summary("diurnal", "1", &scratch.join("diurnal"));
+    assert_ne!(
+        steady, diurnal,
+        "steady and diurnal presets must not produce identical summaries"
+    );
+    let _ = std::fs::remove_dir_all(&scratch);
+}

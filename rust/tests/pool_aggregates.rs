@@ -162,6 +162,89 @@ fn prop_fenwick_sampler_matches_linear_reference() {
     });
 }
 
+/// Degenerate pool: every weight zero. The sampler must fall back to
+/// uniform minimal weights (nobody gets literal zero probability, the
+/// old linear scans' clamp semantics) and still match the reference.
+#[test]
+fn fenwick_all_zero_weights_stay_drawable_and_match_linear() {
+    for n in [1usize, 2, 7, 64] {
+        let weights = vec![0.0; n];
+        for draw_seed in 0..8u64 {
+            let mut sampler = FenwickSampler::new(&weights);
+            let fenwick = sampler.sample_distinct(n, &mut Rng::seed_from_u64(draw_seed));
+            let linear =
+                weighted_sample_linear(&weights, n, &mut Rng::seed_from_u64(draw_seed));
+            assert_eq!(fenwick, linear, "n={n} seed={draw_seed}");
+            // Exhaustive and distinct: every index drawn exactly once.
+            let mut sorted = fenwick;
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..n).collect::<Vec<_>>(), "n={n} seed={draw_seed}");
+        }
+    }
+}
+
+/// A single eligible client is always the pick — whatever its weight
+/// (positive, zero, subnormal, infinite, NaN) — and the pool exhausts
+/// after one draw, on both implementations.
+#[test]
+fn fenwick_single_eligible_client_is_always_picked() {
+    for w in [1.0, 0.0, -3.0, 1e-320, 1e300, f64::INFINITY, f64::NAN] {
+        for draw_seed in 0..8u64 {
+            let mut sampler = FenwickSampler::new(&[w]);
+            let mut rng = Rng::seed_from_u64(draw_seed);
+            assert_eq!(sampler.draw(&mut rng), Some(0), "w={w}");
+            assert_eq!(sampler.draw(&mut rng), None, "pool must exhaust, w={w}");
+            assert_eq!(
+                weighted_sample_linear(&[w], 2, &mut Rng::seed_from_u64(draw_seed)),
+                vec![0],
+                "w={w}"
+            );
+        }
+    }
+}
+
+/// Weights spanning subnormals to 1e300 in one pool: quantization
+/// floors the pool max at 1e-290 so a subnormal-dominated pool cannot
+/// overflow the u64 grid, and the huge dynamic range must not break
+/// Fenwick == linear pick equality.
+#[test]
+fn fenwick_extreme_weight_spans_match_linear() {
+    let pools: Vec<Vec<f64>> = vec![
+        // Full span: subnormal .. 1e300 (everything below ~1e290 times
+        // the max quantizes to the minimal 1 grid unit).
+        vec![1e-320, 5e-310, 1e-290, 1e-30, 1.0, 1e30, 1e300],
+        // All-subnormal pool: max < the 1e-290 quantization floor —
+        // the scale must stay finite (this is the overflow regression).
+        vec![1e-320, 5e-310, 3e-308],
+        // Exactly at the floor plus neighbors straddling it.
+        vec![1e-290, 9.9e-291, 1.1e-290],
+        // Huge weights only.
+        vec![1e300, 5e299, 1e280],
+        // Mixture with non-finite and non-positive entries (clamped to
+        // the minimal weight on both implementations).
+        vec![f64::INFINITY, 1e300, -1.0, 0.0, f64::NAN, 1e-320],
+    ];
+    for (i, weights) in pools.iter().enumerate() {
+        let n = weights.len();
+        for k in [1usize, 2, n, n + 3] {
+            for draw_seed in 0..16u64 {
+                let mut sampler = FenwickSampler::new(weights);
+                assert!(
+                    sampler.total() < u64::MAX / 2,
+                    "pool {i}: quantized total overflowed the grid ({})",
+                    sampler.total()
+                );
+                let fenwick =
+                    sampler.sample_distinct(k, &mut Rng::seed_from_u64(draw_seed));
+                let linear =
+                    weighted_sample_linear(weights, k, &mut Rng::seed_from_u64(draw_seed));
+                assert_eq!(fenwick, linear, "pool {i} k={k} seed={draw_seed}");
+                assert_eq!(fenwick.len(), k.min(n), "pool {i} k={k}");
+            }
+        }
+    }
+}
+
 /// End to end: a full coordinator run (every engine mutation site —
 /// sim drains, background drains, recharge, feedback, blacklist)
 /// leaves the incremental aggregates exactly equal to brute force.

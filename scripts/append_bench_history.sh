@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Append one bench result to the JSONL perf history.
+#
+# `make bench` writes BENCH_plan.json (eafl-bench-v1 schema) for the
+# current tree; this script stamps it with the git SHA (and a -dirty
+# marker when the tree has uncommitted changes) and appends it as one
+# line to BENCH_history.jsonl — the per-commit trend record the ROADMAP
+# asks for. Pure shell + git: the bench JSON is flattened by replacing
+# newlines with spaces (its strings never contain raw newlines, so the
+# result is still valid JSON).
+#
+# Usage: append_bench_history.sh [BENCH_plan.json] [BENCH_history.jsonl]
+
+set -euo pipefail
+
+src="${1:-BENCH_plan.json}"
+hist="${2:-BENCH_history.jsonl}"
+
+if [ ! -f "$src" ]; then
+  echo "append_bench_history: no $src — run \`make bench\` first" >&2
+  exit 1
+fi
+
+sha="$(git rev-parse HEAD 2>/dev/null || echo unknown)"
+dirty=""
+if ! git diff --quiet 2>/dev/null || ! git diff --cached --quiet 2>/dev/null; then
+  dirty="-dirty"
+fi
+
+flat="$(tr '\n' ' ' < "$src")"
+printf '{"sha": "%s%s", "bench": %s}\n' "$sha" "$dirty" "$flat" >> "$hist"
+echo "recorded $src @ ${sha}${dirty} -> $hist"
