@@ -1,26 +1,35 @@
 //! Non-training round-path throughput at deployment scale: one
 //! plan → select → record pass per iteration, fast path vs the
-//! pre-refactor baseline, at 10k / 100k / 1M clients under the steady
-//! and diurnal scenarios.
+//! pre-refactor baseline, at 10k / 100k / 1M / 10M clients under the
+//! steady and diurnal scenarios — plus background-maintenance and
+//! full-round rows that time the lazy drain ledger (per-class cumsums
+//! + death wheel, see `coordinator::registry`) against the eager
+//! settle-every-epoch sweep it replaced.
 //!
 //! The fast path is what the engine runs today: SoA pool filtered into
 //! a reused candidate arena, band-partition + Fenwick selection, O(1)
-//! metrics from the incremental aggregates. The baseline reproduces the
-//! pre-refactor behaviour — allocate + recompute every projection via
-//! `Registry::candidates`, full sort of the explored pool, O(k·N)
-//! linear weighted draws, and five O(N) scans for the metrics row — so
-//! the speedup is measured against the real old code path, not a straw
-//! man.
+//! metrics from the incremental aggregates, and a background epoch
+//! that touches only participants and due deaths. The baseline
+//! reproduces the pre-refactor behaviour — allocate + recompute every
+//! projection via `Registry::candidates`, full sort of the explored
+//! pool, O(k·N) linear weighted draws, and five O(N) scans for the
+//! metrics row — so the speedup is measured against the real old code
+//! path, not a straw man. The eager rows re-materialize every battery
+//! every epoch (`settle_all`), which is exactly the round shape
+//! `EAFL_EAGER_DRAIN=1` runs.
 //!
 //! Run: cargo bench --bench plan_path_throughput -- \
-//!        [--clients 10000,100000,1000000] [--scenarios steady,diurnal] \
-//!        [--out BENCH_plan.json] [--smoke]
+//!        [--clients 10000,100000,1000000,10000000] \
+//!        [--scenarios steady,diurnal] [--out BENCH_plan.json] [--smoke]
 //!
-//! Always writes the `eafl-bench-v1` JSON document (results + derived
+//! Malformed flags exit 2 with a one-line error on stderr. Always
+//! writes the `eafl-bench-v1` JSON document (results + derived
 //! per-size speedups) to `--out`; `make bench` targets the repo root's
 //! `BENCH_plan.json`.
 
-use eafl::benchkit::{bb, Bench};
+use anyhow::Result;
+
+use eafl::benchkit::{bb, parse_count_list, parse_name_list, require_value, Bench};
 use eafl::config::{ExperimentConfig, SelectorConfig, SelectorKind};
 use eafl::coordinator::Registry;
 use eafl::metrics::{jain_index, jain_index_from_moments};
@@ -42,9 +51,12 @@ struct Args {
     smoke: bool,
 }
 
-fn parse_args() -> Args {
+/// Flag parsing is fallible, not panicking: `main` turns the error
+/// into a one-line stderr message and exit code 2, so a typo'd count
+/// never shows a backtrace.
+fn parse_args() -> Result<Args> {
     let mut args = Args {
-        clients: vec![10_000, 100_000, 1_000_000],
+        clients: vec![10_000, 100_000, 1_000_000, 10_000_000],
         scenarios: vec!["steady".to_string(), "diurnal".to_string()],
         out: "BENCH_plan.json".to_string(),
         smoke: false,
@@ -53,24 +65,27 @@ fn parse_args() -> Args {
     while let Some(flag) = it.next() {
         match flag.as_str() {
             "--clients" => {
-                let v = it.next().expect("--clients needs a comma-separated list");
-                args.clients = v
-                    .split(',')
-                    .map(|s| s.trim().parse().expect("bad client count"))
-                    .collect();
+                args.clients =
+                    parse_count_list("--clients", &require_value("--clients", it.next())?)?;
             }
             "--scenarios" => {
-                let v = it.next().expect("--scenarios needs a comma-separated list");
-                args.scenarios = v.split(',').map(|s| s.trim().to_string()).collect();
+                args.scenarios =
+                    parse_name_list("--scenarios", &require_value("--scenarios", it.next())?)?;
             }
-            "--out" => args.out = it.next().expect("--out needs a path"),
+            "--out" => args.out = require_value("--out", it.next())?,
             "--smoke" => args.smoke = true,
             // cargo bench may forward its own flags (e.g. --bench);
             // ignore anything we don't recognize.
             _ => {}
         }
     }
-    args
+    for name in &args.scenarios {
+        anyhow::ensure!(
+            Scenario::preset(name).is_some(),
+            "unknown scenario preset {name:?} for --scenarios (try steady, diurnal)"
+        );
+    }
+    Ok(args)
 }
 
 /// Population with a realistic mix of explored/unexplored clients and
@@ -279,7 +294,7 @@ fn fast_round(
     arena: &mut Vec<Candidate>,
     round: u64,
     rng: &mut Rng,
-) -> usize {
+) -> Vec<usize> {
     if env.availability.is_always_available() {
         registry.fill_candidates(round, cfg.selector.min_battery_frac, |_| true, arena);
     } else {
@@ -302,7 +317,9 @@ fn fast_round(
             compute_s: pool.compute_s[id],
             upload_s: pool.upload_s[id],
             round_energy_j: pool.round_energy_j[id],
-            charge_j: pool.charge_j[id],
+            // The raw mirror can lag under lazy drain; plans must carry
+            // the drain-effective charge, exactly like the engine does.
+            charge_j: registry.effective_charge_j(id),
         })
         .collect();
     let agg = registry.aggregates();
@@ -318,18 +335,101 @@ fn fast_round(
     selected.len()
 }
 
+fn mean_of(bench: &Bench, name: &str) -> f64 {
+    bench.results().iter().find(|s| s.name == name).map(|s| s.mean_ns).unwrap_or(f64::NAN)
+}
+
+/// Background-epoch drain rates for the lazy/eager rows. Deliberately
+/// tiny — cumulative drain stays around 10⁻³ of capacity even across
+/// tens of millions of measured epochs — so the rows time the
+/// steady-idle-fleet maintenance cost itself; a realistic rate would
+/// turn the measurement into a mass-death event partway through.
+const MAINT_IDLE_PER_H: f64 = 1e-9;
+const MAINT_BUSY_PER_H: f64 = 2e-9;
+const MAINT_EPOCH_H: f64 = 0.1;
+
 fn main() {
-    let args = parse_args();
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!(
+                "usage: cargo bench --bench plan_path_throughput -- \
+                 [--clients N,N,...] [--scenarios NAME,...] [--out PATH] [--smoke]"
+            );
+            std::process::exit(2);
+        }
+    };
     let mut bench = if args.smoke { Bench::smoke() } else { Bench::new() };
-    // (label stems, fast mean, baseline mean) for the derived speedups.
+    // (key, value) rows for the derived section of the JSON doc.
     let mut derived: Vec<(String, f64)> = Vec::new();
 
     for &n in &args.clients {
-        let (cfg, registry) = build_registry(n);
+        let (cfg, mut registry) = build_registry(n);
         println!("== population {n} built ==");
+
+        // --- Maintenance-only rows: one background epoch over the
+        // whole fleet, scenario-independent. The lazy row is the
+        // sub-O(alive) claim itself — two cumsum bumps, a wheel probe,
+        // and the O(1) closed-form record; the eager row adds the
+        // settle-every-battery sweep the ledger replaced. The drain
+        // clock only ever moves forward, so these rows and the
+        // full-round rows below share one monotonic `clock`.
+        let lazy_maint = format!("lazy background epoch N={n}");
+        let eager_maint = format!("eager background epoch N={n}");
+        let mut clock = 0.0f64;
+        bench.run(&lazy_maint, || {
+            clock += MAINT_EPOCH_H;
+            registry.advance_background(
+                &[],
+                MAINT_IDLE_PER_H,
+                MAINT_BUSY_PER_H,
+                MAINT_EPOCH_H,
+                clock,
+            );
+            bb(registry.mean_battery_alive());
+        });
+        // The eager sweep at 1M+ is tens of ms per epoch; one measured
+        // pass is the honest budget, same rule as the plan rows.
+        if n >= 1_000_000 && !args.smoke {
+            bench.run_once(&eager_maint, || {
+                clock += MAINT_EPOCH_H;
+                registry.advance_background(
+                    &[],
+                    MAINT_IDLE_PER_H,
+                    MAINT_BUSY_PER_H,
+                    MAINT_EPOCH_H,
+                    clock,
+                );
+                registry.settle_all();
+                registry.mean_battery_alive()
+            });
+        } else {
+            bench.run(&eager_maint, || {
+                clock += MAINT_EPOCH_H;
+                registry.advance_background(
+                    &[],
+                    MAINT_IDLE_PER_H,
+                    MAINT_BUSY_PER_H,
+                    MAINT_EPOCH_H,
+                    clock,
+                );
+                registry.settle_all();
+                bb(registry.mean_battery_alive());
+            });
+        }
+        let lazy_maint_ns = mean_of(&bench, &lazy_maint);
+        let maint_speedup = mean_of(&bench, &eager_maint) / lazy_maint_ns;
+        println!(
+            "--> N={n}: background epoch {lazy_maint_ns:.0} ns lazy, \
+             {maint_speedup:.1}x vs eager"
+        );
+        derived.push((format!("lazy_maintenance_ns_{n}"), lazy_maint_ns));
+        derived.push((format!("maintenance_speedup_{n}"), maint_speedup));
+
         for scenario_name in &args.scenarios {
-            let scenario = Scenario::preset(scenario_name)
-                .unwrap_or_else(|| panic!("unknown preset {scenario_name}"));
+            let scenario =
+                Scenario::preset(scenario_name).expect("presets are validated in parse_args");
             let env = scenario.build_env(7, n, &cfg.devices);
             let label = format!("N={n} {scenario_name}");
 
@@ -378,17 +478,127 @@ fn main() {
                 });
             }
 
-            let mean_of = |name: &str| {
-                bench
-                    .results()
-                    .iter()
-                    .find(|s| s.name == name)
-                    .map(|s| s.mean_ns)
-                    .unwrap_or(f64::NAN)
-            };
-            let speedup = mean_of(&base_name) / mean_of(&fast_name);
+            let speedup = mean_of(&bench, &base_name) / mean_of(&bench, &fast_name);
             println!("--> {label}: speedup {speedup:.1}x");
             derived.push((format!("speedup_{scenario_name}_{n}"), speedup));
+
+            // --- Full non-training round, lazy vs eager drain: the
+            // plan+select+record pass plus one background epoch. The
+            // eager variant adds the `settle_all` sweep — the round
+            // shape `EAFL_EAGER_DRAIN=1` runs — so the ratio is the
+            // end-to-end win of deferring materialization.
+            let lazy_round_name = format!("lazy round {label}");
+            let eager_round_name = format!("eager round {label}");
+            let mut scratch: Vec<usize> = Vec::new();
+            if n >= 1_000_000 && !args.smoke {
+                bench.run_once(&lazy_round_name, || {
+                    round += 1;
+                    clock += MAINT_EPOCH_H;
+                    let selected = fast_round(
+                        &cfg,
+                        &registry,
+                        &env,
+                        selector.as_mut(),
+                        &mut arena,
+                        round,
+                        &mut rng,
+                    );
+                    scratch.clear();
+                    scratch.extend_from_slice(&selected);
+                    scratch.sort_unstable();
+                    registry.advance_background(
+                        &scratch,
+                        MAINT_IDLE_PER_H,
+                        MAINT_BUSY_PER_H,
+                        MAINT_EPOCH_H,
+                        clock,
+                    );
+                    selected.len()
+                });
+                bench.run_once(&eager_round_name, || {
+                    round += 1;
+                    clock += MAINT_EPOCH_H;
+                    let selected = fast_round(
+                        &cfg,
+                        &registry,
+                        &env,
+                        selector.as_mut(),
+                        &mut arena,
+                        round,
+                        &mut rng,
+                    );
+                    scratch.clear();
+                    scratch.extend_from_slice(&selected);
+                    scratch.sort_unstable();
+                    registry.advance_background(
+                        &scratch,
+                        MAINT_IDLE_PER_H,
+                        MAINT_BUSY_PER_H,
+                        MAINT_EPOCH_H,
+                        clock,
+                    );
+                    registry.settle_all();
+                    selected.len()
+                });
+            } else {
+                bench.run(&lazy_round_name, || {
+                    round += 1;
+                    clock += MAINT_EPOCH_H;
+                    let selected = fast_round(
+                        &cfg,
+                        &registry,
+                        &env,
+                        selector.as_mut(),
+                        &mut arena,
+                        round,
+                        &mut rng,
+                    );
+                    scratch.clear();
+                    scratch.extend_from_slice(&selected);
+                    scratch.sort_unstable();
+                    registry.advance_background(
+                        &scratch,
+                        MAINT_IDLE_PER_H,
+                        MAINT_BUSY_PER_H,
+                        MAINT_EPOCH_H,
+                        clock,
+                    );
+                    bb(selected.len());
+                });
+                bench.run(&eager_round_name, || {
+                    round += 1;
+                    clock += MAINT_EPOCH_H;
+                    let selected = fast_round(
+                        &cfg,
+                        &registry,
+                        &env,
+                        selector.as_mut(),
+                        &mut arena,
+                        round,
+                        &mut rng,
+                    );
+                    scratch.clear();
+                    scratch.extend_from_slice(&selected);
+                    scratch.sort_unstable();
+                    registry.advance_background(
+                        &scratch,
+                        MAINT_IDLE_PER_H,
+                        MAINT_BUSY_PER_H,
+                        MAINT_EPOCH_H,
+                        clock,
+                    );
+                    registry.settle_all();
+                    bb(selected.len());
+                });
+            }
+            let lazy_round_ns = mean_of(&bench, &lazy_round_name);
+            let lazy_vs_eager = mean_of(&bench, &eager_round_name) / lazy_round_ns;
+            println!(
+                "--> {label}: lazy round {lazy_round_ns:.0} ns, \
+                 {lazy_vs_eager:.1}x vs eager"
+            );
+            derived.push((format!("lazy_round_ns_{scenario_name}_{n}"), lazy_round_ns));
+            derived.push((format!("lazy_vs_eager_{scenario_name}_{n}"), lazy_vs_eager));
         }
     }
 

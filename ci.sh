@@ -26,6 +26,14 @@ cargo test -q
 echo "==> cargo test -q (EAFL_WORKERS=8)"
 EAFL_WORKERS=8 cargo test -q
 
+# Drain-mode invariance is the same kind of contract: with the lazy
+# background-drain ledger forced into its eager escape hatch
+# (settle every battery every epoch), every golden and campaign byte
+# must come out identical — the ledger is an optimization, never a
+# semantic.
+echo "==> cargo test -q (EAFL_EAGER_DRAIN=1)"
+EAFL_EAGER_DRAIN=1 cargo test -q
+
 # Benches must always compile, even though CI never runs the heavy ones.
 echo "==> cargo bench --no-run"
 cargo bench --no-run
@@ -55,6 +63,19 @@ cp "$SMOKE_CSV" "$SMOKE_OUT/before-merge.csv"
 cmp -s "$SMOKE_CSV" "$SMOKE_OUT/before-merge.csv" \
   || { echo "FAIL: eafl merge changed the merged CSV bytes"; exit 1; }
 echo "    sweep smoke OK ($rows lines in $(basename "$SMOKE_CSV"), merge stable)"
+
+# The same sweep under the eager-drain escape hatch must reproduce the
+# lazy run byte for byte: campaign output cannot depend on when battery
+# state is materialized.
+echo "==> eager-drain sweep cross-check"
+EAGER_OUT="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_OUT" "$EAGER_OUT"' EXIT
+EAFL_EAGER_DRAIN=1 ./target/release/eafl sweep --mock \
+  --scenario steady,diurnal --selectors random,eafl --seeds 1 --rounds 2 \
+  --clients 16 --jobs 2 --out "$EAGER_OUT" >/dev/null
+cmp -s "$SMOKE_CSV" "$EAGER_OUT/sweep.campaign.csv" \
+  || { echo "FAIL: EAFL_EAGER_DRAIN=1 changed the campaign CSV bytes"; exit 1; }
+echo "    eager-drain cross-check OK (campaign bytes identical)"
 
 # Plan-path bench smoke: a 10k-client pass must run and emit a
 # machine-readable eafl-bench-v1 JSON with the expected shape.

@@ -215,6 +215,57 @@ impl Bench {
 /// Re-export for benches to keep the optimizer honest.
 pub use std::hint::black_box as bb;
 
+// ---------------------------------------------------------------------------
+// Bench CLI flag parsing
+// ---------------------------------------------------------------------------
+//
+// Bench targets are `harness = false` binaries with hand-rolled flag
+// loops. These helpers give them the same failure mode as the main CLI:
+// a malformed flag is a one-line error the bench turns into a non-zero
+// exit with clean stderr — never an `.expect` panic with a backtrace.
+
+/// The value following `flag`, or a clear error naming the flag.
+pub fn require_value(flag: &str, value: Option<String>) -> Result<String> {
+    value.ok_or_else(|| anyhow::anyhow!("{flag} requires a value"))
+}
+
+/// Parse a comma-separated list of positive client counts, bounded by
+/// [`crate::config::MAX_CLIENTS`] (the same ceiling the experiment
+/// config enforces — a bench must not be the one path that can ask the
+/// allocator for an absurd population).
+pub fn parse_count_list(flag: &str, raw: &str) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in raw.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let n: usize = part
+            .parse()
+            .map_err(|_| anyhow::anyhow!("{flag}: invalid count {part:?}"))?;
+        anyhow::ensure!(n > 0, "{flag}: counts must be > 0 (got {part:?})");
+        anyhow::ensure!(
+            n <= crate::config::MAX_CLIENTS,
+            "{flag}: counts must be <= {} (got {part:?})",
+            crate::config::MAX_CLIENTS
+        );
+        out.push(n);
+    }
+    anyhow::ensure!(!out.is_empty(), "{flag} needs at least one count");
+    Ok(out)
+}
+
+/// Parse a comma-separated list of non-empty names (e.g. scenarios).
+pub fn parse_name_list(flag: &str, raw: &str) -> Result<Vec<String>> {
+    let out: Vec<String> = raw
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!out.is_empty(), "{flag} needs at least one name");
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,6 +301,34 @@ mod tests {
         assert!(fmt_ns(5e4).contains("µs"));
         assert!(fmt_ns(5e7).contains("ms"));
         assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    #[test]
+    fn flag_helpers_accept_good_input() {
+        assert_eq!(require_value("--out", Some("x.json".into())).unwrap(), "x.json");
+        assert_eq!(
+            parse_count_list("--clients", "10, 20,30").unwrap(),
+            vec![10, 20, 30]
+        );
+        assert_eq!(
+            parse_name_list("--scenarios", "steady, diurnal").unwrap(),
+            vec!["steady".to_string(), "diurnal".to_string()]
+        );
+    }
+
+    #[test]
+    fn flag_helpers_reject_malformed_input_with_the_flag_name() {
+        let e = require_value("--out", None).unwrap_err().to_string();
+        assert!(e.contains("--out"), "{e}");
+        for raw in ["abc", "10,abc", "", "0", "-5", "10,,0"] {
+            let e = parse_count_list("--clients", raw).unwrap_err().to_string();
+            assert!(e.contains("--clients"), "{raw:?}: {e}");
+        }
+        let huge = format!("{}", crate::config::MAX_CLIENTS + 1);
+        let e = parse_count_list("--clients", &huge).unwrap_err().to_string();
+        assert!(e.contains("must be <="), "{e}");
+        let e = parse_name_list("--scenarios", " , ").unwrap_err().to_string();
+        assert!(e.contains("--scenarios"), "{e}");
     }
 
     #[test]

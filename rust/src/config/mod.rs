@@ -13,6 +13,14 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::util::toml::{TomlDoc, TomlWriter};
 
+/// Hard ceiling on the simulated population. The registry sizes every
+/// SoA pool column, liveness index and drain-ledger anchor vector to N
+/// up front, so an absurd `--clients` must fail validation with a clear
+/// message instead of an allocator abort. 100M clients ≈ a few tens of
+/// GB of pool state — an order of magnitude past the benchmarked 10M
+/// tier, and past any machine this simulator targets.
+pub const MAX_CLIENTS: usize = 100_000_000;
+
 /// Which participant-selection policy the coordinator runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SelectorKind {
@@ -608,6 +616,12 @@ impl ExperimentConfig {
         );
         let f = &self.federation;
         ensure!(f.num_clients > 0, "num_clients must be > 0");
+        ensure!(
+            f.num_clients <= MAX_CLIENTS,
+            "num_clients must be <= {MAX_CLIENTS} (got {}) — the SoA pool and \
+             liveness indices size O(N) buffers up front",
+            f.num_clients
+        );
         ensure!(
             f.participants_per_round > 0 && f.participants_per_round <= f.num_clients,
             "participants_per_round must be in 1..=num_clients"

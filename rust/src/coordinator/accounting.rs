@@ -13,7 +13,12 @@
 //! (`drain_fl` / `drain_background` / `charge_add` / `recharge_to`), so
 //! the SoA pool mirrors and the incremental population aggregates can
 //! never drift from the authoritative state — accounting is one of the
-//! mutation sites those aggregates are maintained at.
+//! mutation sites those aggregates are maintained at. The background
+//! phase itself is *lazy*: [`BatteryAccounting::drain_background`]
+//! advances the registry's drain ledger in O(participants + deaths)
+//! and individual batteries materialize the accrued drain on their
+//! next touch (`EAFL_EAGER_DRAIN=1` restores the legacy per-round
+//! sweep, bit-for-bit).
 
 use crate::config::DeviceConfig;
 use crate::sim::ParticipantResult;
@@ -43,9 +48,15 @@ impl BatteryAccounting {
     /// the round's wall-clock span ending at `end_clock_h`.
     ///
     /// `sorted_selected` must be sorted ascending (the coordinator
-    /// keeps a reusable scratch buffer for this) — participants are
-    /// skipped via binary search instead of the former per-round
-    /// HashSet allocation.
+    /// keeps a reusable scratch buffer for this).
+    ///
+    /// This is a *lazy* epoch advance, O(participants + due deaths):
+    /// the registry's drain ledger credits `rate × round_hours` to the
+    /// per-class cumsums and fires the death wheel; no battery is
+    /// written until its next touch (see `Registry::advance_background`
+    /// for the invariant). The `EAFL_EAGER_DRAIN=1` escape hatch tacks
+    /// on a full [`Registry::settle_all`] sweep, restoring the legacy
+    /// O(N)-per-round materialization — same bits, legacy cost.
     pub fn drain_background(
         registry: &mut Registry,
         sorted_selected: &[usize],
@@ -57,23 +68,29 @@ impl BatteryAccounting {
             sorted_selected.windows(2).all(|w| w[0] < w[1]),
             "drain_background requires sorted, deduplicated participant ids"
         );
-        for id in 0..registry.len() {
-            if sorted_selected.binary_search(&id).is_ok() {
-                continue;
-            }
-            let c = registry.client(id);
-            if !c.battery.is_alive() {
-                continue;
-            }
-            let rate = if c.device.background_busy {
-                dev.busy_drain_per_hour
-            } else {
-                dev.idle_drain_per_hour
-            };
-            let e = crate::energy::background_energy_joules(&c.device.spec, rate, round_hours);
-            registry.drain_background(id, e, end_clock_h);
+        registry.advance_background(
+            sorted_selected,
+            dev.idle_drain_per_hour,
+            dev.busy_drain_per_hour,
+            round_hours,
+            end_clock_h,
+        );
+        if eager_drain_forced() {
+            registry.settle_all();
         }
     }
+}
+
+/// Whether `EAFL_EAGER_DRAIN=1` (or `true`) forces the legacy eager
+/// background-drain sweep: every battery is settled every round
+/// instead of on touch. The lazy ledger still runs either way — eager
+/// mode only adds the O(N) materialization — so the two modes produce
+/// byte-identical campaign reports; the flag exists as an escape hatch
+/// and as ci.sh's lazy-vs-eager determinism tier.
+pub fn eager_drain_forced() -> bool {
+    std::env::var("EAFL_EAGER_DRAIN")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false)
 }
 
 /// Pluggable device-recovery model, applied once at the end of every
@@ -116,12 +133,23 @@ pub struct CooldownRecharge {
 
 impl RechargePolicy for CooldownRecharge {
     fn apply(&self, registry: &mut Registry, _start_clock_h: f64, end_clock_h: f64) {
-        for id in 0..registry.len() {
+        // O(dead): only the pool's dead index is scanned, not the whole
+        // population — on a healthy fleet this is a no-op over an empty
+        // slice. The index iterates in unspecified (swap-remove) order,
+        // so collect + sort before mutating to keep revival order — and
+        // thus every downstream byte — independent of death history.
+        let mut due: Vec<usize> = Vec::new();
+        for &id32 in registry.pool().dead.ids() {
+            let id = id32 as usize;
             if let Some(died) = registry.client(id).battery.died_at_h {
                 if end_clock_h - died >= self.after_hours {
-                    registry.recharge_to(id, self.to_fraction);
+                    due.push(id);
                 }
             }
+        }
+        due.sort_unstable();
+        for id in due {
+            registry.recharge_to(id, self.to_fraction);
         }
     }
     fn can_revive(&self) -> bool {
@@ -200,6 +228,10 @@ mod tests {
         let charge0 = r.client(0).battery.charge_joules();
         let charge2 = r.client(2).battery.charge_joules();
         BatteryAccounting::drain_background(&mut r, &[0], &cfg.devices, 1.0, 1.0);
+        // Lazy drain: the epoch is credited to the ledger, raw batteries
+        // stay untouched until materialized.
+        assert_eq!(r.client(2).battery.charge_joules(), charge2, "lazy defers the write");
+        r.settle_all();
         assert_eq!(r.client(0).battery.charge_joules(), charge0, "participant skipped");
         assert!(r.client(2).battery.charge_joules() < charge2, "bystander drained");
         assert_eq!(r.client(1).battery.background_energy_j, 0.0, "dead skipped");

@@ -99,6 +99,12 @@ pub struct RoundPlan {
 /// when the model is always-on), and the selected clients' timing and
 /// energy plans are copied from the build-time projection cache instead
 /// of re-running the energy model.
+///
+/// `avail_cache`, when present, is the coordinator's
+/// [`WakeWheel`](crate::scenario::WakeWheel) bitmap already advanced to
+/// `clock_h`: the availability gate becomes a slice load instead of a
+/// dynamic model dispatch per client. `None` falls back to direct model
+/// calls — same bits either way (the wheel's soundness contract).
 pub struct PlanPhase;
 
 impl PlanPhase {
@@ -110,6 +116,7 @@ impl PlanPhase {
         env: &ScenarioEnv,
         round: u64,
         clock_h: f64,
+        avail_cache: Option<&[bool]>,
         rng: &mut Rng,
         arena: &mut Vec<Candidate>,
     ) -> RoundPlan {
@@ -118,6 +125,8 @@ impl PlanPhase {
 
         if env.availability.is_always_available() {
             registry.fill_candidates(round, floor, |_| true, arena);
+        } else if let Some(cache) = avail_cache {
+            registry.fill_candidates(round, floor, |id| cache[id], arena);
         } else {
             let availability = &env.availability;
             registry.fill_candidates(
@@ -140,7 +149,10 @@ impl PlanPhase {
                 compute_s: pool.compute_s[id],
                 upload_s: pool.upload_s[id],
                 round_energy_j: pool.round_energy_j[id],
-                charge_j: pool.charge_j[id],
+                // Drain-effective, not the raw mirror: under lazy drain
+                // the mirror lags until the next touch, and this value
+                // decides mid-round battery deaths in the sim phase.
+                charge_j: registry.effective_charge_j(id),
             })
             .collect();
         RoundPlan { round, selected, plans, deadline_s }
@@ -564,7 +576,7 @@ mod tests {
         rng: &mut Rng,
     ) -> RoundPlan {
         let mut arena = Vec::new();
-        PlanPhase::run(registry, selector, cfg, env, round, clock_h, rng, &mut arena)
+        PlanPhase::run(registry, selector, cfg, env, round, clock_h, None, rng, &mut arena)
     }
 
     #[test]

@@ -38,6 +38,37 @@
 //! recomputation; the allocating [`Registry::candidates`] recomputes
 //! everything from the AoS state and is kept as the reference (and as
 //! the pre-refactor baseline in `benches/plan_path_throughput.rs`).
+//!
+//! ## Lazy background drain (the zero-cost-idle-client ledger)
+//!
+//! Background idle/busy drain is a *rate*, identical for every client
+//! of the same class — so the registry never sweeps N batteries per
+//! round. Instead a [`DrainLedger`] keeps one cumulative drained
+//! fraction per class (`s = Σ rate·Δt`) plus a per-client **anchor**
+//! `(charge, s-at-anchor)` captured whenever a battery is actually
+//! touched. The true charge is then the pure function
+//!
+//! ```text
+//! effective = anchor_charge − capacity · (s − anchor_s)
+//! ```
+//!
+//! **Invariant: aggregates and candidates reflect drain as-of the round
+//! clock, applied on touch.** Anchors move *only* at guard drops
+//! ([`Registry::battery_mut`] re-anchors on drop and settles pending
+//! drain on entry), so identical mutation streams produce identical
+//! anchors — and because materialization ([`Registry::settle_all`],
+//! the `EAFL_EAGER_DRAIN=1` sweep) evaluates the same pure function
+//! *without* moving the anchor, the lazy and eager paths land on
+//! bit-identical charge levels, death times and metrics.
+//!
+//! Deaths are found without scanning: each alive client is registered
+//! in a per-class [`BucketWheel`] keyed by `u = fraction + anchor_s`
+//! (it dies when `s` reaches ≈ `u`); [`Registry::advance_background`]
+//! pops only the due buckets per epoch, re-checks the exact predicate
+//! on each fired entry, and kills exactly the clients the eager sweep
+//! would have — stamped at the same end-of-epoch instant. The pool
+//! also maintains O(1) dead / below-capacity index sets so recharge
+//! policies scan revival candidates instead of the population.
 
 use std::ops::{Deref, DerefMut};
 
@@ -48,6 +79,8 @@ use crate::energy::RoundEnergy;
 use crate::network::{generate_links, LinkProfile};
 use crate::selection::Candidate;
 use crate::util::fixed::FixedSum;
+use crate::util::index_set::IndexSet;
+use crate::util::wheel::BucketWheel;
 
 /// Mutable per-client selection statistics.
 #[derive(Debug, Clone, Default)]
@@ -130,6 +163,9 @@ pub struct ClientPool {
     pub round_energy_j: Vec<f64>,
     /// `round_energy_j / capacity` — the candidate's projected drain.
     pub drain_frac: Vec<f64>,
+    /// Battery capacity, joules (static; the lazy-drain closed form
+    /// multiplies it by the elapsed cumulative drain fraction).
+    pub capacity_j: Vec<f64>,
     // --- dynamic mirrors (mutation guards) ---
     pub alive: Vec<bool>,
     pub battery_frac: Vec<f64>,
@@ -138,6 +174,16 @@ pub struct ClientPool {
     pub measured_duration_s: Vec<Option<f64>>,
     pub last_selected_round: Vec<u64>,
     pub banned_until_round: Vec<u64>,
+    // --- liveness indices (mutation guards; free-list style) ---
+    /// Clients whose battery is currently dead — the revival
+    /// candidates recharge policies scan instead of all N clients.
+    /// Membership order is unspecified (swap-remove).
+    pub dead: IndexSet,
+    /// Clients whose *materialized* charge is below capacity (i.e.
+    /// could absorb charge). In lazy mode a client with pending
+    /// un-settled drain may still read as full here — policies that
+    /// need the drain-effective view must settle first.
+    pub below_capacity: IndexSet,
 }
 
 impl ClientPool {
@@ -153,6 +199,7 @@ impl ClientPool {
             expected_duration_s,
             round_energy_j,
             drain_frac,
+            capacity_j,
             alive,
             battery_frac,
             charge_j,
@@ -161,6 +208,8 @@ impl ClientPool {
             last_selected_round,
             banned_until_round
         );
+        p.dead = IndexSet::with_capacity(n);
+        p.below_capacity = IndexSet::with_capacity(n);
         p
     }
 }
@@ -200,11 +249,108 @@ impl PoolAggregates {
     }
 }
 
+/// Death-wheel bucket width, in cumulative-drained-fraction units
+/// (2⁻¹⁰ ≈ 0.001 of a battery). An entry fires at most one bucket
+/// early (the exact predicate is re-checked), so a near-death client
+/// refires for at most `width / per-epoch-drain` epochs before dying.
+const DEATH_BUCKET_WIDTH: f64 = 1.0 / 1024.0;
+
+/// Slack added to the wheel threshold so float error in the `u =
+/// fraction + s` keys can never postpone a due death past its epoch.
+/// The key error is a few ulps of `u` (≲ 1e-11 even after 10⁴
+/// simulated hours of cumulative drain) — far below this margin,
+/// which itself sits far below the bucket width, so the slack only
+/// ever pulls in (already-due or one-bucket-early) entries whose
+/// exact predicate decides the outcome.
+const DEATH_SAFETY: f64 = 1e-7;
+
+/// The lazy background-drain ledger: one cumulative drained fraction
+/// per drain class plus per-client anchors (see the module docs).
+///
+/// Class 0 = idle devices, class 1 = `background_busy` devices; the
+/// class is a static property of the device profile, so two cumsums
+/// cover the whole population.
+#[derive(Debug, Clone)]
+struct DrainLedger {
+    /// Cumulative drained capacity-fraction per class since t = 0.
+    s_frac: [f64; 2],
+    /// Ledger clock: the end of the last advanced epoch — the instant
+    /// lazily discovered deaths are stamped with (matching the eager
+    /// sweep, which drained bystanders at each round's end clock).
+    now_h: f64,
+    /// Per-client drain class (0 or 1).
+    class_of: Vec<u8>,
+    /// Materialized charge at the client's last anchor, joules.
+    anchor_charge_j: Vec<f64>,
+    /// Class cumsum at the client's last anchor.
+    anchor_s_frac: Vec<f64>,
+    /// The exact `fraction + s` key this client contributed to
+    /// `u_sum` and registered in the death wheel (valid while
+    /// `contributing`).
+    anchor_u: Vec<f64>,
+    /// Wheel-entry generation, bumped on every re-anchor; fired
+    /// entries with a stale generation are discarded (lazy deletion).
+    anchor_gen: Vec<u32>,
+    /// Whether the client is currently counted in `u_sum` /
+    /// `alive_in_class` (⇔ its battery is alive).
+    contributing: Vec<bool>,
+    /// Σ (fraction_i + s_class_i) over all contributing clients (one
+    /// shared accumulator, so at s = 0 it carries the exact same grid
+    /// state the pre-ledger per-fraction sum did) — with
+    /// `alive_in_class`, yields the population's effective mean
+    /// battery in O(1): (u_sum − Σ_c n_c·s_c) / n.
+    u_sum: FixedSum,
+    alive_in_class: [usize; 2],
+    /// Death wheels keyed by `anchor_u`, per class.
+    wheels: [BucketWheel; 2],
+    /// Reusable scratch for fired wheel entries.
+    fired: Vec<(u32, u32)>,
+}
+
+impl DrainLedger {
+    fn new(clients: &[ClientState]) -> Self {
+        let n = clients.len();
+        let mut led = Self {
+            s_frac: [0.0; 2],
+            now_h: 0.0,
+            class_of: Vec::with_capacity(n),
+            anchor_charge_j: Vec::with_capacity(n),
+            anchor_s_frac: vec![0.0; n],
+            anchor_u: vec![0.0; n],
+            anchor_gen: vec![0; n],
+            contributing: vec![false; n],
+            u_sum: FixedSum::default(),
+            alive_in_class: [0; 2],
+            wheels: [
+                BucketWheel::new(DEATH_BUCKET_WIDTH),
+                BucketWheel::new(DEATH_BUCKET_WIDTH),
+            ],
+            fired: Vec::new(),
+        };
+        for (id, c) in clients.iter().enumerate() {
+            let class = c.device.background_busy as usize;
+            led.class_of.push(class as u8);
+            led.anchor_charge_j.push(c.battery.charge_joules());
+            if c.battery.is_alive() {
+                let u = c.battery.fraction(); // + s, which is 0 at build
+                led.anchor_u[id] = u;
+                led.u_sum.add(u);
+                led.alive_in_class[class] += 1;
+                led.contributing[id] = true;
+                led.wheels[class].insert(u, id as u32, 0);
+            }
+        }
+        led
+    }
+}
+
 /// The full client population.
 pub struct Registry {
     clients: Vec<ClientState>,
     pool: ClientPool,
     aggregates: PoolAggregates,
+    /// Lazy background-drain state (see the module docs).
+    ledger: DrainLedger,
     /// Model payload exchanged each round (flat params as f32 bytes).
     /// Private like `clients`: it feeds every cached projection, so
     /// mutating it without a pool rebuild would silently stale the
@@ -239,9 +385,10 @@ impl Registry {
             .collect();
         let mut registry = Self {
             clients,
-            // Placeholder only: rebuild_pool constructs the real pool.
+            // Placeholders only: rebuild_pool constructs the real ones.
             pool: ClientPool::default(),
             aggregates: PoolAggregates::default(),
+            ledger: DrainLedger::new(&[]),
             payload_bytes: param_count * 4,
             local_steps: cfg.training.local_steps,
             batch: cfg.data.batch_size,
@@ -250,11 +397,12 @@ impl Registry {
         registry
     }
 
-    /// Populate the SoA pool and the aggregates from scratch.
+    /// Populate the SoA pool, the aggregates and the drain ledger from
+    /// scratch.
     fn rebuild_pool(&mut self) {
         let (payload, steps, batch) = (self.payload_bytes, self.local_steps, self.batch);
         let mut pool = ClientPool::with_capacity(self.clients.len());
-        for c in &self.clients {
+        for (id, c) in self.clients.iter().enumerate() {
             let energy = c.projected_energy(payload, steps, batch).total();
             pool.download_s.push(c.link.download_secs(payload));
             pool.compute_s.push(c.compute_secs(steps, batch));
@@ -262,6 +410,7 @@ impl Registry {
             pool.expected_duration_s.push(c.expected_duration_s(payload, steps, batch));
             pool.round_energy_j.push(energy);
             pool.drain_frac.push(energy / c.battery.capacity_joules());
+            pool.capacity_j.push(c.battery.capacity_joules());
             pool.alive.push(c.battery.is_alive());
             pool.battery_frac.push(c.battery.fraction());
             pool.charge_j.push(c.battery.charge_joules());
@@ -269,9 +418,16 @@ impl Registry {
             pool.measured_duration_s.push(c.stats.measured_duration_s);
             pool.last_selected_round.push(c.stats.last_selected_round);
             pool.banned_until_round.push(c.stats.banned_until_round);
+            if !c.battery.is_alive() {
+                pool.dead.insert(id);
+            }
+            if c.battery.charge_joules() < c.battery.capacity_joules() {
+                pool.below_capacity.insert(id);
+            }
         }
         self.pool = pool;
         self.aggregates = PoolAggregates::recompute(self);
+        self.ledger = DrainLedger::new(&self.clients);
     }
 
     /// Recompute one client's *static* projections after its device or
@@ -339,10 +495,14 @@ impl Registry {
 
     // --- mutation guards ---------------------------------------------------
 
-    /// Mutable access to a client's battery. Aggregates and pool
-    /// mirrors are re-synced when the guard drops, so arbitrary battery
+    /// Mutable access to a client's battery. Any lazily accrued
+    /// background drain is settled (materialized) *before* the guard
+    /// captures its old-state snapshot, so the mutation operates on the
+    /// true charge level; aggregates, pool mirrors and the drain anchor
+    /// are re-synced when the guard drops, so arbitrary battery
     /// mutations (drain, charge, revive) stay consistent.
     pub fn battery_mut(&mut self, id: usize) -> BatteryMut<'_> {
+        self.settle(id);
         let b = &self.clients[id].battery;
         BatteryMut {
             was_alive: b.is_alive(),
@@ -382,9 +542,23 @@ impl Registry {
         self.battery_mut(id).recharge_to(fraction);
     }
 
+    /// Full post-mutation re-sync: mirrors *and* a fresh drain anchor.
+    /// This is the guard-drop path — the only place anchors move.
     fn sync_battery(&mut self, id: usize, was_alive: bool, old_frac: f64, old_fl: f64) {
+        self.sync_battery_mirrors(id, was_alive, old_frac, old_fl);
+        self.re_anchor(id);
+    }
+
+    /// Re-sync the aggregates, pool mirrors and liveness indices from
+    /// the battery's materialized state — *without* touching the drain
+    /// anchor. Settling (materialization of already-accrued drain)
+    /// uses this path directly, so a settle never moves an anchor and
+    /// the materialized level stays a pure function of (anchor, s) in
+    /// both lazy and eager mode.
+    fn sync_battery_mirrors(&mut self, id: usize, was_alive: bool, old_frac: f64, old_fl: f64) {
         let b = &self.clients[id].battery;
-        let (alive, frac, fl) = (b.is_alive(), b.fraction(), b.fl_energy_j);
+        let (alive, frac, fl, charge) =
+            (b.is_alive(), b.fraction(), b.fl_energy_j, b.charge_joules());
         let agg = &mut self.aggregates;
         if was_alive {
             agg.alive -= 1;
@@ -398,7 +572,183 @@ impl Registry {
         agg.fl_energy_j.add(fl);
         self.pool.alive[id] = alive;
         self.pool.battery_frac[id] = frac;
-        self.pool.charge_j[id] = b.charge_joules();
+        self.pool.charge_j[id] = charge;
+        if alive {
+            self.pool.dead.remove(id);
+        } else {
+            self.pool.dead.insert(id);
+        }
+        if charge < self.pool.capacity_j[id] {
+            self.pool.below_capacity.insert(id);
+        } else {
+            self.pool.below_capacity.remove(id);
+        }
+    }
+
+    /// Move a client's drain anchor to "now": materialized charge,
+    /// current class cumsum. Re-registers the client's `u_sum`
+    /// contribution and death-wheel entry (alive clients only) and
+    /// bumps the wheel generation so stale entries die lazily.
+    fn re_anchor(&mut self, id: usize) {
+        let class = self.ledger.class_of[id] as usize;
+        let led = &mut self.ledger;
+        if led.contributing[id] {
+            led.u_sum.sub(led.anchor_u[id]);
+            led.alive_in_class[class] -= 1;
+            led.contributing[id] = false;
+        }
+        let b = &self.clients[id].battery;
+        led.anchor_charge_j[id] = b.charge_joules();
+        led.anchor_s_frac[id] = led.s_frac[class];
+        led.anchor_gen[id] = led.anchor_gen[id].wrapping_add(1);
+        if b.is_alive() {
+            let u = b.fraction() + led.s_frac[class];
+            led.anchor_u[id] = u;
+            led.u_sum.add(u);
+            led.alive_in_class[class] += 1;
+            led.contributing[id] = true;
+            led.wheels[class].insert(u, id as u32, led.anchor_gen[id]);
+        }
+    }
+
+    /// Drop a client from the ledger's contributing set after its
+    /// battery died (wheel kill, or a defensive settle-kill).
+    fn ledger_mark_dead(&mut self, id: usize) {
+        let class = self.ledger.class_of[id] as usize;
+        let led = &mut self.ledger;
+        if led.contributing[id] {
+            led.u_sum.sub(led.anchor_u[id]);
+            led.alive_in_class[class] -= 1;
+            led.contributing[id] = false;
+        }
+        led.anchor_charge_j[id] = 0.0;
+        led.anchor_s_frac[id] = led.s_frac[class];
+        led.anchor_gen[id] = led.anchor_gen[id].wrapping_add(1);
+    }
+
+    /// Materialize any lazily accrued background drain for one client:
+    /// write the closed-form effective charge into the battery and
+    /// re-sync the mirrors, *without* moving the anchor. Idempotent —
+    /// settling twice at the same cumsum books nothing the second time.
+    fn settle(&mut self, id: usize) {
+        if !self.clients[id].battery.is_alive() {
+            return;
+        }
+        let class = self.ledger.class_of[id] as usize;
+        let ds = self.ledger.s_frac[class] - self.ledger.anchor_s_frac[id];
+        if ds <= 0.0 {
+            return;
+        }
+        let eff = self.ledger.anchor_charge_j[id] - self.pool.capacity_j[id] * ds;
+        let b = &self.clients[id].battery;
+        let (old_frac, old_fl) = (b.fraction(), b.fl_energy_j);
+        self.clients[id].battery.settle_background(eff, self.ledger.now_h);
+        self.sync_battery_mirrors(id, true, old_frac, old_fl);
+        if !self.clients[id].battery.is_alive() {
+            // The wheel fires due deaths during the epoch advance, so a
+            // settle outside the advance only ever sees survivors —
+            // but keep the ledger coherent if one slips through.
+            self.ledger_mark_dead(id);
+        }
+    }
+
+    /// Materialize pending background drain for the whole population —
+    /// the legacy-cost O(N) sweep. The `EAFL_EAGER_DRAIN=1` escape
+    /// hatch runs this every round; the lazy path only needs it before
+    /// direct reads of raw battery state (tests, offline analysis).
+    /// Anchors never move here, so a settled population is bit-
+    /// identical between modes.
+    pub fn settle_all(&mut self) {
+        for id in 0..self.clients.len() {
+            self.settle(id);
+        }
+    }
+
+    /// Advance the background-drain clock by one epoch: credit
+    /// `rate × round_hours` to each class cumsum, exempt this round's
+    /// participants (their background time was consumed by FL work —
+    /// re-anchored at the new cumsum with charge unchanged, *before*
+    /// the wheels run so no participant is killed by drain it never
+    /// incurred), then fire the due death-wheel buckets.
+    ///
+    /// Cost: O(participants + fired wheel entries) — independent of
+    /// the population size. Deaths land exactly where the eager sweep
+    /// put them: same set of clients, same `end_clock_h` timestamp,
+    /// same charge bits (the exact predicate is evaluated per fired
+    /// entry; buckets only pre-filter).
+    pub fn advance_background(
+        &mut self,
+        sorted_selected: &[usize],
+        idle_rate_per_h: f64,
+        busy_rate_per_h: f64,
+        round_hours: f64,
+        end_clock_h: f64,
+    ) {
+        let dh = round_hours.max(0.0);
+        self.ledger.s_frac[0] += idle_rate_per_h.max(0.0) * dh;
+        self.ledger.s_frac[1] += busy_rate_per_h.max(0.0) * dh;
+        self.ledger.now_h = end_clock_h;
+        for &id in sorted_selected {
+            self.re_anchor(id);
+        }
+        for class in 0..2 {
+            let threshold = self.ledger.s_frac[class] + DEATH_SAFETY;
+            let mut fired = std::mem::take(&mut self.ledger.fired);
+            fired.clear();
+            self.ledger.wheels[class].pop_due(threshold, &mut fired);
+            for &(id32, gen) in &fired {
+                let id = id32 as usize;
+                if gen != self.ledger.anchor_gen[id] || !self.ledger.contributing[id] {
+                    continue; // stale registration (anchor moved or died)
+                }
+                let ds = self.ledger.s_frac[class] - self.ledger.anchor_s_frac[id];
+                let eff = self.ledger.anchor_charge_j[id] - self.pool.capacity_j[id] * ds;
+                if eff <= f64::EPSILON {
+                    let b = &self.clients[id].battery;
+                    let (old_frac, old_fl) = (b.fraction(), b.fl_energy_j);
+                    self.clients[id].battery.settle_background(eff, end_clock_h);
+                    debug_assert!(!self.clients[id].battery.is_alive());
+                    self.sync_battery_mirrors(id, true, old_frac, old_fl);
+                    self.ledger_mark_dead(id);
+                } else {
+                    // Fired a bucket early: re-register at the same key
+                    // (same generation — the anchor hasn't moved).
+                    self.ledger.wheels[class].insert(self.ledger.anchor_u[id], id32, gen);
+                }
+            }
+            self.ledger.fired = fired;
+        }
+    }
+
+    /// The client's drain-effective charge (joules): its materialized
+    /// charge minus background drain accrued since its last anchor,
+    /// evaluated closed-form without touching the battery. This is
+    /// what candidates, plans and the death predicate see — "drain
+    /// as-of the round clock, applied on touch".
+    pub fn effective_charge_j(&self, id: usize) -> f64 {
+        let b = &self.clients[id].battery;
+        if !b.is_alive() {
+            return 0.0;
+        }
+        let class = self.ledger.class_of[id] as usize;
+        let ds = self.ledger.s_frac[class] - self.ledger.anchor_s_frac[id];
+        if ds <= 0.0 {
+            return b.charge_joules();
+        }
+        (self.ledger.anchor_charge_j[id] - self.pool.capacity_j[id] * ds).max(0.0)
+    }
+
+    /// Drain-effective battery fraction in [0, 1] — the lazy
+    /// counterpart of `battery.fraction()`.
+    pub fn effective_battery_frac(&self, id: usize) -> f64 {
+        (self.effective_charge_j(id) / self.pool.capacity_j[id]).clamp(0.0, 1.0)
+    }
+
+    /// Per-class cumulative background-drained fraction since t = 0
+    /// (class 0 = idle, class 1 = busy). Exposed for tests and the
+    /// throughput bench.
+    pub fn background_cumsum(&self) -> [f64; 2] {
+        self.ledger.s_frac
     }
 
     fn sync_stats(&mut self, id: usize, old_times_selected: u64) {
@@ -426,14 +776,27 @@ impl Registry {
         self.len() - self.alive_count()
     }
 
-    /// Mean battery fraction over alive clients; **0.0 when none are
-    /// alive** (an exhausted fleet reports zero usable charge). O(1).
+    /// Mean *drain-effective* battery fraction over alive clients;
+    /// **0.0 when none are alive** (an exhausted fleet reports zero
+    /// usable charge). O(1).
+    ///
+    /// Closed form from the drain ledger: each alive client's
+    /// effective fraction is `(u_i − s_class)` where `u_i` is its
+    /// anchored `fraction + s` key, so the population sum is
+    /// `u_sum − Σ_class n_class·s_class` — no scan, and both lazy and
+    /// eager mode evaluate the identical expression (the anchors and
+    /// cumsums are mode-independent), so the metrics rows agree
+    /// bit-for-bit. With no epochs advanced (s = 0) the correction
+    /// term is exactly 0.0 and this reduces to the plain quantized
+    /// mean of `fraction()` the pre-ledger registry reported.
     pub fn mean_battery_alive(&self) -> f64 {
         if self.aggregates.alive == 0 {
-            0.0
-        } else {
-            self.aggregates.battery_frac_sum.value() / self.aggregates.alive as f64
+            return 0.0;
         }
+        let led = &self.ledger;
+        let correction = led.alive_in_class[0] as f64 * led.s_frac[0]
+            + led.alive_in_class[1] as f64 * led.s_frac[1];
+        (led.u_sum.value() - correction) / self.aggregates.alive as f64
     }
 
     /// Total FL energy drawn across the population, joules. O(1).
@@ -454,7 +817,10 @@ impl Registry {
     /// straight from the SoA pool — no allocation in steady state, no
     /// energy-model recomputation. `available` gates on the scenario's
     /// availability model; eligibility is alive ∧ above the battery
-    /// floor ∧ not blacklisted. Produces exactly what
+    /// floor ∧ not blacklisted. The battery floor and the candidate's
+    /// `battery_frac` use the *drain-effective* fraction (closed-form
+    /// from the lazy ledger), so selection always sees drain as-of the
+    /// round clock without any battery sweep. Produces exactly what
     /// [`Registry::candidates`] (with the registry's build-time
     /// steps/batch) followed by an availability `retain` would.
     pub fn fill_candidates<F: FnMut(usize) -> bool>(
@@ -467,8 +833,11 @@ impl Registry {
         out.clear();
         let p = &self.pool;
         for id in 0..self.clients.len() {
-            if !p.alive[id]
-                || p.battery_frac[id] <= min_battery_frac
+            if !p.alive[id] {
+                continue;
+            }
+            let frac = self.effective_battery_frac(id);
+            if frac <= min_battery_frac
                 || p.banned_until_round[id] > round
                 || !available(id)
             {
@@ -480,7 +849,7 @@ impl Registry {
                 measured_duration_s: p.measured_duration_s[id],
                 expected_duration_s: p.expected_duration_s[id],
                 last_selected_round: p.last_selected_round[id],
-                battery_frac: p.battery_frac[id],
+                battery_frac: frac,
                 projected_drain_frac: p.drain_frac[id],
             });
         }
@@ -503,7 +872,7 @@ impl Registry {
             .iter()
             .filter(|c| {
                 c.battery.is_alive()
-                    && c.battery.fraction() > min_battery_frac
+                    && self.effective_battery_frac(c.id) > min_battery_frac
                     && c.stats.banned_until_round <= round
             })
             .map(|c| {
@@ -519,7 +888,7 @@ impl Registry {
                         batch,
                     ),
                     last_selected_round: c.stats.last_selected_round,
-                    battery_frac: c.battery.fraction(),
+                    battery_frac: self.effective_battery_frac(c.id),
                     projected_drain_frac: energy / c.battery.capacity_joules(),
                 }
             })
@@ -743,6 +1112,155 @@ mod tests {
         assert_eq!(*r.aggregates(), PoolAggregates::recompute(&r));
         assert_eq!(r.aggregates().selected_sum, 4);
         assert_eq!(r.aggregates().selected_sum_sq, 10);
+    }
+
+    /// Brute-force liveness predicate: effective charge above the dead
+    /// threshold.
+    fn effectively_alive(r: &Registry, id: usize) -> bool {
+        r.client(id).battery.is_alive() && r.effective_charge_j(id) > f64::EPSILON
+    }
+
+    #[test]
+    fn lazy_drain_defers_materialization_until_touch() {
+        let mut r = registry();
+        let raw_before: Vec<f64> =
+            r.clients().iter().map(|c| c.battery.charge_joules()).collect();
+        r.advance_background(&[], 0.02, 0.05, 1.5, 1.5);
+        // Raw battery state is untouched; the effective view has drained.
+        let mut drained = 0;
+        for id in 0..r.len() {
+            assert_eq!(r.client(id).battery.charge_joules(), raw_before[id]);
+            if r.client(id).battery.is_alive()
+                && r.effective_charge_j(id) < raw_before[id]
+            {
+                drained += 1;
+            }
+        }
+        assert!(drained > 0, "someone must have accrued drain");
+        // Settling materializes exactly the effective bits, and the
+        // aggregates stay equal to a brute-force rebuild.
+        let effective: Vec<f64> = (0..r.len()).map(|id| r.effective_charge_j(id)).collect();
+        r.settle_all();
+        for id in 0..r.len() {
+            assert_eq!(r.client(id).battery.charge_joules(), effective[id], "id {id}");
+        }
+        assert_eq!(*r.aggregates(), PoolAggregates::recompute(&r));
+        // Settling is idempotent.
+        let booked: Vec<f64> =
+            r.clients().iter().map(|c| c.battery.background_energy_j).collect();
+        r.settle_all();
+        for id in 0..r.len() {
+            assert_eq!(r.client(id).battery.charge_joules(), effective[id]);
+            assert_eq!(r.client(id).battery.background_energy_j, booked[id]);
+        }
+    }
+
+    #[test]
+    fn wheel_kills_exactly_the_effectively_dead_at_epoch_end() {
+        let mut r = registry();
+        // Pull everyone to assorted low levels so deaths stagger.
+        for id in 0..r.len() {
+            let target = 0.002 + 0.004 * (id as f64 / r.len() as f64);
+            r.recharge_to(id, target);
+        }
+        let mut clock = 0.0;
+        for epoch in 1..=40u64 {
+            clock += 0.25;
+            r.advance_background(&[], 0.01, 0.02, 0.25, clock);
+            for id in 0..r.len() {
+                let alive = r.client(id).battery.is_alive();
+                // After an advance, every alive client is effectively
+                // alive and every effectively-dead client has been
+                // killed and stamped at this epoch's end clock.
+                assert_eq!(
+                    alive,
+                    effectively_alive(&r, id),
+                    "epoch {epoch} id {id}: wheel missed a death or over-killed"
+                );
+                if !alive {
+                    let died = r.client(id).battery.died_at_h.expect("stamped");
+                    assert!(died > 0.0 && died <= clock + 1e-12);
+                    let epochs = died / 0.25;
+                    assert!((epochs.round() - epochs).abs() < 1e-9, "end-of-epoch stamp");
+                    assert_eq!(r.client(id).battery.charge_joules(), 0.0);
+                }
+            }
+            assert_eq!(*r.aggregates(), PoolAggregates::recompute(&r));
+        }
+        assert_eq!(r.alive_count(), 0, "everyone drains out eventually");
+    }
+
+    #[test]
+    fn participants_are_exempt_from_epoch_drain() {
+        let mut r = registry();
+        let participant = 3usize;
+        let bystander = 4usize;
+        let eff_p = r.effective_charge_j(participant);
+        let eff_b = r.effective_charge_j(bystander);
+        r.advance_background(&[participant], 0.03, 0.03, 1.0, 1.0);
+        assert_eq!(
+            r.effective_charge_j(participant),
+            eff_p,
+            "participant must not absorb the epoch's background drain"
+        );
+        assert!(r.effective_charge_j(bystander) < eff_b, "bystander drains");
+        // Next epoch the participant drains again like everyone else.
+        r.advance_background(&[], 0.03, 0.03, 1.0, 2.0);
+        assert!(r.effective_charge_j(participant) < eff_p);
+    }
+
+    #[test]
+    fn liveness_indices_track_membership() {
+        let mut r = registry();
+        assert!(r.pool().dead.is_empty());
+        let cap = r.client(6).battery.capacity_joules();
+        r.drain_fl(6, cap * 2.0, 1.0);
+        assert!(r.pool().dead.contains(6));
+        assert!(r.pool().below_capacity.contains(6), "dead ⇒ below capacity");
+        r.recharge_to(6, 1.0);
+        assert!(!r.pool().dead.contains(6));
+        assert!(!r.pool().below_capacity.contains(6), "recharged to exactly full");
+        r.drain_background(6, cap * 0.1, 2.0);
+        assert!(r.pool().below_capacity.contains(6));
+        assert!(!r.pool().dead.contains(6));
+        // A wheel kill lands in the dead set too.
+        r.recharge_to(7, 0.001);
+        let mut clock = 0.0;
+        while r.client(7).battery.is_alive() {
+            clock += 1.0;
+            r.advance_background(&[], 0.01, 0.01, 1.0, clock);
+            assert!(clock < 100.0, "client 7 must die from background drain");
+        }
+        assert!(r.pool().dead.contains(7));
+    }
+
+    #[test]
+    fn closed_form_mean_matches_effective_scan() {
+        let mut r = registry();
+        let mut clock = 0.0;
+        for step in 1..=10u64 {
+            clock += 0.5;
+            r.advance_background(&[(step as usize) % r.len()], 0.015, 0.04, 0.5, clock);
+            if step % 3 == 0 {
+                let id = (step as usize * 7) % r.len();
+                let cap = r.client(id).battery.capacity_joules();
+                r.charge_add(id, cap * 0.05);
+            }
+            let alive = (0..r.len()).filter(|&id| r.client(id).battery.is_alive()).count();
+            if alive == 0 {
+                break;
+            }
+            let scan: f64 = (0..r.len())
+                .filter(|&id| r.client(id).battery.is_alive())
+                .map(|id| r.effective_battery_frac(id))
+                .sum::<f64>()
+                / alive as f64;
+            assert!(
+                (r.mean_battery_alive() - scan).abs() < 1e-6,
+                "step {step}: closed-form mean {} vs scan {scan}",
+                r.mean_battery_alive()
+            );
+        }
     }
 
     #[test]

@@ -22,7 +22,7 @@ use crate::config::ExperimentConfig;
 use crate::data::SyntheticSpeech;
 use crate::metrics::MetricsLog;
 use crate::runtime::ModelRuntime;
-use crate::scenario::{Scenario, ScenarioEnv};
+use crate::scenario::{Scenario, ScenarioEnv, WakeWheel};
 use crate::selection::{make_selector, Candidate, Selector};
 use crate::training::{Trainer, TrainerBufs};
 use crate::util::rng::Rng;
@@ -80,6 +80,10 @@ pub struct Coordinator<'r> {
     candidate_arena: Vec<Candidate>,
     /// Reusable sorted-participant scratch for background accounting.
     selected_scratch: Vec<usize>,
+    /// Availability cache driven by the scenario model's declared
+    /// change times — `None` for always-on scenarios, where the plan
+    /// phase needs no gate at all.
+    wake: Option<WakeWheel>,
     /// Execution-phase worker threads.
     workers: usize,
     /// Carried between eval points.
@@ -119,6 +123,11 @@ impl<'r> Coordinator<'r> {
             cfg.federation.num_clients,
             &cfg.devices,
         );
+        let wake = if env.availability.is_always_available() {
+            None
+        } else {
+            Some(WakeWheel::new(env.availability.as_ref(), cfg.federation.num_clients, 0.0))
+        };
         let global_params = runtime.init_params(cfg.training.init_seed)?;
         let bufs_pool = vec![TrainerBufs::new(runtime)];
         let rng = Rng::seed_from_u64(cfg.data.seed ^ cfg.devices.seed ^ 0x5EED);
@@ -138,6 +147,7 @@ impl<'r> Coordinator<'r> {
             bufs_pool,
             candidate_arena: Vec::new(),
             selected_scratch: Vec::new(),
+            wake,
             workers: default_workers(),
             last_accuracy: 0.0,
             last_test_loss: f64::NAN,
@@ -199,6 +209,17 @@ impl<'r> Coordinator<'r> {
     /// Execute one round end to end through the engine phases.
     pub fn run_round(&mut self, round: u64) -> Result<()> {
         // --- Phase 1: candidate planning (availability-gated) -------------
+        // Bring the wake-wheel cache up to this round's clock first: only
+        // the clients whose model-declared change time is due get
+        // re-evaluated, so the plan gate reads a bitmap instead of making
+        // N dynamic model calls.
+        let avail_cache = match self.wake.as_mut() {
+            Some(w) => {
+                w.advance(self.env.availability.as_ref(), self.clock_h);
+                Some(w.avail())
+            }
+            None => None,
+        };
         let plan = PlanPhase::run(
             &self.registry,
             self.selector.as_mut(),
@@ -206,6 +227,7 @@ impl<'r> Coordinator<'r> {
             &self.env,
             round,
             self.clock_h,
+            avail_cache,
             &mut self.rng,
             &mut self.candidate_arena,
         );

@@ -112,6 +112,35 @@ impl Battery {
         }
     }
 
+    /// Materialize lazily accrued background drain: set the charge to
+    /// the closed-form `new_charge_j` computed by the registry's drain
+    /// ledger, booking the difference as background energy. `now_h` is
+    /// the ledger's current round clock and becomes the death timestamp
+    /// when the settled charge crosses the dead threshold — the same
+    /// end-of-round instant the eager sweep stamps.
+    ///
+    /// Unlike [`Battery::drain_background`], which drains a requested
+    /// *amount*, this sets an absolute level: the ledger has already
+    /// resolved elapsed time × drain rate into a target charge, and the
+    /// settle must land on those exact bits in both lazy and eager
+    /// modes.
+    pub fn settle_background(&mut self, new_charge_j: f64, now_h: f64) {
+        if self.state == BatteryState::Dead {
+            return;
+        }
+        let target = new_charge_j.max(0.0);
+        debug_assert!(target <= self.charge_j + 1e-9, "settle must not add charge");
+        self.background_energy_j += self.charge_j - target;
+        self.charge_j = target;
+        if self.charge_j <= f64::EPSILON {
+            // Drop (don't book) the sub-epsilon residual — exactly what
+            // the legacy drain path does at death.
+            self.charge_j = 0.0;
+            self.state = BatteryState::Dead;
+            self.died_at_h = Some(now_h);
+        }
+    }
+
     /// Add `energy_j` of charge, clamped at capacity. A dead battery
     /// that receives charge revives — the wall-clock recharge policies'
     /// (overnight window, solar trace) entry point, where charging is a
@@ -211,6 +240,44 @@ mod tests {
         assert!(b.is_alive());
         assert_eq!(b.died_at_h, None);
         assert!((b.fraction() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn settle_background_books_consumed_energy_and_kills_at_zero() {
+        let mut b = batt(1.0);
+        let cap = b.capacity_joules();
+        b.settle_background(cap * 0.6, 4.0);
+        assert!(b.is_alive());
+        assert_eq!(b.charge_joules(), cap * 0.6);
+        assert_eq!(b.background_energy_j, cap - cap * 0.6);
+        // Settling to (clamped) zero kills at the ledger clock.
+        b.settle_background(-1.0, 7.25);
+        assert_eq!(b.state(), BatteryState::Dead);
+        assert_eq!(b.died_at_h, Some(7.25));
+        assert_eq!(b.fraction(), 0.0);
+        assert!((b.background_energy_j - cap).abs() < 1e-9);
+        // Dead batteries ignore further settles.
+        let booked = b.background_energy_j;
+        b.settle_background(0.0, 9.0);
+        assert_eq!(b.background_energy_j, booked);
+        assert_eq!(b.died_at_h, Some(7.25));
+    }
+
+    #[test]
+    fn settle_background_matches_drain_background_charge_bits() {
+        // Settling to `charge - consumed` must land the *charge* on the
+        // same bits as draining `consumed` — the charge level is what
+        // feeds selection, death predicates and the report. (The booked
+        // background energy may differ in the last ulp because the two
+        // paths sum it in a different association; the determinism tier
+        // compares runs of the same mode, never drain-vs-settle.)
+        let mut settled = batt(0.8);
+        let mut drained = batt(0.8);
+        let consumed = settled.capacity_joules() * 0.037;
+        drained.drain_background(consumed, 2.0);
+        settled.settle_background(settled.charge_joules() - consumed, 2.0);
+        assert_eq!(settled.charge_joules(), drained.charge_joules());
+        assert!((settled.background_energy_j - drained.background_energy_j).abs() < 1e-9);
     }
 
     #[test]

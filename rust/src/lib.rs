@@ -56,8 +56,28 @@
 //! | selection (Oort/EAFL)| O(E log E) full sort + O(k·E) linear draws | O(E) band partition + O(k·log band) Fenwick draws |
 //! | selection (Random)   | O(E) full shuffle                        | O(k) partial Fisher–Yates                |
 //! | participant drain    | O(k)                                     | O(k) (through aggregate guards)          |
-//! | background drain     | O(N) + per-round HashSet                 | O(N), allocation-free (sorted scratch + binary search) |
+//! | background drain     | O(N) sweep of every battery, every round | O(k + due deaths) lazy ledger (per-class cumsums + death wheel) |
+//! | availability gate    | O(N) dynamic model calls per round       | O(changed clients) wake wheel, cached bitmap |
+//! | recharge revival scan| O(N) liveness probe per round            | O(dead) / O(below-capacity) via liveness index sets |
 //! | metrics record       | ~5 × O(N) scans + counts Vec             | O(1) from incremental aggregates         |
+//!
+//! **The lazy-drain invariant:** background drain is *deferred, never
+//! dropped*. Each client's charge is an anchor plus a closed-form
+//! function of the per-class drained-fraction cumsums, so aggregates
+//! and candidate projections always reflect drain **as of the round
+//! clock**, applied on touch; a bucketed death wheel fires expirations
+//! on the exact round their effective charge reaches zero. The result
+//! is bit-identical to materializing every battery every epoch —
+//! property-tested in `rust/tests/lazy_drain.rs`, and enforceable at
+//! runtime with the `EAFL_EAGER_DRAIN=1` escape hatch (ci.sh runs the
+//! whole suite and a campaign byte-compare under it).
+//!
+//! **The wake-wheel contract:** an availability model reports a *sound
+//! lower bound* on its next change time (`next_change_h`): the
+//! availability bit is constant on `[clock_h, next)`. The
+//! [`scenario::WakeWheel`] re-evaluates only clients whose bound has
+//! come due, so the plan gate reads a cached bitmap. Early wake-ups
+//! cost a redundant re-evaluation, never a stale bit.
 //!
 //! The machinery (see [`coordinator::Registry`]):
 //!
@@ -82,8 +102,9 @@
 //!    exact), at O(log n) per draw.
 //!
 //! `benches/plan_path_throughput.rs` measures the whole path at
-//! 10k/100k/1M clients (steady + diurnal), keeps the pre-refactor
-//! baseline alongside for an honest speedup, and emits machine-readable
+//! 10k/100k/1M/10M clients (steady + diurnal), keeps the pre-refactor
+//! baseline and an eager-drain sweep alongside for honest speedups,
+//! and emits machine-readable
 //! `BENCH_plan.json` (`eafl-bench-v1` schema via [`benchkit`]);
 //! `make bench` writes it at the repo root and ci.sh smoke-checks it.
 //!

@@ -8,6 +8,7 @@
 //! results byte-identical at any worker count.
 
 use crate::util::rng::Rng;
+use crate::util::wheel::BucketWheel;
 
 use super::hash01;
 
@@ -31,6 +32,23 @@ pub trait AvailabilityModel: Send + Sync {
         false
     }
 
+    /// Earliest wall-clock hour at which `available(id, ·)` *may* next
+    /// differ from its value at `clock_h` — the [`WakeWheel`]'s
+    /// re-evaluation contract.
+    ///
+    /// Must be a **sound lower bound**: the model guarantees the
+    /// client's availability is constant on `[clock_h, t)` for the
+    /// returned `t`. Returning a time earlier than the true change is
+    /// fine (the wheel just re-evaluates and re-arms); returning one
+    /// later than a change would let the cached availability go stale
+    /// and is a correctness bug. `None` means the client's availability
+    /// never changes again. The conservative default, `Some(clock_h)`,
+    /// degrades the wheel to re-evaluating every client every round —
+    /// always sound, never fast.
+    fn next_change_h(&self, _id: usize, clock_h: f64) -> Option<f64> {
+        Some(clock_h)
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -44,6 +62,9 @@ impl AvailabilityModel for AlwaysOn {
     }
     fn is_always_available(&self) -> bool {
         true
+    }
+    fn next_change_h(&self, _id: usize, _clock_h: f64) -> Option<f64> {
+        None // never changes — the wheel stays empty
     }
     fn name(&self) -> &'static str {
         "always-on"
@@ -85,6 +106,29 @@ impl AvailabilityModel for DiurnalAvailability {
         let slot = (clock_h.max(0.0) / DIURNAL_SLOT_H).floor() as u64;
         hash01(self.seed, id as u64, slot.wrapping_mul(0x9E37_79B9).wrapping_add(0xA7))
             < self.presence_prob(id, clock_h)
+    }
+    fn next_change_h(&self, id: usize, clock_h: f64) -> Option<f64> {
+        // Within a slot the draw is frozen, so availability can only
+        // flip when the sine-wave probability crosses it. The slope of
+        // the sine is bounded by amp·π/24 per hour, giving a sound
+        // lower bound of gap/max_rate hours until the crossing; the
+        // slot boundary (fresh draw) caps the bound either way.
+        let clock_h = clock_h.max(0.0);
+        let slot = (clock_h / DIURNAL_SLOT_H).floor();
+        let slot_end = (slot + 1.0) * DIURNAL_SLOT_H;
+        let amp = (self.max_available - self.min_available).abs();
+        if amp == 0.0 {
+            // Flat probability: only the per-slot draw can change.
+            return Some(slot_end);
+        }
+        let draw = hash01(
+            self.seed,
+            id as u64,
+            (slot as u64).wrapping_mul(0x9E37_79B9).wrapping_add(0xA7),
+        );
+        let max_rate = amp * 0.5 * std::f64::consts::TAU / 24.0;
+        let gap_h = (self.presence_prob(id, clock_h) - draw).abs() / max_rate;
+        Some(slot_end.min(clock_h + gap_h))
     }
     fn name(&self) -> &'static str {
         "diurnal"
@@ -160,8 +204,104 @@ impl AvailabilityModel for TraceAvailability {
         let slot = (clock_h.max(0.0) / self.slot_h).floor() as u64 as usize % trace.len();
         trace[slot]
     }
+    fn next_change_h(&self, id: usize, clock_h: f64) -> Option<f64> {
+        // Exact: scan the periodic trace for the first future slot
+        // whose state differs from the current one.
+        if self.traces.is_empty() {
+            return None; // degenerate always-on
+        }
+        let trace = &self.traces[id % self.traces.len()];
+        let slot = (clock_h.max(0.0) / self.slot_h).floor() as u64;
+        let cur = trace[slot as usize % trace.len()];
+        for k in 1..=trace.len() as u64 {
+            if trace[(slot + k) as usize % trace.len()] != cur {
+                return Some((slot + k) as f64 * self.slot_h);
+            }
+        }
+        None // constant trace: this client never flips
+    }
     fn name(&self) -> &'static str {
         "trace"
+    }
+}
+
+/// Wake-wheel bucket width, hours (3 simulated minutes). Coarse enough
+/// that the BTreeMap stays small at 10M clients, fine enough that an
+/// early-fired client is re-evaluated at most a handful of times before
+/// its true change time.
+const WAKE_BUCKET_WIDTH_H: f64 = 0.05;
+
+/// Cached per-client availability driven by a time wheel: instead of
+/// asking the model about all N clients every round, each client is
+/// re-evaluated only when its model-declared
+/// [`next_change_h`](AvailabilityModel::next_change_h) comes due.
+///
+/// Soundness: at registration time the cache holds `available(id, t₀)`
+/// and the model guarantees no change before the registered wake time,
+/// so the cache equals a direct model call at every clock the wheel has
+/// been advanced to — the plan phase reading the cache is byte-
+/// equivalent to the old per-client dynamic dispatch. The wheel may
+/// fire a client *early* (bucket granularity, conservative bounds);
+/// that costs a redundant re-evaluation, never a stale bit.
+///
+/// Per round this is O(due clients), not O(N): an `AlwaysOn` fleet
+/// registers nothing (the coordinator skips the wheel entirely), a
+/// trace fleet wakes only the clients whose slot actually flips, and a
+/// diurnal fleet wakes the slice of clients whose draw sits near the
+/// sine curve.
+pub struct WakeWheel {
+    avail: Vec<bool>,
+    wheel: BucketWheel,
+    /// Reusable pop buffer — no per-round allocation.
+    fired: Vec<(u32, u32)>,
+}
+
+impl WakeWheel {
+    /// Build the cache for `n` clients at `clock_h` — the one O(N)
+    /// pass; every later [`WakeWheel::advance`] touches only due ids.
+    pub fn new(model: &dyn AvailabilityModel, n: usize, clock_h: f64) -> Self {
+        let mut w = Self {
+            avail: vec![false; n],
+            wheel: BucketWheel::new(WAKE_BUCKET_WIDTH_H),
+            fired: Vec::new(),
+        };
+        for id in 0..n {
+            w.refresh(model, id, clock_h);
+        }
+        w
+    }
+
+    /// Advance the cache to `clock_h` (monotone across calls):
+    /// re-evaluate exactly the clients whose registered wake time is
+    /// due, re-arming each at its next declared change.
+    pub fn advance(&mut self, model: &dyn AvailabilityModel, clock_h: f64) {
+        let mut fired = std::mem::take(&mut self.fired);
+        fired.clear();
+        self.wheel.pop_due(clock_h, &mut fired);
+        for &(id, _) in &fired {
+            self.refresh(model, id as usize, clock_h);
+        }
+        self.fired = fired;
+    }
+
+    fn refresh(&mut self, model: &dyn AvailabilityModel, id: usize, clock_h: f64) {
+        self.avail[id] = model.available(id, clock_h);
+        if let Some(t) = model.next_change_h(id, clock_h) {
+            // A bound at or before `now` (the conservative default, or
+            // a crossing in progress) re-arms for the very next advance.
+            self.wheel.insert(t.max(clock_h), id as u32, 0);
+        }
+    }
+
+    /// The cached availability bits, valid for the clock last passed to
+    /// [`WakeWheel::advance`] (or `new`). Indexed by client id.
+    pub fn avail(&self) -> &[bool] {
+        &self.avail
+    }
+
+    /// Clients currently armed for a future re-evaluation.
+    pub fn pending(&self) -> usize {
+        self.wheel.len()
     }
 }
 
@@ -249,6 +389,99 @@ mod tests {
         let t2 = TraceAvailability::generate(5, 30, 24.0, 0.5, 0.6, 0.2);
         for id in 0..30 {
             assert_eq!(t.available(id, 7.25), t2.available(id, 7.25));
+        }
+    }
+
+    #[test]
+    fn always_on_never_changes() {
+        assert_eq!(AlwaysOn.next_change_h(3, 7.0), None);
+        let wheel = WakeWheel::new(&AlwaysOn, 100, 0.0);
+        assert_eq!(wheel.pending(), 0, "always-on arms nothing");
+        assert!(wheel.avail().iter().all(|&a| a));
+    }
+
+    #[test]
+    fn diurnal_next_change_is_a_sound_lower_bound() {
+        // The contract: availability is constant on [t, next). Sample
+        // strictly inside the bound and demand agreement with t.
+        for (min, max, jitter) in [(0.1, 0.9, 0.0), (0.2, 0.8, 3.0), (0.5, 0.5, 2.0)] {
+            let d = diurnal(min, max, jitter);
+            for id in 0..40 {
+                for t in [0.0, 1.3, 7.77, 12.0, 19.9, 30.1] {
+                    let next = d.next_change_h(id, t).expect("diurnal always re-arms");
+                    assert!(next >= t, "bound must not precede now");
+                    let state = d.available(id, t);
+                    for f in [0.25, 0.5, 0.75, 0.999] {
+                        let s = t + (next - t) * f;
+                        assert_eq!(
+                            d.available(id, s),
+                            state,
+                            "flip before declared bound: id={id} t={t} next={next} s={s}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trace_next_change_is_exact() {
+        let t = TraceAvailability::generate(5, 30, 24.0, 0.5, 0.6, 0.2);
+        let mut saw_change = false;
+        for id in 0..30 {
+            for h in [0.0, 1.3, 13.7, 23.9] {
+                let state = t.available(id, h);
+                match t.next_change_h(id, h) {
+                    Some(next) => {
+                        saw_change = true;
+                        assert!(next > h, "trace changes land on future slot starts");
+                        // Constant up to the declared change…
+                        let mut s = h;
+                        while s < next - 1e-9 {
+                            assert_eq!(t.available(id, s), state);
+                            s += 0.1;
+                        }
+                        // …and the change is real, not conservative.
+                        assert_ne!(t.available(id, next + 1e-9), state);
+                    }
+                    None => {
+                        // Constant trace: one full period agrees.
+                        for k in 0..48 {
+                            assert_eq!(t.available(id, h + k as f64 * 0.5), state);
+                        }
+                    }
+                }
+            }
+        }
+        assert!(saw_change, "churny traces must produce transitions");
+    }
+
+    #[test]
+    fn wake_wheel_cache_matches_direct_model_calls() {
+        let n = 200;
+        // Uneven clock steps, including sub-slot ones, across both
+        // dynamic models — the cache must agree with the model at every
+        // advance point, bit for bit.
+        let clocks =
+            [0.0, 0.11, 0.25, 0.3, 1.0, 1.02, 2.75, 5.5, 12.0, 12.26, 23.9, 24.1, 30.0];
+        let models: [Box<dyn AvailabilityModel>; 3] = [
+            Box::new(diurnal(0.1, 0.9, 2.0)),
+            Box::new(diurnal(0.4, 0.4, 1.0)),
+            Box::new(TraceAvailability::generate(5, n, 24.0, 0.5, 0.6, 0.2)),
+        ];
+        for model in &models {
+            let mut wheel = WakeWheel::new(model.as_ref(), n, clocks[0]);
+            for &clock in &clocks {
+                wheel.advance(model.as_ref(), clock);
+                for id in 0..n {
+                    assert_eq!(
+                        wheel.avail()[id],
+                        model.available(id, clock),
+                        "stale cache: model={} id={id} clock={clock}",
+                        model.name()
+                    );
+                }
+            }
         }
     }
 

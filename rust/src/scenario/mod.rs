@@ -30,7 +30,9 @@ mod availability;
 mod network;
 pub mod recharge;
 
-pub use availability::{AlwaysOn, AvailabilityModel, DiurnalAvailability, TraceAvailability};
+pub use availability::{
+    AlwaysOn, AvailabilityModel, DiurnalAvailability, TraceAvailability, WakeWheel,
+};
 pub use network::{in_daily_window, CongestionWindow, DegradedTail, NetworkModel, StaticNetwork};
 pub use recharge::{daily_window_overlap_h, OvernightRecharge, SolarRecharge};
 

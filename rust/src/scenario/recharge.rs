@@ -7,6 +7,16 @@
 //! *every* device (alive ones top up, dead ones revive once they have
 //! charge again) — recharge is a property of the environment, not of
 //! the death state.
+//!
+//! These two deliberately stay O(N) full loops even though the registry
+//! keeps O(dead) / O(below-capacity) liveness indices (`index_set`):
+//! they add charge *unconditionally*, so every client is a revival or
+//! top-up candidate whenever the window overlaps — there is no idle
+//! subset to skip. (Iterating the below-capacity set instead would also
+//! tie visit order to drain history; `charge_add` commutes, but a full
+//! 0..N sweep makes order-independence trivially true.) The cooldown
+//! policy, which only ever touches dead clients, is the one that scans
+//! its index — see `CooldownRecharge` in `coordinator::accounting`.
 
 use crate::coordinator::{RechargePolicy, Registry};
 

@@ -43,7 +43,10 @@ pub struct Candidate {
     pub expected_duration_s: f64,
     /// Round number of the client's last selection (0 = never).
     pub last_selected_round: u64,
-    /// Remaining battery fraction in [0, 1].
+    /// Remaining battery fraction in [0, 1]. Drain-effective: the
+    /// registry fills this from the lazy ledger's closed form, so it
+    /// reflects background drain as of the round clock even when the
+    /// raw battery hasn't been materialized yet.
     pub battery_frac: f64,
     /// Projected battery cost of participating in the next round, as a
     /// fraction of this client's capacity.

@@ -1,0 +1,153 @@
+//! Dense index set with O(1) insert / remove / contains — the
+//! free-list-style liveness indices behind the registry's sub-O(N)
+//! maintenance paths.
+//!
+//! A classic sparse/dense pair: `dense` holds the member ids in
+//! arbitrary order, `pos[id]` holds each member's slot in `dense`
+//! (`u32::MAX` = absent). Removal swap-removes from `dense`, so both
+//! operations are O(1) and iteration is a contiguous slice scan over
+//! exactly the members — no hashing, no tombstones, no per-round
+//! compaction.
+//!
+//! The iteration order is an implementation detail (it depends on the
+//! insert/remove history), so callers that need deterministic output
+//! must sort the ids they collect — see `CooldownRecharge`, which
+//! sorts its revival candidates before mutating batteries.
+
+/// O(1) set over indices `0..capacity`.
+#[derive(Debug, Clone)]
+pub struct IndexSet {
+    dense: Vec<u32>,
+    pos: Vec<u32>,
+}
+
+const ABSENT: u32 = u32::MAX;
+
+impl Default for IndexSet {
+    /// Empty set over an empty universe — a placeholder until
+    /// [`IndexSet::with_capacity`] builds the real one.
+    fn default() -> Self {
+        Self::with_capacity(0)
+    }
+}
+
+impl IndexSet {
+    /// Empty set over the id universe `0..capacity`.
+    pub fn with_capacity(capacity: usize) -> Self {
+        assert!(capacity < ABSENT as usize, "IndexSet capacity overflow");
+        Self { dense: Vec::new(), pos: vec![ABSENT; capacity] }
+    }
+
+    /// Insert `id`; no-op if already present. Returns whether it was
+    /// newly inserted.
+    pub fn insert(&mut self, id: usize) -> bool {
+        if self.pos[id] != ABSENT {
+            return false;
+        }
+        self.pos[id] = self.dense.len() as u32;
+        self.dense.push(id as u32);
+        true
+    }
+
+    /// Remove `id`; no-op if absent. Returns whether it was present.
+    /// Swap-remove: the last member takes the vacated dense slot.
+    pub fn remove(&mut self, id: usize) -> bool {
+        let slot = self.pos[id];
+        if slot == ABSENT {
+            return false;
+        }
+        let last = *self.dense.last().expect("non-empty: id is present");
+        self.dense.swap_remove(slot as usize);
+        if last as usize != id {
+            self.pos[last as usize] = slot;
+        }
+        self.pos[id] = ABSENT;
+        true
+    }
+
+    /// Membership test.
+    pub fn contains(&self, id: usize) -> bool {
+        self.pos[id] != ABSENT
+    }
+
+    /// The members, in unspecified order.
+    pub fn ids(&self) -> &[u32] {
+        &self.dense
+    }
+
+    /// Member at dense slot `i` — for index-based iteration that stays
+    /// valid under swap-remove of the *current* element (don't advance
+    /// `i` after removing `self.ids()[i]`).
+    pub fn at(&self, i: usize) -> usize {
+        self.dense[i] as usize
+    }
+
+    pub fn len(&self) -> usize {
+        self.dense.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dense.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn insert_remove_contains_roundtrip() {
+        let mut s = IndexSet::with_capacity(10);
+        assert!(s.insert(3));
+        assert!(!s.insert(3), "double insert is a no-op");
+        assert!(s.insert(7));
+        assert!(s.contains(3) && s.contains(7) && !s.contains(0));
+        assert_eq!(s.len(), 2);
+        assert!(s.remove(3));
+        assert!(!s.remove(3), "double remove is a no-op");
+        assert!(!s.contains(3) && s.contains(7));
+        assert_eq!(s.ids(), &[7]);
+    }
+
+    #[test]
+    fn swap_remove_keeps_positions_consistent() {
+        let mut s = IndexSet::with_capacity(5);
+        for id in 0..5 {
+            s.insert(id);
+        }
+        // Removing from the middle moves the tail member into its slot.
+        s.remove(1);
+        assert!(!s.contains(1));
+        for id in [0usize, 2, 3, 4] {
+            assert!(s.contains(id), "id {id} lost by swap-remove");
+            assert!(s.remove(id));
+        }
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn prop_matches_btreeset_reference() {
+        let mut rng = Rng::seed_from_u64(42);
+        let cap = 64usize;
+        let mut s = IndexSet::with_capacity(cap);
+        let mut reference = BTreeSet::new();
+        for _ in 0..2000 {
+            let id = rng.gen_range_usize(0, cap - 1);
+            if rng.gen_bool(0.5) {
+                assert_eq!(s.insert(id), reference.insert(id));
+            } else {
+                assert_eq!(s.remove(id), reference.remove(&id));
+            }
+            assert_eq!(s.len(), reference.len());
+        }
+        let mut got: Vec<u32> = s.ids().to_vec();
+        got.sort_unstable();
+        let want: Vec<u32> = reference.iter().map(|&id| id as u32).collect();
+        assert_eq!(got, want);
+        for id in 0..cap {
+            assert_eq!(s.contains(id), reference.contains(&id));
+        }
+    }
+}

@@ -11,9 +11,15 @@
 //!    seed reporting on failure) used by the invariant tests.
 //!  - [`fixed`] — exact fixed-point accumulator backing the registry's
 //!    incrementally maintained population aggregates.
+//!  - [`index_set`] — O(1) dense/sparse index set (the liveness and
+//!    below-capacity indices in the client pool).
+//!  - [`wheel`] — coarse-bucket time wheel (the lazy-drain death wheel
+//!    and availability wake wheel).
 
 pub mod fixed;
+pub mod index_set;
 pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod toml;
+pub mod wheel;

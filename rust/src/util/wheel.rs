@@ -1,0 +1,136 @@
+//! Coarse-bucket time wheel: a monotone priority queue over f64 keys,
+//! backing the registry's lazy-drain death wheel and the availability
+//! wake wheel.
+//!
+//! Entries are `(id, gen)` pairs registered at a non-negative key (a
+//! cumulative drained fraction, or a simulated clock hour). Keys are
+//! quantized to buckets of a fixed `width`; [`BucketWheel::pop_due`]
+//! drains every bucket whose *start* is ≤ the current threshold, so an
+//! entry fires at most one bucket-width *early*, never late. Callers
+//! therefore re-check the exact predicate on each fired entry and
+//! re-register the survivors — the wheel is a candidate filter, not an
+//! oracle.
+//!
+//! Staleness is handled by lazy deletion: the caller bumps a per-id
+//! generation counter whenever an entry's registration becomes obsolete
+//! (e.g. a battery anchor moved), and discards fired entries whose
+//! `gen` no longer matches. Nothing is ever removed from the middle of
+//! a bucket, so insert and pop are amortized O(log buckets).
+//!
+//! Buckets are a `BTreeMap` rather than a ring because the key domain
+//! is unbounded (cumulative drain grows without reset) and typically
+//! sparse — only buckets that contain at least one entry exist.
+
+use std::collections::BTreeMap;
+
+/// Bucketed monotone queue of `(id, gen)` entries keyed by f64 ≥ 0.
+#[derive(Debug, Clone)]
+pub struct BucketWheel {
+    width: f64,
+    buckets: BTreeMap<u64, Vec<(u32, u32)>>,
+}
+
+impl BucketWheel {
+    /// Empty wheel with the given bucket width (> 0, finite).
+    pub fn new(width: f64) -> Self {
+        assert!(width.is_finite() && width > 0.0, "bucket width must be positive");
+        Self { width, buckets: BTreeMap::new() }
+    }
+
+    /// Bucket index for a key (negative keys clamp to bucket 0).
+    fn bucket_of(&self, key: f64) -> u64 {
+        let b = (key / self.width).floor();
+        if b <= 0.0 {
+            0
+        } else {
+            b as u64
+        }
+    }
+
+    /// Register `(id, gen)` to fire when the threshold reaches `key`
+    /// (possibly up to one bucket-width sooner).
+    pub fn insert(&mut self, key: f64, id: u32, gen: u32) {
+        self.buckets.entry(self.bucket_of(key)).or_default().push((id, gen));
+    }
+
+    /// Drain every entry in buckets whose start is ≤ `threshold` into
+    /// `out` (appended; not cleared). Entries at keys strictly above
+    /// `threshold` but in a due bucket fire early — callers re-check.
+    pub fn pop_due(&mut self, threshold: f64, out: &mut Vec<(u32, u32)>) {
+        if threshold < 0.0 {
+            return;
+        }
+        // A bucket b spans [b·width, (b+1)·width); it is due when its
+        // start is ≤ threshold, i.e. b ≤ floor(threshold / width).
+        let last_due = (threshold / self.width).floor() as u64;
+        while let Some((&b, _)) = self.buckets.iter().next() {
+            if b > last_due {
+                break;
+            }
+            let mut entries = self.buckets.remove(&b).expect("bucket exists");
+            out.append(&mut entries);
+        }
+    }
+
+    /// Total registered entries (including stale generations).
+    pub fn len(&self) -> usize {
+        self.buckets.values().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(w: &mut BucketWheel, threshold: f64) -> Vec<(u32, u32)> {
+        let mut out = Vec::new();
+        w.pop_due(threshold, &mut out);
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn fires_at_or_before_key_never_after() {
+        let mut w = BucketWheel::new(0.5);
+        w.insert(1.7, 7, 0); // bucket 3: [1.5, 2.0)
+        assert!(drain(&mut w, 1.4).is_empty(), "bucket start 1.5 > 1.4");
+        assert_eq!(drain(&mut w, 1.5), vec![(7, 0)], "fires at bucket start (early)");
+        assert!(drain(&mut w, 10.0).is_empty(), "popped entries are gone");
+    }
+
+    #[test]
+    fn pops_all_due_buckets_in_one_call() {
+        let mut w = BucketWheel::new(1.0);
+        w.insert(0.2, 1, 0);
+        w.insert(1.9, 2, 3);
+        w.insert(2.5, 3, 0);
+        w.insert(9.0, 4, 0);
+        assert_eq!(drain(&mut w, 2.6), vec![(1, 0), (2, 3), (3, 0)]);
+        assert_eq!(w.len(), 1);
+        assert_eq!(drain(&mut w, 9.0), vec![(4, 0)]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn negative_keys_clamp_to_bucket_zero() {
+        let mut w = BucketWheel::new(0.25);
+        w.insert(-3.0, 5, 1);
+        assert_eq!(drain(&mut w, 0.0), vec![(5, 1)]);
+    }
+
+    #[test]
+    fn reinsertion_lands_in_a_later_bucket() {
+        let mut w = BucketWheel::new(0.5);
+        w.insert(0.1, 9, 0);
+        let fired = drain(&mut w, 0.1);
+        assert_eq!(fired, vec![(9, 0)]);
+        // Caller decides the entry isn't ripe and re-registers further out.
+        w.insert(3.3, 9, 0);
+        assert!(drain(&mut w, 2.9).is_empty());
+        assert_eq!(drain(&mut w, 3.0), vec![(9, 0)], "bucket [3.0, 3.5) due at 3.0");
+    }
+}

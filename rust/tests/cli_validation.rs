@@ -148,3 +148,29 @@ fn unknown_command_and_flags_are_clean_errors() {
     assert_clean_error(&["run", "--selector", "bogus"], "unknown selector");
     assert_clean_error(&["run", "--rounds"], "requires a value");
 }
+
+#[test]
+fn client_count_bounds_are_clean_errors() {
+    // Zero clients: caught by config validation, not an empty-pool panic.
+    assert_clean_error(
+        &["run", "--mock", "--rounds", "1", "--clients", "0"],
+        "num_clients must be > 0",
+    );
+    // Oversized: the SoA pool + liveness indices allocate O(N) up
+    // front, so an absurd count must be refused before the allocator
+    // aborts the process.
+    assert_clean_error(
+        &["run", "--mock", "--rounds", "1", "--clients", "999999999999"],
+        "num_clients must be <=",
+    );
+    // Malformed: a parse error names the flag, not a panic site.
+    assert_clean_error(
+        &["run", "--mock", "--rounds", "1", "--clients", "abc"],
+        "invalid --clients",
+    );
+    // The sweep grid axis gets the same treatment.
+    assert_clean_error(
+        &["sweep", "--mock", "--rounds", "1", "--clients", "10,abc"],
+        "invalid --clients",
+    );
+}

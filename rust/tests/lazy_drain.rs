@@ -1,0 +1,252 @@
+//! Lazy-drain equivalence properties: the registry's deferred
+//! background drain (per-class cumsums + death wheel + settle-on-touch)
+//! must be observably *bit-identical* to the eager mode that
+//! materializes every battery every epoch — under arbitrary
+//! interleavings of epoch advances, FL drains, charges, revivals and
+//! direct guard touches, including mid-interval deaths and deaths
+//! landing exactly on wheel bucket boundaries.
+//!
+//! "Observably" means everything downstream of the registry can see:
+//! effective charges, liveness, death timestamps, FL energy, the
+//! closed-form alive-mean, the incremental aggregates, and the raw
+//! charge bits after a full materialization. (Per-client *background*
+//! energy is compared with a tolerance instead: the two modes sum the
+//! same drain in different associations, which may differ in the last
+//! ulp — and nothing exported ever reads it, see `report.rs`.)
+
+use eafl::config::{ExperimentConfig, SelectorKind};
+use eafl::coordinator::{PoolAggregates, Registry};
+use eafl::util::prop::forall;
+use eafl::util::rng::Rng;
+
+fn build_pair(rng: &mut Rng) -> (ExperimentConfig, Registry, Registry) {
+    let mut cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+    cfg.federation.num_clients = rng.gen_range_usize(5, 40);
+    cfg.devices.seed = rng.next_u64();
+    cfg.network.seed = rng.next_u64();
+    cfg.data.seed = rng.next_u64();
+    cfg.data.min_samples = 3;
+    cfg.data.max_samples = 8;
+    let lazy = Registry::build(&cfg, 35, 1000);
+    let eager = Registry::build(&cfg, 35, 1000);
+    (cfg, lazy, eager)
+}
+
+/// Every registry observable the engine consumes must agree bit for bit
+/// between the lazy registry and its eagerly-settled twin.
+fn assert_equivalent(lazy: &Registry, eager: &Registry, ctx: &str) {
+    assert_eq!(lazy.len(), eager.len());
+    for id in 0..lazy.len() {
+        let (a, b) = (&lazy.client(id).battery, &eager.client(id).battery);
+        assert_eq!(
+            lazy.effective_charge_j(id).to_bits(),
+            eager.effective_charge_j(id).to_bits(),
+            "{ctx}: effective charge diverged at id {id} ({} vs {})",
+            lazy.effective_charge_j(id),
+            eager.effective_charge_j(id)
+        );
+        assert_eq!(
+            lazy.effective_battery_frac(id).to_bits(),
+            eager.effective_battery_frac(id).to_bits(),
+            "{ctx}: effective fraction diverged at id {id}"
+        );
+        assert_eq!(a.is_alive(), b.is_alive(), "{ctx}: liveness diverged at id {id}");
+        assert_eq!(a.died_at_h, b.died_at_h, "{ctx}: death stamp diverged at id {id}");
+        assert_eq!(
+            a.fl_energy_j.to_bits(),
+            b.fl_energy_j.to_bits(),
+            "{ctx}: FL energy diverged at id {id}"
+        );
+        assert!(
+            (a.background_energy_j - b.background_energy_j).abs() < 1e-6,
+            "{ctx}: background energy drifted beyond ulp noise at id {id}"
+        );
+    }
+    assert_eq!(lazy.alive_count(), eager.alive_count(), "{ctx}: alive count");
+    assert_eq!(
+        lazy.mean_battery_alive().to_bits(),
+        eager.mean_battery_alive().to_bits(),
+        "{ctx}: closed-form alive-mean diverged ({} vs {})",
+        lazy.mean_battery_alive(),
+        eager.mean_battery_alive()
+    );
+    assert_eq!(lazy.background_cumsum(), eager.background_cumsum(), "{ctx}: cumsums");
+}
+
+/// Randomized interleavings: the lazy registry defers, the eager twin
+/// settles the whole population after every epoch advance; every
+/// observable must stay bitwise in lockstep the whole way.
+#[test]
+fn prop_lazy_equals_eager_under_random_interleavings() {
+    forall(48, |rng| {
+        let (_cfg, mut lazy, mut eager) = build_pair(rng);
+        let n = lazy.len();
+        let mut clock = 0.0f64;
+        let steps = rng.gen_range_usize(10, 80);
+        for step in 0..steps {
+            match rng.gen_range_usize(0, 8) {
+                // Epoch advance — the one place the modes differ in
+                // mechanism (deferred vs. swept) and must not differ in
+                // outcome.
+                0 | 1 | 2 => {
+                    let hours = [0.25, 0.5, 1.0, 1.0 / 1024.0, 0.37][rng.gen_range_usize(0, 4)];
+                    let idle = rng.gen_range_f64(0.0, 0.05);
+                    let busy = rng.gen_range_f64(0.0, 0.1);
+                    let participants: Vec<usize> =
+                        (0..n).filter(|_| rng.gen_bool(0.2)).collect();
+                    clock += hours;
+                    lazy.advance_background(&participants, idle, busy, hours, clock);
+                    eager.advance_background(&participants, idle, busy, hours, clock);
+                    eager.settle_all();
+                }
+                // FL drain — sometimes lethal mid-epoch.
+                3 => {
+                    let id = rng.gen_range_usize(0, n - 1);
+                    let e = lazy.client(id).battery.capacity_joules()
+                        * rng.gen_range_f64(0.0, 1.5);
+                    lazy.drain_fl(id, e, clock);
+                    eager.drain_fl(id, e, clock);
+                }
+                // Per-id guard drain (legacy API) — a touch that
+                // settles-then-drains in lazy mode.
+                4 => {
+                    let id = rng.gen_range_usize(0, n - 1);
+                    let e = lazy.client(id).battery.capacity_joules()
+                        * rng.gen_range_f64(0.0, 0.2);
+                    lazy.drain_background(id, e, clock);
+                    eager.drain_background(id, e, clock);
+                }
+                5 => {
+                    let id = rng.gen_range_usize(0, n - 1);
+                    let e = lazy.client(id).battery.capacity_joules()
+                        * rng.gen_range_f64(0.0, 0.6);
+                    lazy.charge_add(id, e);
+                    eager.charge_add(id, e);
+                }
+                // Revive / set level — small targets set up future
+                // wheel deaths.
+                6 => {
+                    let id = rng.gen_range_usize(0, n - 1);
+                    let f = if rng.gen_bool(0.5) {
+                        rng.gen_range_f64(0.0, 0.02)
+                    } else {
+                        rng.gen_f64()
+                    };
+                    lazy.recharge_to(id, f);
+                    eager.recharge_to(id, f);
+                }
+                // Materializing the lazy side is semantically a no-op:
+                // equivalence must survive it at any point.
+                _ => lazy.settle_all(),
+            }
+            assert_equivalent(&lazy, &eager, &format!("step {step}"));
+            assert_eq!(*eager.aggregates(), PoolAggregates::recompute(&eager));
+        }
+        // Full materialization lands the raw batteries on the eager
+        // twin's exact bits, and the lazy aggregates match brute force.
+        lazy.settle_all();
+        for id in 0..n {
+            assert_eq!(
+                lazy.client(id).battery.charge_joules().to_bits(),
+                eager.client(id).battery.charge_joules().to_bits(),
+                "settled raw charge diverged at id {id}"
+            );
+        }
+        assert_eq!(*lazy.aggregates(), PoolAggregates::recompute(&lazy));
+    });
+}
+
+fn fixed_pair(n: usize) -> (Registry, Registry) {
+    let mut cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+    cfg.federation.num_clients = n;
+    cfg.data.min_samples = 3;
+    cfg.data.max_samples = 8;
+    (Registry::build(&cfg, 35, 1000), Registry::build(&cfg, 35, 1000))
+}
+
+/// Deaths landing *exactly* on wheel bucket boundaries: charges and
+/// rates are binary fractions, so client `id`'s remaining lifetime is
+/// exactly `id+1` epochs and its effective charge hits exactly 0.0 at
+/// that epoch — the wheel must kill it on that advance (not a bucket
+/// early, not one late), identically in both modes.
+#[test]
+fn bucket_boundary_deaths_fire_on_the_exact_epoch() {
+    let n = 8;
+    let (mut lazy, mut eager) = fixed_pair(n);
+    for id in 0..n {
+        let f = (id + 1) as f64 / 1024.0; // exact binary fraction
+        lazy.recharge_to(id, f);
+        eager.recharge_to(id, f);
+    }
+    let rate = 1.0 / 1024.0; // fraction of capacity per hour, exact
+    for epoch in 1..=n as u64 + 2 {
+        let clock = epoch as f64;
+        lazy.advance_background(&[], rate, rate, 1.0, clock);
+        eager.advance_background(&[], rate, rate, 1.0, clock);
+        eager.settle_all();
+        assert_equivalent(&lazy, &eager, &format!("epoch {epoch}"));
+        for id in 0..n {
+            let lifetime = id as u64 + 1;
+            let b = &lazy.client(id).battery;
+            assert_eq!(
+                b.is_alive(),
+                epoch < lifetime,
+                "client {id} must die exactly at epoch {lifetime}, epoch={epoch}"
+            );
+            if epoch >= lifetime {
+                assert_eq!(b.died_at_h, Some(lifetime as f64), "client {id}");
+                assert_eq!(lazy.effective_charge_j(id), 0.0);
+            }
+        }
+    }
+    assert_eq!(lazy.alive_count(), 0);
+}
+
+/// A battery that runs dry strictly *inside* an epoch is stamped dead
+/// at the epoch's end clock in both modes — background drain is applied
+/// at round granularity, so end-of-round is the authoritative instant.
+#[test]
+fn mid_interval_deaths_stamp_the_epoch_end_in_both_modes() {
+    let (mut lazy, mut eager) = fixed_pair(3);
+    // 1.5/1024 of charge at 1/1024 per hour: dies halfway through the
+    // second 1 h epoch.
+    for r in [&mut lazy, &mut eager] {
+        r.recharge_to(0, 1.5 / 1024.0);
+    }
+    let rate = 1.0 / 1024.0;
+    for epoch in 1..=2u64 {
+        let clock = epoch as f64;
+        lazy.advance_background(&[], rate, rate, 1.0, clock);
+        eager.advance_background(&[], rate, rate, 1.0, clock);
+        eager.settle_all();
+    }
+    assert_equivalent(&lazy, &eager, "mid-interval death");
+    assert!(!lazy.client(0).battery.is_alive());
+    assert_eq!(lazy.client(0).battery.died_at_h, Some(2.0), "stamped at epoch end");
+    assert_eq!(lazy.effective_charge_j(0), 0.0, "sub-zero residual clamps");
+}
+
+/// Participants of a round are exempt from that round's background
+/// epoch — their anchors move to the new cumsum without paying it — and
+/// both modes agree on the resulting charges.
+#[test]
+fn participant_exemption_is_mode_independent() {
+    let (mut lazy, mut eager) = fixed_pair(6);
+    let participants = [1usize, 4];
+    for epoch in 1..=5u64 {
+        let clock = epoch as f64 * 0.5;
+        lazy.advance_background(&participants, 0.01, 0.02, 0.5, clock);
+        eager.advance_background(&participants, 0.01, 0.02, 0.5, clock);
+        eager.settle_all();
+        assert_equivalent(&lazy, &eager, &format!("epoch {epoch}"));
+    }
+    // Participants were exempt every epoch: still at full charge.
+    lazy.settle_all();
+    for id in participants {
+        assert_eq!(
+            lazy.client(id).battery.background_energy_j,
+            0.0,
+            "participant {id} must not pay background drain"
+        );
+    }
+}
