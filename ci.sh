@@ -77,6 +77,49 @@ cmp -s "$SMOKE_CSV" "$EAGER_OUT/sweep.campaign.csv" \
   || { echo "FAIL: EAFL_EAGER_DRAIN=1 changed the campaign CSV bytes"; exit 1; }
 echo "    eager-drain cross-check OK (campaign bytes identical)"
 
+# Trace smoke: a traced 10-round run must emit a schema-tagged
+# eafl-trace-v1 JSONL whose bytes are invariant across worker counts
+# and drain modes, on two scenarios; `eafl trace summarize` must then
+# reproduce the run's own summary numbers from the events alone.
+echo "==> trace smoke (2 scenarios, worker/drain byte-compares)"
+TRACE_OUT="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_OUT" "$EAGER_OUT" "$TRACE_OUT"' EXIT
+for scenario in diurnal steady; do
+  EAFL_WORKERS=1 ./target/release/eafl run --mock --selector eafl \
+    --rounds 10 --clients 24 --scenario "$scenario" \
+    --out "$TRACE_OUT/$scenario" \
+    --trace "$TRACE_OUT/$scenario-w1.trace.jsonl" >/dev/null
+  head -1 "$TRACE_OUT/$scenario-w1.trace.jsonl" \
+    | grep -q '"schema": "eafl-trace-v1"' \
+    || { echo "FAIL: $scenario trace missing schema header"; exit 1; }
+  grep -q '"ev": "round_committed"' "$TRACE_OUT/$scenario-w1.trace.jsonl" \
+    || { echo "FAIL: $scenario trace has no round_committed events"; exit 1; }
+  EAFL_WORKERS=8 ./target/release/eafl run --mock --selector eafl \
+    --rounds 10 --clients 24 --scenario "$scenario" \
+    --out "$TRACE_OUT/$scenario" \
+    --trace "$TRACE_OUT/$scenario-w8.trace.jsonl" >/dev/null
+  cmp -s "$TRACE_OUT/$scenario-w1.trace.jsonl" \
+         "$TRACE_OUT/$scenario-w8.trace.jsonl" \
+    || { echo "FAIL: $scenario trace bytes depend on EAFL_WORKERS"; exit 1; }
+  EAFL_WORKERS=1 EAFL_EAGER_DRAIN=1 ./target/release/eafl run --mock \
+    --selector eafl --rounds 10 --clients 24 --scenario "$scenario" \
+    --out "$TRACE_OUT/$scenario" \
+    --trace "$TRACE_OUT/$scenario-eager.trace.jsonl" >/dev/null
+  cmp -s "$TRACE_OUT/$scenario-w1.trace.jsonl" \
+         "$TRACE_OUT/$scenario-eager.trace.jsonl" \
+    || { echo "FAIL: $scenario trace bytes depend on EAFL_EAGER_DRAIN"; exit 1; }
+done
+./target/release/eafl trace summarize \
+  "$TRACE_OUT/diurnal-w1.trace.jsonl" --out "$TRACE_OUT/figures" >/dev/null
+for key in final_accuracy best_accuracy total_dropouts committed_rounds \
+           total_fl_energy_j; do
+  want="$(grep -o "\"$key\": [^,}]*" "$TRACE_OUT/diurnal/run-eafl.summary.json")"
+  got="$(grep -o "\"$key\": [^,}]*" "$TRACE_OUT/figures/summary.json")"
+  [ -n "$want" ] && [ "$want" = "$got" ] \
+    || { echo "FAIL: summarize $key mismatch (run: $want, trace: $got)"; exit 1; }
+done
+echo "    trace smoke OK (byte-stable traces, summarize matches run summary)"
+
 # Plan-path bench smoke: a 10k-client pass must run and emit a
 # machine-readable eafl-bench-v1 JSON with the expected shape.
 echo "==> plan-path bench smoke (10k clients)"

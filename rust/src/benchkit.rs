@@ -216,6 +216,120 @@ impl Bench {
 pub use std::hint::black_box as bb;
 
 // ---------------------------------------------------------------------------
+// Perf trend rendering (BENCH_history.jsonl -> table)
+// ---------------------------------------------------------------------------
+
+/// Output format for [`render_trend`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrendFormat {
+    Markdown,
+    Csv,
+}
+
+/// Short display form of a recorded SHA: ten hex chars, keeping the
+/// `-dirty` marker `append_bench_history.sh` stamps on unclean trees.
+fn short_sha(sha: &str) -> String {
+    let (hex, dirty) = match sha.strip_suffix("-dirty") {
+        Some(hex) => (hex, "-dirty"),
+        None => (sha, ""),
+    };
+    let short: String = hex.chars().take(10).collect();
+    format!("{short}{dirty}")
+}
+
+/// Render `BENCH_history.jsonl` (one `{"sha": ..., "bench": <eafl-bench-v1>}`
+/// object per line, appended per commit by `scripts/append_bench_history.sh`)
+/// as a per-commit trend table: one row per recorded entry in file
+/// order, one column per benchmark name in first-seen order, cells the
+/// mean per-iteration time in milliseconds. Benchmarks that appear in
+/// some commits but not others (added or renamed over time) leave their
+/// missing cells blank rather than erroring — the history spans the
+/// repo's whole life.
+pub fn render_trend(history: &str, format: TrendFormat) -> Result<String> {
+    let mut columns: Vec<String> = Vec::new();
+    let mut rows: Vec<(String, BTreeMap<String, f64>)> = Vec::new();
+    for (idx, line) in history.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let json = Json::parse(line)
+            .with_context(|| format!("bench history line {}: invalid JSON", idx + 1))?;
+        let sha = json
+            .get("sha")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("bench history line {}: missing \"sha\"", idx + 1))?;
+        let results = json
+            .get("bench")
+            .and_then(|b| b.get("results"))
+            .and_then(Json::as_arr)
+            .ok_or_else(|| {
+                anyhow::anyhow!("bench history line {}: missing bench.results", idx + 1)
+            })?;
+        let mut means = BTreeMap::new();
+        for r in results {
+            let (Some(name), Some(mean_ns)) = (
+                r.get("name").and_then(Json::as_str),
+                r.get("mean_ns").and_then(Json::as_f64),
+            ) else {
+                continue;
+            };
+            if !columns.iter().any(|c| c == name) {
+                columns.push(name.to_string());
+            }
+            means.insert(name.to_string(), mean_ns);
+        }
+        rows.push((short_sha(sha), means));
+    }
+    anyhow::ensure!(
+        !rows.is_empty(),
+        "bench history is empty — run `make bench` to record the first entry"
+    );
+    let mut out = String::new();
+    match format {
+        TrendFormat::Markdown => {
+            out.push_str("| sha |");
+            for c in &columns {
+                out.push_str(&format!(" {c} (ms) |"));
+            }
+            out.push_str("\n|---|");
+            for _ in &columns {
+                out.push_str("---:|");
+            }
+            out.push('\n');
+            for (sha, means) in &rows {
+                out.push_str(&format!("| {sha} |"));
+                for c in &columns {
+                    match means.get(c) {
+                        Some(ns) => out.push_str(&format!(" {:.3} |", ns / 1e6)),
+                        None => out.push_str(" — |"),
+                    }
+                }
+                out.push('\n');
+            }
+        }
+        TrendFormat::Csv => {
+            out.push_str("sha");
+            for c in &columns {
+                out.push_str(&format!(",{c}_ms"));
+            }
+            out.push('\n');
+            for (sha, means) in &rows {
+                out.push_str(sha);
+                for c in &columns {
+                    match means.get(c) {
+                        Some(ns) => out.push_str(&format!(",{:.6}", ns / 1e6)),
+                        None => out.push(','),
+                    }
+                }
+                out.push('\n');
+            }
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
 // Bench CLI flag parsing
 // ---------------------------------------------------------------------------
 //
@@ -329,6 +443,40 @@ mod tests {
         assert!(e.contains("must be <="), "{e}");
         let e = parse_name_list("--scenarios", " , ").unwrap_err().to_string();
         assert!(e.contains("--scenarios"), "{e}");
+    }
+
+    #[test]
+    fn render_trend_builds_per_commit_tables() {
+        let history = concat!(
+            r#"{"sha": "aaaaaaaaaaaaaaaa", "bench": {"schema": "eafl-bench-v1", "results": [{"name": "plan_path", "mean_ns": 2000000.0}]}}"#,
+            "\n",
+            r#"{"sha": "bbbbbbbbbbbbbbbb-dirty", "bench": {"schema": "eafl-bench-v1", "results": [{"name": "plan_path", "mean_ns": 1000000.0}, {"name": "merge", "mean_ns": 500000.0}]}}"#,
+            "\n",
+        );
+        let md = render_trend(history, TrendFormat::Markdown).unwrap();
+        // Short SHAs, dirty marker preserved, columns in first-seen order.
+        assert!(md.contains("| aaaaaaaaaa |"), "{md}");
+        assert!(md.contains("| bbbbbbbbbb-dirty |"), "{md}");
+        assert!(md.contains("| plan_path (ms) | merge (ms) |"), "{md}");
+        // Means in ms; the first entry predates the merge bench -> blank cell.
+        assert!(md.contains("| 2.000 | — |"), "{md}");
+        assert!(md.contains("| 1.000 | 0.500 |"), "{md}");
+
+        let csv = render_trend(history, TrendFormat::Csv).unwrap();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "sha,plan_path_ms,merge_ms");
+        assert_eq!(lines[1], "aaaaaaaaaa,2.000000,");
+        assert_eq!(lines[2], "bbbbbbbbbb-dirty,1.000000,0.500000");
+    }
+
+    #[test]
+    fn render_trend_rejects_empty_or_malformed_history() {
+        let e = render_trend("", TrendFormat::Markdown).unwrap_err().to_string();
+        assert!(e.contains("history"), "{e}");
+        let e = render_trend("not json\n", TrendFormat::Csv).unwrap_err().to_string();
+        assert!(e.contains("line 1"), "{e}");
+        let e = render_trend(r#"{"sha": "x"}"#, TrendFormat::Csv).unwrap_err().to_string();
+        assert!(e.contains("bench.results"), "{e}");
     }
 
     #[test]

@@ -32,7 +32,7 @@
 //! sweep.
 
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 use anyhow::{Context, Result};
@@ -94,6 +94,13 @@ pub struct CampaignSpec {
     /// merged report — that is `report::merge_dirs`'s job once every
     /// shard has finished.
     pub shard: Option<ShardSpec>,
+    /// Write a per-cell `eafl-trace-v1` event trace
+    /// (`<cell>.trace.jsonl`) into this directory. Cells are traced as
+    /// they *run*: resumed cells are loaded from their summaries and do
+    /// not re-emit a trace. Because sharding partitions cells by name,
+    /// shards sharing one trace directory write disjoint files, and the
+    /// per-cell bytes are identical to a single-process sweep's.
+    pub trace_dir: Option<PathBuf>,
 }
 
 impl CampaignSpec {
@@ -106,6 +113,7 @@ impl CampaignSpec {
             workers_per_run: 1,
             resume: true,
             shard: None,
+            trace_dir: None,
         }
     }
 }
@@ -273,14 +281,32 @@ fn run_one(
     runtime: &dyn ModelRuntime,
     out_dir: Option<&Path>,
     workers_per_run: usize,
+    trace_dir: Option<&Path>,
 ) -> Result<CampaignRun> {
     let cfg = run.cfg.clone();
     let name = cfg.name.clone();
-    let log = Coordinator::new(cfg, runtime)
+    let mut coordinator = Coordinator::new(cfg, runtime)
         .with_context(|| format!("building coordinator for {name}"))?
-        .with_workers(workers_per_run)
-        .run()
-        .with_context(|| format!("running {name}"))?;
+        .with_workers(workers_per_run);
+    if let Some(dir) = trace_dir {
+        // Each grid cell gets its own trace file; the campaign_cell
+        // header line (before run_started, which set_sink emits) ties
+        // the trace back to its grid coordinates.
+        let mut sink = crate::obs::JsonlSink::create(&dir.join(format!("{name}.trace.jsonl")))?;
+        crate::obs::EventSink::emit(
+            &mut sink,
+            &crate::obs::RoundEvent::CampaignCell {
+                cell: name.clone(),
+                selector: run.selector.to_string(),
+                scenario: run.scenario.clone(),
+                seed: run.seed,
+                f: run.f,
+                clients: run.clients,
+            },
+        );
+        coordinator.set_sink(Box::new(sink));
+    }
+    let log = coordinator.run().with_context(|| format!("running {name}"))?;
     if let Some(dir) = out_dir {
         log.write_csv(&dir.join(format!("{name}.csv")))?;
         log.write_summary_json(&dir.join(format!("{name}.summary.json")))?;
@@ -377,6 +403,9 @@ pub fn run_campaign(
             .expect("manifest built whenever out_dir is set")
             .write(dir)?;
     }
+    if let Some(dir) = &spec.trace_dir {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating trace dir {dir:?}"))?;
+    }
 
     let mut results: Vec<Option<Result<CampaignRun>>> = Vec::new();
     results.resize_with(runs.len(), || None);
@@ -437,7 +466,8 @@ pub fn run_campaign(
     } else if jobs <= 1 {
         let mut out = Vec::new();
         for &i in &pending {
-            let res = run_one(&runs[i], runtime, out_dir, spec.workers_per_run);
+            let res =
+                run_one(&runs[i], runtime, out_dir, spec.workers_per_run, spec.trace_dir.as_deref());
             let is_err = res.is_err();
             out.push((i, res));
             if is_err {
@@ -461,8 +491,13 @@ pub fn run_campaign(
                             }
                             let p = next.fetch_add(1, Ordering::Relaxed);
                             let Some(&i) = pending.get(p) else { break };
-                            let res =
-                                run_one(&runs[i], runtime, out_dir, spec.workers_per_run);
+                            let res = run_one(
+                                &runs[i],
+                                runtime,
+                                out_dir,
+                                spec.workers_per_run,
+                                spec.trace_dir.as_deref(),
+                            );
                             if res.is_err() {
                                 failed.store(true, Ordering::Relaxed);
                             }

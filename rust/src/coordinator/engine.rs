@@ -77,6 +77,9 @@ pub const EMPTY_ROUND_WAIT_S: f64 = 300.0;
 #[derive(Debug, Clone)]
 pub struct RoundPlan {
     pub round: u64,
+    /// Candidates that survived the battery-floor + availability +
+    /// blacklist gates this round (what the selector chose from).
+    pub eligible: usize,
     /// Registry ids the selector picked (selection order).
     pub selected: Vec<usize>,
     /// One timing/energy plan per selected client (same order).
@@ -138,6 +141,7 @@ impl PlanPhase {
         }
         // One call yields both picks and deadline, so the pacer
         // percentile runs once per round instead of twice.
+        let eligible = arena.len();
         let (selected, deadline_s) = selector.plan(round, arena, k, rng);
 
         let pool = registry.pool();
@@ -155,7 +159,7 @@ impl PlanPhase {
                 charge_j: registry.effective_charge_j(id),
             })
             .collect();
-        RoundPlan { round, selected, plans, deadline_s }
+        RoundPlan { round, eligible, selected, plans, deadline_s }
     }
 }
 
@@ -616,13 +620,24 @@ mod tests {
     fn sim_phase_empty_round_advances_by_repoll_or_deadline() {
         let (_cfg, registry, _rt, env) = fixture();
         // A short empty-pool deadline is stretched to the re-poll wait…
-        let plan = RoundPlan { round: 3, selected: vec![], plans: vec![], deadline_s: 42.0 };
+        let plan = RoundPlan {
+            round: 3,
+            eligible: 0,
+            selected: vec![],
+            plans: vec![],
+            deadline_s: 42.0,
+        };
         let sim = SimPhase::run(&plan, &registry, &env, 0.0);
         assert_eq!(sim.round_duration_s, EMPTY_ROUND_WAIT_S);
         assert!(sim.outcome.results.is_empty());
         // …while a deadline longer than the re-poll wait still wins.
-        let plan =
-            RoundPlan { round: 4, selected: vec![], plans: vec![], deadline_s: 900.0 };
+        let plan = RoundPlan {
+            round: 4,
+            eligible: 0,
+            selected: vec![],
+            plans: vec![],
+            deadline_s: 900.0,
+        };
         let sim = SimPhase::run(&plan, &registry, &env, 0.0);
         assert_eq!(sim.round_duration_s, 900.0);
     }

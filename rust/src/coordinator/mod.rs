@@ -26,7 +26,7 @@ pub use engine::{
     PlanPhase, RecordPhase, RoundPlan, SimPhase, SimulatedRound,
 };
 pub use registry::{
-    BatteryMut, ClientPool, ClientState, ClientStats, LinkMut, PoolAggregates, Registry,
-    StatsMut,
+    BatteryMut, ClientPool, ClientState, ClientStats, LifecycleEvent, LinkMut, PoolAggregates,
+    Registry, StatsMut,
 };
 pub use server::Coordinator;

@@ -344,6 +344,28 @@ impl DrainLedger {
     }
 }
 
+/// One alive↔dead battery transition, recorded at the mirror-sync
+/// choke point when journaling is enabled (observability traces).
+///
+/// Every liveness flip — FL-drain deaths, background death-wheel
+/// kills, recharge revivals — flows through
+/// [`Registry::sync_battery_mirrors`], so this journal sees each flip
+/// exactly once, in mutation order. That order is a pure function of
+/// the seeded simulation (sim-result order for FL deaths, wheel order
+/// for background deaths, ascending-id order for revivals), which is
+/// what makes trace files byte-identical across worker counts, shard
+/// splits and drain modes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LifecycleEvent {
+    /// Battery hit zero at simulated hour `at_h` (the battery's own
+    /// death stamp: mid-round for FL deaths, end-of-epoch for
+    /// background deaths — identical in lazy and eager mode).
+    Depleted { id: usize, at_h: f64 },
+    /// A dead battery came back above zero; `at_h` is the ledger clock
+    /// at revival (the recharge window's end).
+    Revived { id: usize, at_h: f64, battery_frac: f64 },
+}
+
 /// The full client population.
 pub struct Registry {
     clients: Vec<ClientState>,
@@ -351,6 +373,10 @@ pub struct Registry {
     aggregates: PoolAggregates,
     /// Lazy background-drain state (see the module docs).
     ledger: DrainLedger,
+    /// Liveness-flip journal (see [`LifecycleEvent`]); empty and
+    /// cost-free unless a trace sink enabled it.
+    journal: Vec<LifecycleEvent>,
+    journal_enabled: bool,
     /// Model payload exchanged each round (flat params as f32 bytes).
     /// Private like `clients`: it feeds every cached projection, so
     /// mutating it without a pool rebuild would silently stale the
@@ -389,6 +415,8 @@ impl Registry {
             pool: ClientPool::default(),
             aggregates: PoolAggregates::default(),
             ledger: DrainLedger::new(&[]),
+            journal: Vec::new(),
+            journal_enabled: false,
             payload_bytes: param_count * 4,
             local_steps: cfg.training.local_steps,
             batch: cfg.data.batch_size,
@@ -583,6 +611,34 @@ impl Registry {
         } else {
             self.pool.below_capacity.remove(id);
         }
+        if self.journal_enabled && was_alive != alive {
+            let ev = if alive {
+                LifecycleEvent::Revived { id, at_h: self.ledger.now_h, battery_frac: frac }
+            } else {
+                // Prefer the battery's own death stamp (mid-round for
+                // FL deaths); the ledger clock is only a fallback for
+                // batteries that died without recording one.
+                let at_h = self.clients[id].battery.died_at_h.unwrap_or(self.ledger.now_h);
+                LifecycleEvent::Depleted { id, at_h }
+            };
+            self.journal.push(ev);
+        }
+    }
+
+    /// Enable/disable the lifecycle journal (attached trace sinks turn
+    /// it on). Off by default: journaling costs one branch per battery
+    /// mirror sync and nothing else.
+    pub fn set_journal(&mut self, enabled: bool) {
+        self.journal_enabled = enabled;
+        if !enabled {
+            self.journal.clear();
+        }
+    }
+
+    /// Move all journaled lifecycle events (in mutation order) into
+    /// `out`, leaving the journal empty.
+    pub fn drain_journal(&mut self, out: &mut Vec<LifecycleEvent>) {
+        out.append(&mut self.journal);
     }
 
     /// Move a client's drain anchor to "now": materialized charge,
@@ -1083,6 +1139,42 @@ mod tests {
         r.fill_candidates(4, 0.01, |id| id % 2 == 0, &mut gated);
         assert!(gated.iter().all(|c| c.id % 2 == 0));
         assert!(gated.len() < fast.len());
+    }
+
+    #[test]
+    fn lifecycle_journal_records_flips_in_mutation_order() {
+        let mut r = registry();
+        let cap = r.client(0).battery.capacity_joules();
+        let mut out = Vec::new();
+
+        // Disabled by default: flips are not recorded.
+        r.drain_fl(0, cap * 2.0, 1.0);
+        r.drain_journal(&mut out);
+        assert!(out.is_empty());
+
+        r.set_journal(true);
+        r.drain_fl(1, cap * 2.0, 2.5); // death, mid-round stamp
+        r.drain_fl(2, cap * 0.25, 2.6); // drain without a flip: no entry
+        r.recharge_to(0, 0.5); // revival of the pre-journal death
+        r.drain_journal(&mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0], LifecycleEvent::Depleted { id: 1, at_h: 2.5 });
+        match out[1] {
+            LifecycleEvent::Revived { id, battery_frac, .. } => {
+                assert_eq!(id, 0);
+                assert!((battery_frac - 0.5).abs() < 1e-12);
+            }
+            other => panic!("expected a revival, got {other:?}"),
+        }
+
+        // Draining leaves the journal empty; disabling clears it.
+        out.clear();
+        r.drain_journal(&mut out);
+        assert!(out.is_empty());
+        r.drain_fl(3, cap * 2.0, 3.0);
+        r.set_journal(false);
+        r.drain_journal(&mut out);
+        assert!(out.is_empty());
     }
 
     #[test]

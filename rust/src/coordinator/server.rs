@@ -21,15 +21,20 @@ use crate::aggregation::{make_aggregator, Aggregator};
 use crate::config::ExperimentConfig;
 use crate::data::SyntheticSpeech;
 use crate::metrics::MetricsLog;
+use crate::obs::{EventSink, PhaseProfiler, RoundEvent};
 use crate::runtime::ModelRuntime;
 use crate::scenario::{Scenario, ScenarioEnv, WakeWheel};
 use crate::selection::{make_selector, Candidate, Selector};
+use crate::sim::FailureKind;
 use crate::training::{Trainer, TrainerBufs};
 use crate::util::rng::Rng;
 
 use super::accounting::BatteryAccounting;
-use super::engine::{CommitPhase, ExecPhase, FeedbackPhase, PlanPhase, RecordPhase, SimPhase};
-use super::registry::Registry;
+use super::engine::{
+    CommitPhase, ExecPhase, FeedbackPhase, PlanPhase, RecordPhase, RoundPlan, SimPhase,
+    SimulatedRound,
+};
+use super::registry::{LifecycleEvent, Registry};
 
 /// Worker threads for the execution phase: `EAFL_WORKERS` if set, else
 /// the machine's available parallelism (capped — per-client training is
@@ -89,6 +94,14 @@ pub struct Coordinator<'r> {
     /// Carried between eval points.
     last_accuracy: f64,
     last_test_loss: f64,
+    /// Deterministic event stream (`--trace`): `None` means the seams
+    /// skip event construction entirely — one `is_some()` branch per
+    /// phase is the whole hot-path cost.
+    sink: Option<Box<dyn EventSink>>,
+    /// Separate wall-time channel; never interleaved with `sink`.
+    profiler: Option<PhaseProfiler>,
+    /// Reused buffer for draining the registry's lifecycle journal.
+    lifecycle_scratch: Vec<LifecycleEvent>,
 }
 
 impl<'r> Coordinator<'r> {
@@ -151,6 +164,9 @@ impl<'r> Coordinator<'r> {
             workers: default_workers(),
             last_accuracy: 0.0,
             last_test_loss: f64::NAN,
+            sink: None,
+            profiler: None,
+            lifecycle_scratch: Vec::new(),
         })
     }
 
@@ -170,6 +186,34 @@ impl<'r> Coordinator<'r> {
 
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Attach a deterministic event sink: enables the registry's
+    /// lifecycle journal and emits the identifying `RunStarted` event.
+    pub fn set_sink(&mut self, mut sink: Box<dyn EventSink>) {
+        self.registry.set_journal(true);
+        sink.emit(&RoundEvent::RunStarted {
+            name: self.cfg.name.clone(),
+            selector: self.cfg.selector.kind.to_string(),
+            scenario: self.env.name.clone(),
+            clients: self.cfg.federation.num_clients,
+            rounds: self.cfg.federation.rounds,
+            seed: self.cfg.data.seed,
+        });
+        self.sink = Some(sink);
+    }
+
+    /// Detach and return the event sink (tests drive `run_round`
+    /// manually and then inspect a `MemorySink`).
+    pub fn take_sink(&mut self) -> Option<Box<dyn EventSink>> {
+        self.registry.set_journal(false);
+        self.sink.take()
+    }
+
+    /// Attach the wall-time phase profiler (the non-deterministic
+    /// channel; see [`crate::obs`]).
+    pub fn set_profiler(&mut self, profiler: PhaseProfiler) {
+        self.profiler = Some(profiler);
     }
 
     pub fn registry(&self) -> &Registry {
@@ -203,11 +247,20 @@ impl<'r> Coordinator<'r> {
                 break;
             }
         }
+        // Flush explicitly so trace-file write errors fail the run
+        // instead of vanishing in a Drop.
+        if let Some(sink) = self.sink.as_mut() {
+            sink.flush()?;
+        }
+        if let Some(profiler) = &self.profiler {
+            profiler.write()?;
+        }
         Ok(self.log)
     }
 
     /// Execute one round end to end through the engine phases.
     pub fn run_round(&mut self, round: u64) -> Result<()> {
+        let mut t0 = self.phase_start();
         // --- Phase 1: candidate planning (availability-gated) -------------
         // Bring the wake-wheel cache up to this round's clock first: only
         // the clients whose model-declared change time is due get
@@ -231,10 +284,14 @@ impl<'r> Coordinator<'r> {
             &mut self.rng,
             &mut self.candidate_arena,
         );
+        self.emit_plan_events(&plan);
+        t0 = self.phase_done("plan", t0);
 
         // --- Phase 2: event-driven round simulation on effective links ----
         let sim = SimPhase::run(&plan, &self.registry, &self.env, self.clock_h);
         let end_clock_h = self.clock_h + sim.round_hours;
+        self.emit_outcome_events(round, &sim);
+        t0 = self.phase_done("sim", t0);
 
         // --- Phase 3: real local training (parallel) ----------------------
         let exec = ExecPhase { runtime: self.runtime, data: &self.data, workers: self.workers }
@@ -246,6 +303,7 @@ impl<'r> Coordinator<'r> {
                 &self.cfg.training,
                 &mut self.bufs_pool,
             )?;
+        t0 = self.phase_done("exec", t0);
 
         // --- Phase 4: commit or fail the round ----------------------------
         let commit = CommitPhase::run(
@@ -255,6 +313,7 @@ impl<'r> Coordinator<'r> {
             plan.selected.len(),
             &exec.updates,
         )?;
+        t0 = self.phase_done("commit", t0);
 
         // --- Phase 5: battery accounting + recharge policy ----------------
         BatteryAccounting::drain_participants(
@@ -273,9 +332,16 @@ impl<'r> Coordinator<'r> {
             end_clock_h,
         );
         self.env.recharge.apply(&mut self.registry, self.clock_h, end_clock_h);
+        // Drain the lifecycle journal only after recharge: deaths and
+        // revivals are then complete for the round, so the running
+        // depleted−revived count at the commit event below equals the
+        // record's `cumulative_dead`.
+        self.emit_lifecycle_events();
+        t0 = self.phase_done("account", t0);
 
         // --- Phase 6: stats + selector feedback ---------------------------
         FeedbackPhase::run(&mut self.registry, self.selector.as_mut(), round, &exec.outcomes);
+        t0 = self.phase_done("feedback", t0);
 
         // --- Evaluation ---------------------------------------------------
         let fed = &self.cfg.federation;
@@ -292,6 +358,7 @@ impl<'r> Coordinator<'r> {
             self.last_accuracy = ev.accuracy;
             self.last_test_loss = ev.mean_loss;
         }
+        t0 = self.phase_done("eval", t0);
 
         // --- Phase 7: record ----------------------------------------------
         self.clock_h = end_clock_h;
@@ -305,6 +372,125 @@ impl<'r> Coordinator<'r> {
             self.last_accuracy,
             self.last_test_loss,
         ));
+        // Last event of the round, mirroring the metrics row — so a
+        // trace alone reproduces the run summary (`eafl trace
+        // summarize`).
+        self.emit_round_committed();
+        let _ = self.phase_done("record", t0);
         Ok(())
+    }
+
+    // --- observability seams ----------------------------------------------
+
+    fn phase_start(&self) -> Option<std::time::Instant> {
+        self.profiler.as_ref().map(|_| std::time::Instant::now())
+    }
+
+    /// Record the span since `t0` under `phase` and start the next
+    /// span. `None` in, `None` out when no profiler is attached.
+    fn phase_done(
+        &mut self,
+        phase: &'static str,
+        t0: Option<std::time::Instant>,
+    ) -> Option<std::time::Instant> {
+        match (self.profiler.as_mut(), t0) {
+            (Some(p), Some(t)) => {
+                p.record(phase, t.elapsed());
+                Some(std::time::Instant::now())
+            }
+            _ => None,
+        }
+    }
+
+    /// `RoundPlanned` + one `ClientSelected` per pick, emitted before
+    /// any round mutation so `battery_frac` is exactly the
+    /// drain-effective value the selector saw.
+    fn emit_plan_events(&mut self, plan: &RoundPlan) {
+        let Self { sink, registry, clock_h, .. } = self;
+        let Some(sink) = sink.as_mut() else { return };
+        sink.emit(&RoundEvent::RoundPlanned {
+            round: plan.round,
+            clock_h: *clock_h,
+            eligible: plan.eligible,
+            selected: plan.selected.len(),
+            deadline_s: plan.deadline_s,
+        });
+        for &id in &plan.selected {
+            sink.emit(&RoundEvent::ClientSelected {
+                round: plan.round,
+                id,
+                score: registry.client(id).stats.stat_util.unwrap_or(0.0),
+                battery_frac: registry.effective_battery_frac(id),
+            });
+        }
+    }
+
+    /// Per-participant outcomes in simulation order (worker-count
+    /// independent by the exec phase's commit-order guarantee).
+    fn emit_outcome_events(&mut self, round: u64, sim: &SimulatedRound) {
+        let clock_h = self.clock_h;
+        let Some(sink) = self.sink.as_mut() else { return };
+        for r in &sim.outcome.results {
+            if r.completed {
+                sink.emit(&RoundEvent::ClientReported {
+                    round,
+                    id: r.id,
+                    duration_s: r.active_s,
+                    energy_j: r.energy_spent_j,
+                });
+            } else {
+                let cause = match r.failure {
+                    Some(FailureKind::BatteryDeath) => crate::obs::DropCause::Death,
+                    _ => crate::obs::DropCause::Deadline,
+                };
+                sink.emit(&RoundEvent::ClientDropped {
+                    round,
+                    id: r.id,
+                    cause,
+                    at_h: clock_h + r.active_s / 3600.0,
+                    energy_j: r.energy_spent_j,
+                });
+            }
+        }
+    }
+
+    /// Forward the registry's journaled liveness flips (deaths from FL
+    /// drain and the background death wheel, recharge revivals) in
+    /// mutation order.
+    fn emit_lifecycle_events(&mut self) {
+        if self.sink.is_none() {
+            return;
+        }
+        let mut events = std::mem::take(&mut self.lifecycle_scratch);
+        self.registry.drain_journal(&mut events);
+        if let Some(sink) = self.sink.as_mut() {
+            for ev in &events {
+                let ev = match *ev {
+                    LifecycleEvent::Depleted { id, at_h } => {
+                        RoundEvent::BatteryDepleted { id, at_h }
+                    }
+                    LifecycleEvent::Revived { id, at_h, battery_frac } => {
+                        RoundEvent::BatteryRevived { id, at_h, battery_frac }
+                    }
+                };
+                sink.emit(&ev);
+            }
+        }
+        events.clear();
+        self.lifecycle_scratch = events;
+    }
+
+    fn emit_round_committed(&mut self) {
+        let Self { sink, log, .. } = self;
+        let (Some(sink), Some(rec)) = (sink.as_mut(), log.last()) else { return };
+        sink.emit(&RoundEvent::RoundCommitted {
+            round: rec.round,
+            committed: rec.committed,
+            completed: rec.completed,
+            accuracy: rec.test_accuracy,
+            train_loss: rec.train_loss,
+            energy_j: rec.total_fl_energy_j,
+            wall_clock_h: rec.wall_clock_h,
+        });
     }
 }

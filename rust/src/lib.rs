@@ -150,6 +150,34 @@
 //! scenarios preserve worker-count invariance: seeded campaigns stay
 //! byte-identical at any `EAFL_WORKERS` / `--jobs` setting.
 //!
+//! ## Observability: deterministic events + wall-time profile
+//!
+//! Two strictly separated telemetry channels (module [`obs`]):
+//!
+//! 1. **Deterministic round events** — a typed [`obs::RoundEvent`]
+//!    stream (`run_started`, `round_planned`, `client_selected`,
+//!    `client_reported`, `client_dropped`, `battery_depleted`,
+//!    `battery_revived`, `round_committed`, `campaign_cell`) emitted
+//!    through an [`obs::EventSink`] from the engine's phase seams and
+//!    the registry's lifecycle choke point. Payloads are pure
+//!    functions of (config, seed, simulated time), so `eafl run
+//!    --trace FILE` writes an `eafl-trace-v1` JSONL whose **bytes are
+//!    identical** at any `EAFL_WORKERS`, any `--shard` split, and lazy
+//!    vs `EAFL_EAGER_DRAIN=1` — the same determinism tiers the metrics
+//!    CSVs already honor (`rust/tests/trace_determinism.rs`).
+//! 2. **Wall-time phase profile** — [`obs::PhaseProfiler`] spans
+//!    (plan/sim/exec/commit/account/feedback/eval/record) written to a
+//!    sibling `*.profile.json`. Inherently machine-dependent, so it
+//!    never shares a file with the event channel and is excluded from
+//!    byte-compares.
+//!
+//! `eafl trace summarize TRACE... [--out DIR]` folds traces back into
+//! the paper's figures (time-to-accuracy on the wall-clock axis,
+//! drop-out trajectories, participation/energy histograms) and
+//! reproduces the run summary exactly from events alone. With no sink
+//! attached the seams cost one `Option` branch per phase — the
+//! `plan_path_throughput` bench runs sink-free and is unaffected.
+//!
 //! ## Campaigns
 //!
 //! The paper's figures are grids, not runs. [`campaign`] expands
@@ -209,6 +237,7 @@ pub mod device;
 pub mod energy;
 pub mod metrics;
 pub mod network;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod scenario;

@@ -11,6 +11,8 @@
 //!                campaign.json/.csv
 //!   merge        order-stable merge of sweep output directories into
 //!                the campaign.json/.csv a single-process sweep writes
+//!   trace        fold `--trace` event files into the paper's figures
+//!   trend        render BENCH_history.jsonl into a per-commit table
 //!   gen-config   write the paper-default TOML config
 //!   energy-table print the Table 1 / Table 2 reproduction
 //!
@@ -28,6 +30,7 @@ use eafl::device::{DeviceSpec, ALL_TIERS};
 use eafl::energy::{comm_energy_percent, CommDirection};
 use eafl::metrics::Summary;
 use eafl::network::Medium;
+use eafl::obs::{self, JsonlSink, PhaseProfiler, TraceSummary};
 use eafl::runtime::{MockRuntime, ModelRuntime, XlaRuntime};
 use eafl::scenario::Scenario;
 
@@ -36,13 +39,17 @@ eafl — energy-aware federated learning (MobiCom'22 FedEdge reproduction)
 
 USAGE:
   eafl run [--config FILE] [--selector random|oort|eafl] [--rounds N]
-           [--clients N] [--f F] [--scenario NAME|FILE] [--out DIR] [--mock]
+           [--clients N] [--f F] [--scenario NAME|FILE] [--out DIR]
+           [--trace FILE] [--mock]
   eafl compare [--config FILE] [--rounds N] [--clients N]
            [--scenario NAME|FILE] [--out DIR] [--mock]
   eafl sweep [--config FILE] [--selectors LIST] [--scenario LIST]
              [--seeds LIST] [--f LIST] [--clients LIST] [--rounds N]
-             [--jobs N] [--shard I/N] [--fresh] [--out DIR] [--mock]
+             [--jobs N] [--shard I/N] [--fresh] [--out DIR]
+             [--trace DIR] [--mock]
   eafl merge DIR [DIR...] [--out DIR]
+  eafl trace summarize TRACE [TRACE...] [--out DIR]
+  eafl trend [--history FILE] [--csv] [--out FILE]
   eafl scenarios [--show NAME]
   eafl gen-config [--out FILE]
   eafl energy-table
@@ -72,6 +79,18 @@ USAGE:
   into the round engine's phase seams. --scenario takes a preset name
   (`eafl scenarios` lists them) or a TOML scenario file
   (`eafl scenarios --show NAME` prints a template).
+
+  --trace writes the deterministic `eafl-trace-v1` round-event stream
+  (JSONL; one file per run, or per grid cell under a sweep's trace
+  directory) — byte-identical at any EAFL_WORKERS / shard split / drain
+  mode. run additionally writes a sibling *.profile.json with
+  non-deterministic per-phase wall times (never part of byte compares).
+  `eafl trace summarize` folds traces back into figure data:
+  time-to-accuracy on the wall-clock axis, drop-out trajectories, and
+  participation / energy histograms (CSV + summary.json under --out).
+
+  `eafl trend` renders scripts/bench.sh's BENCH_history.jsonl into a
+  per-commit benchmark table (markdown, or CSV with --csv).
 
   EAFL_WORKERS=N sets the per-round parallel-training worker count for
   run/compare (seeded results are bit-identical at any N).
@@ -199,10 +218,26 @@ fn base_config(args: &Args, kind: SelectorKind) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
-fn run_one(cfg: ExperimentConfig, runtime: &dyn ModelRuntime, out: &PathBuf) -> Result<Summary> {
+fn run_one(
+    cfg: ExperimentConfig,
+    runtime: &dyn ModelRuntime,
+    out: &PathBuf,
+    trace: Option<&Path>,
+) -> Result<Summary> {
     std::fs::create_dir_all(out)?;
     let name = cfg.name.clone();
-    let log = Coordinator::new(cfg, runtime)?.run()?;
+    let mut coordinator = Coordinator::new(cfg, runtime)?;
+    if let Some(path) = trace {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating trace dir {dir:?}"))?;
+        }
+        coordinator.set_sink(Box::new(JsonlSink::create(path)?));
+        // Wall-time phases go to a sibling file, never into the trace:
+        // the trace is byte-deterministic, wall time is not.
+        coordinator.set_profiler(PhaseProfiler::with_output(path.with_extension("profile.json")));
+    }
+    let log = coordinator.run()?;
     log.write_csv(&out.join(format!("{name}.csv")))?;
     log.write_summary_json(&out.join(format!("{name}.summary.json")))?;
     Ok(log.summary())
@@ -321,8 +356,9 @@ fn main() -> Result<()> {
             }
             cfg.validate()?;
             let out = PathBuf::from(args.get("out").unwrap_or("results"));
+            let trace = args.get("trace").map(PathBuf::from);
             let runtime = load_runtime(args.has("mock"))?;
-            let s = run_one(cfg, runtime.as_ref(), &out)?;
+            let s = run_one(cfg, runtime.as_ref(), &out, trace.as_deref())?;
             print_summary(&s);
         }
         "compare" => {
@@ -335,7 +371,7 @@ fn main() -> Result<()> {
                 cfg.selector.kind = kind;
                 cfg.name = format!("compare-{kind}");
                 cfg.validate()?;
-                summaries.push(run_one(cfg, runtime.as_ref(), &out)?);
+                summaries.push(run_one(cfg, runtime.as_ref(), &out, None)?);
             }
             println!("\n=== EAFL vs Oort vs Random ===");
             for s in &summaries {
@@ -370,6 +406,10 @@ fn main() -> Result<()> {
             }
             spec.shard = args.get_parsed::<ShardSpec>("shard")?;
             spec.resume = !args.has("fresh");
+            // Forwarded verbatim to shard children (spawn_shard_sweeps
+            // only strips --jobs/--shard/--out): shards own disjoint
+            // cells, so they share one trace directory without racing.
+            spec.trace_dir = args.get("trace").map(PathBuf::from);
             // Fail fast on a bad scenario axis (before hours of runs).
             Scenario::resolve(&spec.base.scenario)?;
             for s in &spec.grid.scenarios {
@@ -459,6 +499,53 @@ fn main() -> Result<()> {
                 json_path.display(),
                 csv_path.display()
             );
+        }
+        "trace" => {
+            let (args, positionals) = Args::parse_with_positionals(rest, &[])?;
+            let Some(("summarize", files)) = positionals
+                .split_first()
+                .map(|(action, files)| (action.as_str(), files))
+            else {
+                bail!("trace needs an action: eafl trace summarize TRACE...\n\n{USAGE}");
+            };
+            if files.is_empty() {
+                bail!("trace summarize needs at least one trace file\n\n{USAGE}");
+            }
+            let mut summaries = Vec::with_capacity(files.len());
+            for file in files {
+                let summary = TraceSummary::from_file(Path::new(file))?;
+                println!("{}", summary.render_line());
+                summaries.push(summary);
+            }
+            if let Some(out) = args.get("out") {
+                let dir = PathBuf::from(out);
+                obs::write_outputs(&dir, &summaries)?;
+                println!(
+                    "\nwrote figure data from {} trace(s) -> {}",
+                    summaries.len(),
+                    dir.display()
+                );
+            }
+        }
+        "trend" => {
+            let args = Args::parse(rest, &["csv"])?;
+            let history = PathBuf::from(args.get("history").unwrap_or("BENCH_history.jsonl"));
+            let text = std::fs::read_to_string(&history)
+                .with_context(|| format!("reading bench history {}", history.display()))?;
+            let format = if args.has("csv") {
+                eafl::benchkit::TrendFormat::Csv
+            } else {
+                eafl::benchkit::TrendFormat::Markdown
+            };
+            let rendered = eafl::benchkit::render_trend(&text, format)?;
+            match args.get("out") {
+                Some(p) => {
+                    std::fs::write(p, &rendered)
+                        .with_context(|| format!("writing trend table {p}"))?;
+                    println!("wrote {p}");
+                }
+                None => print!("{rendered}"),
+            }
         }
         "scenarios" => {
             let args = Args::parse(rest, &[])?;

@@ -1,0 +1,412 @@
+//! The typed round-event taxonomy and its JSONL wire form.
+//!
+//! Events carry only sim-time / seed-pure data: round indices, client
+//! ids, simulated clocks (hours), joules, accuracies. Nothing here may
+//! depend on wall time, worker count, shard split, or drain mode —
+//! that is what makes trace files byte-comparable across every
+//! determinism tier (wall-time measurements live in the separate
+//! [`profile`](super::profile) channel instead).
+//!
+//! Wire form: one compact JSON object per line, keys in lexicographic
+//! (BTreeMap) order, with a `"ev"` discriminant. Floats that can
+//! legitimately be NaN (a failed round's train loss) are encoded as
+//! `null`; every other float field is finite by construction.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Why a selected client failed to deliver an update this round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropCause {
+    /// Missed the round deadline (straggler).
+    Deadline,
+    /// Battery hit zero mid-round.
+    Death,
+    /// Went offline mid-round. Batch simulation never produces this
+    /// (availability is sampled at plan time), but `eafl serve` clients
+    /// can disappear between check-ins, so the taxonomy reserves it.
+    Unavailable,
+}
+
+impl DropCause {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DropCause::Deadline => "deadline",
+            DropCause::Death => "death",
+            DropCause::Unavailable => "unavailable",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "deadline" => Ok(DropCause::Deadline),
+            "death" => Ok(DropCause::Death),
+            "unavailable" => Ok(DropCause::Unavailable),
+            other => bail!("unknown drop cause {other:?}"),
+        }
+    }
+}
+
+/// One deterministic trace event. See the module docs for the purity
+/// contract and `ROADMAP.md` ("Observability") for the taxonomy table.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RoundEvent {
+    /// Emitted once when a sink is attached to a coordinator:
+    /// identifies the experiment the following events belong to.
+    RunStarted {
+        name: String,
+        selector: String,
+        scenario: String,
+        clients: usize,
+        rounds: usize,
+        seed: u64,
+    },
+    /// Campaign-cell coordinates; written (before `RunStarted`) at the
+    /// head of each per-cell trace of a `sweep --trace DIR`.
+    CampaignCell {
+        cell: String,
+        selector: String,
+        scenario: String,
+        seed: u64,
+        f: f64,
+        clients: usize,
+    },
+    /// Plan phase: how many clients were eligible, how many were
+    /// picked, and the reporting deadline the round will enforce.
+    RoundPlanned { round: u64, clock_h: f64, eligible: usize, selected: usize, deadline_s: f64 },
+    /// One per selected client, in selection order. `score` is the
+    /// selector-visible statistical utility (0 before first feedback);
+    /// `battery_frac` is the drain-effective fraction the plan saw.
+    ClientSelected { round: u64, id: usize, score: f64, battery_frac: f64 },
+    /// A selected client delivered its update: simulated active
+    /// seconds and joules spent.
+    ClientReported { round: u64, id: usize, duration_s: f64, energy_j: f64 },
+    /// A selected client failed to deliver. `at_h` is the simulated
+    /// clock at which it stopped; `energy_j` is what it burned anyway.
+    ClientDropped { round: u64, id: usize, cause: DropCause, at_h: f64, energy_j: f64 },
+    /// Battery reached zero — from FL drain or the background death
+    /// wheel; `at_h` is the exact simulated expiry stamp (identical in
+    /// lazy and eager drain modes).
+    BatteryDepleted { id: usize, at_h: f64 },
+    /// A dead client came back above zero through a recharge policy.
+    BatteryRevived { id: usize, at_h: f64, battery_frac: f64 },
+    /// Round epilogue, mirroring the metrics row: quorum outcome,
+    /// carried eval accuracy, mean train loss (`null` when no client
+    /// completed), cumulative FL energy, and the advanced clock.
+    RoundCommitted {
+        round: u64,
+        committed: bool,
+        completed: usize,
+        accuracy: f64,
+        train_loss: f64,
+        energy_j: f64,
+        wall_clock_h: f64,
+    },
+}
+
+fn num_field(m: &mut BTreeMap<String, Json>, k: &str, v: f64) {
+    // The in-tree writer prints non-finite floats as bare words, which
+    // is not JSON — encode them as null (only train_loss can hit this).
+    m.insert(k.to_string(), if v.is_finite() { Json::Num(v) } else { Json::Null });
+}
+
+fn str_field(m: &mut BTreeMap<String, Json>, k: &str, v: &str) {
+    m.insert(k.to_string(), Json::Str(v.to_string()));
+}
+
+impl RoundEvent {
+    /// The `"ev"` discriminant used on the wire.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RoundEvent::RunStarted { .. } => "run_started",
+            RoundEvent::CampaignCell { .. } => "campaign_cell",
+            RoundEvent::RoundPlanned { .. } => "round_planned",
+            RoundEvent::ClientSelected { .. } => "client_selected",
+            RoundEvent::ClientReported { .. } => "client_reported",
+            RoundEvent::ClientDropped { .. } => "client_dropped",
+            RoundEvent::BatteryDepleted { .. } => "battery_depleted",
+            RoundEvent::BatteryRevived { .. } => "battery_revived",
+            RoundEvent::RoundCommitted { .. } => "round_committed",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        str_field(&mut m, "ev", self.kind());
+        match self {
+            RoundEvent::RunStarted { name, selector, scenario, clients, rounds, seed } => {
+                str_field(&mut m, "name", name);
+                str_field(&mut m, "selector", selector);
+                str_field(&mut m, "scenario", scenario);
+                num_field(&mut m, "clients", *clients as f64);
+                num_field(&mut m, "rounds", *rounds as f64);
+                num_field(&mut m, "seed", *seed as f64);
+            }
+            RoundEvent::CampaignCell { cell, selector, scenario, seed, f, clients } => {
+                str_field(&mut m, "cell", cell);
+                str_field(&mut m, "selector", selector);
+                str_field(&mut m, "scenario", scenario);
+                num_field(&mut m, "seed", *seed as f64);
+                num_field(&mut m, "f", *f);
+                num_field(&mut m, "clients", *clients as f64);
+            }
+            RoundEvent::RoundPlanned { round, clock_h, eligible, selected, deadline_s } => {
+                num_field(&mut m, "round", *round as f64);
+                num_field(&mut m, "clock_h", *clock_h);
+                num_field(&mut m, "eligible", *eligible as f64);
+                num_field(&mut m, "selected", *selected as f64);
+                num_field(&mut m, "deadline_s", *deadline_s);
+            }
+            RoundEvent::ClientSelected { round, id, score, battery_frac } => {
+                num_field(&mut m, "round", *round as f64);
+                num_field(&mut m, "id", *id as f64);
+                num_field(&mut m, "score", *score);
+                num_field(&mut m, "battery_frac", *battery_frac);
+            }
+            RoundEvent::ClientReported { round, id, duration_s, energy_j } => {
+                num_field(&mut m, "round", *round as f64);
+                num_field(&mut m, "id", *id as f64);
+                num_field(&mut m, "duration_s", *duration_s);
+                num_field(&mut m, "energy_j", *energy_j);
+            }
+            RoundEvent::ClientDropped { round, id, cause, at_h, energy_j } => {
+                num_field(&mut m, "round", *round as f64);
+                num_field(&mut m, "id", *id as f64);
+                str_field(&mut m, "cause", cause.as_str());
+                num_field(&mut m, "at_h", *at_h);
+                num_field(&mut m, "energy_j", *energy_j);
+            }
+            RoundEvent::BatteryDepleted { id, at_h } => {
+                num_field(&mut m, "id", *id as f64);
+                num_field(&mut m, "at_h", *at_h);
+            }
+            RoundEvent::BatteryRevived { id, at_h, battery_frac } => {
+                num_field(&mut m, "id", *id as f64);
+                num_field(&mut m, "at_h", *at_h);
+                num_field(&mut m, "battery_frac", *battery_frac);
+            }
+            RoundEvent::RoundCommitted {
+                round,
+                committed,
+                completed,
+                accuracy,
+                train_loss,
+                energy_j,
+                wall_clock_h,
+            } => {
+                num_field(&mut m, "round", *round as f64);
+                m.insert("committed".to_string(), Json::Bool(*committed));
+                num_field(&mut m, "completed", *completed as f64);
+                num_field(&mut m, "accuracy", *accuracy);
+                num_field(&mut m, "train_loss", *train_loss);
+                num_field(&mut m, "energy_j", *energy_j);
+                num_field(&mut m, "wall_clock_h", *wall_clock_h);
+            }
+        }
+        Json::Obj(m)
+    }
+
+    /// One JSONL line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let kind = j
+            .get("ev")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("trace event missing \"ev\" discriminant"))?;
+        let num = |k: &str| -> Result<f64> {
+            match j.field(k)? {
+                Json::Null => Ok(f64::NAN),
+                v => v.as_f64().ok_or_else(|| anyhow!("field {k:?} is not a number")),
+            }
+        };
+        let uint = |k: &str| -> Result<usize> {
+            j.field(k)?.as_usize().ok_or_else(|| anyhow!("field {k:?} is not a non-negative integer"))
+        };
+        let text = |k: &str| -> Result<String> {
+            Ok(j.field(k)?
+                .as_str()
+                .ok_or_else(|| anyhow!("field {k:?} is not a string"))?
+                .to_string())
+        };
+        Ok(match kind {
+            "run_started" => RoundEvent::RunStarted {
+                name: text("name")?,
+                selector: text("selector")?,
+                scenario: text("scenario")?,
+                clients: uint("clients")?,
+                rounds: uint("rounds")?,
+                seed: uint("seed")? as u64,
+            },
+            "campaign_cell" => RoundEvent::CampaignCell {
+                cell: text("cell")?,
+                selector: text("selector")?,
+                scenario: text("scenario")?,
+                seed: uint("seed")? as u64,
+                f: num("f")?,
+                clients: uint("clients")?,
+            },
+            "round_planned" => RoundEvent::RoundPlanned {
+                round: uint("round")? as u64,
+                clock_h: num("clock_h")?,
+                eligible: uint("eligible")?,
+                selected: uint("selected")?,
+                deadline_s: num("deadline_s")?,
+            },
+            "client_selected" => RoundEvent::ClientSelected {
+                round: uint("round")? as u64,
+                id: uint("id")?,
+                score: num("score")?,
+                battery_frac: num("battery_frac")?,
+            },
+            "client_reported" => RoundEvent::ClientReported {
+                round: uint("round")? as u64,
+                id: uint("id")?,
+                duration_s: num("duration_s")?,
+                energy_j: num("energy_j")?,
+            },
+            "client_dropped" => RoundEvent::ClientDropped {
+                round: uint("round")? as u64,
+                id: uint("id")?,
+                cause: DropCause::parse(&text("cause")?)?,
+                at_h: num("at_h")?,
+                energy_j: num("energy_j")?,
+            },
+            "battery_depleted" => {
+                RoundEvent::BatteryDepleted { id: uint("id")?, at_h: num("at_h")? }
+            }
+            "battery_revived" => RoundEvent::BatteryRevived {
+                id: uint("id")?,
+                at_h: num("at_h")?,
+                battery_frac: num("battery_frac")?,
+            },
+            "round_committed" => RoundEvent::RoundCommitted {
+                round: uint("round")? as u64,
+                committed: j
+                    .field("committed")?
+                    .as_bool()
+                    .ok_or_else(|| anyhow!("field \"committed\" is not a bool"))?,
+                completed: uint("completed")?,
+                accuracy: num("accuracy")?,
+                train_loss: num("train_loss")?,
+                energy_j: num("energy_j")?,
+                wall_clock_h: num("wall_clock_h")?,
+            },
+            other => bail!("unknown trace event kind {other:?}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(ev: RoundEvent) {
+        let line = ev.to_line();
+        assert!(!line.contains('\n'));
+        let back = RoundEvent::from_json(&Json::parse(&line).unwrap()).unwrap();
+        match (&ev, &back) {
+            // NaN train_loss goes through null and comes back NaN, so
+            // PartialEq can't compare that one directly.
+            (
+                RoundEvent::RoundCommitted { train_loss: a, .. },
+                RoundEvent::RoundCommitted { train_loss: b, .. },
+            ) if a.is_nan() => assert!(b.is_nan()),
+            _ => assert_eq!(ev, back),
+        }
+    }
+
+    #[test]
+    fn every_variant_roundtrips_through_jsonl() {
+        roundtrip(RoundEvent::RunStarted {
+            name: "run-eafl".into(),
+            selector: "eafl".into(),
+            scenario: "diurnal".into(),
+            clients: 16,
+            rounds: 10,
+            seed: 7,
+        });
+        roundtrip(RoundEvent::CampaignCell {
+            cell: "c-eafl-steady-n12-f0.25-s1".into(),
+            selector: "eafl".into(),
+            scenario: "steady".into(),
+            seed: 1,
+            f: 0.25,
+            clients: 12,
+        });
+        roundtrip(RoundEvent::RoundPlanned {
+            round: 3,
+            clock_h: 1.25,
+            eligible: 14,
+            selected: 4,
+            deadline_s: 900.0,
+        });
+        roundtrip(RoundEvent::ClientSelected {
+            round: 3,
+            id: 5,
+            score: 0.75,
+            battery_frac: 0.6,
+        });
+        roundtrip(RoundEvent::ClientReported {
+            round: 3,
+            id: 5,
+            duration_s: 120.5,
+            energy_j: 33.0,
+        });
+        roundtrip(RoundEvent::ClientDropped {
+            round: 3,
+            id: 6,
+            cause: DropCause::Death,
+            at_h: 1.5,
+            energy_j: 12.0,
+        });
+        roundtrip(RoundEvent::BatteryDepleted { id: 6, at_h: 1.5 });
+        roundtrip(RoundEvent::BatteryRevived { id: 6, at_h: 9.0, battery_frac: 0.2 });
+        roundtrip(RoundEvent::RoundCommitted {
+            round: 3,
+            committed: true,
+            completed: 4,
+            accuracy: 0.5,
+            train_loss: 1.25,
+            energy_j: 400.0,
+            wall_clock_h: 1.75,
+        });
+    }
+
+    #[test]
+    fn nan_train_loss_encodes_as_null() {
+        let ev = RoundEvent::RoundCommitted {
+            round: 1,
+            committed: false,
+            completed: 0,
+            accuracy: 0.0,
+            train_loss: f64::NAN,
+            energy_j: 0.0,
+            wall_clock_h: 0.1,
+        };
+        let line = ev.to_line();
+        assert!(line.contains("\"train_loss\": null"), "{line}");
+        roundtrip(ev);
+    }
+
+    #[test]
+    fn drop_cause_covers_taxonomy() {
+        for c in [DropCause::Deadline, DropCause::Death, DropCause::Unavailable] {
+            assert_eq!(DropCause::parse(c.as_str()).unwrap(), c);
+        }
+        assert!(DropCause::parse("gremlins").is_err());
+    }
+
+    #[test]
+    fn unknown_kind_is_an_error() {
+        let j = Json::parse(r#"{"ev": "frobnicate"}"#).unwrap();
+        assert!(RoundEvent::from_json(&j).is_err());
+        let j = Json::parse(r#"{"no_ev": 1}"#).unwrap();
+        assert!(RoundEvent::from_json(&j).is_err());
+    }
+}

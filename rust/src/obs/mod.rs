@@ -1,0 +1,34 @@
+//! Observability: the deterministic round-event bus and the wall-time
+//! profiling channel.
+//!
+//! Two strictly separated channels (see ROADMAP "Observability"):
+//!
+//! 1. **Deterministic events** ([`RoundEvent`] via [`EventSink`]) —
+//!    emitted from the engine's phase seams, the registry's lifecycle
+//!    choke point (FL drain deaths, the background death wheel, and
+//!    recharge revivals all flow through one mirror-sync hook), and
+//!    the campaign runner. Payloads are pure functions of (config,
+//!    seed, simulated time), so a `--trace` file is byte-identical at
+//!    any `EAFL_WORKERS`, any `--shard` split, and lazy vs
+//!    `EAFL_EAGER_DRAIN=1` (`rust/tests/trace_determinism.rs`).
+//! 2. **Wall-time profile** ([`PhaseProfiler`]) — per-phase spans and
+//!    counters. Inherently non-deterministic, written to a separate
+//!    `*.profile.json`, excluded from all byte-compares.
+//!
+//! `eafl trace summarize` ([`summarize`]) folds trace files back into
+//! the paper's figures and reproduces the run summary exactly from
+//! events alone. The future `eafl serve` coordinator reuses the same
+//! bus: observers subscribe as additional [`EventSink`]s.
+
+pub mod event;
+pub mod profile;
+pub mod sink;
+pub mod summarize;
+
+/// Schema tag on the first line of every trace file.
+pub const TRACE_SCHEMA: &str = "eafl-trace-v1";
+
+pub use event::{DropCause, RoundEvent};
+pub use profile::{PhaseProfiler, PROFILE_SCHEMA};
+pub use sink::{EventSink, JsonlSink, MemorySink, NullSink};
+pub use summarize::{read_trace, write_outputs, TraceSummary};

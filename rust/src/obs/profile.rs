@@ -1,0 +1,133 @@
+//! The non-deterministic profiling channel: wall-time per engine phase.
+//!
+//! Deliberately separate from the event stream — wall-clock spans vary
+//! with worker count, machine load, and drain mode, so they would break
+//! trace byte-compares if interleaved. A `--trace FILE` run writes this
+//! channel next to the trace as `FILE`'s sibling `*.profile.json`
+//! (schema `eafl-profile-v1`), and CI byte-compares traces only.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Schema tag for the profile JSON document.
+pub const PROFILE_SCHEMA: &str = "eafl-profile-v1";
+
+#[derive(Debug, Clone, Copy, Default)]
+struct PhaseStat {
+    calls: u64,
+    total: Duration,
+    max: Duration,
+}
+
+/// Accumulates per-phase wall-time spans and counters; the coordinator
+/// records one span per phase per round when a profiler is attached.
+#[derive(Debug, Default)]
+pub struct PhaseProfiler {
+    phases: BTreeMap<&'static str, PhaseStat>,
+    counters: BTreeMap<&'static str, u64>,
+    out: Option<PathBuf>,
+}
+
+impl PhaseProfiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Profiler that writes its JSON document to `path` when the run
+    /// finishes ([`Self::write`]).
+    pub fn with_output(path: PathBuf) -> Self {
+        Self { out: Some(path), ..Self::default() }
+    }
+
+    pub fn record(&mut self, phase: &'static str, elapsed: Duration) {
+        let s = self.phases.entry(phase).or_default();
+        s.calls += 1;
+        s.total += elapsed;
+        s.max = s.max.max(elapsed);
+    }
+
+    pub fn count(&mut self, counter: &'static str, n: u64) {
+        *self.counters.entry(counter).or_default() += n;
+    }
+
+    /// Total recorded wall time across all phases.
+    pub fn total(&self) -> Duration {
+        self.phases.values().map(|s| s.total).sum()
+    }
+
+    pub fn calls(&self, phase: &str) -> u64 {
+        self.phases.get(phase).map(|s| s.calls).unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let ms = |d: Duration| d.as_secs_f64() * 1e3;
+        let mut phases = BTreeMap::new();
+        for (name, s) in &self.phases {
+            let mut p = BTreeMap::new();
+            p.insert("calls".to_string(), Json::Num(s.calls as f64));
+            p.insert("total_ms".to_string(), Json::Num(ms(s.total)));
+            p.insert(
+                "mean_ms".to_string(),
+                Json::Num(if s.calls > 0 { ms(s.total) / s.calls as f64 } else { 0.0 }),
+            );
+            p.insert("max_ms".to_string(), Json::Num(ms(s.max)));
+            phases.insert(name.to_string(), Json::Obj(p));
+        }
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.to_string(), Json::Num(*v as f64)))
+            .collect();
+        let mut doc = BTreeMap::new();
+        doc.insert("schema".to_string(), Json::Str(PROFILE_SCHEMA.to_string()));
+        doc.insert("phases".to_string(), Json::Obj(phases));
+        doc.insert("counters".to_string(), Json::Obj(counters));
+        Json::Obj(doc)
+    }
+
+    /// Write the profile document to the configured output path, if
+    /// any. Returns the path written.
+    pub fn write(&self) -> Result<Option<&Path>> {
+        let Some(path) = self.out.as_deref() else { return Ok(None) };
+        std::fs::write(path, self.to_json().to_string_pretty() + "\n")
+            .with_context(|| format!("writing phase profile {}", path.display()))?;
+        Ok(Some(path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_spans_and_counters() {
+        let mut p = PhaseProfiler::new();
+        p.record("plan", Duration::from_millis(2));
+        p.record("plan", Duration::from_millis(4));
+        p.record("exec", Duration::from_millis(10));
+        p.count("events_emitted", 7);
+        p.count("events_emitted", 3);
+        assert_eq!(p.calls("plan"), 2);
+        assert_eq!(p.calls("exec"), 1);
+        assert_eq!(p.total(), Duration::from_millis(16));
+        let j = p.to_json();
+        assert_eq!(j.field("schema").unwrap().as_str(), Some(PROFILE_SCHEMA));
+        let plan = j.field("phases").unwrap().field("plan").unwrap();
+        assert_eq!(plan.field("calls").unwrap().as_usize(), Some(2));
+        assert!((plan.field("mean_ms").unwrap().as_f64().unwrap() - 3.0).abs() < 1e-9);
+        assert!((plan.field("max_ms").unwrap().as_f64().unwrap() - 4.0).abs() < 1e-9);
+        let c = j.field("counters").unwrap().field("events_emitted").unwrap();
+        assert_eq!(c.as_usize(), Some(10));
+    }
+
+    #[test]
+    fn write_without_output_path_is_a_no_op() {
+        let p = PhaseProfiler::new();
+        assert!(p.write().unwrap().is_none());
+    }
+}

@@ -1,0 +1,170 @@
+//! Event sinks: where the deterministic event stream goes.
+//!
+//! Three implementations, one per consumer class:
+//!
+//! - [`NullSink`] — the default. The coordinator holds
+//!   `Option<Box<dyn EventSink>>` and skips *building* events entirely
+//!   when no sink is attached, so the hot path pays a single
+//!   `is_some()` branch per seam and zero allocation; `NullSink`
+//!   exists for callers that want a sink object anyway.
+//! - [`MemorySink`] — collects events in a `Vec` for unit tests and
+//!   for in-process consumers (the future `eafl serve` observers).
+//! - [`JsonlSink`] — buffered file writer, one compact JSON object per
+//!   line, headed by the `eafl-trace-v1` schema tag. Write errors are
+//!   latched and surfaced on [`EventSink::flush`] so `emit` stays
+//!   infallible on the hot path.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::event::RoundEvent;
+use super::TRACE_SCHEMA;
+
+/// A consumer of the deterministic round-event stream. `Send` because
+/// campaign workers move whole coordinators across threads.
+pub trait EventSink: Send {
+    fn emit(&mut self, event: &RoundEvent);
+
+    /// Push buffered output to its destination and report any write
+    /// error encountered so far. Called once at end of run.
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Discards everything.
+#[derive(Debug, Default)]
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    fn emit(&mut self, _event: &RoundEvent) {}
+}
+
+/// Collects events in memory (tests, in-process observers).
+#[derive(Debug, Default)]
+pub struct MemorySink {
+    pub events: Vec<RoundEvent>,
+}
+
+impl MemorySink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl EventSink for MemorySink {
+    fn emit(&mut self, event: &RoundEvent) {
+        self.events.push(event.clone());
+    }
+}
+
+/// JSONL trace file (`--trace FILE`): schema header line, then one
+/// event per line in emission order.
+pub struct JsonlSink {
+    out: BufWriter<File>,
+    path: PathBuf,
+    /// First write error, surfaced on `flush`.
+    error: Option<std::io::Error>,
+}
+
+impl JsonlSink {
+    /// Create (truncate) the trace file and write the schema header.
+    /// Fails immediately on unwritable paths so `--trace` errors
+    /// surface before any simulation work.
+    pub fn create(path: &Path) -> Result<Self> {
+        let file = File::create(path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        let mut sink =
+            Self { out: BufWriter::new(file), path: path.to_path_buf(), error: None };
+        sink.write_line(&format!("{{\"schema\": \"{TRACE_SCHEMA}\"}}"));
+        Ok(sink)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn write_line(&mut self, line: &str) {
+        if self.error.is_some() {
+            return;
+        }
+        if let Err(e) =
+            self.out.write_all(line.as_bytes()).and_then(|()| self.out.write_all(b"\n"))
+        {
+            self.error = Some(e);
+        }
+    }
+}
+
+impl EventSink for JsonlSink {
+    fn emit(&mut self, event: &RoundEvent) {
+        let line = event.to_line();
+        self.write_line(&line);
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        if let Some(e) = self.error.take() {
+            return Err(e).with_context(|| format!("writing trace file {}", self.path.display()));
+        }
+        self.out
+            .flush()
+            .with_context(|| format!("flushing trace file {}", self.path.display()))
+    }
+}
+
+impl Drop for JsonlSink {
+    fn drop(&mut self) {
+        // Best-effort: the coordinator flushes explicitly at end of run
+        // to propagate errors; this covers early-exit paths.
+        let _ = self.out.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_sink_collects_in_order() {
+        let mut sink = MemorySink::new();
+        sink.emit(&RoundEvent::BatteryDepleted { id: 1, at_h: 0.5 });
+        sink.emit(&RoundEvent::BatteryRevived { id: 1, at_h: 9.0, battery_frac: 0.3 });
+        assert_eq!(sink.events.len(), 2);
+        assert!(matches!(sink.events[0], RoundEvent::BatteryDepleted { id: 1, .. }));
+        sink.flush().unwrap();
+    }
+
+    #[test]
+    fn null_sink_is_a_no_op() {
+        let mut sink = NullSink;
+        sink.emit(&RoundEvent::BatteryDepleted { id: 0, at_h: 0.0 });
+        sink.flush().unwrap();
+    }
+
+    #[test]
+    fn jsonl_sink_writes_header_and_lines() {
+        let dir = std::env::temp_dir().join(format!("eafl-sink-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.trace.jsonl");
+        let mut sink = JsonlSink::create(&path).unwrap();
+        sink.emit(&RoundEvent::BatteryDepleted { id: 3, at_h: 1.0 });
+        sink.flush().unwrap();
+        drop(sink);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], format!("{{\"schema\": \"{TRACE_SCHEMA}\"}}"));
+        assert_eq!(lines[1], r#"{"at_h": 1, "ev": "battery_depleted", "id": 3}"#);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn jsonl_sink_rejects_unwritable_path() {
+        let err = JsonlSink::create(Path::new("/nonexistent-dir/deep/t.jsonl"))
+            .err()
+            .expect("must fail");
+        assert!(format!("{err:#}").contains("trace"), "{err:#}");
+    }
+}

@@ -1,0 +1,461 @@
+//! `eafl trace summarize` — fold `eafl-trace-v1` files into the
+//! paper's figures, from events alone.
+//!
+//! Outputs (with `--out DIR`):
+//! - `summary.json` — per-trace run summary reproduced purely from the
+//!   event stream; numbers match the run's own `*.summary.json`
+//!   exactly (same floats through the same writer).
+//! - `time_to_accuracy.csv` — Fig. 3: accuracy per committed round on
+//!   the simulated wall-time axis.
+//! - `dropouts.csv` — Fig. 4: cumulative dead trajectory per round,
+//!   cut by scenario × selector via the name columns.
+//! - `participation.csv` — histogram of per-client selection counts.
+//! - `energy_hist.csv` — histogram of per-client FL energy spent.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::event::RoundEvent;
+use super::TRACE_SCHEMA;
+
+/// Parse a trace file: schema header line, then one event per line.
+pub fn read_trace(path: &Path) -> Result<Vec<RoundEvent>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace file {}", path.display()))?;
+    let mut lines = text.lines().enumerate();
+    let Some((_, header)) = lines.next() else {
+        bail!("{}: empty trace file", path.display());
+    };
+    let header = Json::parse(header)
+        .with_context(|| format!("{}: malformed trace header", path.display()))?;
+    match header.get("schema").and_then(Json::as_str) {
+        Some(TRACE_SCHEMA) => {}
+        Some(other) => bail!(
+            "{}: unsupported trace schema {other:?} (expected {TRACE_SCHEMA:?})",
+            path.display()
+        ),
+        None => bail!("{}: trace header has no \"schema\" tag", path.display()),
+    }
+    let mut events = Vec::new();
+    for (i, line) in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .with_context(|| format!("{}: malformed trace line {}", path.display(), i + 1))?;
+        events.push(
+            RoundEvent::from_json(&j)
+                .with_context(|| format!("{}: bad trace event at line {}", path.display(), i + 1))?,
+        );
+    }
+    Ok(events)
+}
+
+/// Everything `summarize` derives from one trace.
+#[derive(Debug, Clone)]
+pub struct TraceSummary {
+    pub name: String,
+    pub selector: String,
+    pub scenario: String,
+    pub seed: u64,
+    pub clients: usize,
+    /// Rounds played (one `RoundCommitted` per round, pass or fail).
+    pub rounds: u64,
+    pub committed_rounds: u64,
+    pub final_accuracy: f64,
+    pub best_accuracy: f64,
+    /// Net depleted (depletions − revivals) as of the last round —
+    /// equals the run summary's `total_dropouts`.
+    pub total_dropouts: i64,
+    pub total_fl_energy_j: f64,
+    pub wall_clock_h: f64,
+    /// (round, wall_clock_h, accuracy) per committed round — Fig. 3.
+    pub time_to_accuracy: Vec<(u64, f64, f64)>,
+    /// (round, wall_clock_h, cumulative_dead) per round — Fig. 4.
+    pub dropout_curve: Vec<(u64, f64, i64)>,
+    /// Per-client selection counts (participating clients only).
+    pub participation: BTreeMap<usize, u64>,
+    /// Per-client FL energy spent (reported + dropped), joules.
+    pub energy_by_client: BTreeMap<usize, f64>,
+}
+
+impl TraceSummary {
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let events = read_trace(path)?;
+        Self::fold(&events).with_context(|| format!("summarizing {}", path.display()))
+    }
+
+    /// Fold an event stream. The per-round ordering contract (lifecycle
+    /// events drained before `RoundCommitted`) makes the running
+    /// depleted−revived count at each commit equal the engine's
+    /// `cumulative_dead`.
+    pub fn fold(events: &[RoundEvent]) -> Result<Self> {
+        let mut name = String::new();
+        let mut selector = String::new();
+        let mut scenario = String::new();
+        let mut seed = 0u64;
+        let mut clients = 0usize;
+        let mut identified = false;
+        let mut cumulative_dead = 0i64;
+        let mut out = Self {
+            name: String::new(),
+            selector: String::new(),
+            scenario: String::new(),
+            seed: 0,
+            clients: 0,
+            rounds: 0,
+            committed_rounds: 0,
+            final_accuracy: 0.0,
+            best_accuracy: 0.0,
+            total_dropouts: 0,
+            total_fl_energy_j: 0.0,
+            wall_clock_h: 0.0,
+            time_to_accuracy: Vec::new(),
+            dropout_curve: Vec::new(),
+            participation: BTreeMap::new(),
+            energy_by_client: BTreeMap::new(),
+        };
+        for ev in events {
+            match ev {
+                RoundEvent::RunStarted {
+                    name: n, selector: sel, scenario: sc, clients: c, seed: s, ..
+                } => {
+                    // A CampaignCell head (always first in campaign
+                    // traces) is more specific — don't clobber it.
+                    if !identified {
+                        name = n.clone();
+                        selector = sel.clone();
+                        scenario = sc.clone();
+                        seed = *s;
+                        clients = *c;
+                        identified = true;
+                    }
+                }
+                RoundEvent::CampaignCell {
+                    cell, selector: sel, scenario: sc, seed: s, clients: c, ..
+                } => {
+                    name = cell.clone();
+                    selector = sel.clone();
+                    scenario = sc.clone();
+                    seed = *s;
+                    clients = *c;
+                    identified = true;
+                }
+                RoundEvent::ClientSelected { id, .. } => {
+                    *out.participation.entry(*id).or_default() += 1;
+                }
+                RoundEvent::ClientReported { id, energy_j, .. }
+                | RoundEvent::ClientDropped { id, energy_j, .. } => {
+                    *out.energy_by_client.entry(*id).or_default() += energy_j;
+                }
+                RoundEvent::BatteryDepleted { .. } => cumulative_dead += 1,
+                RoundEvent::BatteryRevived { .. } => cumulative_dead -= 1,
+                RoundEvent::RoundPlanned { .. } => {}
+                RoundEvent::RoundCommitted {
+                    round,
+                    committed,
+                    accuracy,
+                    energy_j,
+                    wall_clock_h,
+                    ..
+                } => {
+                    out.rounds += 1;
+                    if *committed {
+                        out.committed_rounds += 1;
+                        out.time_to_accuracy.push((*round, *wall_clock_h, *accuracy));
+                    }
+                    out.dropout_curve.push((*round, *wall_clock_h, cumulative_dead));
+                    out.final_accuracy = *accuracy;
+                    out.best_accuracy = out.best_accuracy.max(*accuracy);
+                    out.total_fl_energy_j = *energy_j;
+                    out.wall_clock_h = *wall_clock_h;
+                    out.total_dropouts = cumulative_dead;
+                }
+            }
+        }
+        // A RunStarted/CampaignCell head is how we identify the run; a
+        // trace without one (or without any rounds) is not a run trace.
+        if !identified {
+            bail!("trace has no run_started/campaign_cell event");
+        }
+        if out.rounds == 0 {
+            bail!("trace has no round_committed events");
+        }
+        out.name = name;
+        out.selector = selector;
+        out.scenario = scenario;
+        out.seed = seed;
+        out.clients = clients;
+        Ok(out)
+    }
+
+    /// One console line per trace.
+    pub fn render_line(&self) -> String {
+        format!(
+            "{:<28} sel={:<8} scen={:<10} acc={:.4} best={:.4} dropouts={} rounds={}/{} wall={:.2}h energy={:.1}J",
+            self.name,
+            self.selector,
+            self.scenario,
+            self.final_accuracy,
+            self.best_accuracy,
+            self.total_dropouts,
+            self.committed_rounds,
+            self.rounds,
+            self.wall_clock_h,
+            self.total_fl_energy_j,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("selector".to_string(), Json::Str(self.selector.clone()));
+        m.insert("scenario".to_string(), Json::Str(self.scenario.clone()));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        m.insert("clients".to_string(), Json::Num(self.clients as f64));
+        m.insert("rounds".to_string(), Json::Num(self.rounds as f64));
+        m.insert("committed_rounds".to_string(), Json::Num(self.committed_rounds as f64));
+        m.insert("final_accuracy".to_string(), Json::Num(self.final_accuracy));
+        m.insert("best_accuracy".to_string(), Json::Num(self.best_accuracy));
+        m.insert("total_dropouts".to_string(), Json::Num(self.total_dropouts as f64));
+        m.insert("total_fl_energy_j".to_string(), Json::Num(self.total_fl_energy_j));
+        m.insert("wall_clock_h".to_string(), Json::Num(self.wall_clock_h));
+        Json::Obj(m)
+    }
+}
+
+/// Number of buckets in the per-client energy histogram.
+const ENERGY_BUCKETS: usize = 16;
+
+/// Write the figure files for a batch of summarized traces.
+pub fn write_outputs(dir: &Path, summaries: &[TraceSummary]) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating summarize output dir {}", dir.display()))?;
+
+    let doc = Json::Arr(summaries.iter().map(TraceSummary::to_json).collect());
+    write_file(&dir.join("summary.json"), &(doc.to_string_pretty() + "\n"))?;
+
+    let mut tta = String::from("name,selector,scenario,seed,round,wall_clock_h,accuracy\n");
+    let mut drops = String::from("name,selector,scenario,seed,round,wall_clock_h,cumulative_dead\n");
+    let mut part = String::from("name,times_selected,clients\n");
+    let mut energy = String::from("name,bucket_lo_j,bucket_hi_j,clients\n");
+    for s in summaries {
+        for (round, wall_h, acc) in &s.time_to_accuracy {
+            let _ = writeln!(
+                tta,
+                "{},{},{},{},{round},{wall_h:.6},{acc:.6}",
+                s.name, s.selector, s.scenario, s.seed
+            );
+        }
+        for (round, wall_h, dead) in &s.dropout_curve {
+            let _ = writeln!(
+                drops,
+                "{},{},{},{},{round},{wall_h:.6},{dead}",
+                s.name, s.selector, s.scenario, s.seed
+            );
+        }
+        // Selection-count histogram, including the never-selected mass.
+        let mut by_count: BTreeMap<u64, usize> = BTreeMap::new();
+        for &times in s.participation.values() {
+            *by_count.entry(times).or_default() += 1;
+        }
+        let never = s.clients.saturating_sub(s.participation.len());
+        if never > 0 {
+            *by_count.entry(0).or_default() += never;
+        }
+        for (times, n) in &by_count {
+            let _ = writeln!(part, "{},{times},{n}", s.name);
+        }
+        // Energy histogram over participating clients.
+        let max_e = s.energy_by_client.values().cloned().fold(0.0f64, f64::max);
+        if !s.energy_by_client.is_empty() {
+            let width = if max_e > 0.0 { max_e / ENERGY_BUCKETS as f64 } else { 1.0 };
+            let mut buckets = [0usize; ENERGY_BUCKETS];
+            for &e in s.energy_by_client.values() {
+                let i = ((e / width) as usize).min(ENERGY_BUCKETS - 1);
+                buckets[i] += 1;
+            }
+            for (i, n) in buckets.iter().enumerate() {
+                if *n > 0 {
+                    let _ = writeln!(
+                        energy,
+                        "{},{:.6},{:.6},{n}",
+                        s.name,
+                        width * i as f64,
+                        width * (i + 1) as f64
+                    );
+                }
+            }
+        }
+    }
+    write_file(&dir.join("time_to_accuracy.csv"), &tta)?;
+    write_file(&dir.join("dropouts.csv"), &drops)?;
+    write_file(&dir.join("participation.csv"), &part)?;
+    write_file(&dir.join("energy_hist.csv"), &energy)?;
+    Ok(())
+}
+
+fn write_file(path: &Path, text: &str) -> Result<()> {
+    std::fs::write(path, text).with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::DropCause;
+
+    fn committed(round: u64, acc: f64, wall: f64, energy: f64, ok: bool) -> RoundEvent {
+        RoundEvent::RoundCommitted {
+            round,
+            committed: ok,
+            completed: if ok { 2 } else { 0 },
+            accuracy: acc,
+            train_loss: 1.0,
+            energy_j: energy,
+            wall_clock_h: wall,
+        }
+    }
+
+    fn sample_events() -> Vec<RoundEvent> {
+        vec![
+            RoundEvent::RunStarted {
+                name: "run-eafl".into(),
+                selector: "eafl".into(),
+                scenario: "diurnal".into(),
+                clients: 4,
+                rounds: 3,
+                seed: 9,
+            },
+            RoundEvent::RoundPlanned {
+                round: 1,
+                clock_h: 0.0,
+                eligible: 4,
+                selected: 2,
+                deadline_s: 600.0,
+            },
+            RoundEvent::ClientSelected { round: 1, id: 0, score: 0.0, battery_frac: 0.9 },
+            RoundEvent::ClientSelected { round: 1, id: 1, score: 0.0, battery_frac: 0.8 },
+            RoundEvent::ClientReported { round: 1, id: 0, duration_s: 100.0, energy_j: 5.0 },
+            RoundEvent::ClientDropped {
+                round: 1,
+                id: 1,
+                cause: DropCause::Death,
+                at_h: 0.05,
+                energy_j: 3.0,
+            },
+            RoundEvent::BatteryDepleted { id: 1, at_h: 0.05 },
+            committed(1, 0.25, 0.2, 8.0, true),
+            RoundEvent::RoundPlanned {
+                round: 2,
+                clock_h: 0.2,
+                eligible: 3,
+                selected: 1,
+                deadline_s: 600.0,
+            },
+            RoundEvent::ClientSelected { round: 2, id: 0, score: 0.5, battery_frac: 0.7 },
+            RoundEvent::ClientReported { round: 2, id: 0, duration_s: 90.0, energy_j: 5.0 },
+            RoundEvent::BatteryRevived { id: 1, at_h: 0.4, battery_frac: 0.3 },
+            committed(2, 0.5, 0.4, 13.0, true),
+            committed(3, 0.5, 0.6, 13.0, false),
+        ]
+    }
+
+    #[test]
+    fn fold_reproduces_summary_numbers() {
+        let s = TraceSummary::fold(&sample_events()).unwrap();
+        assert_eq!(s.name, "run-eafl");
+        assert_eq!(s.selector, "eafl");
+        assert_eq!(s.scenario, "diurnal");
+        assert_eq!(s.seed, 9);
+        assert_eq!(s.clients, 4);
+        assert_eq!(s.rounds, 3);
+        assert_eq!(s.committed_rounds, 2);
+        assert_eq!(s.final_accuracy, 0.5);
+        assert_eq!(s.best_accuracy, 0.5);
+        assert_eq!(s.total_dropouts, 0, "depleted then revived nets out");
+        assert_eq!(s.total_fl_energy_j, 13.0);
+        assert_eq!(s.wall_clock_h, 0.6);
+        assert_eq!(s.time_to_accuracy, vec![(1, 0.2, 0.25), (2, 0.4, 0.5)]);
+        assert_eq!(s.dropout_curve, vec![(1, 0.2, 1), (2, 0.4, 0), (3, 0.6, 0)]);
+        assert_eq!(s.participation.get(&0), Some(&2));
+        assert_eq!(s.participation.get(&1), Some(&1));
+        assert_eq!(s.energy_by_client.get(&0), Some(&10.0));
+        assert_eq!(s.energy_by_client.get(&1), Some(&3.0));
+    }
+
+    #[test]
+    fn campaign_cell_identity_wins_over_run_started() {
+        let mut events = sample_events();
+        events.insert(
+            0,
+            RoundEvent::CampaignCell {
+                cell: "camp-eafl-diurnal-n4-f0.5-s9".into(),
+                selector: "eafl".into(),
+                scenario: "diurnal".into(),
+                seed: 9,
+                f: 0.5,
+                clients: 4,
+            },
+        );
+        let s = TraceSummary::fold(&events).unwrap();
+        assert_eq!(s.name, "camp-eafl-diurnal-n4-f0.5-s9");
+    }
+
+    #[test]
+    fn headless_or_empty_traces_are_errors() {
+        assert!(TraceSummary::fold(&[]).is_err());
+        let only_head = vec![RoundEvent::RunStarted {
+            name: "x".into(),
+            selector: "s".into(),
+            scenario: "sc".into(),
+            clients: 1,
+            rounds: 1,
+            seed: 0,
+        }];
+        assert!(TraceSummary::fold(&only_head).is_err());
+    }
+
+    #[test]
+    fn write_outputs_emits_all_figures() {
+        let dir = std::env::temp_dir().join(format!("eafl-sum-{}", std::process::id()));
+        let s = TraceSummary::fold(&sample_events()).unwrap();
+        write_outputs(&dir, std::slice::from_ref(&s)).unwrap();
+        for f in [
+            "summary.json",
+            "time_to_accuracy.csv",
+            "dropouts.csv",
+            "participation.csv",
+            "energy_hist.csv",
+        ] {
+            assert!(dir.join(f).exists(), "{f} missing");
+        }
+        let part = std::fs::read_to_string(dir.join("participation.csv")).unwrap();
+        // 1 client selected twice, 1 selected once, 2 never selected.
+        assert!(part.contains("run-eafl,0,2"), "{part}");
+        assert!(part.contains("run-eafl,1,1"), "{part}");
+        assert!(part.contains("run-eafl,2,1"), "{part}");
+        let json = std::fs::read_to_string(dir.join("summary.json")).unwrap();
+        assert!(json.contains("\"final_accuracy\": 0.5"), "{json}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn read_trace_rejects_bad_headers() {
+        let dir = std::env::temp_dir().join(format!("eafl-rt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.jsonl");
+        std::fs::write(&bad, "not json\n").unwrap();
+        assert!(read_trace(&bad).is_err());
+        std::fs::write(&bad, "{\"schema\": \"other-v9\"}\n").unwrap();
+        let err = read_trace(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("eafl-trace-v1"), "{err:#}");
+        std::fs::write(&bad, "").unwrap();
+        assert!(read_trace(&bad).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -54,8 +54,15 @@ impl<T> EventQueue<T> {
         Self { heap: BinaryHeap::new(), next_seq: 0 }
     }
 
+    /// Schedule `payload` at simulated time `time_s`.
+    ///
+    /// Contract: event times must be finite and non-negative. A NaN
+    /// would silently corrupt the heap order (`total_cmp` puts NaN at
+    /// an extreme, not where the caller expects), so this is enforced
+    /// in release builds too — corrupt timestamps are a determinism
+    /// bug, not a recoverable condition.
     pub fn push(&mut self, time_s: f64, payload: T) {
-        debug_assert!(time_s.is_finite() && time_s >= 0.0, "bad event time {time_s}");
+        assert!(time_s.is_finite() && time_s >= 0.0, "bad event time {time_s}");
         let seq = self.next_seq;
         self.next_seq += 1;
         self.heap.push(Event { time_s, seq, payload });
@@ -96,6 +103,27 @@ mod tests {
         q.push(5.0, 3);
         let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
         assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad event time")]
+    fn rejects_nan_time() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "bad event time")]
+    fn rejects_negative_time() {
+        let mut q = EventQueue::new();
+        q.push(-1.0, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "bad event time")]
+    fn rejects_infinite_time() {
+        let mut q = EventQueue::new();
+        q.push(f64::INFINITY, ());
     }
 
     #[test]

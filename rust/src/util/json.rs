@@ -50,6 +50,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as usize)
     }
@@ -86,6 +93,44 @@ impl Json {
         let mut out = String::new();
         self.write(&mut out, 0);
         out
+    }
+
+    /// Single-line rendering for JSONL records (trace events). Same
+    /// number/escape rules as the pretty writer — `", "` and `": "`
+    /// separators, just no newlines — so values round-trip through
+    /// either form with identical digits.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null | Json::Bool(_) | Json::Num(_) | Json::Str(_) => self.write(out, 0),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    v.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
     }
 
     fn write(&self, out: &mut String, indent: usize) {
@@ -375,6 +420,31 @@ mod tests {
         assert!(Json::parse("123abc").is_err());
         assert!(Json::parse("\"unterminated").is_err());
         assert!(Json::parse("{\"a\" 1}").is_err());
+    }
+
+    #[test]
+    fn compact_writer_is_single_line_and_roundtrips() {
+        let mut obj = BTreeMap::new();
+        obj.insert("b".to_string(), Json::Bool(false));
+        obj.insert("n".to_string(), Json::Num(1.5));
+        obj.insert("i".to_string(), Json::Num(7.0));
+        obj.insert("s".to_string(), Json::Str("x\ny".into()));
+        obj.insert("a".to_string(), Json::Arr(vec![Json::Num(1.0), Json::Null]));
+        obj.insert("e".to_string(), Json::Obj(BTreeMap::new()));
+        let j = Json::Obj(obj);
+        let line = j.to_string_compact();
+        assert!(!line.contains('\n'), "compact output must be one line: {line:?}");
+        assert_eq!(
+            line,
+            r#"{"a": [1, null], "b": false, "e": {}, "i": 7, "n": 1.5, "s": "x\ny"}"#
+        );
+        assert_eq!(Json::parse(&line).unwrap(), j);
+    }
+
+    #[test]
+    fn as_bool_accessor() {
+        assert_eq!(Json::Bool(true).as_bool(), Some(true));
+        assert_eq!(Json::Num(1.0).as_bool(), None);
     }
 
     #[test]

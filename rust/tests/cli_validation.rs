@@ -150,6 +150,58 @@ fn unknown_command_and_flags_are_clean_errors() {
 }
 
 #[test]
+fn unwritable_trace_paths_are_clean_errors() {
+    // The sink is created before any training: a bad path fails in
+    // milliseconds, not after a 500-round run.
+    assert_clean_error(
+        &[
+            "run",
+            "--mock",
+            "--rounds",
+            "1",
+            "--trace",
+            "/proc/no-such-dir/cannot/write/t.jsonl",
+        ],
+        "trace",
+    );
+    assert_clean_error(&["run", "--mock", "--rounds", "1", "--trace"], "requires a value");
+}
+
+#[test]
+fn malformed_traces_fed_to_summarize_are_clean_errors() {
+    assert_clean_error(&["trace"], "summarize");
+    assert_clean_error(&["trace", "frobnicate"], "summarize");
+    assert_clean_error(&["trace", "summarize"], "at least one");
+    assert_clean_error(&["trace", "summarize", "/no/such/trace.jsonl"], "trace");
+
+    let dir = std::env::temp_dir().join(format!("eafl-cliv-trace-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Garbage bytes: a parse error naming the file and line, not a panic.
+    let garbage = dir.join("garbage.jsonl");
+    std::fs::write(&garbage, "this is not JSON\n").unwrap();
+    assert_clean_error(&["trace", "summarize", garbage.to_str().unwrap()], "trace");
+
+    // Right shape, wrong schema tag: the error names the expected tag.
+    let wrong = dir.join("wrong-schema.jsonl");
+    std::fs::write(&wrong, "{\"schema\": \"other-v9\"}\n").unwrap();
+    assert_clean_error(&["trace", "summarize", wrong.to_str().unwrap()], "eafl-trace-v1");
+
+    // Valid header but no events: not summarizable.
+    let empty = dir.join("headless.jsonl");
+    std::fs::write(&empty, "{\"schema\": \"eafl-trace-v1\"}\n").unwrap();
+    assert_clean_error(&["trace", "summarize", empty.to_str().unwrap()], "run_started");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn trend_without_history_is_a_clean_error() {
+    assert_clean_error(&["trend", "--history", "/no/such/history.jsonl"], "history");
+}
+
+#[test]
 fn client_count_bounds_are_clean_errors() {
     // Zero clients: caught by config validation, not an empty-pool panic.
     assert_clean_error(

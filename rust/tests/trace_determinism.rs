@@ -1,0 +1,265 @@
+//! Trace determinism tier: `--trace` event files are part of the
+//! byte-determinism contract the metrics CSVs already honor. Every test
+//! drives the real `eafl` binary and compares trace **bytes**:
+//!
+//!  - EAFL_WORKERS=1 vs 8 (exec commits in simulation order);
+//!  - lazy vs EAFL_EAGER_DRAIN=1 (wheel deaths and revivals fire
+//!    identically in both drain modes);
+//!  - a single-process sweep vs the same grid sharded across processes
+//!    (shards own disjoint cells, so per-cell traces are identical);
+//!  - and `eafl trace summarize` reproducing the run's own summary
+//!    numbers exactly from events alone.
+//!
+//! The wall-time profile sidecar (`*.profile.json`) is deliberately NOT
+//! byte-compared — it is the non-deterministic channel.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+use eafl::util::json::Json;
+
+const BIN: &str = env!("CARGO_BIN_EXE_eafl");
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("eafl-trace-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_ok(output: &Output, what: &str) {
+    assert!(
+        output.status.success(),
+        "{what} failed ({}):\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        output.status,
+        String::from_utf8_lossy(&output.stdout),
+        String::from_utf8_lossy(&output.stderr)
+    );
+}
+
+/// Run `eafl run --trace` under explicit worker/drain settings (the
+/// suite itself runs under EAFL_WORKERS / EAFL_EAGER_DRAIN variations
+/// in CI, so inherited env must never leak into the comparison) and
+/// return the trace bytes.
+fn traced_run(dir: &Path, tag: &str, workers: &str, eager: Option<&str>) -> Vec<u8> {
+    let out = dir.join(format!("out-{tag}"));
+    let trace = dir.join(format!("{tag}.trace.jsonl"));
+    let mut cmd = Command::new(BIN);
+    cmd.args([
+        "run",
+        "--mock",
+        "--selector",
+        "eafl",
+        "--rounds",
+        "10",
+        "--clients",
+        "24",
+        "--scenario",
+        "diurnal",
+    ])
+    .arg("--out")
+    .arg(&out)
+    .arg("--trace")
+    .arg(&trace)
+    .env("EAFL_WORKERS", workers)
+    .env_remove("EAFL_EAGER_DRAIN");
+    if let Some(v) = eager {
+        cmd.env("EAFL_EAGER_DRAIN", v);
+    }
+    assert_ok(&cmd.output().expect("spawning eafl run"), &format!("run {tag}"));
+    std::fs::read(&trace).unwrap_or_else(|e| panic!("reading {}: {e}", trace.display()))
+}
+
+fn assert_is_trace(bytes: &[u8], what: &str) {
+    let text = std::str::from_utf8(bytes).expect("trace is UTF-8");
+    let mut lines = text.lines();
+    assert_eq!(
+        lines.next(),
+        Some(r#"{"schema": "eafl-trace-v1"}"#),
+        "{what}: header line"
+    );
+    // A 10-round run produces a non-trivial stream: one run_started,
+    // per-round planned/selected/outcome events, one committed each.
+    assert!(
+        text.contains(r#""ev": "run_started""#),
+        "{what}: missing run_started"
+    );
+    assert_eq!(
+        text.matches(r#""ev": "round_committed""#).count(),
+        10,
+        "{what}: expected 10 round_committed events"
+    );
+    assert!(
+        text.contains(r#""ev": "client_selected""#),
+        "{what}: missing client_selected"
+    );
+}
+
+#[test]
+fn trace_bytes_identical_across_worker_counts() {
+    let dir = tmp_dir("workers");
+    let w1 = traced_run(&dir, "w1", "1", None);
+    let w8 = traced_run(&dir, "w8", "8", None);
+    assert_is_trace(&w1, "workers=1");
+    assert_eq!(w1, w8, "trace bytes must not depend on EAFL_WORKERS");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn trace_bytes_identical_across_drain_modes() {
+    let dir = tmp_dir("drain");
+    let lazy = traced_run(&dir, "lazy", "1", None);
+    let eager = traced_run(&dir, "eager", "1", Some("1"));
+    assert_is_trace(&lazy, "lazy");
+    assert_eq!(lazy, eager, "trace bytes must not depend on EAFL_EAGER_DRAIN");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn run_writes_the_profile_sidecar_separately() {
+    let dir = tmp_dir("profile");
+    let _ = traced_run(&dir, "prof", "1", None);
+    let profile = dir.join("prof.trace.profile.json");
+    let text = std::fs::read_to_string(&profile)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", profile.display()));
+    let json = Json::parse(&text).expect("profile parses");
+    assert_eq!(
+        json.get("schema").and_then(Json::as_str),
+        Some("eafl-profile-v1")
+    );
+    // All six seams (plus eval) were timed at least once per round.
+    let phases = json.get("phases").expect("profile has phases");
+    for phase in ["plan", "sim", "exec", "commit", "account", "feedback", "eval", "record"] {
+        assert!(phases.get(phase).is_some(), "profile missing phase {phase}");
+    }
+    // The wall-time channel never contaminates the event stream.
+    let trace = std::fs::read_to_string(dir.join("prof.trace.jsonl")).unwrap();
+    assert!(!trace.contains("profile"), "trace must not carry profile data");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// 2 selectors x 2 seeds grid, small enough for CI, non-degenerate
+/// under the FNV shard partition.
+const GRID: &[&str] = &[
+    "--mock",
+    "--rounds",
+    "3",
+    "--clients",
+    "12",
+    "--selectors",
+    "random,eafl",
+    "--seeds",
+    "1,2",
+];
+
+fn sweep(grid: &[&str], extra: &[&str], out: &Path, trace: &Path) -> Output {
+    let mut cmd = Command::new(BIN);
+    cmd.arg("sweep")
+        .args(grid)
+        .args(extra)
+        .arg("--out")
+        .arg(out)
+        .arg("--trace")
+        .arg(trace)
+        .env("EAFL_WORKERS", "1")
+        .env_remove("EAFL_EAGER_DRAIN");
+    cmd.output().expect("spawning eafl sweep")
+}
+
+fn trace_files(dir: &Path) -> Vec<String> {
+    let mut names: Vec<String> = std::fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", dir.display()))
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".trace.jsonl"))
+        .collect();
+    names.sort();
+    names
+}
+
+#[test]
+fn per_cell_traces_identical_across_shard_splits() {
+    let dir = tmp_dir("shards");
+    let (out_a, trace_a) = (dir.join("out-a"), dir.join("trace-a"));
+    let (out_b, trace_b) = (dir.join("out-b"), dir.join("trace-b"));
+
+    assert_ok(&sweep(GRID, &[], &out_a, &trace_a), "single-process sweep");
+    for index in 0..2 {
+        let shard = format!("{index}/2");
+        assert_ok(
+            &sweep(GRID, &["--shard", &shard, "--jobs", "1"], &out_b, &trace_b),
+            &format!("shard {shard}"),
+        );
+    }
+
+    let names = trace_files(&trace_a);
+    assert_eq!(names.len(), 4, "one trace per grid cell: {names:?}");
+    assert_eq!(names, trace_files(&trace_b), "shards must cover the same cells");
+    for name in &names {
+        let a = std::fs::read(trace_a.join(name)).unwrap();
+        let b = std::fs::read(trace_b.join(name)).unwrap();
+        assert!(!a.is_empty(), "{name} is empty");
+        assert_eq!(a, b, "{name}: trace bytes must not depend on the shard split");
+        // Campaign traces are self-describing: cell identity first.
+        let text = String::from_utf8(a).unwrap();
+        assert_eq!(
+            text.lines().nth(1).map(|l| l.contains(r#""ev": "campaign_cell""#)),
+            Some(true),
+            "{name}: second line should be the campaign_cell head"
+        );
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn summarize_reproduces_the_run_summary_exactly() {
+    let dir = tmp_dir("summarize");
+    let _ = traced_run(&dir, "sum", "1", None);
+    let trace = dir.join("sum.trace.jsonl");
+    let sum_dir = dir.join("figures");
+
+    let mut cmd = Command::new(BIN);
+    cmd.arg("trace")
+        .arg("summarize")
+        .arg(&trace)
+        .arg("--out")
+        .arg(&sum_dir);
+    let output = cmd.output().expect("spawning eafl trace summarize");
+    assert_ok(&output, "trace summarize");
+
+    let folded_doc = Json::parse(
+        &std::fs::read_to_string(sum_dir.join("summary.json")).expect("summary.json"),
+    )
+    .unwrap();
+    let folded = &folded_doc.as_arr().expect("summary.json is an array")[0];
+    let reference = Json::parse(
+        &std::fs::read_to_string(dir.join("out-sum").join("run-eafl.summary.json"))
+            .expect("run summary"),
+    )
+    .unwrap();
+
+    // Same floats through the same writer: the folded numbers are not
+    // approximately right, they are the *same JSON values*.
+    for key in [
+        "name",
+        "rounds",
+        "committed_rounds",
+        "final_accuracy",
+        "best_accuracy",
+        "total_dropouts",
+        "total_fl_energy_j",
+        "wall_clock_h",
+    ] {
+        assert_eq!(
+            folded.get(key),
+            reference.get(key),
+            "summarize diverges from the run summary on {key:?}"
+        );
+    }
+
+    // The figure CSVs cover every round of the run.
+    let tta = std::fs::read_to_string(sum_dir.join("time_to_accuracy.csv")).unwrap();
+    let drops = std::fs::read_to_string(sum_dir.join("dropouts.csv")).unwrap();
+    assert_eq!(drops.lines().count(), 1 + 10, "header + one row per round");
+    assert!(tta.lines().count() >= 2, "at least one committed round:\n{tta}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

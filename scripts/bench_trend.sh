@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Render BENCH_history.jsonl (appended per commit by
+# append_bench_history.sh) as a per-SHA benchmark trend table.
+#
+# Thin wrapper over `eafl trend` so the table logic lives in one place
+# (rust/src/benchkit.rs) and stays unit-tested; this script only finds a
+# built binary and forwards the flags.
+#
+# Usage: bench_trend.sh [--history FILE] [--csv] [--out FILE]
+
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+bin=""
+for candidate in target/release/eafl target/debug/eafl; do
+  if [ -x "$candidate" ]; then
+    bin="$candidate"
+    break
+  fi
+done
+if [ -z "$bin" ]; then
+  echo "bench_trend: no built eafl binary — run \`cargo build --release\` first" >&2
+  exit 1
+fi
+
+exec "$bin" trend "$@"
