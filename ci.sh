@@ -77,13 +77,41 @@ cmp -s "$SMOKE_CSV" "$EAGER_OUT/sweep.campaign.csv" \
   || { echo "FAIL: EAFL_EAGER_DRAIN=1 changed the campaign CSV bytes"; exit 1; }
 echo "    eager-drain cross-check OK (campaign bytes identical)"
 
+# Fault-injection smoke: the same grid with an injected crash in every
+# shard child plus a silently corrupted config fingerprint must still
+# converge — the supervisor retries the crashed shards, resume
+# quarantines the corrupt bytes (preserved as *.quarantine), and the
+# merged CSV is byte-identical to the clean run above. The target cell
+# is first in grid order, so it runs (and is corrupted) before the
+# after-cells=1 crash fires.
+echo "==> fault-injection sweep smoke (crash + corrupt config)"
+FAULT_OUT="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_OUT" "$EAGER_OUT" "$FAULT_OUT"' EXIT
+FAULT_CELL="sweep-random-steady-n16-f0.25-s1"
+./target/release/eafl sweep --mock --scenario steady,diurnal \
+  --selectors random,eafl --seeds 1 --rounds 2 --clients 16 --jobs 2 \
+  --fault "crash:after-cells=1,corrupt:kind=config:cell=$FAULT_CELL" \
+  --out "$FAULT_OUT" >/dev/null 2>"$FAULT_OUT/stderr.log" \
+  || { echo "FAIL: fault-injected sweep failed"; cat "$FAULT_OUT/stderr.log"; exit 1; }
+grep -q "retrying shard" "$FAULT_OUT/stderr.log" \
+  || { echo "FAIL: supervisor never retried the crashed shards"; \
+       cat "$FAULT_OUT/stderr.log"; exit 1; }
+grep -q "\[quarantine\]" "$FAULT_OUT/stderr.log" \
+  || { echo "FAIL: corrupt fingerprint was not quarantined"; \
+       cat "$FAULT_OUT/stderr.log"; exit 1; }
+ls "$FAULT_OUT"/*.quarantine >/dev/null 2>&1 \
+  || { echo "FAIL: no .quarantine file preserved the corrupt bytes"; exit 1; }
+cmp -s "$SMOKE_CSV" "$FAULT_OUT/sweep.campaign.csv" \
+  || { echo "FAIL: fault-injected sweep changed the campaign CSV bytes"; exit 1; }
+echo "    fault smoke OK (retried, quarantined, bytes identical)"
+
 # Trace smoke: a traced 10-round run must emit a schema-tagged
 # eafl-trace-v1 JSONL whose bytes are invariant across worker counts
 # and drain modes, on two scenarios; `eafl trace summarize` must then
 # reproduce the run's own summary numbers from the events alone.
 echo "==> trace smoke (2 scenarios, worker/drain byte-compares)"
 TRACE_OUT="$(mktemp -d)"
-trap 'rm -rf "$SMOKE_OUT" "$EAGER_OUT" "$TRACE_OUT"' EXIT
+trap 'rm -rf "$SMOKE_OUT" "$EAGER_OUT" "$FAULT_OUT" "$TRACE_OUT"' EXIT
 for scenario in diurnal steady; do
   EAFL_WORKERS=1 ./target/release/eafl run --mock --selector eafl \
     --rounds 10 --clients 24 --scenario "$scenario" \

@@ -31,6 +31,8 @@
 //! full campaign in grid order, byte-identical to a single-process
 //! sweep.
 
+pub mod supervisor;
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -39,6 +41,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{ExperimentConfig, SelectorKind, ShardSpec};
 use crate::coordinator::Coordinator;
+use crate::fault::{self, ArtifactKind};
 use crate::metrics::Summary;
 use crate::report::{fnv1a64, CellMeta, Manifest};
 use crate::runtime::ModelRuntime;
@@ -285,37 +288,63 @@ fn run_one(
 ) -> Result<CampaignRun> {
     let cfg = run.cfg.clone();
     let name = cfg.name.clone();
-    let mut coordinator = Coordinator::new(cfg, runtime)
-        .with_context(|| format!("building coordinator for {name}"))?
-        .with_workers(workers_per_run);
+    // The coordinator (and with it the trace sink, which flushes at end
+    // of run and finalizes on drop) goes out of scope before any other
+    // artifact is written: "summary on disk" must imply "trace complete
+    // on disk", or a crash between the two would let resume keep a
+    // finished summary next to a torn trace.
+    let log = {
+        let mut coordinator = Coordinator::new(cfg, runtime)
+            .with_context(|| format!("building coordinator for {name}"))?
+            .with_workers(workers_per_run);
+        if let Some(dir) = trace_dir {
+            // Each grid cell gets its own trace file; the campaign_cell
+            // header line (before run_started, which set_sink emits) ties
+            // the trace back to its grid coordinates.
+            let mut sink =
+                crate::obs::JsonlSink::create(&dir.join(format!("{name}.trace.jsonl")))?;
+            crate::obs::EventSink::emit(
+                &mut sink,
+                &crate::obs::RoundEvent::CampaignCell {
+                    cell: name.clone(),
+                    selector: run.selector.to_string(),
+                    scenario: run.scenario.clone(),
+                    seed: run.seed,
+                    f: run.f,
+                    clients: run.clients,
+                },
+            );
+            coordinator.set_sink(Box::new(sink));
+        }
+        coordinator.run().with_context(|| format!("running {name}"))?
+    };
     if let Some(dir) = trace_dir {
-        // Each grid cell gets its own trace file; the campaign_cell
-        // header line (before run_started, which set_sink emits) ties
-        // the trace back to its grid coordinates.
-        let mut sink = crate::obs::JsonlSink::create(&dir.join(format!("{name}.trace.jsonl")))?;
-        crate::obs::EventSink::emit(
-            &mut sink,
-            &crate::obs::RoundEvent::CampaignCell {
-                cell: name.clone(),
-                selector: run.selector.to_string(),
-                scenario: run.scenario.clone(),
-                seed: run.seed,
-                f: run.f,
-                clients: run.clients,
-            },
-        );
-        coordinator.set_sink(Box::new(sink));
+        fault::on_trace_written(&name, &dir.join(format!("{name}.trace.jsonl")));
     }
-    let log = coordinator.run().with_context(|| format!("running {name}"))?;
     if let Some(dir) = out_dir {
         log.write_csv(&dir.join(format!("{name}.csv")))?;
-        log.write_summary_json(&dir.join(format!("{name}.summary.json")))?;
+        // Same bytes as MetricsLog::write_summary_json, routed through
+        // the artifact fault site.
+        fault::write_artifact(
+            ArtifactKind::Summary,
+            Some(&name),
+            &dir.join(format!("{name}.summary.json")),
+            &log.summary().to_json().to_string_pretty(),
+        )
+        .with_context(|| format!("writing summary for {name}"))?;
         // The resolved config + scenario is the cell's fingerprint:
         // resume only reuses a summary whose stored fingerprint matches
         // byte-for-byte, so editing any knob — including the contents
-        // of a scenario file — invalidates the cache.
-        std::fs::write(dir.join(format!("{name}.config.toml")), cell_fingerprint(&run.cfg)?)
-            .with_context(|| format!("writing config fingerprint for {name}"))?;
+        // of a scenario file — invalidates the cache. Written *after*
+        // the summary: a crash between the two leaves summary-without-
+        // fingerprint, which resume and merge treat as unfinished.
+        fault::write_artifact(
+            ArtifactKind::Config,
+            Some(&name),
+            &dir.join(format!("{name}.config.toml")),
+            &cell_fingerprint(&run.cfg)?,
+        )
+        .with_context(|| format!("writing config fingerprint for {name}"))?;
     }
     Ok(CampaignRun {
         selector: run.selector,
@@ -333,16 +362,25 @@ fn run_one(
 /// run's own `<name>.summary.json`.
 fn load_finished(dir: &Path, campaign: &str, runs: &[RunSpec]) -> HashMap<String, Summary> {
     let mut out = HashMap::new();
-    if let Ok(text) = std::fs::read_to_string(dir.join(format!("{campaign}.campaign.json"))) {
-        if let Ok(json) = Json::parse(&text) {
-            if let Some(merged) = json.get("runs").and_then(|r| r.as_arr()) {
-                for r in merged {
-                    if let Some(s) =
-                        r.get("summary").and_then(|s| Summary::from_json(s).ok())
-                    {
-                        out.insert(s.name.clone(), s);
+    let merged_path = dir.join(format!("{campaign}.campaign.json"));
+    if let Ok(text) = std::fs::read_to_string(&merged_path) {
+        match Json::parse(&text) {
+            Ok(json) => {
+                if let Some(merged) = json.get("runs").and_then(|r| r.as_arr()) {
+                    for r in merged {
+                        if let Some(s) =
+                            r.get("summary").and_then(|s| Summary::from_json(s).ok())
+                        {
+                            out.insert(s.name.clone(), s);
+                        }
                     }
                 }
+            }
+            // A crash mid-report leaves a torn merged file: set it
+            // aside (never silently skip it) and fall back to the
+            // per-cell summaries, which regenerate it bit-identically.
+            Err(_) => {
+                crate::report::quarantine(&merged_path, "torn/unparseable merged campaign.json");
             }
         }
     }
@@ -352,9 +390,16 @@ fn load_finished(dir: &Path, campaign: &str, runs: &[RunSpec]) -> HashMap<String
         }
         let path = dir.join(format!("{}.summary.json", run.cfg.name));
         if let Ok(text) = std::fs::read_to_string(&path) {
-            if let Some(s) = Json::parse(&text).ok().and_then(|j| Summary::from_json(&j).ok())
-            {
-                out.insert(run.cfg.name.clone(), s);
+            match Json::parse(&text).and_then(|j| Summary::from_json(&j)) {
+                Ok(s) => {
+                    out.insert(run.cfg.name.clone(), s);
+                }
+                // Torn by a crash mid-cell or rotted on disk — either
+                // way the cell is not finished; quarantine the bytes
+                // and recompute.
+                Err(_) => {
+                    crate::report::quarantine(&path, "torn/unparseable summary.json on resume");
+                }
             }
         }
     }
@@ -424,9 +469,22 @@ pub fn run_campaign(
                         // recompute.
                         let path = dir.join(format!("{}.config.toml", run.cfg.name));
                         let same_config = match cell_fingerprint(&run.cfg) {
-                            Ok(expected) => std::fs::read_to_string(&path)
-                                .map(|text| text == expected)
-                                .unwrap_or(false),
+                            Ok(expected) => match std::fs::read_to_string(&path) {
+                                Ok(text) if text == expected => true,
+                                // Present but wrong bytes: a different
+                                // grid, or corruption. Preserve the
+                                // evidence out of band; the recompute
+                                // overwrites both files.
+                                Ok(_) => {
+                                    crate::report::quarantine(
+                                        &path,
+                                        "config fingerprint mismatch on resume \
+                                         (stale or corrupt cell)",
+                                    );
+                                    false
+                                }
+                                Err(_) => false,
+                            },
                             Err(_) => false,
                         };
                         if !same_config {
@@ -458,6 +516,21 @@ pub fn run_campaign(
     let pending: Vec<usize> = (0..runs.len()).filter(|&i| results[i].is_none()).collect();
     let jobs = spec.jobs.max(1).min(pending.len().max(1));
 
+    // Shard processes heartbeat `<out>/shard-<I>.progress.json` so a
+    // supervisor (or a human on another host) can see cells done/owned
+    // and detect stalls. No background ticker thread: progress moves
+    // exactly when cells finish, which is what stall detection must
+    // observe. Scope the fault plan to this shard too.
+    let progress = match (spec.shard, out_dir) {
+        (Some(shard), Some(dir)) => {
+            fault::set_shard(shard.index);
+            let done = runs.len() - pending.len();
+            Some(supervisor::ShardProgress::create(dir, &spec.name, shard, runs.len(), done))
+        }
+        _ => None,
+    };
+    let progress = progress.as_ref();
+
     // First failure aborts the rest of the grid: experiments can take
     // hours each, so nobody wants 26 more runs after run 1 errored.
     let failed = AtomicBool::new(false);
@@ -466,9 +539,16 @@ pub fn run_campaign(
     } else if jobs <= 1 {
         let mut out = Vec::new();
         for &i in &pending {
+            fault::on_cell_start(&runs[i].cfg.name);
             let res =
                 run_one(&runs[i], runtime, out_dir, spec.workers_per_run, spec.trace_dir.as_deref());
             let is_err = res.is_err();
+            if !is_err {
+                if let Some(p) = progress {
+                    p.cell_done();
+                }
+                fault::on_cell_finished(&runs[i].cfg.name);
+            }
             out.push((i, res));
             if is_err {
                 break;
@@ -491,6 +571,7 @@ pub fn run_campaign(
                             }
                             let p = next.fetch_add(1, Ordering::Relaxed);
                             let Some(&i) = pending.get(p) else { break };
+                            fault::on_cell_start(&runs[i].cfg.name);
                             let res = run_one(
                                 &runs[i],
                                 runtime,
@@ -500,6 +581,11 @@ pub fn run_campaign(
                             );
                             if res.is_err() {
                                 failed.store(true, Ordering::Relaxed);
+                            } else {
+                                if let Some(p) = progress {
+                                    p.cell_done();
+                                }
+                                fault::on_cell_finished(&runs[i].cfg.name);
                             }
                             local.push((i, res));
                         }

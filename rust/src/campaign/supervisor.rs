@@ -1,0 +1,483 @@
+//! The shard supervisor: fault-tolerant self-orchestration for
+//! `eafl sweep --jobs P`.
+//!
+//! The parent spawns one `eafl sweep --shard I/P --jobs 1` child per
+//! shard over a shared output directory, then *supervises* rather than
+//! waits: children are reaped concurrently as they exit (a hung early
+//! shard never blocks reaping later ones), each child's
+//! `<out>/shard-<I>.progress.json` heartbeat is polled for stall
+//! detection (`--stall-timeout-s`), and failed shards are restarted
+//! with deterministic exponential backoff up to `--max-retries` — each
+//! restart leans on the fingerprint-checked cell resume, so a retried
+//! shard recomputes only what its predecessor left unfinished. On any
+//! fatal error (a child's usage error, a deterministic cell failure,
+//! or a parent-side error) every surviving sibling is killed *and
+//! reaped*, so no orphan process keeps writing into `--out`.
+//!
+//! ## Exit-code taxonomy
+//!
+//! | code | meaning                                                |
+//! |------|--------------------------------------------------------|
+//! | 0    | campaign complete, merged report written               |
+//! | 1    | internal error (I/O, merge machinery)                  |
+//! | 2    | usage/config error — fix the invocation ([`EXIT_USAGE`]) |
+//! | 3    | deterministic cell failure, named on stderr ([`EXIT_CELL_FAILURE`]) |
+//! | 4    | retries exhausted; culprit shards/cells named ([`EXIT_RETRIES_EXHAUSTED`]) |
+//! | 70   | injected fault crash (`fault::EXIT_FAULT_CRASH`, children only) |
+//!
+//! Convergence: after every round of children the supervisor runs
+//! [`report::merge_with_detail`]. Quarantined or missing cells map
+//! back to their owning shards ([`shard_of`]) and those shards rerun;
+//! a clean merge ends the loop. Crashed-and-retried sweeps therefore
+//! produce byte-identical campaign/merge/trace output to a fault-free
+//! run — the determinism contract `rust/tests/campaign_sharding.rs`
+//! pins with injected faults.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::config::ShardSpec;
+use crate::report::{self, CampaignReport, MergeDetail};
+use crate::util::json::Json;
+
+use super::shard_of;
+
+/// Exit code for usage/config errors (bad flags, malformed specs).
+pub const EXIT_USAGE: i32 = 2;
+/// Exit code for a deterministic cell/run failure (retry won't help).
+pub const EXIT_CELL_FAILURE: i32 = 3;
+/// Exit code when shards keep failing past `--max-retries`.
+pub const EXIT_RETRIES_EXHAUSTED: i32 = 4;
+
+/// Default restart budget per shard (`--max-retries`).
+pub const DEFAULT_MAX_RETRIES: usize = 2;
+
+/// Schema tag of the per-shard progress heartbeat file.
+pub const PROGRESS_SCHEMA: &str = "eafl-shard-progress-v1";
+
+const POLL_INTERVAL: Duration = Duration::from_millis(25);
+const BACKOFF_BASE_MS: u64 = 100;
+const BACKOFF_CAP_MS: u64 = 2_000;
+
+/// `<out>/shard-<I>.progress.json` — where shard `I` heartbeats.
+pub fn progress_path(out: &Path, shard_index: usize) -> PathBuf {
+    out.join(format!("shard-{shard_index}.progress.json"))
+}
+
+/// A shard child's progress heartbeat, written atomically (temp file +
+/// rename) at shard start and after every finished cell. Advisory:
+/// write failures are swallowed — progress must never fail a sweep —
+/// and the supervisor only uses it for display and stall detection
+/// (the merge's completeness authority stays the manifest). The
+/// monotonic `seq` makes every write byte-distinct, so "the file
+/// changed" is exactly "the shard made progress".
+pub struct ShardProgress {
+    out: PathBuf,
+    campaign: String,
+    shard: ShardSpec,
+    owned: usize,
+    done: AtomicUsize,
+    seq: AtomicU64,
+}
+
+impl ShardProgress {
+    pub fn create(out: &Path, campaign: &str, shard: ShardSpec, owned: usize, done: usize) -> Self {
+        let p = Self {
+            out: out.to_path_buf(),
+            campaign: campaign.to_string(),
+            shard,
+            owned,
+            done: AtomicUsize::new(done),
+            seq: AtomicU64::new(0),
+        };
+        p.write();
+        p
+    }
+
+    /// One more owned cell finished (its artifacts are on disk).
+    pub fn cell_done(&self) {
+        self.done.fetch_add(1, Ordering::SeqCst);
+        self.write();
+    }
+
+    fn write(&self) {
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst) + 1;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("schema".to_string(), Json::Str(PROGRESS_SCHEMA.to_string()));
+        m.insert("campaign".to_string(), Json::Str(self.campaign.clone()));
+        m.insert("shard".to_string(), Json::Num(self.shard.index as f64));
+        m.insert("count".to_string(), Json::Num(self.shard.count as f64));
+        m.insert("owned".to_string(), Json::Num(self.owned as f64));
+        m.insert("done".to_string(), Json::Num(self.done.load(Ordering::SeqCst) as f64));
+        m.insert("seq".to_string(), Json::Num(seq as f64));
+        m.insert("pid".to_string(), Json::Num(std::process::id() as f64));
+        let text = Json::Obj(m).to_string_pretty();
+        let tmp = self
+            .out
+            .join(format!(".shard-{}.progress.{}.tmp", self.shard.index, std::process::id()));
+        let _ = std::fs::write(&tmp, &text)
+            .and_then(|_| std::fs::rename(&tmp, progress_path(&self.out, self.shard.index)));
+    }
+}
+
+/// Everything the supervisor needs to spawn and re-spawn shards.
+pub struct SupervisorSpec {
+    /// The `eafl` binary (normally `std::env::current_exe()`).
+    pub exe: PathBuf,
+    /// The sweep argv minus orchestration flags (`--jobs`, `--shard`,
+    /// `--out`, `--fault`, `--max-retries`, `--stall-timeout-s`) —
+    /// forwarded verbatim so every child derives the same grid. Fault
+    /// plans reach children via the `EAFL_FAULT` environment instead,
+    /// scoped per attempt through `EAFL_FAULT_ATTEMPT`.
+    pub forwarded: Vec<String>,
+    pub out: PathBuf,
+    /// Shard count (= child process count).
+    pub procs: usize,
+    /// Restarts allowed per shard before giving up.
+    pub max_retries: usize,
+    /// Kill a shard whose progress file stops changing for this long.
+    /// `None` disables stall detection. Must comfortably exceed the
+    /// slowest single cell — progress only ticks at cell boundaries.
+    pub stall_timeout: Option<Duration>,
+}
+
+/// A supervision failure carrying its exit-code class, so `main` can
+/// map it without error downcasting (the vendored `anyhow` has none).
+#[derive(Debug)]
+pub struct SupervisorError {
+    pub exit_code: i32,
+    pub message: String,
+}
+
+impl std::fmt::Display for SupervisorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for SupervisorError {}
+
+fn internal(message: String) -> SupervisorError {
+    SupervisorError { exit_code: 1, message }
+}
+
+/// How one child's exit (or stall-kill) is handled.
+enum Outcome {
+    Done,
+    /// Crash, signal, stall, injected fault: restart the shard.
+    Retry(String),
+    /// Exit 2/3: retrying cannot help — kill siblings and propagate.
+    Fatal(i32, String),
+}
+
+fn classify(shard: usize, procs: usize, code: Option<i32>) -> Outcome {
+    match code {
+        Some(0) => Outcome::Done,
+        Some(EXIT_USAGE) => Outcome::Fatal(
+            EXIT_USAGE,
+            format!(
+                "shard {shard}/{procs} exited {EXIT_USAGE} (usage/config error) — \
+                 see its stderr above; retrying cannot help"
+            ),
+        ),
+        Some(EXIT_CELL_FAILURE) => Outcome::Fatal(
+            EXIT_CELL_FAILURE,
+            format!(
+                "shard {shard}/{procs} reported a cell failure (exit {EXIT_CELL_FAILURE}) — \
+                 deterministic, so it is not retried; the failing cell is named on its \
+                 stderr above"
+            ),
+        ),
+        Some(code) => Outcome::Retry(format!("shard {shard}/{procs} crashed (exit {code})")),
+        None => Outcome::Retry(format!("shard {shard}/{procs} was killed by a signal")),
+    }
+}
+
+/// One running shard child plus its last observed heartbeat.
+struct Running {
+    shard: usize,
+    child: Child,
+    heartbeat: String,
+    last_change: Instant,
+    announced_done: Option<usize>,
+}
+
+/// The children of one supervision round. Dropping the brood kills and
+/// reaps every child still in it — the no-orphans guarantee on every
+/// parent error/panic path.
+#[derive(Default)]
+struct Brood {
+    children: Vec<Running>,
+}
+
+impl Drop for Brood {
+    fn drop(&mut self) {
+        for r in &mut self.children {
+            let _ = r.child.kill();
+            let _ = r.child.wait();
+        }
+    }
+}
+
+/// Run `eafl sweep --jobs P` to completion under supervision; returns
+/// the merged report (the caller writes/prints it). See the module
+/// docs for the retry/merge convergence loop and exit taxonomy.
+pub fn supervise(spec: &SupervisorSpec) -> Result<CampaignReport, SupervisorError> {
+    let mut restarts = vec![0usize; spec.procs];
+    let mut last_failure: Vec<Option<String>> = vec![None; spec.procs];
+    let mut pending: BTreeSet<usize> = (0..spec.procs).collect();
+    let mut round = 0usize;
+    loop {
+        let failures = run_round(spec, &pending, &restarts)?;
+        let mut next: BTreeSet<usize> = BTreeSet::new();
+        for (shard, why) in failures {
+            eprintln!("[supervisor] {why}");
+            last_failure[shard] = Some(why);
+            next.insert(shard);
+        }
+        let mut cells_note = String::new();
+        if next.is_empty() {
+            // Every child exited cleanly — but clean exits don't prove
+            // complete artifacts (corruption is silent by design), so
+            // the merge is the arbiter. It quarantines bad cells as a
+            // side effect; their owners rerun below.
+            match report::merge_with_detail(&[spec.out.clone()]) {
+                Ok(MergeDetail::Complete { report, .. }) => return Ok(report),
+                Ok(MergeDetail::NoManifest { .. }) => {
+                    eprintln!(
+                        "[supervisor] campaign manifest missing or quarantined — rerunning \
+                         every shard to regenerate it"
+                    );
+                    next = (0..spec.procs).collect();
+                }
+                Ok(MergeDetail::Incomplete { problems, total }) => {
+                    let mut named: Vec<String> = Vec::new();
+                    for p in &problems {
+                        let owner = shard_of(&p.cell, spec.procs);
+                        next.insert(owner);
+                        if named.len() < 8 {
+                            named.push(format!("{} ({})", p.cell, p.reason));
+                        }
+                    }
+                    let more = problems.len().saturating_sub(named.len());
+                    let suffix =
+                        if more > 0 { format!(" (+{more} more)") } else { String::new() };
+                    cells_note =
+                        format!("; unfinished cells: {}{suffix}", named.join(", "));
+                    eprintln!(
+                        "[supervisor] merge incomplete: {}/{total} cells unfinished or \
+                         quarantined{cells_note} — rerunning shard(s) {}",
+                        problems.len(),
+                        join_shards(&next)
+                    );
+                }
+                Err(e) => return Err(internal(format!("merging {}: {e:#}", spec.out.display()))),
+            }
+        }
+        let exhausted: Vec<usize> =
+            next.iter().copied().filter(|&s| restarts[s] >= spec.max_retries).collect();
+        if !exhausted.is_empty() {
+            let causes: Vec<String> = exhausted
+                .iter()
+                .map(|&s| match &last_failure[s] {
+                    Some(why) => format!("shard {s}/{}: {why}", spec.procs),
+                    None => format!("shard {s}/{}: merge still incomplete", spec.procs),
+                })
+                .collect();
+            return Err(SupervisorError {
+                exit_code: EXIT_RETRIES_EXHAUSTED,
+                message: format!(
+                    "retries exhausted after {} restart(s) per shard: {}{cells_note} — \
+                     rerun the same sweep to resume (finished cells are skipped), or \
+                     raise --max-retries",
+                    spec.max_retries,
+                    causes.join("; ")
+                ),
+            });
+        }
+        round += 1;
+        let backoff = BACKOFF_BASE_MS
+            .saturating_mul(1u64 << (round - 1).min(10) as u32)
+            .min(BACKOFF_CAP_MS);
+        eprintln!(
+            "[supervisor] retrying shard(s) {} in {backoff} ms (restart {} of {})",
+            join_shards(&next),
+            next.iter().map(|&s| restarts[s] + 1).max().unwrap_or(1),
+            spec.max_retries
+        );
+        std::thread::sleep(Duration::from_millis(backoff));
+        for &s in &next {
+            restarts[s] += 1;
+        }
+        pending = next;
+    }
+}
+
+fn join_shards(shards: &BTreeSet<usize>) -> String {
+    shards.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",")
+}
+
+/// Spawn the given shards and supervise them until all have exited (or
+/// been stall-killed). Returns the retryable failures; fatal child
+/// outcomes return `Err` after the brood guard kills+reaps siblings.
+fn run_round(
+    spec: &SupervisorSpec,
+    shards: &BTreeSet<usize>,
+    restarts: &[usize],
+) -> Result<Vec<(usize, String)>, SupervisorError> {
+    let mut brood = Brood::default();
+    for &i in shards {
+        let child = Command::new(&spec.exe)
+            .arg("sweep")
+            .args(&spec.forwarded)
+            .arg("--shard")
+            .arg(format!("{i}/{}", spec.procs))
+            .arg("--jobs")
+            .arg("1")
+            .arg("--out")
+            .arg(&spec.out)
+            .env("EAFL_FAULT_ATTEMPT", restarts[i].to_string())
+            .stdout(Stdio::null())
+            .spawn()
+            .map_err(|e| internal(format!("spawning shard {i}/{}: {e}", spec.procs)))?;
+        brood.children.push(Running {
+            shard: i,
+            child,
+            heartbeat: String::new(),
+            last_change: Instant::now(),
+            announced_done: None,
+        });
+    }
+    let mut failures: Vec<(usize, String)> = Vec::new();
+    while !brood.children.is_empty() {
+        let mut k = 0;
+        while k < brood.children.len() {
+            let r = &mut brood.children[k];
+            let shard = r.shard;
+            match r.child.try_wait() {
+                Ok(Some(status)) => {
+                    // Reaped (try_wait collects the exit status);
+                    // remove without re-killing.
+                    brood.children.swap_remove(k);
+                    match classify(shard, spec.procs, status.code()) {
+                        Outcome::Done => {}
+                        Outcome::Retry(why) => failures.push((shard, why)),
+                        // Dropping `brood` on return kills + reaps the
+                        // surviving siblings.
+                        Outcome::Fatal(code, message) => {
+                            return Err(SupervisorError { exit_code: code, message })
+                        }
+                    }
+                }
+                Ok(None) => {
+                    poll_heartbeat(spec, r);
+                    if let Some(timeout) = spec.stall_timeout {
+                        if r.last_change.elapsed() > timeout {
+                            let _ = r.child.kill();
+                            let _ = r.child.wait();
+                            failures.push((
+                                shard,
+                                format!(
+                                    "shard {shard}/{} stalled (no progress for {:.1}s) — killed",
+                                    spec.procs,
+                                    timeout.as_secs_f64()
+                                ),
+                            ));
+                            brood.children.swap_remove(k);
+                            continue;
+                        }
+                    }
+                    k += 1;
+                }
+                Err(e) => {
+                    let _ = r.child.kill();
+                    let _ = r.child.wait();
+                    failures
+                        .push((shard, format!("shard {shard}/{}: wait failed: {e}", spec.procs)));
+                    brood.children.swap_remove(k);
+                }
+            }
+        }
+        if !brood.children.is_empty() {
+            std::thread::sleep(POLL_INTERVAL);
+        }
+    }
+    Ok(failures)
+}
+
+/// Read a shard's heartbeat; any byte change resets its stall clock,
+/// and done/owned transitions are narrated to stderr.
+fn poll_heartbeat(spec: &SupervisorSpec, r: &mut Running) {
+    let text = std::fs::read_to_string(progress_path(&spec.out, r.shard)).unwrap_or_default();
+    if text == r.heartbeat {
+        return;
+    }
+    r.heartbeat = text;
+    r.last_change = Instant::now();
+    if let Ok(j) = Json::parse(&r.heartbeat) {
+        let done = j.get("done").and_then(Json::as_usize);
+        let owned = j.get("owned").and_then(Json::as_usize);
+        if let (Some(done), Some(owned)) = (done, owned) {
+            if r.announced_done != Some(done) {
+                r.announced_done = Some(done);
+                eprintln!("[supervisor] shard {}/{}: {done}/{owned} cells done", r.shard, spec.procs);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn progress_heartbeat_roundtrips_and_each_write_is_distinct() {
+        let dir = std::env::temp_dir().join(format!("eafl-progress-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = ShardProgress::create(
+            &dir,
+            "sweep",
+            ShardSpec { index: 1, count: 3 },
+            5,
+            2,
+        );
+        let path = progress_path(&dir, 1);
+        let first = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&first).unwrap();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(PROGRESS_SCHEMA));
+        assert_eq!(j.get("shard").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("owned").and_then(Json::as_usize), Some(5));
+        assert_eq!(j.get("done").and_then(Json::as_usize), Some(2));
+        p.cell_done();
+        let second = std::fs::read_to_string(&path).unwrap();
+        assert_ne!(first, second, "every heartbeat write must change the bytes");
+        let j = Json::parse(&second).unwrap();
+        assert_eq!(j.get("done").and_then(Json::as_usize), Some(3));
+        // No temp files leak (atomic rename), and no dotfile confuses
+        // the manifest scan.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn exit_classification_maps_the_taxonomy() {
+        assert!(matches!(classify(0, 2, Some(0)), Outcome::Done));
+        assert!(matches!(classify(0, 2, Some(EXIT_USAGE)), Outcome::Fatal(c, _) if c == EXIT_USAGE));
+        assert!(matches!(
+            classify(0, 2, Some(EXIT_CELL_FAILURE)),
+            Outcome::Fatal(c, _) if c == EXIT_CELL_FAILURE
+        ));
+        assert!(matches!(classify(0, 2, Some(crate::fault::EXIT_FAULT_CRASH)), Outcome::Retry(_)));
+        assert!(matches!(classify(0, 2, Some(137)), Outcome::Retry(_)));
+        assert!(matches!(classify(0, 2, None), Outcome::Retry(_)), "signal deaths retry");
+    }
+}

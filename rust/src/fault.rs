@@ -1,0 +1,509 @@
+//! Deterministic fault injection for the campaign layer — the test
+//! harness behind the shard supervisor's robustness contract.
+//!
+//! A [`FaultPlan`] is parsed from `--fault SPEC` (or the `EAFL_FAULT`
+//! environment variable, which is how the sweep supervisor arms its
+//! shard children). The grammar is a comma-separated list of clauses;
+//! each clause is a fault kind followed by `:`-separated `key=value`
+//! parameters:
+//!
+//! ```text
+//! crash:after-cells=N            exit(70) after N cells finish in-process
+//! stall:ms=M[:cell=NAME]         sleep M ms at a cell's start
+//! torn-write:kind=K[:cell=NAME]  write half an artifact, then exit(70)
+//! corrupt:kind=K[:cell=NAME]     mangle an artifact's bytes, keep going
+//! ```
+//!
+//! `K` is one of `summary | config | manifest | trace | campaign`.
+//! Every clause also accepts two scoping selectors:
+//!
+//! - `shard=I` — fire only in the process running shard `I` (set via
+//!   [`set_shard`] by `campaign::run_campaign`);
+//! - `attempt=A` — fire only on supervisor attempt `A` (default `0`,
+//!   i.e. the first try; `attempt=all` fires on every retry). The
+//!   supervisor exports each child's attempt as `EAFL_FAULT_ATTEMPT`,
+//!   which is what lets a retried shard run *unarmed* and converge to
+//!   the fault-free bytes.
+//!
+//! Zero cost when unarmed: every injection site is a single relaxed
+//! atomic load + branch, and no site lives on the round hot path (they
+//! sit at cell and artifact boundaries), so `plan_path_throughput` is
+//! untouched. Injected crashes use exit code [`EXIT_FAULT_CRASH`] so
+//! the supervisor (and a human reading an exit status) can tell an
+//! injected death from a genuine one.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Exit code of an injected crash (`crash:` / `torn-write:` clauses) —
+/// distinct from genuine failures (1), usage errors (2), cell failures
+/// (3) and exhausted retries (4); see `campaign::supervisor`.
+pub const EXIT_FAULT_CRASH: i32 = 70;
+
+/// Which campaign artifact a `torn-write` / `corrupt` clause targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// A cell's `<name>.summary.json`.
+    Summary,
+    /// A cell's `<name>.config.toml` fingerprint.
+    Config,
+    /// The campaign's `<name>.manifest.json`.
+    Manifest,
+    /// A cell's `<name>.trace.jsonl`.
+    Trace,
+    /// The merged `<name>.campaign.json` / `.csv`.
+    Campaign,
+}
+
+impl std::str::FromStr for ArtifactKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "summary" => Self::Summary,
+            "config" => Self::Config,
+            "manifest" => Self::Manifest,
+            "trace" => Self::Trace,
+            "campaign" => Self::Campaign,
+            other => bail!(
+                "unknown artifact kind {other:?} (expected summary|config|manifest|trace|campaign)"
+            ),
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FaultKind {
+    Crash,
+    Stall,
+    TornWrite,
+    Corrupt,
+}
+
+/// Which supervisor attempt(s) a clause fires on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum AttemptSel {
+    Only(u64),
+    All,
+}
+
+/// One parsed fault clause; see the module docs for the grammar.
+#[derive(Debug, Clone)]
+pub struct FaultClause {
+    kind: FaultKind,
+    /// `crash`: fire once this many cells have finished in-process.
+    after_cells: Option<usize>,
+    /// `stall`: sleep this long at a matching cell's start.
+    stall_ms: Option<u64>,
+    /// `torn-write` / `corrupt`: the artifact to hit.
+    artifact: Option<ArtifactKind>,
+    /// Fire only for this grid cell (artifact faults on cell-less
+    /// artifacts — manifest, campaign — never match a cell filter).
+    cell: Option<String>,
+    /// Fire only in the process running this shard index.
+    shard: Option<usize>,
+    attempt: AttemptSel,
+}
+
+impl FaultClause {
+    /// Do this clause's scoping selectors match the current process
+    /// (attempt, shard) and the named cell (if any)?
+    fn selectors_match(&self, attempt: u64, shard: Option<usize>, cell: Option<&str>) -> bool {
+        let attempt_ok = match self.attempt {
+            AttemptSel::All => true,
+            AttemptSel::Only(a) => a == attempt,
+        };
+        let shard_ok = match self.shard {
+            None => true,
+            Some(want) => shard == Some(want),
+        };
+        let cell_ok = match (&self.cell, cell) {
+            (None, _) => true,
+            (Some(want), Some(got)) => want == got,
+            (Some(_), None) => false,
+        };
+        attempt_ok && shard_ok && cell_ok
+    }
+}
+
+/// A parsed, armed fault plan. Torn-write/corrupt clauses fire at most
+/// once per process (the `fired` latches); `crash` fires when the
+/// in-process finished-cell count reaches its threshold; `stall` fires
+/// at every matching cell start.
+#[derive(Debug)]
+pub struct FaultPlan {
+    clauses: Vec<FaultClause>,
+    fired: Vec<AtomicBool>,
+    /// This process's supervisor attempt (`EAFL_FAULT_ATTEMPT`, 0 on
+    /// the first try).
+    attempt: u64,
+}
+
+impl FaultPlan {
+    /// Parse a fault spec. Strict: unknown kinds, unknown or misplaced
+    /// parameters, and missing required parameters are all errors, so a
+    /// typo'd `--fault` dies at argument parsing (exit 2), not after
+    /// hours of sweep.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut clauses = Vec::new();
+        for raw in spec.split(',') {
+            let raw = raw.trim();
+            if raw.is_empty() {
+                continue;
+            }
+            clauses.push(Self::parse_clause(raw)?);
+        }
+        ensure!(!clauses.is_empty(), "fault spec is empty");
+        let fired = clauses.iter().map(|_| AtomicBool::new(false)).collect();
+        Ok(FaultPlan { clauses, fired, attempt: 0 })
+    }
+
+    fn parse_clause(raw: &str) -> Result<FaultClause> {
+        let mut parts = raw.split(':');
+        let kind_str = parts.next().unwrap_or("").trim();
+        let kind = match kind_str {
+            "crash" => FaultKind::Crash,
+            "stall" => FaultKind::Stall,
+            "torn-write" => FaultKind::TornWrite,
+            "corrupt" => FaultKind::Corrupt,
+            other => bail!(
+                "unknown fault kind {other:?} in clause {raw:?} \
+                 (expected crash|stall|torn-write|corrupt)"
+            ),
+        };
+        let mut clause = FaultClause {
+            kind,
+            after_cells: None,
+            stall_ms: None,
+            artifact: None,
+            cell: None,
+            shard: None,
+            attempt: AttemptSel::Only(0),
+        };
+        for param in parts {
+            let (key, value) = param
+                .split_once('=')
+                .with_context(|| format!("fault parameter {param:?} in {raw:?} is not key=value"))?;
+            match key.trim() {
+                "after-cells" => {
+                    ensure!(
+                        kind == FaultKind::Crash,
+                        "after-cells only applies to crash (clause {raw:?})"
+                    );
+                    let n: usize = value
+                        .parse()
+                        .with_context(|| format!("invalid after-cells {value:?} in {raw:?}"))?;
+                    ensure!(n >= 1, "after-cells must be >= 1 (clause {raw:?})");
+                    clause.after_cells = Some(n);
+                }
+                "ms" => {
+                    ensure!(
+                        kind == FaultKind::Stall,
+                        "ms only applies to stall (clause {raw:?})"
+                    );
+                    clause.stall_ms = Some(
+                        value
+                            .parse()
+                            .with_context(|| format!("invalid ms {value:?} in {raw:?}"))?,
+                    );
+                }
+                "kind" => {
+                    ensure!(
+                        matches!(kind, FaultKind::TornWrite | FaultKind::Corrupt),
+                        "kind only applies to torn-write/corrupt (clause {raw:?})"
+                    );
+                    clause.artifact = Some(value.parse()?);
+                }
+                "cell" => clause.cell = Some(value.to_string()),
+                "shard" => {
+                    clause.shard = Some(
+                        value
+                            .parse()
+                            .with_context(|| format!("invalid shard {value:?} in {raw:?}"))?,
+                    );
+                }
+                "attempt" => {
+                    clause.attempt = if value == "all" {
+                        AttemptSel::All
+                    } else {
+                        AttemptSel::Only(value.parse().with_context(|| {
+                            format!("invalid attempt {value:?} in {raw:?} (number or \"all\")")
+                        })?)
+                    };
+                }
+                other => bail!("unknown fault parameter {other:?} in clause {raw:?}"),
+            }
+        }
+        match kind {
+            FaultKind::Crash => {
+                ensure!(clause.after_cells.is_some(), "crash needs after-cells=N (clause {raw:?})")
+            }
+            FaultKind::Stall => {
+                ensure!(clause.stall_ms.is_some(), "stall needs ms=M (clause {raw:?})")
+            }
+            FaultKind::TornWrite | FaultKind::Corrupt => ensure!(
+                clause.artifact.is_some(),
+                "{kind_str} needs kind=summary|config|manifest|trace|campaign (clause {raw:?})"
+            ),
+        }
+        Ok(clause)
+    }
+
+    /// The first unfired torn-write/corrupt clause matching this
+    /// artifact write, latched so it fires at most once per process.
+    fn claim_write(&self, artifact: ArtifactKind, cell: Option<&str>) -> Option<&FaultClause> {
+        let shard = current_shard();
+        for (clause, fired) in self.clauses.iter().zip(&self.fired) {
+            if !matches!(clause.kind, FaultKind::TornWrite | FaultKind::Corrupt) {
+                continue;
+            }
+            if clause.artifact != Some(artifact)
+                || !clause.selectors_match(self.attempt, shard, cell)
+            {
+                continue;
+            }
+            if fired.swap(true, Ordering::SeqCst) {
+                continue; // already fired in this process
+            }
+            return Some(clause);
+        }
+        None
+    }
+}
+
+/// 0 = not yet initialized, 1 = unarmed (no plan), 2 = armed.
+static STATE: AtomicU8 = AtomicU8::new(0);
+static PLAN: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+/// Cells finished in this process (the `crash:after-cells` counter).
+static CELLS_FINISHED: AtomicUsize = AtomicUsize::new(0);
+/// This process's shard index (`usize::MAX` = not a shard).
+static SHARD: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// The armed fault plan, lazily parsed from `EAFL_FAULT` on first use.
+/// The unarmed fast path is one relaxed load + branch. A malformed env
+/// spec is reported and ignored here (the CLI validates `--fault` /
+/// `EAFL_FAULT` up front and exits 2, so this is a library backstop,
+/// not the user-facing error path).
+pub fn plan() -> Option<Arc<FaultPlan>> {
+    if STATE.load(Ordering::Relaxed) == 1 {
+        return None;
+    }
+    let mut guard = PLAN.lock().unwrap_or_else(|e| e.into_inner());
+    if STATE.load(Ordering::Relaxed) == 0 {
+        *guard = match std::env::var("EAFL_FAULT") {
+            Ok(spec) if !spec.trim().is_empty() => match FaultPlan::parse(&spec) {
+                Ok(mut plan) => {
+                    plan.attempt = std::env::var("EAFL_FAULT_ATTEMPT")
+                        .ok()
+                        .and_then(|a| a.parse().ok())
+                        .unwrap_or(0);
+                    Some(Arc::new(plan))
+                }
+                Err(e) => {
+                    eprintln!("[fault] ignoring malformed EAFL_FAULT {spec:?}: {e:#}");
+                    None
+                }
+            },
+            _ => None,
+        };
+        STATE.store(if guard.is_some() { 2 } else { 1 }, Ordering::SeqCst);
+    }
+    guard.clone()
+}
+
+/// Record which shard this process runs (for `shard=I` clause scoping).
+/// Called by `campaign::run_campaign` when the spec carries a shard.
+pub fn set_shard(index: usize) {
+    SHARD.store(index, Ordering::SeqCst);
+}
+
+fn current_shard() -> Option<usize> {
+    match SHARD.load(Ordering::SeqCst) {
+        usize::MAX => None,
+        i => Some(i),
+    }
+}
+
+fn crash(what: &std::fmt::Arguments<'_>) -> ! {
+    eprintln!("[fault] {what} — crashing (exit {EXIT_FAULT_CRASH})");
+    std::process::exit(EXIT_FAULT_CRASH);
+}
+
+/// Injection site: a grid cell is about to run (`stall` clauses).
+pub fn on_cell_start(cell: &str) {
+    let Some(plan) = plan() else { return };
+    let shard = current_shard();
+    for clause in &plan.clauses {
+        if clause.kind == FaultKind::Stall
+            && clause.selectors_match(plan.attempt, shard, Some(cell))
+        {
+            let ms = clause.stall_ms.unwrap_or(0);
+            eprintln!("[fault] stalling cell {cell} for {ms} ms");
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+}
+
+/// Injection site: a grid cell finished, artifacts and all (`crash`
+/// clauses count finished cells and exit at their threshold).
+pub fn on_cell_finished(cell: &str) {
+    let Some(plan) = plan() else { return };
+    let done = CELLS_FINISHED.fetch_add(1, Ordering::SeqCst) + 1;
+    let shard = current_shard();
+    for clause in &plan.clauses {
+        if clause.kind == FaultKind::Crash
+            && clause.selectors_match(plan.attempt, shard, Some(cell))
+            && clause.after_cells.map_or(false, |n| done >= n)
+        {
+            crash(&format_args!("injected crash after {done} finished cell(s), last {cell}"));
+        }
+    }
+}
+
+/// Injection site: every campaign artifact write funnels through here.
+/// Unarmed (or unmatched), it is plain `std::fs::write`. A matching
+/// `torn-write` clause writes half the bytes and crashes — a power
+/// loss mid-write. A matching `corrupt` clause mangles the first byte
+/// and *returns success* — silent bit rot the readers must catch.
+pub fn write_artifact(
+    artifact: ArtifactKind,
+    cell: Option<&str>,
+    path: &Path,
+    text: &str,
+) -> Result<()> {
+    if let Some(plan) = plan() {
+        if let Some(clause) = plan.claim_write(artifact, cell) {
+            let bytes = text.as_bytes();
+            match clause.kind {
+                FaultKind::TornWrite => {
+                    let half = bytes.len() / 2;
+                    let _ = std::fs::write(path, &bytes[..half]);
+                    crash(&format_args!(
+                        "torn write: {} truncated to {half}/{} bytes",
+                        path.display(),
+                        bytes.len()
+                    ));
+                }
+                FaultKind::Corrupt => {
+                    let mut mangled = bytes.to_vec();
+                    if mangled.is_empty() {
+                        mangled.push(b'#');
+                    } else {
+                        mangled[0] = b'#';
+                    }
+                    eprintln!("[fault] corrupted {} (first byte mangled)", path.display());
+                    return std::fs::write(path, &mangled)
+                        .with_context(|| format!("writing {}", path.display()));
+                }
+                _ => unreachable!("claim_write only returns torn-write/corrupt clauses"),
+            }
+        }
+    }
+    std::fs::write(path, text).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Injection site: a cell's trace file is complete on disk. The sink
+/// buffers and writes incrementally, so trace faults mutate the
+/// finished file instead of intercepting the write: `torn-write`
+/// truncates it to half and crashes; `corrupt` appends a malformed
+/// line and keeps going.
+pub fn on_trace_written(cell: &str, path: &Path) {
+    let Some(plan) = plan() else { return };
+    if let Some(clause) = plan.claim_write(ArtifactKind::Trace, Some(cell)) {
+        match clause.kind {
+            FaultKind::TornWrite => {
+                let len = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+                if let Ok(f) = std::fs::OpenOptions::new().write(true).open(path) {
+                    let _ = f.set_len(len / 2);
+                }
+                crash(&format_args!(
+                    "torn write: trace {} truncated to {}/{len} bytes",
+                    path.display(),
+                    len / 2
+                ));
+            }
+            FaultKind::Corrupt => {
+                use std::io::Write as _;
+                if let Ok(mut f) = std::fs::OpenOptions::new().append(true).open(path) {
+                    let _ = f.write_all(b"{\"ev\": \"corrupt");
+                }
+                eprintln!("[fault] corrupted trace {} (torn tail appended)", path.display());
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_documented_clause_kind() {
+        let plan = FaultPlan::parse(
+            "crash:after-cells=3, stall:cell=c-1:ms=500, torn-write:kind=summary, \
+             corrupt:kind=config:cell=c-2:shard=1:attempt=all",
+        )
+        .unwrap();
+        assert_eq!(plan.clauses.len(), 4);
+        assert_eq!(plan.clauses[0].kind, FaultKind::Crash);
+        assert_eq!(plan.clauses[0].after_cells, Some(3));
+        assert_eq!(plan.clauses[1].stall_ms, Some(500));
+        assert_eq!(plan.clauses[1].cell.as_deref(), Some("c-1"));
+        assert_eq!(plan.clauses[2].artifact, Some(ArtifactKind::Summary));
+        assert_eq!(plan.clauses[3].shard, Some(1));
+        assert_eq!(plan.clauses[3].attempt, AttemptSel::All);
+    }
+
+    #[test]
+    fn rejects_malformed_specs_with_reasons() {
+        for (spec, why) in [
+            ("", "fault spec is empty"),
+            ("explode", "unknown fault kind"),
+            ("crash", "after-cells"),
+            ("crash:after-cells=0", ">= 1"),
+            ("crash:after-cells=x", "invalid after-cells"),
+            ("crash:ms=3", "only applies to stall"),
+            ("stall:cell=c", "needs ms"),
+            ("torn-write", "kind=summary|config|manifest|trace|campaign"),
+            ("torn-write:kind=nope", "unknown artifact kind"),
+            ("corrupt:kind=config:wat=1", "unknown fault parameter"),
+            ("stall:ms", "not key=value"),
+            ("crash:after-cells=1:attempt=x", "invalid attempt"),
+        ] {
+            let err = FaultPlan::parse(spec).unwrap_err().to_string();
+            assert!(err.contains(why), "{spec:?}: expected {why:?} in {err:?}");
+        }
+    }
+
+    #[test]
+    fn selectors_scope_by_attempt_shard_and_cell() {
+        let plan = FaultPlan::parse("stall:ms=1:cell=c-1:shard=2").unwrap();
+        let c = &plan.clauses[0];
+        assert!(c.selectors_match(0, Some(2), Some("c-1")));
+        assert!(!c.selectors_match(1, Some(2), Some("c-1")), "default attempt is 0");
+        assert!(!c.selectors_match(0, Some(1), Some("c-1")), "wrong shard");
+        assert!(!c.selectors_match(0, None, Some("c-1")), "not a shard process");
+        assert!(!c.selectors_match(0, Some(2), Some("c-2")), "wrong cell");
+        assert!(!c.selectors_match(0, Some(2), None), "cell filter needs a cell");
+
+        let all = FaultPlan::parse("crash:after-cells=1:attempt=all").unwrap();
+        assert!(all.clauses[0].selectors_match(7, None, Some("anything")));
+    }
+
+    #[test]
+    fn write_claims_latch_once_per_process() {
+        let plan = FaultPlan::parse("corrupt:kind=summary").unwrap();
+        assert!(plan.claim_write(ArtifactKind::Summary, Some("c")).is_some());
+        assert!(
+            plan.claim_write(ArtifactKind::Summary, Some("c")).is_none(),
+            "torn/corrupt clauses fire at most once"
+        );
+        let plan = FaultPlan::parse("torn-write:kind=config:cell=c-1").unwrap();
+        assert!(plan.claim_write(ArtifactKind::Summary, Some("c-1")).is_none(), "wrong artifact");
+        assert!(plan.claim_write(ArtifactKind::Config, Some("c-2")).is_none(), "wrong cell");
+        assert!(plan.claim_write(ArtifactKind::Config, Some("c-1")).is_some());
+    }
+}

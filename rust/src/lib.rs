@@ -226,6 +226,58 @@
 //! real processes: any shard count, any completion order, separate or
 //! shared output directories, and kill-then-resume all produce the
 //! byte-identical merged report.
+//!
+//! ## Failure semantics
+//!
+//! The campaign layer assumes a *hostile machine*, not just a hostile
+//! fleet. Three pieces (new in PR 8):
+//!
+//!  - **Supervisor** — `eafl sweep --jobs P` runs its shard children
+//!    under [`campaign::supervisor`]: children are reaped as they exit
+//!    (never serially in spawn order), every child writes an atomic
+//!    `<out>/shard-<I>.progress.json` heartbeat
+//!    (`eafl-shard-progress-v1`: cells `done`/`owned`, a monotonic
+//!    `seq`, the writer `pid`), a child whose heartbeat stops changing
+//!    for `--stall-timeout-s` is killed, and crashed/stalled/killed
+//!    shards are restarted up to `--max-retries` times (default 2)
+//!    with deterministic exponential backoff (100 ms · 2^round, capped
+//!    at 2 s). Restarts lean on the fingerprint-checked cell resume,
+//!    so a retry recomputes only what the dead child didn't finish —
+//!    and the merged output stays **byte-identical** to a fault-free
+//!    single-process sweep. On any failure path the surviving siblings
+//!    are killed and reaped: no orphan keeps writing into `--out`.
+//!
+//!  - **Exit codes** — `eafl` classifies its exits: `0` success; `1`
+//!    internal error; `2` usage/config error (bad flags, malformed
+//!    `--fault`/`--max-retries`/`--stall-timeout-s`); `3` a
+//!    deterministic cell failure (retrying cannot help — the culprit
+//!    cell is named on stderr and siblings are stopped); `4` retries
+//!    exhausted (the culprit shards and their unfinished cells are
+//!    named; rerun the same sweep to resume); `70` an injected fault
+//!    crash (test-only, see below).
+//!
+//!  - **Quarantine** — every artifact-reading path
+//!    ([`report::merge_with_detail`], the sweep resume,
+//!    `eafl trace summarize`) treats a torn, truncated or
+//!    fingerprint-mismatched `summary.json` / `config.toml` /
+//!    manifest / trace as evidence, not a crash: the file is moved
+//!    aside to `<file>.quarantine` (named on stderr via
+//!    [`report::quarantine`]), and the cell is recomputed or reported.
+//!    Never a panic, never a silent skip — and `eafl merge` reports
+//!    **all** invalid cells in one pass with per-cell reasons.
+//!
+//! The machinery is testable because faults are *injected*, not
+//! awaited: [`fault`] parses `--fault SPEC` / `EAFL_FAULT` into a
+//! [`fault::FaultPlan`] (grammar: comma-separated clauses
+//! `crash:after-cells=N`, `stall:ms=M`, `torn-write:kind=K`,
+//! `corrupt:kind=K` with optional `cell=`/`shard=`/`attempt=`
+//! selectors) whose sites cost one relaxed atomic load + branch when
+//! unarmed — `plan_path_throughput` is unaffected. The supervisor
+//! scopes clauses by restart attempt (`EAFL_FAULT_ATTEMPT`), so a
+//! fault that killed attempt 0 does not re-fire on the retry; the
+//! fault matrix in `rust/tests/campaign_sharding.rs` pins
+//! crash/stall/torn-write/corrupt at every site converging to the
+//! fault-free bytes.
 
 pub mod aggregation;
 pub mod benchkit;
@@ -235,6 +287,7 @@ pub mod coordinator;
 pub mod data;
 pub mod device;
 pub mod energy;
+pub mod fault;
 pub mod metrics;
 pub mod network;
 pub mod obs;

@@ -20,9 +20,11 @@
 //! produced once by `make artifacts`.
 
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use eafl::campaign::supervisor::{self, SupervisorSpec};
 use eafl::campaign::{run_campaign, CampaignGrid, CampaignReport, CampaignSpec};
 use eafl::config::{ExperimentConfig, SelectorKind, ShardSpec};
 use eafl::coordinator::Coordinator;
@@ -31,6 +33,7 @@ use eafl::energy::{comm_energy_percent, CommDirection};
 use eafl::metrics::Summary;
 use eafl::network::Medium;
 use eafl::obs::{self, JsonlSink, PhaseProfiler, TraceSummary};
+use eafl::report::MergeDetail;
 use eafl::runtime::{MockRuntime, ModelRuntime, XlaRuntime};
 use eafl::scenario::Scenario;
 
@@ -46,7 +49,8 @@ USAGE:
   eafl sweep [--config FILE] [--selectors LIST] [--scenario LIST]
              [--seeds LIST] [--f LIST] [--clients LIST] [--rounds N]
              [--jobs N] [--shard I/N] [--fresh] [--out DIR]
-             [--trace DIR] [--mock]
+             [--trace DIR] [--max-retries N] [--stall-timeout-s S]
+             [--fault SPEC] [--mock]
   eafl merge DIR [DIR...] [--out DIR]
   eafl trace summarize TRACE [TRACE...] [--out DIR]
   eafl trend [--history FILE] [--csv] [--out FILE]
@@ -73,6 +77,19 @@ USAGE:
   shards are done. merge is order-stable: the result is byte-identical
   to a single-process sweep, whatever the shard count, completion
   order, or directory layout.
+
+  --jobs sweeps run under a fault-tolerant supervisor: each shard child
+  heartbeats <out>/shard-I.progress.json, a child whose heartbeat stops
+  changing for --stall-timeout-s seconds is killed, and crashed/stalled
+  shards restart with exponential backoff up to --max-retries times
+  (default 2), resuming finished cells. Torn or corrupt artifacts are
+  moved aside to *.quarantine and recomputed. Exit codes: 0 ok, 1
+  internal error, 2 usage error, 3 deterministic cell failure (named on
+  stderr, not retried), 4 retries exhausted (culprit shards/cells
+  named). --fault SPEC injects deterministic faults for testing, e.g.
+  crash:after-cells=N, stall:ms=M[:cell=NAME], torn-write:kind=summary,
+  corrupt:kind=config (kinds: summary|config|manifest|trace|campaign;
+  selectors cell=/shard=/attempt=).
 
   Scenarios are declarative environment models (availability churn,
   degraded/congested networks, wall-clock recharge policies) plugged
@@ -262,60 +279,54 @@ fn print_campaign_results(report: &CampaignReport, scenario_axis_len: usize) {
     }
 }
 
-/// Self-orchestrated scale-out: re-invoke this binary `procs` times as
-/// `eafl sweep ... --shard i/procs --jobs 1` over one output directory.
-/// The children's argv is the parent's with the orchestration flags
-/// replaced, so every grid/config/scenario flag is forwarded verbatim
-/// and each child derives the identical campaign manifest.
-fn spawn_shard_sweeps(rest: &[String], procs: usize, out: &Path) -> Result<()> {
-    let exe = std::env::current_exe().context("locating the eafl binary for shard spawn")?;
+/// The sweep argv minus orchestration/supervision flags — what the
+/// supervisor forwards verbatim to its `--shard` children, so every
+/// child derives the identical campaign manifest. Fault plans reach
+/// children via the inherited `EAFL_FAULT` environment (scoped per
+/// attempt through `EAFL_FAULT_ATTEMPT`), never via argv.
+fn forwarded_shard_args(rest: &[String]) -> Vec<String> {
     let mut forwarded: Vec<String> = Vec::new();
     let mut i = 0;
     while i < rest.len() {
         match rest[i].as_str() {
-            // Replaced below; --out is re-appended explicitly (last
-            // occurrence wins in the flag parser).
-            "--jobs" | "--shard" | "--out" => i += 2,
+            // All value-taking flags the supervisor owns; --out is
+            // re-appended explicitly (last occurrence wins in the flag
+            // parser).
+            "--jobs" | "--shard" | "--out" | "--fault" | "--max-retries"
+            | "--stall-timeout-s" => i += 2,
             other => {
                 forwarded.push(other.to_string());
                 i += 1;
             }
         }
     }
-    let mut children = Vec::with_capacity(procs);
-    for index in 0..procs {
-        let child = std::process::Command::new(&exe)
-            .arg("sweep")
-            .args(&forwarded)
-            .arg("--shard")
-            .arg(format!("{index}/{procs}"))
-            .arg("--jobs")
-            .arg("1")
-            .arg("--out")
-            .arg(out)
-            .stdout(std::process::Stdio::null())
-            .spawn()
-            .with_context(|| format!("spawning shard {index}/{procs}"))?;
-        children.push((index, child));
+    forwarded
+}
+
+/// A classified CLI failure: the process exit code plus the error to
+/// print. The vendored `anyhow` has no downcasting, so classification
+/// happens where errors are raised, not where they surface.
+struct Failure {
+    code: i32,
+    error: anyhow::Error,
+}
+
+impl From<anyhow::Error> for Failure {
+    fn from(error: anyhow::Error) -> Self {
+        Self { code: 1, error }
     }
-    let mut failures = Vec::new();
-    for (index, mut child) in children {
-        let status = child
-            .wait()
-            .with_context(|| format!("waiting for shard {index}/{procs}"))?;
-        if !status.success() {
-            failures.push(format!("shard {index}/{procs} exited with {status}"));
-        }
+}
+
+impl Failure {
+    /// Bad flags/config/spec — fix the invocation (exit 2).
+    fn usage(error: anyhow::Error) -> Self {
+        Self { code: supervisor::EXIT_USAGE, error }
     }
-    if !failures.is_empty() {
-        bail!(
-            "{} of {procs} shard processes failed: {} — rerun the same sweep to \
-             resume (finished cells are skipped)",
-            failures.len(),
-            failures.join("; ")
-        );
+
+    /// A deterministic run/cell failure — retrying cannot help (exit 3).
+    fn cell_failure(error: anyhow::Error) -> Self {
+        Self { code: supervisor::EXIT_CELL_FAILURE, error }
     }
-    Ok(())
 }
 
 fn print_summary(s: &Summary) {
@@ -336,8 +347,15 @@ fn print_summary(s: &Summary) {
     );
 }
 
-fn main() -> Result<()> {
+fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(f) = run_cli(&argv) {
+        eprintln!("error: {:#}", f.error);
+        std::process::exit(f.code);
+    }
+}
+
+fn run_cli(argv: &[String]) -> Result<(), Failure> {
     let Some(command) = argv.first().map(String::as_str) else {
         print!("{USAGE}");
         return Ok(());
@@ -345,33 +363,49 @@ fn main() -> Result<()> {
     let rest = &argv[1..];
     match command {
         "run" => {
-            let args = Args::parse(rest, &["mock"])?;
-            let kind = args
-                .get_parsed::<SelectorKind>("selector")?
-                .unwrap_or(SelectorKind::Eafl);
-            let mut cfg = base_config(&args, kind)?;
-            cfg.selector.kind = kind;
-            if args.get("config").is_none() {
-                cfg.name = format!("run-{kind}");
-            }
-            cfg.validate()?;
-            let out = PathBuf::from(args.get("out").unwrap_or("results"));
-            let trace = args.get("trace").map(PathBuf::from);
-            let runtime = load_runtime(args.has("mock"))?;
-            let s = run_one(cfg, runtime.as_ref(), &out, trace.as_deref())?;
+            // Parse/validate first (usage errors, exit 2), run second
+            // (deterministic cell failures, exit 3).
+            let (cfg, out, trace, mock) = (|| -> Result<_> {
+                let args = Args::parse(rest, &["mock"])?;
+                let kind = args
+                    .get_parsed::<SelectorKind>("selector")?
+                    .unwrap_or(SelectorKind::Eafl);
+                let mut cfg = base_config(&args, kind)?;
+                cfg.selector.kind = kind;
+                if args.get("config").is_none() {
+                    cfg.name = format!("run-{kind}");
+                }
+                cfg.validate()?;
+                let out = PathBuf::from(args.get("out").unwrap_or("results"));
+                let trace = args.get("trace").map(PathBuf::from);
+                Ok((cfg, out, trace, args.has("mock")))
+            })()
+            .map_err(Failure::usage)?;
+            let runtime = load_runtime(mock).map_err(Failure::cell_failure)?;
+            let s = run_one(cfg, runtime.as_ref(), &out, trace.as_deref())
+                .map_err(Failure::cell_failure)?;
             print_summary(&s);
         }
         "compare" => {
-            let args = Args::parse(rest, &["mock"])?;
-            let out = PathBuf::from(args.get("out").unwrap_or("results"));
-            let runtime = load_runtime(args.has("mock"))?;
+            let (cfgs, out, mock) = (|| -> Result<_> {
+                let args = Args::parse(rest, &["mock"])?;
+                let out = PathBuf::from(args.get("out").unwrap_or("results"));
+                let mut cfgs = Vec::new();
+                for kind in [SelectorKind::Eafl, SelectorKind::Oort, SelectorKind::Random] {
+                    let mut cfg = base_config(&args, kind)?;
+                    cfg.selector.kind = kind;
+                    cfg.name = format!("compare-{kind}");
+                    cfg.validate()?;
+                    cfgs.push(cfg);
+                }
+                Ok((cfgs, out, args.has("mock")))
+            })()
+            .map_err(Failure::usage)?;
+            let runtime = load_runtime(mock).map_err(Failure::cell_failure)?;
             let mut summaries = Vec::new();
-            for kind in [SelectorKind::Eafl, SelectorKind::Oort, SelectorKind::Random] {
-                let mut cfg = base_config(&args, kind)?;
-                cfg.selector.kind = kind;
-                cfg.name = format!("compare-{kind}");
-                cfg.validate()?;
-                summaries.push(run_one(cfg, runtime.as_ref(), &out, None)?);
+            for cfg in cfgs {
+                summaries
+                    .push(run_one(cfg, runtime.as_ref(), &out, None).map_err(Failure::cell_failure)?);
             }
             println!("\n=== EAFL vs Oort vs Random ===");
             for s in &summaries {
@@ -379,44 +413,78 @@ fn main() -> Result<()> {
             }
         }
         "sweep" => {
-            let args = Args::parse(rest, &["mock", "fresh"])?;
-            let mut base = match args.get("config") {
-                Some(p) => ExperimentConfig::from_toml_file(&PathBuf::from(p))?,
-                None => ExperimentConfig::paper_default(SelectorKind::Eafl),
-            };
-            if let Some(r) = args.get_parsed::<usize>("rounds")? {
-                base.federation.rounds = r;
-            }
-            let mut spec = CampaignSpec::new("sweep", base);
-            let defaults = CampaignGrid::default();
-            spec.grid = CampaignGrid {
-                selectors: parse_list::<SelectorKind>(args.get("selectors"), "selectors")?
-                    .unwrap_or(defaults.selectors),
-                scenarios: parse_list::<String>(args.get("scenario"), "scenario")?
-                    .unwrap_or_default(),
-                seeds: parse_list::<u64>(args.get("seeds"), "seeds")?
-                    .unwrap_or(defaults.seeds),
-                f_values: parse_list::<f64>(args.get("f"), "f")?.unwrap_or_default(),
-                client_counts: parse_list::<usize>(args.get("clients"), "clients")?
-                    .unwrap_or_default(),
-            };
-            let jobs_flag = args.get_parsed::<usize>("jobs")?;
-            if let Some(j) = jobs_flag {
-                spec.jobs = j.max(1);
-            }
-            spec.shard = args.get_parsed::<ShardSpec>("shard")?;
-            spec.resume = !args.has("fresh");
-            // Forwarded verbatim to shard children (spawn_shard_sweeps
-            // only strips --jobs/--shard/--out): shards own disjoint
-            // cells, so they share one trace directory without racing.
-            spec.trace_dir = args.get("trace").map(PathBuf::from);
-            // Fail fast on a bad scenario axis (before hours of runs).
-            Scenario::resolve(&spec.base.scenario)?;
-            for s in &spec.grid.scenarios {
-                Scenario::resolve(s)?;
-            }
-            let out = PathBuf::from(args.get("out").unwrap_or("results/campaign"));
-            let total = eafl::campaign::expand(&spec).len();
+            let (spec, out, total, jobs_flag, mock, max_retries, stall_timeout) =
+                (|| -> Result<_> {
+                    let args = Args::parse(rest, &["mock", "fresh"])?;
+                    let mut base = match args.get("config") {
+                        Some(p) => ExperimentConfig::from_toml_file(&PathBuf::from(p))?,
+                        None => ExperimentConfig::paper_default(SelectorKind::Eafl),
+                    };
+                    if let Some(r) = args.get_parsed::<usize>("rounds")? {
+                        base.federation.rounds = r;
+                    }
+                    let mut spec = CampaignSpec::new("sweep", base);
+                    let defaults = CampaignGrid::default();
+                    spec.grid = CampaignGrid {
+                        selectors: parse_list::<SelectorKind>(args.get("selectors"), "selectors")?
+                            .unwrap_or(defaults.selectors),
+                        scenarios: parse_list::<String>(args.get("scenario"), "scenario")?
+                            .unwrap_or_default(),
+                        seeds: parse_list::<u64>(args.get("seeds"), "seeds")?
+                            .unwrap_or(defaults.seeds),
+                        f_values: parse_list::<f64>(args.get("f"), "f")?.unwrap_or_default(),
+                        client_counts: parse_list::<usize>(args.get("clients"), "clients")?
+                            .unwrap_or_default(),
+                    };
+                    let jobs_flag = args.get_parsed::<usize>("jobs")?;
+                    if let Some(j) = jobs_flag {
+                        spec.jobs = j.max(1);
+                    }
+                    spec.shard = args.get_parsed::<ShardSpec>("shard")?;
+                    spec.resume = !args.has("fresh");
+                    // Forwarded verbatim to shard children (the
+                    // supervisor only strips its own flags): shards own
+                    // disjoint cells, so they share one trace directory
+                    // without racing.
+                    spec.trace_dir = args.get("trace").map(PathBuf::from);
+                    // Fail fast on a bad scenario axis (before hours of
+                    // runs).
+                    Scenario::resolve(&spec.base.scenario)?;
+                    for s in &spec.grid.scenarios {
+                        Scenario::resolve(s)?;
+                    }
+                    // A fault plan is validated here (a typo'd spec is a
+                    // usage error) and then handed to this process — and
+                    // its shard children, which inherit the environment
+                    // — via EAFL_FAULT.
+                    if let Some(fault_spec) = args.get("fault") {
+                        eafl::fault::FaultPlan::parse(fault_spec)
+                            .with_context(|| format!("invalid --fault {fault_spec:?}"))?;
+                        std::env::set_var("EAFL_FAULT", fault_spec);
+                    } else if let Ok(env_spec) = std::env::var("EAFL_FAULT") {
+                        if !env_spec.trim().is_empty() {
+                            eafl::fault::FaultPlan::parse(&env_spec)
+                                .with_context(|| format!("invalid EAFL_FAULT {env_spec:?}"))?;
+                        }
+                    }
+                    let max_retries = args
+                        .get_parsed::<usize>("max-retries")?
+                        .unwrap_or(supervisor::DEFAULT_MAX_RETRIES);
+                    let stall_timeout = match args.get_parsed::<f64>("stall-timeout-s")? {
+                        None => None,
+                        Some(s) => {
+                            anyhow::ensure!(
+                                s.is_finite() && s > 0.0,
+                                "--stall-timeout-s must be a positive number of seconds, got {s}"
+                            );
+                            Some(Duration::from_secs_f64(s))
+                        }
+                    };
+                    let out = PathBuf::from(args.get("out").unwrap_or("results/campaign"));
+                    let total = eafl::campaign::expand(&spec).len();
+                    Ok((spec, out, total, jobs_flag, args.has("mock"), max_retries, stall_timeout))
+                })()
+                .map_err(Failure::usage)?;
             // Not printed as a product: the f axis only applies to the
             // EAFL selector, so total is usually less than the naive
             // cross of the axis sizes.
@@ -438,8 +506,20 @@ fn main() -> Result<()> {
             if spec.shard.is_none() && jobs_flag.map_or(false, |j| j > 1) && total > 1 {
                 let procs = spec.jobs.min(total);
                 println!("sharding across {procs} processes ({procs} x --shard i/{procs})");
-                spawn_shard_sweeps(rest, procs, &out)?;
-                let report = eafl::report::merge_dirs(&[out.clone()])?;
+                let exe = std::env::current_exe()
+                    .context("locating the eafl binary for shard spawn")?;
+                let sup = SupervisorSpec {
+                    exe,
+                    forwarded: forwarded_shard_args(rest),
+                    out: out.clone(),
+                    procs,
+                    max_retries,
+                    stall_timeout,
+                };
+                // The supervisor reaps, restarts and (on success)
+                // merges; its error carries the exit-code class.
+                let report = supervisor::supervise(&sup)
+                    .map_err(|e| Failure { code: e.exit_code, error: anyhow::anyhow!("{e}") })?;
                 eafl::report::write_report(&out, &report)?;
                 print_campaign_results(&report, spec.grid.scenarios.len());
                 println!(
@@ -447,8 +527,9 @@ fn main() -> Result<()> {
                     out.join(format!("{}.campaign.json", report.name)).display()
                 );
             } else {
-                let runtime = load_runtime(args.has("mock"))?;
-                let report = run_campaign(&spec, runtime.as_ref(), Some(&out))?;
+                let runtime = load_runtime(mock).map_err(Failure::cell_failure)?;
+                let report = run_campaign(&spec, runtime.as_ref(), Some(&out))
+                    .map_err(Failure::cell_failure)?;
                 print_campaign_results(&report, spec.grid.scenarios.len());
                 match spec.shard {
                     Some(shard) if shard.count > 1 => println!(
@@ -466,12 +547,24 @@ fn main() -> Result<()> {
             }
         }
         "merge" => {
-            let (args, dirs) = Args::parse_with_positionals(rest, &[])?;
+            let (args, dirs) = Args::parse_with_positionals(rest, &[]).map_err(Failure::usage)?;
             if dirs.is_empty() {
-                bail!("merge needs at least one sweep output directory\n\n{USAGE}");
+                return Err(Failure::usage(anyhow::anyhow!(
+                    "merge needs at least one sweep output directory\n\n{USAGE}"
+                )));
             }
             let dirs: Vec<PathBuf> = dirs.iter().map(PathBuf::from).collect();
-            let report = eafl::report::merge_dirs(&dirs)?;
+            // The detail verdict quarantines bad artifacts on sight and
+            // names *every* problem cell with its reason in one pass.
+            let (report, manifest_text) = match eafl::report::merge_with_detail(&dirs)? {
+                MergeDetail::Complete { report, manifest_text } => (report, manifest_text),
+                MergeDetail::NoManifest { quarantined } => {
+                    return Err(eafl::report::no_manifest_error(&dirs, quarantined).into())
+                }
+                MergeDetail::Incomplete { problems, total } => {
+                    return Err(eafl::report::incomplete_error(&problems, total).into())
+                }
+            };
             let out = args.get("out").map(PathBuf::from).unwrap_or_else(|| dirs[0].clone());
             std::fs::create_dir_all(&out).with_context(|| format!("creating {out:?}"))?;
             let (json_path, csv_path) = eafl::report::write_report(&out, &report)?;
@@ -479,7 +572,6 @@ fn main() -> Result<()> {
             // self-describing like any sweep output: it records which
             // campaign/grid the report covers. Identical bytes by
             // construction (all source manifests agreed).
-            let (_, manifest_text) = eafl::report::find_manifest(&dirs[0])?;
             std::fs::write(
                 out.join(format!("{}.manifest.json", report.name)),
                 manifest_text,
@@ -501,15 +593,20 @@ fn main() -> Result<()> {
             );
         }
         "trace" => {
-            let (args, positionals) = Args::parse_with_positionals(rest, &[])?;
+            let (args, positionals) =
+                Args::parse_with_positionals(rest, &[]).map_err(Failure::usage)?;
             let Some(("summarize", files)) = positionals
                 .split_first()
                 .map(|(action, files)| (action.as_str(), files))
             else {
-                bail!("trace needs an action: eafl trace summarize TRACE...\n\n{USAGE}");
+                return Err(Failure::usage(anyhow::anyhow!(
+                    "trace needs an action: eafl trace summarize TRACE...\n\n{USAGE}"
+                )));
             };
             if files.is_empty() {
-                bail!("trace summarize needs at least one trace file\n\n{USAGE}");
+                return Err(Failure::usage(anyhow::anyhow!(
+                    "trace summarize needs at least one trace file\n\n{USAGE}"
+                )));
             }
             let mut summaries = Vec::with_capacity(files.len());
             for file in files {
@@ -528,7 +625,7 @@ fn main() -> Result<()> {
             }
         }
         "trend" => {
-            let args = Args::parse(rest, &["csv"])?;
+            let args = Args::parse(rest, &["csv"]).map_err(Failure::usage)?;
             let history = PathBuf::from(args.get("history").unwrap_or("BENCH_history.jsonl"));
             let text = std::fs::read_to_string(&history)
                 .with_context(|| format!("reading bench history {}", history.display()))?;
@@ -548,9 +645,9 @@ fn main() -> Result<()> {
             }
         }
         "scenarios" => {
-            let args = Args::parse(rest, &[])?;
+            let args = Args::parse(rest, &[]).map_err(Failure::usage)?;
             if let Some(name) = args.get("show") {
-                let s = Scenario::resolve(name)?;
+                let s = Scenario::resolve(name).map_err(Failure::usage)?;
                 print!("{}", s.to_toml());
             } else {
                 println!(
@@ -566,7 +663,7 @@ fn main() -> Result<()> {
             }
         }
         "gen-config" => {
-            let args = Args::parse(rest, &[])?;
+            let args = Args::parse(rest, &[]).map_err(Failure::usage)?;
             let cfg = ExperimentConfig::paper_default(SelectorKind::Eafl);
             let text = cfg.to_toml();
             match args.get("out") {
@@ -600,7 +697,9 @@ fn main() -> Result<()> {
             }
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),
-        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+        other => {
+            return Err(Failure::usage(anyhow::anyhow!("unknown command {other:?}\n\n{USAGE}")))
+        }
     }
     Ok(())
 }

@@ -24,6 +24,14 @@ use super::event::RoundEvent;
 use super::TRACE_SCHEMA;
 
 /// Parse a trace file: schema header line, then one event per line.
+///
+/// A file whose *header* is wrong (not JSON, wrong schema, empty) was
+/// never ours and errors in place. A file with a valid header but a
+/// torn or corrupt event line — a trace half-written by a killed shard,
+/// or bit rot — is **quarantined** (moved to `<file>.quarantine`, see
+/// [`crate::report::quarantine`]) and the error names the line and the
+/// quarantine destination, so a retried sweep regenerates the trace
+/// instead of tripping over the wreck forever.
 pub fn read_trace(path: &Path) -> Result<Vec<RoundEvent>> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading trace file {}", path.display()))?;
@@ -46,12 +54,24 @@ pub fn read_trace(path: &Path) -> Result<Vec<RoundEvent>> {
         if line.trim().is_empty() {
             continue;
         }
-        let j = Json::parse(line)
-            .with_context(|| format!("{}: malformed trace line {}", path.display(), i + 1))?;
-        events.push(
-            RoundEvent::from_json(&j)
-                .with_context(|| format!("{}: bad trace event at line {}", path.display(), i + 1))?,
-        );
+        let event = Json::parse(line)
+            .and_then(|j| RoundEvent::from_json(&j))
+            .map_err(|e| {
+                let dest = crate::report::quarantine(
+                    path,
+                    &format!("torn/corrupt trace event at line {}", i + 1),
+                );
+                let moved = match dest {
+                    Some(d) => format!(" — quarantined to {}", d.display()),
+                    None => String::new(),
+                };
+                e.context(format!(
+                    "{}: torn/corrupt trace event at line {}{moved}",
+                    path.display(),
+                    i + 1
+                ))
+            })?;
+        events.push(event);
     }
     Ok(events)
 }
@@ -456,6 +476,32 @@ mod tests {
         assert!(format!("{err:#}").contains("eafl-trace-v1"), "{err:#}");
         std::fs::write(&bad, "").unwrap();
         assert!(read_trace(&bad).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn read_trace_quarantines_torn_event_lines() {
+        let dir = std::env::temp_dir().join(format!("eafl-rtq-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let torn = dir.join("torn.trace.jsonl");
+        // Valid header, then an event cut mid-write.
+        std::fs::write(
+            &torn,
+            format!("{{\"schema\": \"{TRACE_SCHEMA}\"}}\n{{\"ev\": \"round_com"),
+        )
+        .unwrap();
+        let err = format!("{:#}", read_trace(&torn).unwrap_err());
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("quarantine"), "{err}");
+        assert!(!torn.exists(), "torn trace should be moved aside");
+        assert!(dir.join("torn.trace.jsonl.quarantine").exists());
+        // A *header* problem is not quarantined — the file was never a
+        // trace of ours to begin with.
+        let alien = dir.join("alien.jsonl");
+        std::fs::write(&alien, "{\"schema\": \"other\"}\n").unwrap();
+        assert!(read_trace(&alien).is_err());
+        assert!(alien.exists());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -14,14 +14,22 @@
 //!    directory. All shards of one campaign derive the manifest from
 //!    the same grid, so they write byte-identical files and need no
 //!    coordination;
-//!  - [`merge_dirs`] — the order-stable merge: cells are emitted in
-//!    *manifest* order (= single-process grid order), never in shard or
-//!    completion order, and each cell's `<name>.config.toml`
-//!    fingerprint must hash to the manifest's recorded value. Summaries
-//!    round-trip through JSON bit-exactly (see `metrics::Summary`), so
-//!    a shard-then-merge campaign reproduces a single-process
-//!    `eafl sweep` byte for byte — the contract
-//!    `rust/tests/campaign_sharding.rs` pins across real processes.
+//!  - [`merge_dirs`] / [`merge_with_detail`] — the order-stable merge:
+//!    cells are emitted in *manifest* order (= single-process grid
+//!    order), never in shard or completion order, and each cell's
+//!    `<name>.config.toml` fingerprint must hash to the manifest's
+//!    recorded value. Summaries round-trip through JSON bit-exactly
+//!    (see `metrics::Summary`), so a shard-then-merge campaign
+//!    reproduces a single-process `eafl sweep` byte for byte — the
+//!    contract `rust/tests/campaign_sharding.rs` pins across real
+//!    processes.
+//!  - [`quarantine`] — the corruption policy shared by the merge, the
+//!    sweep resume and `eafl trace summarize`: a torn, truncated or
+//!    fingerprint-mismatched artifact is *moved aside* to
+//!    `<file>.quarantine` (named on stderr), never panicked over and
+//!    never silently skipped. The merge reports **all** invalid or
+//!    missing cells in one pass, each with its reason, so a multi-host
+//!    operator gets one actionable error instead of a whack-a-mole.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -159,12 +167,40 @@ impl CampaignReport {
 /// [`CampaignReport`] in, same bytes out".
 pub fn write_report(dir: &Path, report: &CampaignReport) -> Result<(PathBuf, PathBuf)> {
     let json_path = dir.join(format!("{}.campaign.json", report.name));
-    std::fs::write(&json_path, report.to_json().to_string_pretty())
-        .with_context(|| format!("writing {json_path:?}"))?;
+    crate::fault::write_artifact(
+        crate::fault::ArtifactKind::Campaign,
+        None,
+        &json_path,
+        &report.to_json().to_string_pretty(),
+    )?;
     let csv_path = dir.join(format!("{}.campaign.csv", report.name));
-    std::fs::write(&csv_path, report.to_csv())
-        .with_context(|| format!("writing {csv_path:?}"))?;
+    crate::fault::write_artifact(crate::fault::ArtifactKind::Campaign, None, &csv_path, &report.to_csv())?;
     Ok((json_path, csv_path))
+}
+
+/// Move a torn/corrupt/mismatched artifact aside to `<file>.quarantine`
+/// and say so on stderr. Never panics and never deletes: the evidence
+/// survives for post-mortems while readers stop tripping over it (a
+/// rename also beats deletion for crash-consistency — it is atomic on
+/// the same filesystem). Returns the quarantine path, or `None` when
+/// the move itself failed (also reported, never silent).
+pub fn quarantine(path: &Path, reason: &str) -> Option<PathBuf> {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".quarantine");
+    let dest = path.with_file_name(name);
+    match std::fs::rename(path, &dest) {
+        Ok(()) => {
+            eprintln!("[quarantine] {}: {reason} — moved to {}", path.display(), dest.display());
+            Some(dest)
+        }
+        Err(e) => {
+            eprintln!(
+                "[quarantine] {}: {reason} — could not move aside ({e}); leaving in place",
+                path.display()
+            );
+            None
+        }
+    }
 }
 
 /// One grid cell's identity inside a [`Manifest`]: the coordinates that
@@ -292,7 +328,8 @@ impl Manifest {
             self.campaign,
             std::process::id()
         ));
-        std::fs::write(&tmp, &text).with_context(|| format!("writing {tmp:?}"))?;
+        crate::fault::write_artifact(crate::fault::ArtifactKind::Manifest, None, &tmp, &text)
+            .with_context(|| format!("writing {tmp:?}"))?;
         std::fs::rename(&tmp, &path)
             .with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
         Ok(path)
@@ -302,7 +339,9 @@ impl Manifest {
 /// Locate the single `*.manifest.json` in `dir`; returns its path and
 /// raw bytes (the merge compares manifests byte-for-byte across dirs,
 /// and `eafl merge --out` copies them into the merged directory).
-pub fn find_manifest(dir: &Path) -> Result<(PathBuf, String)> {
+/// `Ok(None)` means the directory simply has no manifest; more than
+/// one is a user error (two campaigns swept into one directory).
+pub fn find_manifest(dir: &Path) -> Result<Option<(PathBuf, String)>> {
     let mut found: Vec<PathBuf> = Vec::new();
     let entries =
         std::fs::read_dir(dir).with_context(|| format!("reading directory {dir:?}"))?;
@@ -318,15 +357,11 @@ pub fn find_manifest(dir: &Path) -> Result<(PathBuf, String)> {
     }
     found.sort();
     match found.as_slice() {
-        [] => bail!(
-            "no campaign manifest (*.manifest.json) in {} — was this directory \
-             produced by `eafl sweep`?",
-            dir.display()
-        ),
+        [] => Ok(None),
         [one] => {
             let text = std::fs::read_to_string(one)
                 .with_context(|| format!("reading manifest {one:?}"))?;
-            Ok((one.clone(), text))
+            Ok(Some((one.clone(), text)))
         }
         many => bail!(
             "multiple campaign manifests in {}: {} — merge one campaign at a time",
@@ -339,63 +374,152 @@ pub fn find_manifest(dir: &Path) -> Result<(PathBuf, String)> {
     }
 }
 
-/// Load one cell's summary from `dir` if present *and* provably from
-/// this campaign: the summary must parse and the cell's
-/// `<name>.config.toml` fingerprint must hash to the manifest's value.
-/// Anything else — missing files, torn JSON from a killed shard, stale
-/// artifacts from an older grid — reads as "not here".
-fn load_cell(dir: &Path, cell: &CellMeta) -> Option<Summary> {
-    let fp = std::fs::read_to_string(dir.join(format!("{}.config.toml", cell.name))).ok()?;
-    if fnv1a64(fp.as_bytes()) != cell.fingerprint_fnv {
-        eprintln!(
-            "[merge] {}: config fingerprint mismatch in {} (stale cell from a \
-             different campaign?) — skipping",
-            cell.name,
-            dir.display()
-        );
-        return None;
+/// What one directory holds for one grid cell.
+enum LoadOutcome {
+    /// Valid: fingerprint matches the manifest and the summary parses.
+    Loaded(Summary),
+    /// Neither artifact present — the cell never ran here.
+    Missing,
+    /// Present but unusable; the reason says why, and the offending
+    /// files have been quarantined where that is sound.
+    Invalid(String),
+}
+
+/// Load one cell from `dir`, classifying (and quarantining) instead of
+/// silently skipping: the difference between "not here" and "here but
+/// torn/stale" is exactly what a multi-host operator needs to know.
+fn load_cell(dir: &Path, cell: &CellMeta) -> LoadOutcome {
+    let cfg_path = dir.join(format!("{}.config.toml", cell.name));
+    let sum_path = dir.join(format!("{}.summary.json", cell.name));
+    let cfg = std::fs::read_to_string(&cfg_path).ok();
+    let sum = std::fs::read_to_string(&sum_path).ok();
+    match (cfg, sum) {
+        (None, None) => LoadOutcome::Missing,
+        // The fingerprint is written after the summary, so a summary
+        // alone is a cell whose writer died between the two files — it
+        // cannot be verified against the manifest.
+        (None, Some(_)) => {
+            quarantine(&sum_path, "summary without its config fingerprint (torn cell?)");
+            LoadOutcome::Invalid("summary present but unverifiable (no config fingerprint) — quarantined".into())
+        }
+        // A fingerprint alone shouldn't happen given the write order;
+        // the config may well be valid, so leave it (a recompute
+        // overwrites both files anyway).
+        (Some(_), None) => {
+            LoadOutcome::Invalid("config fingerprint present but summary.json missing".into())
+        }
+        (Some(cfg), Some(sum)) => {
+            if fnv1a64(cfg.as_bytes()) != cell.fingerprint_fnv {
+                quarantine(&cfg_path, "config fingerprint mismatch vs manifest (torn write, bit rot, or a stale campaign)");
+                quarantine(&sum_path, "summary of a fingerprint-mismatched cell");
+                return LoadOutcome::Invalid(
+                    "config fingerprint mismatch vs manifest — quarantined".into(),
+                );
+            }
+            match Json::parse(&sum).and_then(|j| Summary::from_json(&j)) {
+                Ok(summary) => LoadOutcome::Loaded(summary),
+                Err(_) => {
+                    quarantine(&sum_path, "torn/unparseable summary.json");
+                    LoadOutcome::Invalid("torn/unparseable summary.json — quarantined".into())
+                }
+            }
+        }
     }
-    let text = std::fs::read_to_string(dir.join(format!("{}.summary.json", cell.name))).ok()?;
-    Json::parse(&text).ok().and_then(|j| Summary::from_json(&j).ok())
+}
+
+/// One unusable grid cell in a [`MergeDetail::Incomplete`] result.
+#[derive(Debug, Clone)]
+pub struct CellProblem {
+    pub cell: String,
+    /// Per-directory reasons, `; `-joined ("missing" when no directory
+    /// has any trace of the cell).
+    pub reason: String,
+}
+
+/// The merge's full verdict — what a supervisor retry loop needs
+/// (which cells, hence which shards, to rerun), beyond `merge_dirs`'s
+/// flattened error string.
+pub enum MergeDetail {
+    /// Every grid cell merged; the manifest text rides along so
+    /// callers can copy it without re-scanning directories.
+    Complete { report: CampaignReport, manifest_text: String },
+    /// No directory holds a (valid) manifest; `quarantined` counts the
+    /// unparseable ones moved aside during the scan.
+    NoManifest { quarantined: usize },
+    /// Some cells are missing or invalid — all of them, with reasons.
+    Incomplete { problems: Vec<CellProblem>, total: usize },
 }
 
 /// The order-stable merge: combine per-run artifacts from one or more
 /// sweep output directories into the full [`CampaignReport`].
 ///
 /// Rules (the shard/merge protocol, see the crate docs):
-///  1. every directory must hold the *byte-identical* manifest — shards
-///     of the same campaign always do; anything else is a user error;
+///  1. every directory holding a *valid* manifest must hold the
+///     byte-identical one — shards of the same campaign always do;
+///     parseable-but-different manifests are a user error, while a
+///     torn/unparseable manifest is quarantined and the directory
+///     treated as manifest-less;
 ///  2. cells are emitted in manifest order (= grid expansion order),
 ///     regardless of which shard ran them, in which directory they
 ///     landed, or when they finished;
 ///  3. a cell counts only if its summary parses and its config
 ///     fingerprint hashes to the manifest's value; directories are
 ///     searched in argument order and the first valid copy wins (all
-///     copies are bit-identical by the determinism contract anyway);
-///  4. missing cells fail the merge loudly — rerun the owning shards
-///     (resume skips the finished cells) and merge again.
-pub fn merge_dirs(dirs: &[PathBuf]) -> Result<CampaignReport> {
+///     copies are bit-identical by the determinism contract anyway).
+///     Torn or mismatched artifacts are quarantined on sight;
+///  4. the verdict covers *every* problem cell in one pass with its
+///     reason — never just the first — so one rerun-and-merge fixes
+///     everything at once.
+pub fn merge_with_detail(dirs: &[PathBuf]) -> Result<MergeDetail> {
     ensure!(!dirs.is_empty(), "merge needs at least one directory");
-    let (first_path, manifest_text) = find_manifest(&dirs[0])?;
-    for dir in &dirs[1..] {
-        let (path, text) = find_manifest(dir)?;
-        ensure!(
-            text == manifest_text,
-            "campaign manifests disagree: {} vs {} — these directories hold \
-             different campaigns (or different grids of one campaign)",
-            first_path.display(),
-            path.display()
-        );
+    let mut first: Option<(PathBuf, String)> = None;
+    let mut quarantined = 0usize;
+    for dir in dirs {
+        let Some((path, text)) = find_manifest(dir)? else { continue };
+        if Json::parse(&text).and_then(|j| Manifest::from_json(&j)).is_err() {
+            quarantine(&path, "torn/unparseable campaign manifest");
+            quarantined += 1;
+            continue;
+        }
+        match &first {
+            None => first = Some((path, text)),
+            Some((first_path, first_text)) => ensure!(
+                text == *first_text,
+                "campaign manifests disagree: {} vs {} — these directories hold \
+                 different campaigns (or different grids of one campaign)",
+                first_path.display(),
+                path.display()
+            ),
+        }
     }
+    let Some((first_path, manifest_text)) = first else {
+        return Ok(MergeDetail::NoManifest { quarantined });
+    };
     let manifest = Manifest::from_json(
         &Json::parse(&manifest_text)
             .with_context(|| format!("parsing manifest {first_path:?}"))?,
     )?;
 
     let mut runs = Vec::with_capacity(manifest.cells.len());
-    let mut missing: Vec<&str> = Vec::new();
+    let mut problems: Vec<CellProblem> = Vec::new();
     for cell in &manifest.cells {
-        match dirs.iter().find_map(|d| load_cell(d, cell)) {
+        let mut found = None;
+        let mut reasons: Vec<String> = Vec::new();
+        for dir in dirs {
+            match load_cell(dir, cell) {
+                LoadOutcome::Loaded(summary) => {
+                    found = Some(summary);
+                    break;
+                }
+                LoadOutcome::Missing => {}
+                LoadOutcome::Invalid(reason) => reasons.push(if dirs.len() > 1 {
+                    format!("{}: {reason}", dir.display())
+                } else {
+                    reason
+                }),
+            }
+        }
+        match found {
             Some(summary) => runs.push(CampaignRun {
                 selector: cell.selector,
                 scenario: cell.scenario.clone(),
@@ -404,22 +528,63 @@ pub fn merge_dirs(dirs: &[PathBuf]) -> Result<CampaignReport> {
                 clients: cell.clients,
                 summary,
             }),
-            None => missing.push(&cell.name),
+            None => problems.push(CellProblem {
+                cell: cell.name.clone(),
+                reason: if reasons.is_empty() {
+                    "no finished summary in any directory".into()
+                } else {
+                    reasons.join("; ")
+                },
+            }),
         }
     }
-    if !missing.is_empty() {
-        let shown = missing.iter().take(8).cloned().collect::<Vec<_>>().join(", ");
-        let more = missing.len().saturating_sub(8);
-        let suffix = if more > 0 { format!(" (+{more} more)") } else { String::new() };
-        bail!(
-            "merge incomplete: {}/{} grid cells have no finished summary: {shown}{suffix} \
-             — rerun the owning shards into the same --out (resume skips finished \
-             cells), then merge again",
-            missing.len(),
-            manifest.cells.len()
-        );
+    if !problems.is_empty() {
+        return Ok(MergeDetail::Incomplete { problems, total: manifest.cells.len() });
     }
-    Ok(CampaignReport { name: manifest.campaign, runs })
+    Ok(MergeDetail::Complete {
+        report: CampaignReport { name: manifest.campaign, runs },
+        manifest_text,
+    })
+}
+
+/// Render a [`MergeDetail::NoManifest`] as the user-facing error.
+pub fn no_manifest_error(dirs: &[PathBuf], quarantined: usize) -> anyhow::Error {
+    let where_ = dirs.iter().map(|d| d.display().to_string()).collect::<Vec<_>>().join(", ");
+    let note = if quarantined > 0 {
+        format!(" ({quarantined} torn manifest(s) quarantined — rerun the sweep to regenerate)")
+    } else {
+        " — was this directory produced by `eafl sweep`?".to_string()
+    };
+    anyhow::anyhow!("no campaign manifest (*.manifest.json) in {where_}{note}")
+}
+
+/// Render a [`MergeDetail::Incomplete`] as the user-facing error:
+/// every problem cell with its reason (capped for sanity), plus the
+/// remedy.
+pub fn incomplete_error(problems: &[CellProblem], total: usize) -> anyhow::Error {
+    let shown = problems
+        .iter()
+        .take(12)
+        .map(|p| format!("\n  {} — {}", p.cell, p.reason))
+        .collect::<Vec<_>>()
+        .join("");
+    let more = problems.len().saturating_sub(12);
+    let suffix = if more > 0 { format!("\n  (+{more} more)") } else { String::new() };
+    anyhow::anyhow!(
+        "merge incomplete: {}/{total} grid cells have no finished summary:{shown}{suffix}\n\
+         — rerun the owning shards into the same --out (resume skips finished \
+         cells), then merge again",
+        problems.len()
+    )
+}
+
+/// [`merge_with_detail`] flattened to the classic all-or-error shape.
+pub fn merge_dirs(dirs: &[PathBuf]) -> Result<CampaignReport> {
+    match merge_with_detail(dirs)? {
+        MergeDetail::Complete { report, .. } => Ok(report),
+        MergeDetail::NoManifest { quarantined } => Err(no_manifest_error(dirs, quarantined)),
+        MergeDetail::Incomplete { problems, total } => Err(incomplete_error(&problems, total)),
+    }
 }
 
 #[cfg(test)]
@@ -561,6 +726,89 @@ mod tests {
         // A wrong fingerprint makes the cell invisible again.
         std::fs::write(dir.join("m-eafl-steady-n10-f0.25-s1.config.toml"), "other").unwrap();
         assert!(merge_dirs(&[dir.clone()]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_reports_every_problem_cell_with_reasons_and_quarantines() {
+        let dir = std::env::temp_dir().join(format!("eafl-mergeall-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut m = manifest();
+        let torn = CellMeta { name: "m-eafl-steady-n10-f0.25-s2".into(), seed: 2, ..m.cells[0].clone() };
+        let stale = CellMeta { name: "m-eafl-steady-n10-f0.25-s3".into(), seed: 3, ..m.cells[0].clone() };
+        m.cells.push(torn);
+        m.cells.push(stale);
+        m.write(&dir).unwrap();
+        // Cell s1: never ran. Cell s2: torn summary (half-written
+        // JSON). Cell s3: fingerprint mismatch (stale campaign).
+        std::fs::write(dir.join("m-eafl-steady-n10-f0.25-s2.config.toml"), "cfg").unwrap();
+        std::fs::write(dir.join("m-eafl-steady-n10-f0.25-s2.summary.json"), "{\"ro").unwrap();
+        std::fs::write(dir.join("m-eafl-steady-n10-f0.25-s3.config.toml"), "stale").unwrap();
+        let summary = MetricsLog::new("m-eafl-steady-n10-f0.25-s3").summary();
+        std::fs::write(
+            dir.join("m-eafl-steady-n10-f0.25-s3.summary.json"),
+            summary.to_json().to_string_pretty(),
+        )
+        .unwrap();
+
+        // One pass reports all three cells, each with its own reason.
+        let MergeDetail::Incomplete { problems, total } =
+            merge_with_detail(&[dir.clone()]).unwrap()
+        else {
+            panic!("expected Incomplete")
+        };
+        assert_eq!(total, 3);
+        assert_eq!(problems.len(), 3);
+        assert!(problems[0].reason.contains("no finished summary"), "{}", problems[0].reason);
+        assert!(problems[1].reason.contains("unparseable"), "{}", problems[1].reason);
+        assert!(problems[2].reason.contains("fingerprint mismatch"), "{}", problems[2].reason);
+
+        // The torn/stale artifacts were moved aside, not deleted.
+        assert!(dir.join("m-eafl-steady-n10-f0.25-s2.summary.json.quarantine").exists());
+        assert!(dir.join("m-eafl-steady-n10-f0.25-s3.config.toml.quarantine").exists());
+        assert!(dir.join("m-eafl-steady-n10-f0.25-s3.summary.json.quarantine").exists());
+        assert!(!dir.join("m-eafl-steady-n10-f0.25-s2.summary.json").exists());
+
+        // The flattened error names every cell.
+        let err = incomplete_error(&problems, total).to_string();
+        assert!(err.starts_with("merge incomplete: 3/3"), "{err}");
+        for cell in ["s1", "s2", "s3"] {
+            assert!(err.contains(&format!("m-eafl-steady-n10-f0.25-{cell}")), "{err}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_quarantines_torn_manifest_and_reports_no_manifest() {
+        let dir = std::env::temp_dir().join(format!("eafl-mergetm-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("m.manifest.json"), "{\"schema\": \"eafl-ma").unwrap();
+        let MergeDetail::NoManifest { quarantined } = merge_with_detail(&[dir.clone()]).unwrap()
+        else {
+            panic!("expected NoManifest")
+        };
+        assert_eq!(quarantined, 1);
+        assert!(dir.join("m.manifest.json.quarantine").exists());
+        let err = no_manifest_error(&[dir.clone()], quarantined).to_string();
+        assert!(err.contains("manifest") && err.contains("quarantined"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quarantine_moves_aside_and_returns_destination() {
+        let dir = std::env::temp_dir().join(format!("eafl-quar-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let victim = dir.join("x.summary.json");
+        std::fs::write(&victim, "junk").unwrap();
+        let dest = quarantine(&victim, "test").unwrap();
+        assert_eq!(dest, dir.join("x.summary.json.quarantine"));
+        assert!(!victim.exists());
+        assert_eq!(std::fs::read_to_string(&dest).unwrap(), "junk");
+        // A missing victim is reported, not fatal.
+        assert!(quarantine(&victim, "already gone").is_none());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -294,3 +294,355 @@ fn merge_refuses_a_partial_campaign() {
     assert!(!dir.join("sweep.campaign.json").exists());
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+// --- Fault-injection matrix -------------------------------------------
+//
+// Every `FaultPlan` site gets a test: crash (on_cell_finished), stall
+// (on_cell_start), torn-write and corrupt for each artifact kind
+// (summary, config, manifest, trace, merged campaign). The contract
+// under test is always the same: the supervisor retries / the
+// quarantine machinery sets the bad bytes aside, and the final merged
+// artifacts are byte-identical to a fault-free single-process run.
+
+/// A cell targeted by name in several fault specs; first in grid order.
+const CELL: &str = "sweep-random-steady-n12-f0.25-s1";
+
+fn stderr_of(output: &Output) -> String {
+    String::from_utf8_lossy(&output.stderr).into_owned()
+}
+
+/// The acceptance criterion: every shard child crashes via an injected
+/// fault after its first finished cell; the supervisor restarts them
+/// (the restart env-scopes the fault off) and the merged bytes match
+/// the fault-free reference exactly.
+#[test]
+fn injected_crash_retries_to_identical_bytes() {
+    let (ref_dir, ref_json, ref_csv) = reference("fault-crash-ref", GRID);
+    let dir = tmp_dir("fault-crash");
+    let output = sweep(GRID, &["--jobs", "2", "--fault", "crash:after-cells=1"], &dir);
+    assert_ok(&output, "sweep with injected crash");
+    let stderr = stderr_of(&output);
+    assert!(
+        stderr.contains("exit 70"),
+        "supervisor should report the injected crash:\n{stderr}"
+    );
+    assert!(
+        stderr.contains("retrying shard"),
+        "supervisor should announce the restart:\n{stderr}"
+    );
+    let (json, csv) = merged_bytes(&dir);
+    assert_eq!(json, ref_json, "crash+retry must converge to fault-free bytes");
+    assert_eq!(csv, ref_csv);
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A shard that stops heartbeating is killed after --stall-timeout-s
+/// and restarted; the retry runs unarmed and the campaign converges.
+#[test]
+fn stalled_shard_is_killed_and_restarted() {
+    let (ref_dir, ref_json, ref_csv) = reference("fault-stall-ref", GRID);
+    let dir = tmp_dir("fault-stall");
+    let fault = format!("stall:cell={CELL}:ms=8000");
+    let output = sweep(
+        GRID,
+        &["--jobs", "2", "--stall-timeout-s", "1", "--fault", &fault],
+        &dir,
+    );
+    assert_ok(&output, "sweep with injected stall");
+    let stderr = stderr_of(&output);
+    assert!(stderr.contains("stalled"), "supervisor should report the stall:\n{stderr}");
+    let (json, csv) = merged_bytes(&dir);
+    assert_eq!(json, ref_json, "stall-kill+retry must converge to fault-free bytes");
+    assert_eq!(csv, ref_csv);
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Torn summary: half the summary bytes hit disk, then the child dies.
+/// The restarted shard must quarantine the torn file (named on stderr)
+/// and recompute the cell.
+#[test]
+fn torn_summary_write_is_quarantined_on_resume() {
+    let (ref_dir, ref_json, ref_csv) = reference("fault-torn-sum-ref", GRID);
+    let dir = tmp_dir("fault-torn-sum");
+    let fault = format!("torn-write:kind=summary:cell={CELL}");
+    let output = sweep(GRID, &["--jobs", "2", "--fault", &fault], &dir);
+    assert_ok(&output, "sweep with torn summary write");
+    let stderr = stderr_of(&output);
+    assert!(
+        stderr.contains("[quarantine]") && stderr.contains(&format!("{CELL}.summary.json")),
+        "resume should quarantine the torn summary by name:\n{stderr}"
+    );
+    assert!(
+        dir.join(format!("{CELL}.summary.json.quarantine")).exists(),
+        "torn bytes must be preserved out of band"
+    );
+    let (json, csv) = merged_bytes(&dir);
+    assert_eq!(json, ref_json, "torn summary must not change the merged bytes");
+    assert_eq!(csv, ref_csv);
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Torn config fingerprint: the summary landed whole but the
+/// fingerprint is half-written. Resume must treat the cell as
+/// unverifiable, quarantine the mismatching fingerprint, recompute.
+#[test]
+fn torn_config_write_is_quarantined_on_resume() {
+    let (ref_dir, ref_json, ref_csv) = reference("fault-torn-cfg-ref", GRID);
+    let dir = tmp_dir("fault-torn-cfg");
+    let fault = format!("torn-write:kind=config:cell={CELL}");
+    let output = sweep(GRID, &["--jobs", "2", "--fault", &fault], &dir);
+    assert_ok(&output, "sweep with torn config write");
+    let stderr = stderr_of(&output);
+    assert!(
+        stderr.contains("[quarantine]") && stderr.contains(&format!("{CELL}.config.toml")),
+        "resume should quarantine the torn fingerprint by name:\n{stderr}"
+    );
+    let (json, csv) = merged_bytes(&dir);
+    assert_eq!(json, ref_json, "torn fingerprint must not change the merged bytes");
+    assert_eq!(csv, ref_csv);
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Torn trace: the trace file is truncated mid-write and the child
+/// dies before the summary lands, so the retry recomputes the cell —
+/// including a byte-identical trace.
+#[test]
+fn torn_trace_write_recomputes_the_cell() {
+    let ref_dir = tmp_dir("fault-torn-trace-ref");
+    let ref_traces = ref_dir.join("traces");
+    assert_ok(
+        &sweep(GRID, &["--jobs", "1", "--trace", ref_traces.to_str().unwrap()], &ref_dir),
+        "traced reference sweep",
+    );
+    let (ref_json, ref_csv) = merged_bytes(&ref_dir);
+    let ref_trace =
+        std::fs::read_to_string(ref_traces.join(format!("{CELL}.trace.jsonl"))).unwrap();
+
+    let dir = tmp_dir("fault-torn-trace");
+    let traces = dir.join("traces");
+    let fault = format!("torn-write:kind=trace:cell={CELL}");
+    let output = sweep(
+        GRID,
+        &["--jobs", "2", "--trace", traces.to_str().unwrap(), "--fault", &fault],
+        &dir,
+    );
+    assert_ok(&output, "sweep with torn trace write");
+    let stderr = stderr_of(&output);
+    assert!(stderr.contains("retrying shard"), "torn trace must trigger a retry:\n{stderr}");
+    let trace = std::fs::read_to_string(traces.join(format!("{CELL}.trace.jsonl"))).unwrap();
+    assert_eq!(trace, ref_trace, "recomputed trace must be byte-identical");
+    let (json, csv) = merged_bytes(&dir);
+    assert_eq!(json, ref_json);
+    assert_eq!(csv, ref_csv);
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Silent config corruption: the child exits 0, but the fingerprint on
+/// disk no longer hashes the manifest's config. The supervisor's merge
+/// pass must catch it, quarantine both files, and rerun the owner.
+#[test]
+fn corrupt_config_is_caught_by_merge_fingerprint_check() {
+    let (ref_dir, ref_json, ref_csv) = reference("fault-corrupt-cfg-ref", GRID);
+    let dir = tmp_dir("fault-corrupt-cfg");
+    let fault = format!("corrupt:kind=config:cell={CELL}");
+    let output = sweep(GRID, &["--jobs", "2", "--fault", &fault], &dir);
+    assert_ok(&output, "sweep with corrupted config fingerprint");
+    let stderr = stderr_of(&output);
+    assert!(
+        stderr.contains("merge incomplete") && stderr.contains(CELL),
+        "supervisor should name the corrupt cell before rerunning it:\n{stderr}"
+    );
+    assert!(
+        dir.join(format!("{CELL}.config.toml.quarantine")).exists(),
+        "mismatching fingerprint must be quarantined"
+    );
+    let (json, csv) = merged_bytes(&dir);
+    assert_eq!(json, ref_json, "corrupt fingerprint must not change the merged bytes");
+    assert_eq!(csv, ref_csv);
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Silent summary corruption: clean exit, unparseable summary.json.
+/// Caught at merge, quarantined, recomputed.
+#[test]
+fn corrupt_summary_is_caught_by_merge() {
+    let (ref_dir, ref_json, ref_csv) = reference("fault-corrupt-sum-ref", GRID);
+    let dir = tmp_dir("fault-corrupt-sum");
+    let fault = format!("corrupt:kind=summary:cell={CELL}");
+    let output = sweep(GRID, &["--jobs", "2", "--fault", &fault], &dir);
+    assert_ok(&output, "sweep with corrupted summary");
+    let stderr = stderr_of(&output);
+    assert!(
+        stderr.contains("[quarantine]") && stderr.contains(&format!("{CELL}.summary.json")),
+        "merge should quarantine the corrupt summary by name:\n{stderr}"
+    );
+    assert!(dir.join(format!("{CELL}.summary.json.quarantine")).exists());
+    let (json, csv) = merged_bytes(&dir);
+    assert_eq!(json, ref_json, "corrupt summary must not change the merged bytes");
+    assert_eq!(csv, ref_csv);
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Corrupt grid manifest: the merge's ordering/completeness authority
+/// itself is unparseable. It is quarantined and every shard reruns
+/// (cheaply, via resume) to regenerate it.
+#[test]
+fn corrupt_manifest_is_quarantined_and_regenerated() {
+    let (ref_dir, ref_json, ref_csv) = reference("fault-corrupt-man-ref", GRID);
+    let dir = tmp_dir("fault-corrupt-man");
+    let output = sweep(GRID, &["--jobs", "2", "--fault", "corrupt:kind=manifest"], &dir);
+    assert_ok(&output, "sweep with corrupted manifest");
+    let stderr = stderr_of(&output);
+    assert!(
+        stderr.contains("manifest missing or quarantined"),
+        "supervisor should explain the full rerun:\n{stderr}"
+    );
+    assert!(dir.join("sweep.manifest.json.quarantine").exists());
+    // The regenerated manifest must match the reference's bytes.
+    assert_eq!(
+        std::fs::read_to_string(dir.join("sweep.manifest.json")).unwrap(),
+        std::fs::read_to_string(ref_dir.join("sweep.manifest.json")).unwrap()
+    );
+    let (json, csv) = merged_bytes(&dir);
+    assert_eq!(json, ref_json);
+    assert_eq!(csv, ref_csv);
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Corrupt merged report: the next sweep over the same --out must
+/// quarantine the torn campaign.json on resume, skip every finished
+/// cell, and rewrite the report bit-identically.
+#[test]
+fn corrupt_merged_report_is_quarantined_on_resume() {
+    let (ref_dir, ref_json, ref_csv) = reference("fault-corrupt-rep-ref", GRID);
+    let dir = tmp_dir("fault-corrupt-rep");
+    assert_ok(
+        &sweep(GRID, &["--jobs", "1", "--fault", "corrupt:kind=campaign"], &dir),
+        "sweep with corrupted merged report",
+    );
+    // write_report writes the JSON first; the corrupt clause latches on
+    // that first write, so the .json is the mangled artifact.
+    let torn = std::fs::read_to_string(dir.join("sweep.campaign.json")).unwrap();
+    assert_ne!(torn, ref_json, "the fault must actually corrupt the report");
+
+    let output = sweep(GRID, &["--jobs", "1"], &dir);
+    assert_ok(&output, "resume over a corrupt merged report");
+    let stderr = stderr_of(&output);
+    assert!(
+        stderr.contains("[quarantine]") && stderr.contains("campaign.json"),
+        "resume should quarantine the torn report by name:\n{stderr}"
+    );
+    assert!(
+        stderr.contains("8/8 grid cells already complete"),
+        "per-cell summaries were intact — nothing should recompute:\n{stderr}"
+    );
+    assert!(dir.join("sweep.campaign.json.quarantine").exists());
+    let (json, csv) = merged_bytes(&dir);
+    assert_eq!(json, ref_json, "the report must regenerate bit-identically");
+    assert_eq!(csv, ref_csv);
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Corrupt trace: a sweep does not read traces back, so the damage
+/// surfaces in `eafl trace summarize` — which must quarantine the bad
+/// file and say so, never panic or silently skip it.
+#[test]
+fn corrupt_trace_is_quarantined_by_trace_summarize() {
+    let dir = tmp_dir("fault-corrupt-trace");
+    let traces = dir.join("traces");
+    let fault = format!("corrupt:kind=trace:cell={CELL}");
+    assert_ok(
+        &sweep(
+            GRID,
+            &["--jobs", "1", "--trace", traces.to_str().unwrap(), "--fault", &fault],
+            &dir,
+        ),
+        "sweep with corrupted trace",
+    );
+    let trace = traces.join(format!("{CELL}.trace.jsonl"));
+    let output = eafl(&["trace", "summarize", trace.to_str().unwrap()]);
+    assert!(
+        !output.status.success(),
+        "summarizing a corrupt trace must fail, got:\n{}",
+        String::from_utf8_lossy(&output.stdout)
+    );
+    let stderr = stderr_of(&output);
+    assert!(
+        stderr.contains("torn/corrupt trace event"),
+        "the error should say what is wrong with the file:\n{stderr}"
+    );
+    assert!(stderr.contains("[quarantine]"), "and announce the quarantine:\n{stderr}");
+    assert!(!stderr.contains("panicked"), "clean error, not a panic:\n{stderr}");
+    assert!(!trace.exists(), "the corrupt trace must be moved aside");
+    assert!(trace.with_file_name(format!("{CELL}.trace.jsonl.quarantine")).exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A fault armed on *every* attempt defeats the retry budget: the
+/// supervisor must give up with exit code 4 and name the culprits.
+#[test]
+fn retries_exhausted_exits_4_and_names_the_culprit() {
+    let dir = tmp_dir("fault-exhausted");
+    let output = sweep(
+        GRID,
+        &["--jobs", "2", "--max-retries", "1", "--fault", "crash:after-cells=1:attempt=all"],
+        &dir,
+    );
+    assert_eq!(
+        output.status.code(),
+        Some(4),
+        "exhausted retries have their own exit code:\n{}",
+        stderr_of(&output)
+    );
+    let stderr = stderr_of(&output);
+    assert!(
+        stderr.contains("retries exhausted") && stderr.contains("shard"),
+        "the error should say which shards gave up:\n{stderr}"
+    );
+    assert!(!stderr.contains("panicked"), "clean error, not a panic:\n{stderr}");
+    // No merged report may masquerade as a finished campaign.
+    assert!(!dir.join("sweep.campaign.json").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A deterministic cell failure (here: the PJRT runtime is absent) is
+/// NOT retried — rerunning it burns the budget to fail identically.
+/// The supervisor relays the child's exit code 3 as its own.
+#[test]
+fn deterministic_cell_failure_exits_3_and_is_not_retried() {
+    let dir = tmp_dir("fault-exit3");
+    let no_mock = &GRID[1..]; // drop --mock: load_runtime must fail
+    let mut cmd = Command::new(BIN);
+    cmd.arg("sweep")
+        .args(no_mock)
+        .args(["--jobs", "2"])
+        .arg("--out")
+        .arg(&dir)
+        // Guard against builds with the xla feature: point the runtime
+        // at a directory that cannot exist.
+        .env("EAFL_ARTIFACTS", dir.join("no-such-artifacts"));
+    let output = cmd.output().expect("spawning eafl sweep");
+    assert_eq!(
+        output.status.code(),
+        Some(3),
+        "deterministic cell failures exit 3:\n{}",
+        stderr_of(&output)
+    );
+    let stderr = stderr_of(&output);
+    assert!(
+        stderr.contains("not retried"),
+        "the supervisor should explain why it gave up immediately:\n{stderr}"
+    );
+    assert!(!stderr.contains("retrying shard"), "exit 3 must not be retried:\n{stderr}");
+    assert!(!stderr.contains("panicked"), "clean error, not a panic:\n{stderr}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

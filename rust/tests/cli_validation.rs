@@ -201,6 +201,91 @@ fn trend_without_history_is_a_clean_error() {
     assert_clean_error(&["trend", "--history", "/no/such/history.jsonl"], "history");
 }
 
+/// Like [`assert_clean_error`], but additionally pins the exit code to
+/// 2: supervisor/fault flag typos are *usage* errors, distinct from
+/// cell failures (3) and exhausted retries (4), so scripts can branch
+/// on the code without scraping stderr.
+fn assert_usage_exit(args: &[&str], expect: &str) {
+    let output = eafl(args);
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert_eq!(
+        output.status.code(),
+        Some(2),
+        "{args:?} should exit 2 (usage), got {}:\n{stderr}",
+        output.status
+    );
+    assert!(
+        stderr.contains(expect),
+        "{args:?} stderr should mention {expect:?}:\n{stderr}"
+    );
+    assert!(
+        !stderr.contains("panicked") && !stderr.contains("RUST_BACKTRACE"),
+        "{args:?} must fail cleanly, not panic:\n{stderr}"
+    );
+}
+
+#[test]
+fn malformed_fault_specs_are_usage_errors() {
+    const S: [&str; 4] = ["sweep", "--mock", "--rounds", "1"];
+    // Unknown kind.
+    assert_usage_exit(&[&S[..], &["--fault", "explode"]].concat(), "invalid --fault");
+    // A kind missing its required parameter.
+    assert_usage_exit(&[&S[..], &["--fault", "crash"]].concat(), "invalid --fault");
+    assert_usage_exit(&[&S[..], &["--fault", "stall:cell=x"]].concat(), "invalid --fault");
+    // Out-of-range / malformed parameter values.
+    assert_usage_exit(
+        &[&S[..], &["--fault", "crash:after-cells=0"]].concat(),
+        "invalid --fault",
+    );
+    assert_usage_exit(
+        &[&S[..], &["--fault", "crash:after-cells=soon"]].concat(),
+        "invalid --fault",
+    );
+    // Unknown artifact kind and unknown key.
+    assert_usage_exit(
+        &[&S[..], &["--fault", "torn-write:kind=floppy"]].concat(),
+        "invalid --fault",
+    );
+    assert_usage_exit(
+        &[&S[..], &["--fault", "crash:after-cells=1:bogus=2"]].concat(),
+        "invalid --fault",
+    );
+    // The flag needs a value at all.
+    assert_usage_exit(&[&S[..], &["--fault"]].concat(), "requires a value");
+}
+
+#[test]
+fn malformed_supervisor_flags_are_usage_errors() {
+    const S: [&str; 4] = ["sweep", "--mock", "--rounds", "1"];
+    assert_usage_exit(
+        &[&S[..], &["--max-retries", "many"]].concat(),
+        "invalid --max-retries",
+    );
+    assert_usage_exit(
+        &[&S[..], &["--stall-timeout-s", "soon"]].concat(),
+        "invalid --stall-timeout-s",
+    );
+    assert_usage_exit(
+        &[&S[..], &["--stall-timeout-s", "0"]].concat(),
+        "positive",
+    );
+    // Usage errors must win before any grid cell runs: no artifacts.
+    let dir = std::env::temp_dir().join(format!("eafl-cliv-fault-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = eafl(&[
+        "sweep",
+        "--mock",
+        "--rounds",
+        "1",
+        "--fault",
+        "explode",
+        "--out",
+        dir.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(!dir.exists(), "a rejected sweep must not create its --out directory");
+}
+
 #[test]
 fn client_count_bounds_are_clean_errors() {
     // Zero clients: caught by config validation, not an empty-pool panic.
