@@ -12,6 +12,14 @@ cd "$(dirname "$0")"
 # Never touch the network: every dependency is vendored in-tree.
 export CARGO_NET_OFFLINE=true
 
+# autotests=false means an unregistered test file is silently never
+# compiled or run — catch the orphan before it rots.
+echo "==> test-target guard (rust/tests/*.rs all registered)"
+for t in rust/tests/*.rs; do
+  grep -qF "path = \"$t\"" Cargo.toml \
+    || { echo "FAIL: $t has no [[test]] target in Cargo.toml (autotests=false would skip it)"; exit 1; }
+done
+
 echo "==> cargo build --release"
 cargo build --release
 
@@ -77,6 +85,44 @@ cmp -s "$SMOKE_CSV" "$EAGER_OUT/sweep.campaign.csv" \
   || { echo "FAIL: EAFL_EAGER_DRAIN=1 changed the campaign CSV bytes"; exit 1; }
 echo "    eager-drain cross-check OK (campaign bytes identical)"
 
+# Budget-axis sweep smoke: three budgets x two selectors over the mock
+# must tag run names with -b{budget}, emit the energy/accuracy frontier
+# columns in the merged CSV, and stay byte-identical across the 2-shard
+# split, EAFL_WORKERS=8 and the eager-drain escape hatch — the ledger
+# is part of the determinism contract, not an exception to it.
+echo "==> budget-axis sweep smoke (frontier columns, byte-compares)"
+BUDGET_OUT="$(mktemp -d)"
+BUDGET_SHARD="$(mktemp -d)"
+BUDGET_W8="$(mktemp -d)"
+BUDGET_EAGER="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_OUT" "$EAGER_OUT" "$BUDGET_OUT" "$BUDGET_SHARD" "$BUDGET_W8" "$BUDGET_EAGER"' EXIT
+budget_sweep() {
+  ./target/release/eafl sweep --mock --scenario steady \
+    --selectors random,eafl --seeds 1 --rounds 2 --clients 16 \
+    --budget-j 4000,40000,400000 "$@" >/dev/null
+}
+budget_sweep --out "$BUDGET_OUT"
+BUDGET_CSV="$BUDGET_OUT/sweep.campaign.csv"
+for col in budget_j energy_spent_j final_accuracy; do
+  head -1 "$BUDGET_CSV" | grep -q "$col" \
+    || { echo "FAIL: merged CSV is missing the $col frontier column"; exit 1; }
+done
+rows="$(wc -l < "$BUDGET_CSV")"
+[ "$rows" -eq 7 ] \
+  || { echo "FAIL: expected 7 CSV lines (header + 2 selectors x 3 budgets), got $rows"; exit 1; }
+grep -q -- "-b4000-s1" "$BUDGET_OUT/sweep.manifest.json" \
+  || { echo "FAIL: budget axis did not tag run names with -b{budget}"; exit 1; }
+budget_sweep --jobs 2 --out "$BUDGET_SHARD"
+cmp -s "$BUDGET_CSV" "$BUDGET_SHARD/sweep.campaign.csv" \
+  || { echo "FAIL: 2-shard split changed the budget campaign CSV bytes"; exit 1; }
+EAFL_WORKERS=8 budget_sweep --out "$BUDGET_W8"
+cmp -s "$BUDGET_CSV" "$BUDGET_W8/sweep.campaign.csv" \
+  || { echo "FAIL: EAFL_WORKERS=8 changed the budget campaign CSV bytes"; exit 1; }
+EAFL_EAGER_DRAIN=1 budget_sweep --out "$BUDGET_EAGER"
+cmp -s "$BUDGET_CSV" "$BUDGET_EAGER/sweep.campaign.csv" \
+  || { echo "FAIL: EAFL_EAGER_DRAIN=1 changed the budget campaign CSV bytes"; exit 1; }
+echo "    budget smoke OK ($rows lines, frontier columns, shard/worker/drain stable)"
+
 # Fault-injection smoke: the same grid with an injected crash in every
 # shard child plus a silently corrupted config fingerprint must still
 # converge — the supervisor retries the crashed shards, resume
@@ -86,7 +132,7 @@ echo "    eager-drain cross-check OK (campaign bytes identical)"
 # after-cells=1 crash fires.
 echo "==> fault-injection sweep smoke (crash + corrupt config)"
 FAULT_OUT="$(mktemp -d)"
-trap 'rm -rf "$SMOKE_OUT" "$EAGER_OUT" "$FAULT_OUT"' EXIT
+trap 'rm -rf "$SMOKE_OUT" "$EAGER_OUT" "$BUDGET_OUT" "$BUDGET_SHARD" "$BUDGET_W8" "$BUDGET_EAGER" "$FAULT_OUT"' EXIT
 FAULT_CELL="sweep-random-steady-n16-f0.25-s1"
 ./target/release/eafl sweep --mock --scenario steady,diurnal \
   --selectors random,eafl --seeds 1 --rounds 2 --clients 16 --jobs 2 \
@@ -111,7 +157,7 @@ echo "    fault smoke OK (retried, quarantined, bytes identical)"
 # reproduce the run's own summary numbers from the events alone.
 echo "==> trace smoke (2 scenarios, worker/drain byte-compares)"
 TRACE_OUT="$(mktemp -d)"
-trap 'rm -rf "$SMOKE_OUT" "$EAGER_OUT" "$FAULT_OUT" "$TRACE_OUT"' EXIT
+trap 'rm -rf "$SMOKE_OUT" "$EAGER_OUT" "$BUDGET_OUT" "$BUDGET_SHARD" "$BUDGET_W8" "$BUDGET_EAGER" "$FAULT_OUT" "$TRACE_OUT"' EXIT
 for scenario in diurnal steady; do
   EAFL_WORKERS=1 ./target/release/eafl run --mock --selector eafl \
     --rounds 10 --clients 24 --scenario "$scenario" \

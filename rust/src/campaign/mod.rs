@@ -49,8 +49,9 @@ use crate::util::json::Json;
 
 pub use crate::report::{CampaignReport, CampaignRun};
 
-/// The sweep axes. Empty `scenarios` / `f_values` / `client_counts`
-/// inherit the base config's value (a single grid point on that axis).
+/// The sweep axes. Empty `scenarios` / `f_values` / `client_counts` /
+/// `budgets` inherit the base config's value (a single grid point on
+/// that axis).
 #[derive(Debug, Clone)]
 pub struct CampaignGrid {
     pub selectors: Vec<SelectorKind>,
@@ -59,6 +60,12 @@ pub struct CampaignGrid {
     pub seeds: Vec<u64>,
     pub f_values: Vec<f64>,
     pub client_counts: Vec<usize>,
+    /// Campaign energy budgets in joules (`selector.budget_j`); 0 means
+    /// unlimited. An explicit axis tags run names with `-b{budget}` so
+    /// the energy/accuracy frontier's cells stay uniquely named; an
+    /// empty axis inherits the base value and leaves names untouched —
+    /// budget-less campaigns keep byte-identical artifacts.
+    pub budgets: Vec<f64>,
 }
 
 impl Default for CampaignGrid {
@@ -71,6 +78,7 @@ impl Default for CampaignGrid {
             seeds: vec![1, 2, 3],
             f_values: Vec::new(),
             client_counts: Vec::new(),
+            budgets: Vec::new(),
         }
     }
 }
@@ -148,6 +156,7 @@ pub fn build_manifest(spec: &CampaignSpec, runs: &[RunSpec]) -> Result<Manifest>
             seed: run.seed,
             f: run.f,
             clients: run.clients,
+            budget_j: run.budget_j,
             fingerprint_fnv: fnv1a64(cell_fingerprint(&run.cfg)?.as_bytes()),
         });
     }
@@ -162,6 +171,8 @@ pub struct RunSpec {
     pub seed: u64,
     pub f: f64,
     pub clients: usize,
+    /// Campaign energy budget in joules (0 = unlimited).
+    pub budget_j: f64,
     pub cfg: ExperimentConfig,
 }
 
@@ -175,10 +186,12 @@ fn apply_seed(cfg: &mut ExperimentConfig, seed: u64) {
 }
 
 /// Expand the grid into fully resolved, uniquely named run configs.
-/// Order: selector (outermost) → scenario → clients → f → seed; the f
-/// axis only applies to EAFL (other selectors ignore f and get a single
-/// point). Scenario file paths are carried verbatim into `cfg.scenario`
-/// but their display name (file stem) goes into the run name.
+/// Order: selector (outermost) → scenario → clients → f → budget →
+/// seed; the f axis only applies to EAFL (other selectors ignore f and
+/// get a single point), the budget axis applies to every selector (the
+/// energy ledger gates the round loop engine-side). Scenario file paths
+/// are carried verbatim into `cfg.scenario` but their display name
+/// (file stem) goes into the run name.
 pub fn expand(spec: &CampaignSpec) -> Vec<RunSpec> {
     let scenarios: Vec<String> = if spec.grid.scenarios.is_empty() {
         vec![spec.base.scenario.clone()]
@@ -194,6 +207,16 @@ pub fn expand(spec: &CampaignSpec) -> Vec<RunSpec> {
         vec![spec.base.federation.num_clients]
     } else {
         spec.grid.client_counts.clone()
+    };
+    // Only an *explicit* budget axis tags run names: budget-less
+    // campaigns (and ones whose base config carries a budget) must keep
+    // the exact names earlier releases produced, or resume and sharded
+    // merges of existing output directories would recompute everything.
+    let explicit_budgets = !spec.grid.budgets.is_empty();
+    let budgets: Vec<f64> = if explicit_budgets {
+        spec.grid.budgets.clone()
+    } else {
+        vec![spec.base.selector.budget_j]
     };
     // Labels must be unique per scenario axis value: two files that
     // share a stem (configs/a/night.toml, configs/b/night.toml) would
@@ -228,27 +251,38 @@ pub fn expand(spec: &CampaignSpec) -> Vec<RunSpec> {
         for (scenario, label) in scenarios.iter().zip(&labels) {
             for &clients in &client_counts {
                 for &f in selector_f {
-                    for &seed in &spec.grid.seeds {
-                        let mut cfg = spec.base.clone();
-                        cfg.selector.kind = selector;
-                        cfg.selector.eafl_f = f;
-                        cfg.scenario = scenario.clone();
-                        cfg.federation.num_clients = clients;
-                        cfg.federation.participants_per_round =
-                            cfg.federation.participants_per_round.min(clients);
-                        apply_seed(&mut cfg, seed);
-                        cfg.name = format!(
-                            "{}-{selector}-{label}-n{clients}-f{f}-s{seed}",
-                            spec.name
-                        );
-                        runs.push(RunSpec {
-                            selector,
-                            scenario: label.clone(),
-                            seed,
-                            f,
-                            clients,
-                            cfg,
-                        });
+                    for &budget in &budgets {
+                        for &seed in &spec.grid.seeds {
+                            let mut cfg = spec.base.clone();
+                            cfg.selector.kind = selector;
+                            cfg.selector.eafl_f = f;
+                            cfg.selector.budget_j = budget;
+                            cfg.scenario = scenario.clone();
+                            cfg.federation.num_clients = clients;
+                            cfg.federation.participants_per_round =
+                                cfg.federation.participants_per_round.min(clients);
+                            apply_seed(&mut cfg, seed);
+                            cfg.name = if explicit_budgets {
+                                format!(
+                                    "{}-{selector}-{label}-n{clients}-f{f}-b{budget}-s{seed}",
+                                    spec.name
+                                )
+                            } else {
+                                format!(
+                                    "{}-{selector}-{label}-n{clients}-f{f}-s{seed}",
+                                    spec.name
+                                )
+                            };
+                            runs.push(RunSpec {
+                                selector,
+                                scenario: label.clone(),
+                                seed,
+                                f,
+                                clients,
+                                budget_j: budget,
+                                cfg,
+                            });
+                        }
                     }
                 }
             }
@@ -352,6 +386,7 @@ fn run_one(
         seed: run.seed,
         f: run.f,
         clients: run.clients,
+        budget_j: run.budget_j,
         summary: log.summary(),
     })
 }
@@ -496,6 +531,7 @@ pub fn run_campaign(
                             seed: run.seed,
                             f: run.f,
                             clients: run.clients,
+                            budget_j: run.budget_j,
                             summary,
                         }));
                     }
@@ -652,6 +688,7 @@ mod tests {
             seeds: vec![7, 8],
             f_values: vec![0.25, 0.5],
             client_counts: vec![10, 20],
+            budgets: Vec::new(),
         };
         let runs = expand(&spec);
         // EAFL gets the full 2 clients x 2 f x 2 seeds; Random ignores
@@ -689,6 +726,7 @@ mod tests {
             seeds: vec![1],
             f_values: Vec::new(),
             client_counts: Vec::new(),
+            budgets: Vec::new(),
         };
         let runs = expand(&spec);
         assert_eq!(runs.len(), 4, "2 selectors x 2 scenarios x 1 seed");
@@ -726,6 +764,7 @@ mod tests {
             seeds: vec![1],
             f_values: Vec::new(),
             client_counts: Vec::new(),
+            budgets: Vec::new(),
         };
         let runs = expand(&spec);
         assert_eq!(runs.len(), 2);
@@ -743,6 +782,47 @@ mod tests {
         assert!(runs.iter().all(|r| r.f == spec.base.selector.eafl_f));
         assert!(runs.iter().all(|r| r.clients == spec.base.federation.num_clients));
         assert!(runs.iter().all(|r| r.scenario == spec.base.scenario));
+        // Budget inherits the base too, and — critically — leaves run
+        // names untouched: ci.sh and existing output directories pin
+        // the budget-less naming scheme.
+        assert!(runs.iter().all(|r| r.budget_j == spec.base.selector.budget_j));
+        assert!(runs.iter().all(|r| !r.cfg.name.contains("-b")), "no -b tag without an axis");
+        assert_eq!(runs[0].cfg.name, "t-eafl-steady-n12-f0.25-s1");
+    }
+
+    #[test]
+    fn budget_axis_multiplies_the_grid_and_tags_names() {
+        let mut spec = CampaignSpec::new("t", base());
+        spec.grid = CampaignGrid {
+            selectors: vec![SelectorKind::Random, SelectorKind::Eafl],
+            scenarios: Vec::new(),
+            seeds: vec![1, 2],
+            f_values: Vec::new(),
+            client_counts: Vec::new(),
+            budgets: vec![500.0, 1000.0, 0.0],
+        };
+        let runs = expand(&spec);
+        // Unlike f, the budget axis applies to every selector: the
+        // ledger gates the round loop engine-side.
+        assert_eq!(runs.len(), 2 * 3 * 2, "2 selectors x 3 budgets x 2 seeds");
+        // Budget sits between f and seed in the nesting order.
+        let random: Vec<f64> = runs[..6].iter().map(|r| r.budget_j).collect();
+        assert_eq!(random, vec![500.0, 500.0, 1000.0, 1000.0, 0.0, 0.0]);
+        // Each run's config carries its budget, and the name tags it.
+        for r in &runs {
+            assert_eq!(r.cfg.selector.budget_j, r.budget_j);
+            assert!(
+                r.cfg.name.contains(&format!("-b{}-s{}", r.budget_j, r.seed)),
+                "{}",
+                r.cfg.name
+            );
+        }
+        assert_eq!(runs[0].cfg.name, "t-random-steady-n12-f0.25-b500-s1");
+        // Names stay unique across the axis.
+        let mut names: Vec<&str> = runs.iter().map(|r| r.cfg.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), runs.len());
     }
 
     #[test]

@@ -30,6 +30,9 @@ pub enum SelectorKind {
     Oort,
     /// EAFL — Oort utility blended with remaining battery, Eq. (1).
     Eafl,
+    /// EAFL's reward ranking constrained by a campaign energy budget
+    /// (requires `selector.budget_j > 0`; policy via `budget_policy`).
+    Budget,
 }
 
 impl std::fmt::Display for SelectorKind {
@@ -38,6 +41,7 @@ impl std::fmt::Display for SelectorKind {
             SelectorKind::Random => write!(f, "random"),
             SelectorKind::Oort => write!(f, "oort"),
             SelectorKind::Eafl => write!(f, "eafl"),
+            SelectorKind::Budget => write!(f, "budget"),
         }
     }
 }
@@ -49,7 +53,46 @@ impl std::str::FromStr for SelectorKind {
             "random" => Ok(Self::Random),
             "oort" => Ok(Self::Oort),
             "eafl" => Ok(Self::Eafl),
-            other => bail!("unknown selector {other:?} (random|oort|eafl)"),
+            "budget" => Ok(Self::Budget),
+            other => bail!("unknown selector {other:?} (random|oort|eafl|budget)"),
+        }
+    }
+}
+
+/// How the budget selector translates the remaining campaign envelope
+/// into a per-round spending allowance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BudgetPolicy {
+    /// Spend against the full remaining envelope; never start a round
+    /// that would breach it (k shrinks greedily).
+    HardCap,
+    /// Per-round allowance = remaining budget / remaining rounds.
+    Amortized,
+    /// Amortized, but spend ahead (allowance × `budget_spend_ahead`)
+    /// while the Oort pacer reports stalled utility.
+    DeadlineAware,
+}
+
+impl std::fmt::Display for BudgetPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BudgetPolicy::HardCap => write!(f, "hard-cap"),
+            BudgetPolicy::Amortized => write!(f, "amortized"),
+            BudgetPolicy::DeadlineAware => write!(f, "deadline-aware"),
+        }
+    }
+}
+
+impl std::str::FromStr for BudgetPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "hard-cap" | "hardcap" => Ok(Self::HardCap),
+            "amortized" => Ok(Self::Amortized),
+            "deadline-aware" | "deadlineaware" => Ok(Self::DeadlineAware),
+            other => bail!(
+                "unknown budget policy {other:?} (hard-cap|amortized|deadline-aware)"
+            ),
         }
     }
 }
@@ -199,6 +242,17 @@ pub struct SelectorConfig {
     /// Clients below this battery fraction are ineligible (safety floor;
     /// mirrors mobile OSes refusing background work on low battery).
     pub min_battery_frac: f64,
+    /// Campaign energy budget in joules; 0 = unlimited. When > 0 the
+    /// coordinator runs an energy ledger for ANY selector (terminal
+    /// stop on exhaustion); the `budget` selector additionally plans
+    /// each round against it.
+    pub budget_j: f64,
+    /// How the budget selector paces spend (hard-cap | amortized |
+    /// deadline-aware). Ignored by other selectors.
+    pub budget_policy: BudgetPolicy,
+    /// Deadline-aware policy: allowance multiplier while the pacer
+    /// reports stalled utility. Must be >= 1.
+    pub budget_spend_ahead: f64,
 }
 
 impl Default for SelectorConfig {
@@ -214,6 +268,9 @@ impl Default for SelectorConfig {
             pacer_percentile: 0.8,
             pacer_step_s: 10.0,
             min_battery_frac: 0.02,
+            budget_j: 0.0,
+            budget_policy: BudgetPolicy::HardCap,
+            budget_spend_ahead: 2.0,
         }
     }
 }
@@ -460,6 +517,15 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_f64("selector.min_battery_frac") {
             s.min_battery_frac = v;
         }
+        if let Some(v) = doc.get_f64("selector.budget_j") {
+            s.budget_j = v;
+        }
+        if let Some(v) = doc.get_str("selector.budget_policy") {
+            s.budget_policy = v.parse()?;
+        }
+        if let Some(v) = doc.get_f64("selector.budget_spend_ahead") {
+            s.budget_spend_ahead = v;
+        }
 
         let d = &mut c.data;
         if let Some(v) = doc.get_usize("data.labels_per_client") {
@@ -574,7 +640,10 @@ impl ExperimentConfig {
             .num("ucb_weight", self.selector.ucb_weight)
             .num("pacer_percentile", self.selector.pacer_percentile)
             .num("pacer_step_s", self.selector.pacer_step_s)
-            .num("min_battery_frac", self.selector.min_battery_frac);
+            .num("min_battery_frac", self.selector.min_battery_frac)
+            .num("budget_j", self.selector.budget_j)
+            .str("budget_policy", &self.selector.budget_policy.to_string())
+            .num("budget_spend_ahead", self.selector.budget_spend_ahead);
 
         w.table("data");
         w.num("labels_per_client", self.data.labels_per_client as f64)
@@ -635,6 +704,18 @@ impl ExperimentConfig {
         ensure!(self.training.learning_rate > 0.0, "learning_rate must be > 0");
         ensure!(self.training.local_steps > 0, "local_steps must be > 0");
         ensure!((0.0..=1.0).contains(&self.selector.eafl_f), "eafl_f must be in [0,1]");
+        ensure!(
+            self.selector.budget_j.is_finite() && self.selector.budget_j >= 0.0,
+            "selector.budget_j must be finite and >= 0 (0 = unlimited)"
+        );
+        ensure!(
+            self.selector.kind != SelectorKind::Budget || self.selector.budget_j > 0.0,
+            "the budget selector requires selector.budget_j > 0 (set --budget-j)"
+        );
+        ensure!(
+            self.selector.budget_spend_ahead >= 1.0,
+            "selector.budget_spend_ahead must be >= 1"
+        );
         let tiers: f64 = self.devices.tier_fractions.iter().sum();
         ensure!((tiers - 1.0).abs() < 1e-6, "tier_fractions must sum to 1 (got {tiers})");
         ensure!(
@@ -709,13 +790,59 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.scenario = String::new();
         assert!(c.validate().is_err());
+
+        // Budget knobs: NaN / negative budgets, a budget selector
+        // without a budget, and a sub-1 spend-ahead are all invalid.
+        let mut c = ExperimentConfig::default();
+        c.selector.budget_j = f64::NAN;
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.selector.budget_j = -5.0;
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.selector.kind = SelectorKind::Budget;
+        assert!(c.validate().is_err(), "budget selector needs budget_j > 0");
+        c.selector.budget_j = 1_000.0;
+        c.validate().unwrap();
+
+        let mut c = ExperimentConfig::default();
+        c.selector.budget_spend_ahead = 0.5;
+        assert!(c.validate().is_err());
     }
 
     #[test]
     fn selector_kind_parses() {
         assert_eq!("eafl".parse::<SelectorKind>().unwrap(), SelectorKind::Eafl);
         assert_eq!("OORT".parse::<SelectorKind>().unwrap(), SelectorKind::Oort);
+        assert_eq!("budget".parse::<SelectorKind>().unwrap(), SelectorKind::Budget);
         assert!("bogus".parse::<SelectorKind>().is_err());
+    }
+
+    #[test]
+    fn budget_policy_parses_and_roundtrips() {
+        for (text, policy) in [
+            ("hard-cap", BudgetPolicy::HardCap),
+            ("amortized", BudgetPolicy::Amortized),
+            ("deadline-aware", BudgetPolicy::DeadlineAware),
+        ] {
+            assert_eq!(text.parse::<BudgetPolicy>().unwrap(), policy);
+            assert_eq!(policy.to_string(), text);
+        }
+        assert_eq!("HardCap".parse::<BudgetPolicy>().unwrap(), BudgetPolicy::HardCap);
+        assert!("bogus".parse::<BudgetPolicy>().is_err());
+    }
+
+    #[test]
+    fn budget_knobs_roundtrip_through_toml() {
+        let mut c = ExperimentConfig::paper_default(SelectorKind::Budget);
+        c.selector.budget_j = 250_000.0;
+        c.selector.budget_policy = BudgetPolicy::DeadlineAware;
+        c.selector.budget_spend_ahead = 3.5;
+        let back = ExperimentConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back, c);
+        back.validate().unwrap();
     }
 
     #[test]

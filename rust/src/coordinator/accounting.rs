@@ -87,10 +87,18 @@ impl BatteryAccounting {
 /// mode only adds the O(N) materialization — so the two modes produce
 /// byte-identical campaign reports; the flag exists as an escape hatch
 /// and as ci.sh's lazy-vs-eager determinism tier.
+///
+/// Latched once per process: the environment is read on first call and
+/// never again, so a mid-run env mutation (a test harness, a child
+/// inheriting a stale shell) cannot flip drain modes between rounds and
+/// desync the lazy-ledger invariant mid-campaign.
 pub fn eager_drain_forced() -> bool {
-    std::env::var("EAFL_EAGER_DRAIN")
-        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
-        .unwrap_or(false)
+    static EAGER: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *EAGER.get_or_init(|| {
+        std::env::var("EAFL_EAGER_DRAIN")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false)
+    })
 }
 
 /// Pluggable device-recovery model, applied once at the end of every

@@ -459,7 +459,7 @@ impl FeedbackPhase {
         for o in outcomes {
             let mut stats = registry.stats_mut(o.id);
             stats.times_selected += 1;
-            stats.last_selected_round = round;
+            stats.last_selected_round = Some(round);
             stats.measured_duration_s = Some(o.duration_s);
             if o.completed {
                 stats.times_completed += 1;
@@ -476,6 +476,66 @@ impl FeedbackPhase {
             }
         }
         selector.feedback(&RoundFeedback { round, outcomes });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Campaign energy ledger
+// ---------------------------------------------------------------------------
+
+/// Tracks the campaign's energy spend against a fixed joule budget.
+///
+/// Two columns are kept side by side: `projected_j` accumulates the
+/// *planned* per-participant `round_energy_j` from the original round
+/// plan (what the selector budgeted against), while `actual_j`
+/// accumulates the simulation's `energy_spent_j` (what the round really
+/// cost — less on early battery deaths or deadline misses, potentially
+/// more than the registered projection on degraded/congested networks
+/// where `SimPhase` re-resolves link energy upward). The ledger is
+/// reconciled once per round, after the record phase, so the budget
+/// decision for round `r+1` always sees round `r`'s true spend.
+///
+/// `budget_j == 0` means *unlimited*: the ledger still tallies (the
+/// frontier reports read `actual_j` either way) but never gates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyLedger {
+    /// Campaign budget in joules; `0.0` disables gating.
+    pub budget_j: f64,
+    /// Σ planned participant energy over all reconciled rounds.
+    pub projected_j: f64,
+    /// Σ simulated participant energy over all reconciled rounds.
+    pub actual_j: f64,
+}
+
+impl EnergyLedger {
+    pub fn new(budget_j: f64) -> Self {
+        Self { budget_j, projected_j: 0.0, actual_j: 0.0 }
+    }
+
+    /// Whether the ledger gates rounds (a positive budget was set).
+    pub fn active(&self) -> bool {
+        self.budget_j > 0.0
+    }
+
+    /// Budget left to spend, by *actual* reconciled energy. Never
+    /// negative; meaningless (`f64::INFINITY`) when inactive.
+    pub fn remaining_j(&self) -> f64 {
+        if self.active() {
+            (self.budget_j - self.actual_j).max(0.0)
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Reconcile one round: fold its planned and simulated energy in.
+    pub fn record(&mut self, projected_j: f64, actual_j: f64) {
+        self.projected_j += projected_j;
+        self.actual_j += actual_j;
+    }
+
+    /// Terminal condition: an active budget with nothing left to spend.
+    pub fn exhausted(&self) -> bool {
+        self.active() && self.budget_j - self.actual_j <= 0.0
     }
 }
 
@@ -741,6 +801,27 @@ mod tests {
         );
         assert_eq!(stats.times_selected, MISS_BLACKLIST_THRESHOLD as u64);
         assert_eq!(stats.times_completed, 0);
+    }
+
+    #[test]
+    fn energy_ledger_gates_only_when_budgeted() {
+        let mut unlimited = EnergyLedger::new(0.0);
+        assert!(!unlimited.active());
+        unlimited.record(500.0, 450.0);
+        assert!(!unlimited.exhausted());
+        assert_eq!(unlimited.remaining_j(), f64::INFINITY);
+        assert_eq!(unlimited.actual_j, 450.0);
+        assert_eq!(unlimited.projected_j, 500.0);
+
+        let mut capped = EnergyLedger::new(1000.0);
+        assert!(capped.active());
+        assert_eq!(capped.remaining_j(), 1000.0);
+        capped.record(600.0, 550.0);
+        assert!(!capped.exhausted());
+        assert_eq!(capped.remaining_j(), 450.0);
+        capped.record(600.0, 550.0);
+        assert!(capped.exhausted());
+        assert_eq!(capped.remaining_j(), 0.0, "remaining clamps at zero");
     }
 
     #[test]

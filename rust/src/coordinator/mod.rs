@@ -22,8 +22,8 @@ pub use accounting::{
     recharge_policy_from, BatteryAccounting, CooldownRecharge, NoRecharge, RechargePolicy,
 };
 pub use engine::{
-    quorum_required, CommitDecision, CommitPhase, ExecPhase, ExecutionOutcome, FeedbackPhase,
-    PlanPhase, RecordPhase, RoundPlan, SimPhase, SimulatedRound,
+    quorum_required, CommitDecision, CommitPhase, EnergyLedger, ExecPhase, ExecutionOutcome,
+    FeedbackPhase, PlanPhase, RecordPhase, RoundPlan, SimPhase, SimulatedRound,
 };
 pub use registry::{
     BatteryMut, ClientPool, ClientState, ClientStats, LifecycleEvent, LinkMut, PoolAggregates,

@@ -89,8 +89,10 @@ pub struct ClientStats {
     pub stat_util: Option<f64>,
     /// Last measured participation duration, seconds.
     pub measured_duration_s: Option<f64>,
-    /// Round of last selection (0 = never).
-    pub last_selected_round: u64,
+    /// Round of the client's last selection; `None` if never selected
+    /// (a separate state from "selected at round 0" — the old `0 =
+    /// never` sentinel conflated the two and skewed staleness bonuses).
+    pub last_selected_round: Option<u64>,
     pub times_selected: u64,
     pub times_completed: u64,
     /// Consecutive deadline misses (Oort-style blacklist trigger).
@@ -172,6 +174,9 @@ pub struct ClientPool {
     pub charge_j: Vec<f64>,
     pub stat_util: Vec<Option<f64>>,
     pub measured_duration_s: Vec<Option<f64>>,
+    /// Round of last selection, `u64::MAX` = never selected (the SoA
+    /// column keeps the dense `u64` encoding; the candidate projection
+    /// converts the sentinel back to `Option<u64>`).
     pub last_selected_round: Vec<u64>,
     pub banned_until_round: Vec<u64>,
     // --- liveness indices (mutation guards; free-list style) ---
@@ -444,7 +449,7 @@ impl Registry {
             pool.charge_j.push(c.battery.charge_joules());
             pool.stat_util.push(c.stats.stat_util);
             pool.measured_duration_s.push(c.stats.measured_duration_s);
-            pool.last_selected_round.push(c.stats.last_selected_round);
+            pool.last_selected_round.push(c.stats.last_selected_round.unwrap_or(u64::MAX));
             pool.banned_until_round.push(c.stats.banned_until_round);
             if !c.battery.is_alive() {
                 pool.dead.insert(id);
@@ -815,7 +820,7 @@ impl Registry {
             + (s.times_selected as u128).pow(2);
         self.pool.stat_util[id] = s.stat_util;
         self.pool.measured_duration_s[id] = s.measured_duration_s;
-        self.pool.last_selected_round[id] = s.last_selected_round;
+        self.pool.last_selected_round[id] = s.last_selected_round.unwrap_or(u64::MAX);
         self.pool.banned_until_round[id] = s.banned_until_round;
     }
 
@@ -904,9 +909,13 @@ impl Registry {
                 stat_util: p.stat_util[id],
                 measured_duration_s: p.measured_duration_s[id],
                 expected_duration_s: p.expected_duration_s[id],
-                last_selected_round: p.last_selected_round[id],
+                last_selected_round: match p.last_selected_round[id] {
+                    u64::MAX => None,
+                    r => Some(r),
+                },
                 battery_frac: frac,
                 projected_drain_frac: p.drain_frac[id],
+                round_energy_j: p.round_energy_j[id],
             });
         }
     }
@@ -946,6 +955,7 @@ impl Registry {
                     last_selected_round: c.stats.last_selected_round,
                     battery_frac: self.effective_battery_frac(c.id),
                     projected_drain_frac: energy / c.battery.capacity_joules(),
+                    round_energy_j: energy,
                 }
             })
             .collect()
@@ -1117,7 +1127,7 @@ mod tests {
             let mut s = r.stats_mut(11);
             s.stat_util = Some(42.0);
             s.measured_duration_s = Some(120.0);
-            s.last_selected_round = 3;
+            s.last_selected_round = Some(3);
             s.times_selected = 2;
         }
         let reference =
@@ -1133,6 +1143,7 @@ mod tests {
             assert_eq!(a.last_selected_round, b.last_selected_round);
             assert_eq!(a.battery_frac, b.battery_frac);
             assert_eq!(a.projected_drain_frac, b.projected_drain_frac);
+            assert_eq!(a.round_energy_j, b.round_energy_j);
         }
         // Availability gate filters within the fast path.
         let mut gated = Vec::new();

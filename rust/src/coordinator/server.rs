@@ -31,8 +31,8 @@ use crate::util::rng::Rng;
 
 use super::accounting::BatteryAccounting;
 use super::engine::{
-    CommitPhase, ExecPhase, FeedbackPhase, PlanPhase, RecordPhase, RoundPlan, SimPhase,
-    SimulatedRound,
+    CommitPhase, EnergyLedger, ExecPhase, FeedbackPhase, PlanPhase, RecordPhase, RoundPlan,
+    SimPhase, SimulatedRound,
 };
 use super::registry::{LifecycleEvent, Registry};
 
@@ -102,6 +102,10 @@ pub struct Coordinator<'r> {
     profiler: Option<PhaseProfiler>,
     /// Reused buffer for draining the registry's lifecycle journal.
     lifecycle_scratch: Vec<LifecycleEvent>,
+    /// Campaign energy ledger (projected vs. actual spend, reconciled
+    /// each round from the sim's `energy_spent_j`). Inactive — pure
+    /// bookkeeping — unless `selector.budget_j > 0`.
+    ledger: EnergyLedger,
 }
 
 impl<'r> Coordinator<'r> {
@@ -143,6 +147,7 @@ impl<'r> Coordinator<'r> {
         };
         let global_params = runtime.init_params(cfg.training.init_seed)?;
         let bufs_pool = vec![TrainerBufs::new(runtime)];
+        let budget_j = cfg.selector.budget_j;
         let rng = Rng::seed_from_u64(cfg.data.seed ^ cfg.devices.seed ^ 0x5EED);
         let log = MetricsLog::new(cfg.name.clone());
         Ok(Self {
@@ -167,6 +172,7 @@ impl<'r> Coordinator<'r> {
             sink: None,
             profiler: None,
             lifecycle_scratch: Vec::new(),
+            ledger: EnergyLedger::new(budget_j),
         })
     }
 
@@ -229,6 +235,11 @@ impl<'r> Coordinator<'r> {
         self.clock_h
     }
 
+    /// The campaign energy ledger (inactive when no budget is set).
+    pub fn ledger(&self) -> &EnergyLedger {
+        &self.ledger
+    }
+
     pub fn global_params(&self) -> &[f32] {
         &self.global_params
     }
@@ -238,6 +249,26 @@ impl<'r> Coordinator<'r> {
         let rounds = self.cfg.federation.rounds;
         for round in 1..=rounds as u64 {
             self.run_round(round)?;
+            // Budget stop: the campaign envelope is spent (ledger) or
+            // the budget selector concluded nothing affordable remains.
+            // Terminal for ANY selector when a budget is configured.
+            if self.ledger.active()
+                && (self.ledger.exhausted() || self.selector.budget_exhausted())
+            {
+                if let Some(sink) = self.sink.as_mut() {
+                    sink.emit(&RoundEvent::BudgetExhausted {
+                        round,
+                        budget_j: self.ledger.budget_j,
+                        spent_j: self.ledger.actual_j,
+                    });
+                }
+                eprintln!(
+                    "[eafl] round {round}: energy budget exhausted \
+                     ({:.0} of {:.0} J spent); stopping",
+                    self.ledger.actual_j, self.ledger.budget_j
+                );
+                break;
+            }
             // An all-dead fleet only ends the experiment when nothing
             // can revive it; under a reviving policy (cooldown,
             // overnight window, solar) empty rounds keep elapsing so
@@ -261,6 +292,14 @@ impl<'r> Coordinator<'r> {
     /// Execute one round end to end through the engine phases.
     pub fn run_round(&mut self, round: u64) -> Result<()> {
         let mut t0 = self.phase_start();
+        // Push the remaining envelope down before planning so the
+        // budget family can pace this round's cohort against it (other
+        // selectors ignore the hook; the ledger still tallies).
+        if self.ledger.active() {
+            let remaining_rounds =
+                (self.cfg.federation.rounds as u64).saturating_sub(round - 1);
+            self.selector.set_budget(self.ledger.remaining_j(), remaining_rounds);
+        }
         // --- Phase 1: candidate planning (availability-gated) -------------
         // Bring the wake-wheel cache up to this round's clock first: only
         // the clients whose model-declared change time is due get
@@ -362,6 +401,13 @@ impl<'r> Coordinator<'r> {
 
         // --- Phase 7: record ----------------------------------------------
         self.clock_h = end_clock_h;
+        // Reconcile the energy ledger: projected from the ORIGINAL plan
+        // (what the selector budgeted), actual from the simulation
+        // (early deaths spend less; degraded networks can spend more).
+        self.ledger.record(
+            plan.plans.iter().map(|p| p.round_energy_j).sum(),
+            sim.outcome.results.iter().map(|r| r.energy_spent_j).sum(),
+        );
         self.log.push(RecordPhase::run(
             &self.registry,
             &plan,
@@ -481,7 +527,7 @@ impl<'r> Coordinator<'r> {
     }
 
     fn emit_round_committed(&mut self) {
-        let Self { sink, log, .. } = self;
+        let Self { sink, log, ledger, .. } = self;
         let (Some(sink), Some(rec)) = (sink.as_mut(), log.last()) else { return };
         sink.emit(&RoundEvent::RoundCommitted {
             round: rec.round,
@@ -491,6 +537,12 @@ impl<'r> Coordinator<'r> {
             train_loss: rec.train_loss,
             energy_j: rec.total_fl_energy_j,
             wall_clock_h: rec.wall_clock_h,
+            // NaN (→ null in the trace) when no budget is configured.
+            budget_remaining_j: if ledger.active() {
+                ledger.remaining_j()
+            } else {
+                f64::NAN
+            },
         });
     }
 }

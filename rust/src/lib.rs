@@ -6,8 +6,9 @@
 //!
 //! Three-layer architecture (see `DESIGN.md`):
 //!  - **Layer 3 (this crate)** — the FL coordinator: client selection
-//!    (Random / Oort / EAFL), event-driven device simulation, energy and
-//!    battery accounting, aggregation (FedAvg / YoGi), metrics.
+//!    (Random / Oort / EAFL / Budget), event-driven device simulation,
+//!    energy and battery accounting, aggregation (FedAvg / YoGi),
+//!    metrics.
 //!  - **Layer 2** — JAX speech-CNN fwd/bwd, AOT-lowered to HLO text at
 //!    build time (`make artifacts`), executed here via PJRT.
 //!  - **Layer 1** — Pallas kernels (fused dense, fused softmax-xent)
@@ -178,18 +179,53 @@
 //! attached the seams cost one `Option` branch per phase — the
 //! `plan_path_throughput` bench runs sink-free and is unaffected.
 //!
+//! ## Energy budgets: the selector family and the campaign ledger
+//!
+//! The paper's premise is that FL energy is a *scarce resource* on
+//! battery-powered fleets. Two mechanisms make that budget a
+//! first-class experiment axis (see [`selection::BudgetSelector`]):
+//!
+//!  - **The `budget` selector family** — `--selector budget` with
+//!    `[selector] budget_j` and `budget_policy` picks clients under an
+//!    explicit campaign energy envelope. `hard-cap` greedily packs
+//!    cheap-per-utility clients but never plans past the remaining
+//!    envelope; `amortized` paces spend at `remaining /
+//!    remaining_rounds` per round so the budget survives the whole
+//!    campaign; `deadline-aware` multiplies the amortized allowance by
+//!    `budget_spend_ahead` while the EAFL pacer is relaxed, buying
+//!    accuracy early when the deadline has slack.
+//!  - **The engine [`coordinator::EnergyLedger`]** — selector-agnostic
+//!    bookkeeping in the commit path: per-round *projected* plan energy
+//!    is reconciled against *actual* simulated spend, every
+//!    `round_committed` trace event carries `budget_remaining_j`
+//!    (`null` on unlimited runs), and when a finite `budget_j` is spent
+//!    the run stops with a terminal `budget_exhausted` event — for any
+//!    selector, budget-aware or not.
+//!
+//! Both honor the determinism contract (byte-identical traces at any
+//! `EAFL_WORKERS`, shard split, or drain mode), and
+//! `rust/tests/budget_invariants.rs` proves the hard-cap bound
+//! (Σ actual spend ≤ budget, by induction over per-round envelopes) and
+//! the monotone budget/accuracy frontier.
+//!
 //! ## Campaigns
 //!
 //! The paper's figures are grids, not runs. [`campaign`] expands
-//! selectors × scenarios × seeds × f-values × client-counts against a
-//! base config and runs the experiments across threads, merging the
-//! summaries into one `campaign.json` + `campaign.csv`; re-running into
-//! the same `--out` directory resumes a partial campaign by skipping
-//! grid cells that already have summaries:
+//! selectors × scenarios × seeds × f-values × client-counts × budgets
+//! against a base config and runs the experiments across threads,
+//! merging the summaries into one `campaign.json` + `campaign.csv`;
+//! re-running into the same `--out` directory resumes a partial
+//! campaign by skipping grid cells that already have summaries. A
+//! `--budget-j` list adds the energy-budget axis (cells tagged
+//! `-b<J>`), and the merged CSV gains the frontier columns `budget_j`,
+//! `energy_spent_j` and final/best accuracy — the paper's
+//! energy/accuracy trade-off curve falls straight out of one sweep:
 //!
 //! ```text
 //! eafl sweep --mock --selectors eafl,oort,random --seeds 1,2,3 \
 //!            --scenario steady,diurnal --rounds 150 --out results/campaign
+//! eafl sweep --mock --selectors budget,random --budget-j 2e4,5e4,1e5 \
+//!            --seeds 1,2,3 --rounds 150 --out results/frontier
 //! ```
 //!
 //! ## Sharded campaigns (the shard/merge protocol)
@@ -199,8 +235,9 @@
 //! because every piece of the protocol is a pure function of the grid:
 //!
 //!  - **Partition** — grid cell names are deterministic
-//!    (`<campaign>-<selector>-<scenario>-n<clients>-f<f>-s<seed>`
-//!    encodes every coordinate); shard `I` of `N` owns exactly the
+//!    (`<campaign>-<selector>-<scenario>-n<clients>-f<f>[-b<J>]-s<seed>`
+//!    encodes every coordinate; the `-b` tag appears only when the
+//!    budget axis is explicit); shard `I` of `N` owns exactly the
 //!    cells with `fnv1a64(name) % N == I` ([`campaign::shard_of`]).
 //!    `eafl sweep --shard I/N` runs just those cells.
 //!  - **Manifest** — every sweep with an output directory writes

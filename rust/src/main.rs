@@ -41,16 +41,16 @@ const USAGE: &str = "\
 eafl — energy-aware federated learning (MobiCom'22 FedEdge reproduction)
 
 USAGE:
-  eafl run [--config FILE] [--selector random|oort|eafl] [--rounds N]
-           [--clients N] [--f F] [--scenario NAME|FILE] [--out DIR]
-           [--trace FILE] [--mock]
+  eafl run [--config FILE] [--selector random|oort|eafl|budget]
+           [--rounds N] [--clients N] [--f F] [--budget-j J]
+           [--scenario NAME|FILE] [--out DIR] [--trace FILE] [--mock]
   eafl compare [--config FILE] [--rounds N] [--clients N]
            [--scenario NAME|FILE] [--out DIR] [--mock]
   eafl sweep [--config FILE] [--selectors LIST] [--scenario LIST]
-             [--seeds LIST] [--f LIST] [--clients LIST] [--rounds N]
-             [--jobs N] [--shard I/N] [--fresh] [--out DIR]
-             [--trace DIR] [--max-retries N] [--stall-timeout-s S]
-             [--fault SPEC] [--mock]
+             [--seeds LIST] [--f LIST] [--clients LIST]
+             [--budget-j LIST] [--rounds N] [--jobs N] [--shard I/N]
+             [--fresh] [--out DIR] [--trace DIR] [--max-retries N]
+             [--stall-timeout-s S] [--fault SPEC] [--mock]
   eafl merge DIR [DIR...] [--out DIR]
   eafl trace summarize TRACE [TRACE...] [--out DIR]
   eafl trend [--history FILE] [--csv] [--out FILE]
@@ -90,6 +90,19 @@ USAGE:
   crash:after-cells=N, stall:ms=M[:cell=NAME], torn-write:kind=summary,
   corrupt:kind=config (kinds: summary|config|manifest|trace|campaign;
   selectors cell=/shard=/attempt=).
+
+  --budget-j sets a campaign energy budget in joules (0 = unlimited):
+  the coordinator's energy ledger reconciles each round's projected and
+  actual spend and stops the run — whatever the selector — once the
+  budget is exhausted (a budget_exhausted trace event marks the cut).
+  The `budget` selector additionally plans *within* the envelope:
+  hard-cap never schedules past the remaining budget, amortized spreads
+  it evenly over the remaining rounds, deadline-aware spends ahead when
+  round utility stalls (selector.budget_policy / budget_spend_ahead in
+  the config). Under sweep, --budget-j is a LIST axis applied to every
+  selector; its runs are tagged -b{budget} and the merged CSV carries
+  the energy/accuracy frontier columns (budget_j, energy_spent_j,
+  final_accuracy).
 
   Scenarios are declarative environment models (availability churn,
   degraded/congested networks, wall-clock recharge policies) plugged
@@ -226,6 +239,9 @@ fn base_config(args: &Args, kind: SelectorKind) -> Result<ExperimentConfig> {
     }
     if let Some(f) = args.get_parsed::<f64>("f")? {
         cfg.selector.eafl_f = f;
+    }
+    if let Some(b) = args.get_parsed::<f64>("budget-j")? {
+        cfg.selector.budget_j = b;
     }
     if let Some(s) = args.get("scenario") {
         cfg.scenario = s.to_string();
@@ -435,6 +451,8 @@ fn run_cli(argv: &[String]) -> Result<(), Failure> {
                         f_values: parse_list::<f64>(args.get("f"), "f")?.unwrap_or_default(),
                         client_counts: parse_list::<usize>(args.get("clients"), "clients")?
                             .unwrap_or_default(),
+                        budgets: parse_list::<f64>(args.get("budget-j"), "budget-j")?
+                            .unwrap_or_default(),
                     };
                     let jobs_flag = args.get_parsed::<usize>("jobs")?;
                     if let Some(j) = jobs_flag {
@@ -490,12 +508,13 @@ fn run_cli(argv: &[String]) -> Result<(), Failure> {
             // cross of the axis sizes.
             println!(
                 "campaign: {total} runs over {} selectors, {} scenario(s), {} seeds, \
-                 {} f value(s) (EAFL only), {} client count(s) -> {}",
+                 {} f value(s) (EAFL only), {} client count(s), {} budget(s) -> {}",
                 spec.grid.selectors.len(),
                 spec.grid.scenarios.len().max(1),
                 spec.grid.seeds.len(),
                 spec.grid.f_values.len().max(1),
                 spec.grid.client_counts.len().max(1),
+                spec.grid.budgets.len().max(1),
                 out.display()
             );
             // Process scale-out is an explicit ask (--jobs P): a plain

@@ -104,7 +104,15 @@ pub enum RoundEvent {
         train_loss: f64,
         energy_j: f64,
         wall_clock_h: f64,
+        /// Joules left in the campaign energy budget after this round's
+        /// reconciliation; NaN (`null` on the wire) when no budget is
+        /// configured.
+        budget_remaining_j: f64,
     },
+    /// Terminal: the campaign energy budget can fund no further round.
+    /// The run stops after this event (`spent_j` is the reconciled
+    /// actual spend, which stays <= `budget_j` under static networks).
+    BudgetExhausted { round: u64, budget_j: f64, spent_j: f64 },
 }
 
 fn num_field(m: &mut BTreeMap<String, Json>, k: &str, v: f64) {
@@ -130,6 +138,7 @@ impl RoundEvent {
             RoundEvent::BatteryDepleted { .. } => "battery_depleted",
             RoundEvent::BatteryRevived { .. } => "battery_revived",
             RoundEvent::RoundCommitted { .. } => "round_committed",
+            RoundEvent::BudgetExhausted { .. } => "budget_exhausted",
         }
     }
 
@@ -196,6 +205,7 @@ impl RoundEvent {
                 train_loss,
                 energy_j,
                 wall_clock_h,
+                budget_remaining_j,
             } => {
                 num_field(&mut m, "round", *round as f64);
                 m.insert("committed".to_string(), Json::Bool(*committed));
@@ -204,6 +214,12 @@ impl RoundEvent {
                 num_field(&mut m, "train_loss", *train_loss);
                 num_field(&mut m, "energy_j", *energy_j);
                 num_field(&mut m, "wall_clock_h", *wall_clock_h);
+                num_field(&mut m, "budget_remaining_j", *budget_remaining_j);
+            }
+            RoundEvent::BudgetExhausted { round, budget_j, spent_j } => {
+                num_field(&mut m, "round", *round as f64);
+                num_field(&mut m, "budget_j", *budget_j);
+                num_field(&mut m, "spent_j", *spent_j);
             }
         }
         Json::Obj(m)
@@ -296,6 +312,18 @@ impl RoundEvent {
                 train_loss: num("train_loss")?,
                 energy_j: num("energy_j")?,
                 wall_clock_h: num("wall_clock_h")?,
+                // Lenient: traces predating the energy ledger have no
+                // budget column — read as "no budget" (NaN).
+                budget_remaining_j: if j.get("budget_remaining_j").is_some() {
+                    num("budget_remaining_j")?
+                } else {
+                    f64::NAN
+                },
+            },
+            "budget_exhausted" => RoundEvent::BudgetExhausted {
+                round: uint("round")? as u64,
+                budget_j: num("budget_j")?,
+                spent_j: num("spent_j")?,
             },
             other => bail!("unknown trace event kind {other:?}"),
         })
@@ -306,19 +334,36 @@ impl RoundEvent {
 mod tests {
     use super::*;
 
+    /// NaN-able floats (train_loss, budget_remaining_j) go through null
+    /// and come back NaN, which PartialEq can't compare — replace them
+    /// with a sentinel after asserting NaN-ness survives.
+    fn normalized(ev: &RoundEvent) -> RoundEvent {
+        let mut ev = ev.clone();
+        if let RoundEvent::RoundCommitted { train_loss, budget_remaining_j, .. } = &mut ev
+        {
+            if train_loss.is_nan() {
+                *train_loss = -1.0;
+            }
+            if budget_remaining_j.is_nan() {
+                *budget_remaining_j = -1.0;
+            }
+        }
+        ev
+    }
+
     fn roundtrip(ev: RoundEvent) {
         let line = ev.to_line();
         assert!(!line.contains('\n'));
         let back = RoundEvent::from_json(&Json::parse(&line).unwrap()).unwrap();
-        match (&ev, &back) {
-            // NaN train_loss goes through null and comes back NaN, so
-            // PartialEq can't compare that one directly.
-            (
-                RoundEvent::RoundCommitted { train_loss: a, .. },
-                RoundEvent::RoundCommitted { train_loss: b, .. },
-            ) if a.is_nan() => assert!(b.is_nan()),
-            _ => assert_eq!(ev, back),
+        if let (
+            RoundEvent::RoundCommitted { train_loss: a, budget_remaining_j: ba, .. },
+            RoundEvent::RoundCommitted { train_loss: b, budget_remaining_j: bb, .. },
+        ) = (&ev, &back)
+        {
+            assert_eq!(a.is_nan(), b.is_nan(), "train_loss NaN-ness must survive");
+            assert_eq!(ba.is_nan(), bb.is_nan(), "budget NaN-ness must survive");
         }
+        assert_eq!(normalized(&ev), normalized(&back));
     }
 
     #[test]
@@ -375,6 +420,22 @@ mod tests {
             train_loss: 1.25,
             energy_j: 400.0,
             wall_clock_h: 1.75,
+            budget_remaining_j: 1200.0,
+        });
+        roundtrip(RoundEvent::RoundCommitted {
+            round: 4,
+            committed: true,
+            completed: 4,
+            accuracy: 0.5,
+            train_loss: 1.0,
+            energy_j: 450.0,
+            wall_clock_h: 2.0,
+            budget_remaining_j: f64::NAN,
+        });
+        roundtrip(RoundEvent::BudgetExhausted {
+            round: 9,
+            budget_j: 5000.0,
+            spent_j: 4987.5,
         });
     }
 
@@ -388,10 +449,27 @@ mod tests {
             train_loss: f64::NAN,
             energy_j: 0.0,
             wall_clock_h: 0.1,
+            budget_remaining_j: f64::NAN,
         };
         let line = ev.to_line();
         assert!(line.contains("\"train_loss\": null"), "{line}");
+        assert!(line.contains("\"budget_remaining_j\": null"), "{line}");
         roundtrip(ev);
+    }
+
+    #[test]
+    fn pre_ledger_round_committed_lines_still_parse() {
+        // Traces written before the energy ledger carry no
+        // budget_remaining_j — the decoder must default it to NaN.
+        let line = r#"{"accuracy": 0.5, "committed": true, "completed": 4, "energy_j": 400, "ev": "round_committed", "round": 3, "train_loss": 1.25, "wall_clock_h": 1.75}"#;
+        let ev = RoundEvent::from_json(&Json::parse(line).unwrap()).unwrap();
+        match ev {
+            RoundEvent::RoundCommitted { budget_remaining_j, round, .. } => {
+                assert_eq!(round, 3);
+                assert!(budget_remaining_j.is_nan());
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
     }
 
     #[test]

@@ -196,6 +196,9 @@ impl TraceSummary {
                     out.wall_clock_h = *wall_clock_h;
                     out.total_dropouts = cumulative_dead;
                 }
+                // Terminal marker only; the preceding RoundCommitted
+                // already carries the final numbers.
+                RoundEvent::BudgetExhausted { .. } => {}
             }
         }
         // A RunStarted/CampaignCell head is how we identify the run; a
@@ -338,6 +341,7 @@ mod tests {
             train_loss: 1.0,
             energy_j: energy,
             wall_clock_h: wall,
+            budget_remaining_j: f64::NAN,
         }
     }
 

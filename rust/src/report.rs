@@ -64,6 +64,10 @@ pub struct CampaignRun {
     pub seed: u64,
     pub f: f64,
     pub clients: usize,
+    /// Campaign energy budget in joules (0 = unlimited) — pairs with
+    /// the summary's `total_fl_energy_j` to plot the energy/accuracy
+    /// frontier.
+    pub budget_j: f64,
     pub summary: Summary,
 }
 
@@ -87,6 +91,7 @@ impl CampaignReport {
                 m.insert("seed".to_string(), Json::Num(r.seed as f64));
                 m.insert("f".to_string(), Json::Num(r.f));
                 m.insert("clients".to_string(), Json::Num(r.clients as f64));
+                m.insert("budget_j".to_string(), Json::Num(r.budget_j));
                 m.insert("summary".to_string(), r.summary.to_json());
                 Json::Obj(m)
             })
@@ -98,22 +103,27 @@ impl CampaignReport {
         Json::Obj(top)
     }
 
-    /// One CSV row per run (the merged table the plots consume).
+    /// One CSV row per run (the merged table the plots consume). The
+    /// energy/accuracy frontier reads three of these columns per row:
+    /// `budget_j` (the cap, 0 = unlimited), `energy_spent_j` (what the
+    /// ledger actually reconciled — the summary's FL energy total) and
+    /// `final_accuracy`.
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "selector,scenario,seed,f,clients,rounds,committed_rounds,final_accuracy,\
-             best_accuracy,final_fairness,total_dropouts,mean_round_duration_s,\
-             wall_clock_h,total_fl_energy_j\n",
+            "selector,scenario,seed,f,clients,budget_j,rounds,committed_rounds,\
+             final_accuracy,best_accuracy,final_fairness,total_dropouts,\
+             mean_round_duration_s,wall_clock_h,total_fl_energy_j,energy_spent_j\n",
         );
         for r in &self.runs {
             let s = &r.summary;
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{},{:.3},{:.6},{:.3}\n",
+                "{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{},{:.3},{:.6},{:.3},{:.3}\n",
                 r.selector,
                 r.scenario,
                 r.seed,
                 r.f,
                 r.clients,
+                r.budget_j,
                 s.rounds,
                 s.committed_rounds,
                 s.final_accuracy,
@@ -122,6 +132,7 @@ impl CampaignReport {
                 s.total_dropouts,
                 s.mean_round_duration_s,
                 s.wall_clock_h,
+                s.total_fl_energy_j,
                 s.total_fl_energy_j,
             ));
         }
@@ -214,6 +225,10 @@ pub struct CellMeta {
     pub seed: u64,
     pub f: f64,
     pub clients: usize,
+    /// Campaign energy budget in joules (0 = unlimited). Decoded
+    /// leniently — manifests written before the budget axis existed
+    /// simply omit the key — so the schema tag stays at v1.
+    pub budget_j: f64,
     /// `fnv1a64` of the cell's config fingerprint text, hex-encoded in
     /// JSON (u64 does not survive an f64 JSON number).
     pub fingerprint_fnv: u64,
@@ -245,6 +260,7 @@ impl Manifest {
                 m.insert("seed".to_string(), Json::Str(c.seed.to_string()));
                 m.insert("f".to_string(), Json::Num(c.f));
                 m.insert("clients".to_string(), Json::Num(c.clients as f64));
+                m.insert("budget_j".to_string(), Json::Num(c.budget_j));
                 m.insert(
                     "fingerprint_fnv".to_string(),
                     Json::Str(format!("{:016x}", c.fingerprint_fnv)),
@@ -293,6 +309,9 @@ impl Manifest {
                     .context("manifest cell seed is not a u64")?,
                 f: num_field("f")?,
                 clients: num_field("clients")? as usize,
+                // Lenient: pre-budget manifests have no budget_j key;
+                // they describe unlimited-energy campaigns.
+                budget_j: if c.get("budget_j").is_some() { num_field("budget_j")? } else { 0.0 },
                 fingerprint_fnv: u64::from_str_radix(&str_field("fingerprint_fnv")?, 16)
                     .context("manifest fingerprint_fnv is not hex")?,
             });
@@ -526,6 +545,7 @@ pub fn merge_with_detail(dirs: &[PathBuf]) -> Result<MergeDetail> {
                 seed: cell.seed,
                 f: cell.f,
                 clients: cell.clients,
+                budget_j: cell.budget_j,
                 summary,
             }),
             None => problems.push(CellProblem {
@@ -595,7 +615,15 @@ mod tests {
     fn run(scenario: &str, selector: SelectorKind, dropouts: usize) -> CampaignRun {
         let mut summary = MetricsLog::new("x").summary();
         summary.total_dropouts = dropouts;
-        CampaignRun { selector, scenario: scenario.into(), seed: 1, f: 0.25, clients: 10, summary }
+        CampaignRun {
+            selector,
+            scenario: scenario.into(),
+            seed: 1,
+            f: 0.25,
+            clients: 10,
+            budget_j: 0.0,
+            summary,
+        }
     }
 
     #[test]
@@ -616,12 +644,19 @@ mod tests {
         };
         let csv = report.to_csv();
         assert_eq!(csv.lines().count(), 2);
-        assert!(csv.starts_with("selector,scenario,seed,f,clients,"));
+        assert!(csv.starts_with("selector,scenario,seed,f,clients,budget_j,"));
+        // The frontier columns ride in every report.
+        let header = csv.lines().next().unwrap();
+        for col in ["budget_j", "energy_spent_j", "final_accuracy"] {
+            assert!(header.split(',').any(|c| c == col), "missing column {col}: {header}");
+        }
+        assert!(header.ends_with(",energy_spent_j"));
         assert!(csv.lines().nth(1).unwrap().starts_with("eafl,steady,1,"));
         let parsed = Json::parse(&report.to_json().to_string_pretty()).unwrap();
         assert_eq!(parsed.field("total_runs").unwrap().as_usize(), Some(1));
         let run0 = &parsed.field("runs").unwrap().as_arr().unwrap()[0];
         assert_eq!(run0.field("scenario").unwrap().as_str(), Some("steady"));
+        assert_eq!(run0.field("budget_j").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]
@@ -650,6 +685,7 @@ mod tests {
                 seed: 1,
                 f: 0.25,
                 clients: 10,
+                budget_j: 0.0,
                 fingerprint_fnv: fnv1a64(b"cfg"),
             }],
         }
@@ -666,6 +702,28 @@ mod tests {
             .unwrap();
         assert_eq!(back, m);
         assert_eq!(back.cells[0].seed, u64::MAX - 1);
+    }
+
+    #[test]
+    fn manifest_budget_roundtrips_and_pre_budget_manifests_still_parse() {
+        let mut m = manifest();
+        m.cells[0].budget_j = 2500.0;
+        let back =
+            Manifest::from_json(&Json::parse(&m.to_json().to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.cells[0].budget_j, 2500.0);
+        // A manifest written before the budget axis existed has no
+        // budget_j key: it must decode as an unlimited-energy cell
+        // under the unchanged v1 schema tag.
+        let mut j = manifest().to_json();
+        if let Json::Obj(top) = &mut j {
+            if let Some(Json::Arr(cells)) = top.get_mut("cells") {
+                if let Json::Obj(cell) = &mut cells[0] {
+                    cell.remove("budget_j");
+                }
+            }
+        }
+        let old = Manifest::from_json(&j).unwrap();
+        assert_eq!(old.cells[0].budget_j, 0.0);
     }
 
     #[test]

@@ -1,0 +1,439 @@
+//! Energy-budget participant selection — EAFL's Eq. (1) reward ranking
+//! constrained by a campaign-wide joule budget.
+//!
+//! The coordinator owns an
+//! [`EnergyLedger`](crate::coordinator::EnergyLedger) (projected vs.
+//! actual spend, reconciled every round from the simulation's
+//! `energy_spent_j`) and pushes the remaining envelope down through
+//! [`Selector::set_budget`] before each plan. Three policies decide
+//! how the remaining joules translate into this round's cohort:
+//!
+//!  - **hard-cap** — never start a round whose projected participant
+//!    energy would breach the remaining campaign budget: walk the full
+//!    (reward desc, id asc) ranking and take every candidate whose
+//!    projected `round_energy_j` still fits, shrinking k greedily when
+//!    the envelope runs short.
+//!  - **amortized** — spread the envelope evenly over the remaining
+//!    schedule: the per-round allowance is `remaining_j /
+//!    remaining_rounds`, knapsack-filled from the same ranking
+//!    (skip-and-continue, so a single expensive client cannot starve
+//!    the round).
+//!  - **deadline-aware** — amortized, but when the inner Oort pacer is
+//!    holding a relaxed deadline (aggregate utility stalled), the
+//!    allowance is multiplied by `budget_spend_ahead` — spend budget
+//!    faster while the model is starved for utility — capped by the
+//!    total remaining envelope.
+//!
+//! Rewards are EAFL's Eq. (1) (min-max-normalized Oort utility blended
+//! with the power term at `eafl_f`) plus the shared staleness bonus;
+//! candidates with no utility evidence yet score by the power term
+//! alone — the same signal EAFL's exploration arm draws by. Unlike
+//! Oort/EAFL the policy walk is fully deterministic (no weighted band
+//! draw): budget decisions must be auditable, and the staleness bonus
+//! alone keeps near-ties rotating.
+//!
+//! **Budget caveat:** the walk spends *projected* energy (the SoA
+//! pool's cached `round_energy` at plan time). Under static networks
+//! actual spend never exceeds the projection, so Σ actual ≤ budget
+//! holds strictly; on degraded/congested networks the simulation can
+//! re-resolve energy upward, and the ledger's actual column absorbs
+//! the overshoot in the *next* round's remaining envelope.
+
+use crate::util::rng::Rng;
+
+use crate::config::{BudgetPolicy, SelectorConfig};
+
+use super::utility::{
+    eafl_reward, min_max_normalize_in_place, oort_utility, power_term, staleness_bonus,
+};
+use super::{Candidate, OortSelector, RoundFeedback, Selector};
+
+pub struct BudgetSelector {
+    cfg: SelectorConfig,
+    /// Inner Oort machinery reused for the pacer (deadline + the
+    /// deadline-aware policy's spend-ahead signal).
+    oort: OortSelector,
+    /// Joules left in the campaign envelope, pushed by the coordinator
+    /// before every plan. Infinite until the first `set_budget` —
+    /// an unwired selector ranks like deterministic EAFL.
+    remaining_j: f64,
+    /// Rounds left in the schedule (including the one being planned).
+    remaining_rounds: u64,
+    /// Latched when eligible candidates existed but the remaining
+    /// envelope could not fund a single one.
+    exhausted: bool,
+    /// Reusable per-round scratch.
+    utils: Vec<f64>,
+    ranked: Vec<(usize, f64, f64)>,
+}
+
+impl BudgetSelector {
+    pub fn new(cfg: SelectorConfig) -> Self {
+        let oort = OortSelector::new(cfg.clone());
+        Self {
+            cfg,
+            oort,
+            remaining_j: f64::INFINITY,
+            remaining_rounds: 0,
+            exhausted: false,
+            utils: Vec::new(),
+            ranked: Vec::new(),
+        }
+    }
+
+    /// This round's spending allowance under the configured policy.
+    fn allowance_j(&self) -> f64 {
+        match self.cfg.budget_policy {
+            BudgetPolicy::HardCap => self.remaining_j,
+            BudgetPolicy::Amortized => {
+                self.remaining_j / self.remaining_rounds.max(1) as f64
+            }
+            BudgetPolicy::DeadlineAware => {
+                let per_round = self.remaining_j / self.remaining_rounds.max(1) as f64;
+                if self.oort.pacer_relaxed() {
+                    (per_round * self.cfg.budget_spend_ahead.max(1.0))
+                        .min(self.remaining_j)
+                } else {
+                    per_round
+                }
+            }
+        }
+    }
+
+    /// Build the full (reward desc, id asc) ranking into `self.ranked`
+    /// as `(id, reward, round_energy_j)` triples.
+    fn rank(&mut self, round: u64, candidates: &[Candidate], deadline: f64) {
+        self.utils.clear();
+        for c in candidates {
+            if let Some(stat) = c.stat_util {
+                let duration = c.measured_duration_s.unwrap_or(c.expected_duration_s);
+                self.utils.push(oort_utility(stat, deadline, duration, self.cfg.alpha));
+            }
+        }
+        min_max_normalize_in_place(&mut self.utils);
+
+        self.ranked.clear();
+        let mut explored_cursor = 0usize;
+        for c in candidates {
+            let power = power_term(c.battery_frac, c.projected_drain_frac);
+            let base = if c.stat_util.is_some() {
+                let u = self.utils[explored_cursor];
+                explored_cursor += 1;
+                eafl_reward(self.cfg.eafl_f, u, power)
+            } else {
+                // No utility evidence yet: rank by the power term alone
+                // (EAFL's exploration signal).
+                power
+            };
+            let reward = base
+                + staleness_bonus(round, c.last_selected_round, self.cfg.ucb_weight) * 0.25;
+            self.ranked.push((c.id, reward, c.round_energy_j));
+        }
+        self.ranked
+            .sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    }
+
+    /// The select body with the round deadline already computed.
+    fn select_with_deadline(
+        &mut self,
+        round: u64,
+        candidates: &[Candidate],
+        k: usize,
+        deadline: f64,
+    ) -> Vec<usize> {
+        if candidates.is_empty() || k == 0 {
+            return Vec::new();
+        }
+        self.rank(round, candidates, deadline);
+        let allowance = self.allowance_j();
+
+        // Greedy knapsack over the ranking: take the best-rewarded
+        // candidates whose projected energy still fits the allowance,
+        // skipping (not stopping at) the ones that don't — a single
+        // expensive high-reward client must not starve the round.
+        let mut selected = Vec::with_capacity(k.min(candidates.len()));
+        let mut spent = 0.0f64;
+        for &(id, _, cost) in &self.ranked {
+            if selected.len() == k {
+                break;
+            }
+            if spent + cost <= allowance {
+                selected.push(id);
+                spent += cost;
+            }
+        }
+
+        // Terminal signal: the *campaign* envelope (not this round's
+        // amortized slice) can no longer fund the cheapest candidate.
+        self.exhausted = self.remaining_j.is_finite()
+            && self
+                .ranked
+                .iter()
+                .all(|&(_, _, cost)| cost > self.remaining_j);
+        selected
+    }
+}
+
+impl Selector for BudgetSelector {
+    fn select(
+        &mut self,
+        round: u64,
+        candidates: &[Candidate],
+        k: usize,
+        _rng: &mut Rng,
+    ) -> Vec<usize> {
+        let deadline = self.deadline_s(candidates);
+        self.select_with_deadline(round, candidates, k, deadline)
+    }
+
+    fn plan(
+        &mut self,
+        round: u64,
+        candidates: &[Candidate],
+        k: usize,
+        _rng: &mut Rng,
+    ) -> (Vec<usize>, f64) {
+        let deadline = self.deadline_s(candidates);
+        let selected = self.select_with_deadline(round, candidates, k, deadline);
+        (selected, deadline)
+    }
+
+    fn feedback(&mut self, fb: &RoundFeedback<'_>) {
+        // Keeps the pacer (deadline + spend-ahead signal) live.
+        self.oort.feedback(fb);
+    }
+
+    fn deadline_s(&mut self, candidates: &[Candidate]) -> f64 {
+        self.oort.deadline_s(candidates)
+    }
+
+    fn set_budget(&mut self, remaining_j: f64, remaining_rounds: u64) {
+        self.remaining_j = remaining_j.max(0.0);
+        self.remaining_rounds = remaining_rounds;
+    }
+
+    fn budget_exhausted(&self) -> bool {
+        self.exhausted
+    }
+
+    fn name(&self) -> &'static str {
+        "budget"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::ParticipantOutcome;
+
+    fn cand(id: usize, util: Option<f64>, battery: f64, energy_j: f64) -> Candidate {
+        Candidate {
+            id,
+            stat_util: util,
+            measured_duration_s: util.map(|_| 100.0),
+            expected_duration_s: 100.0,
+            last_selected_round: None,
+            battery_frac: battery,
+            projected_drain_frac: 0.02,
+            round_energy_j: energy_j,
+        }
+    }
+
+    fn budget_cfg(policy: BudgetPolicy) -> SelectorConfig {
+        let mut cfg = SelectorConfig::default();
+        cfg.kind = crate::config::SelectorKind::Budget;
+        cfg.budget_j = 10_000.0;
+        cfg.budget_policy = policy;
+        cfg.ucb_weight = 0.0;
+        cfg
+    }
+
+    #[test]
+    fn unwired_selector_fills_k_from_the_reward_ranking() {
+        // Before the coordinator pushes a ledger, the envelope is
+        // infinite: plain deterministic EAFL-style top-k.
+        let mut s = BudgetSelector::new(budget_cfg(BudgetPolicy::HardCap));
+        let cands: Vec<Candidate> =
+            (0..10).map(|i| cand(i, Some(i as f64), 0.9, 50.0)).collect();
+        let picked = s.select(5, &cands, 4, &mut Rng::seed_from_u64(0));
+        assert_eq!(picked.len(), 4);
+        assert!(!s.budget_exhausted());
+        // Highest-utility ids dominate the deterministic ranking.
+        assert!(picked.contains(&9) && picked.contains(&8));
+    }
+
+    #[test]
+    fn hard_cap_shrinks_k_to_fit_the_envelope() {
+        let mut s = BudgetSelector::new(budget_cfg(BudgetPolicy::HardCap));
+        s.set_budget(120.0, 10);
+        // Every candidate costs 50 J: only 2 of k=4 fit in 120 J.
+        let cands: Vec<Candidate> =
+            (0..8).map(|i| cand(i, Some(i as f64), 0.9, 50.0)).collect();
+        let picked = s.select(5, &cands, 4, &mut Rng::seed_from_u64(0));
+        assert_eq!(picked.len(), 2, "must shrink k, not breach the cap");
+        let spent: f64 = picked.len() as f64 * 50.0;
+        assert!(spent <= 120.0);
+        assert!(!s.budget_exhausted(), "50 J still affordable");
+    }
+
+    #[test]
+    fn hard_cap_skips_expensive_candidates_rather_than_stopping() {
+        let mut s = BudgetSelector::new(budget_cfg(BudgetPolicy::HardCap));
+        s.set_budget(100.0, 10);
+        // Best-rewarded candidate is unaffordable; the cheaper, lower
+        // reward ones must still fill the round.
+        let cands = vec![
+            cand(0, Some(100.0), 0.9, 500.0),
+            cand(1, Some(10.0), 0.9, 40.0),
+            cand(2, Some(5.0), 0.9, 40.0),
+        ];
+        let picked = s.select(5, &cands, 3, &mut Rng::seed_from_u64(0));
+        assert_eq!(picked, vec![1, 2]);
+    }
+
+    #[test]
+    fn exhausted_when_nothing_is_affordable() {
+        let mut s = BudgetSelector::new(budget_cfg(BudgetPolicy::HardCap));
+        s.set_budget(10.0, 5);
+        let cands: Vec<Candidate> =
+            (0..4).map(|i| cand(i, Some(1.0), 0.9, 50.0)).collect();
+        let picked = s.select(5, &cands, 4, &mut Rng::seed_from_u64(0));
+        assert!(picked.is_empty());
+        assert!(s.budget_exhausted());
+        // A refilled envelope clears the latch on the next select.
+        s.set_budget(200.0, 5);
+        let picked = s.select(6, &cands, 4, &mut Rng::seed_from_u64(0));
+        assert!(!picked.is_empty());
+        assert!(!s.budget_exhausted());
+    }
+
+    #[test]
+    fn amortized_spreads_the_envelope_over_remaining_rounds() {
+        let mut s = BudgetSelector::new(budget_cfg(BudgetPolicy::Amortized));
+        // 1000 J over 10 rounds = 100 J/round: two 40 J picks fit, a
+        // third would breach the allowance even though the campaign
+        // envelope holds plenty.
+        s.set_budget(1000.0, 10);
+        let cands: Vec<Candidate> =
+            (0..6).map(|i| cand(i, Some(i as f64), 0.9, 40.0)).collect();
+        let picked = s.select(5, &cands, 5, &mut Rng::seed_from_u64(0));
+        assert_eq!(picked.len(), 2);
+        assert!(!s.budget_exhausted(), "campaign envelope is far from empty");
+    }
+
+    #[test]
+    fn amortized_last_round_spends_whatever_remains() {
+        let mut s = BudgetSelector::new(budget_cfg(BudgetPolicy::Amortized));
+        s.set_budget(200.0, 1);
+        let cands: Vec<Candidate> =
+            (0..6).map(|i| cand(i, Some(i as f64), 0.9, 40.0)).collect();
+        let picked = s.select(9, &cands, 5, &mut Rng::seed_from_u64(0));
+        assert_eq!(picked.len(), 5, "last round's allowance is the full remainder");
+    }
+
+    #[test]
+    fn deadline_aware_spends_ahead_only_when_pacer_relaxed() {
+        let mut cfg = budget_cfg(BudgetPolicy::DeadlineAware);
+        cfg.budget_spend_ahead = 2.0;
+        let mut s = BudgetSelector::new(cfg);
+        s.set_budget(1000.0, 10);
+        let cands: Vec<Candidate> =
+            (0..6).map(|i| cand(i, Some(i as f64), 0.9, 40.0)).collect();
+        // Pacer not relaxed: allowance 100 J ⇒ 2 picks.
+        let picked = s.select(5, &cands, 5, &mut Rng::seed_from_u64(0));
+        assert_eq!(picked.len(), 2);
+
+        // Stall the pacer (5 good rounds then 5 bad, Oort's window):
+        let out = |u: f64| ParticipantOutcome {
+            id: 0,
+            stat_util: Some(u),
+            duration_s: 100.0,
+            completed: true,
+        };
+        for r in 0..5 {
+            s.feedback(&RoundFeedback { round: r, outcomes: &[out(10.0)] });
+        }
+        for r in 5..10 {
+            s.feedback(&RoundFeedback { round: r, outcomes: &[out(0.1)] });
+        }
+        // Relaxed: allowance 200 J ⇒ 5 picks fit (5·40 = 200).
+        let picked = s.select(6, &cands, 5, &mut Rng::seed_from_u64(0));
+        assert_eq!(picked.len(), 5, "spend-ahead must widen the allowance");
+    }
+
+    #[test]
+    fn deadline_aware_spend_ahead_never_exceeds_the_envelope() {
+        let mut cfg = budget_cfg(BudgetPolicy::DeadlineAware);
+        cfg.budget_spend_ahead = 100.0;
+        let mut s = BudgetSelector::new(cfg);
+        s.set_budget(90.0, 2);
+        let out = |u: f64| ParticipantOutcome {
+            id: 0,
+            stat_util: Some(u),
+            duration_s: 100.0,
+            completed: true,
+        };
+        for r in 0..5 {
+            s.feedback(&RoundFeedback { round: r, outcomes: &[out(10.0)] });
+        }
+        for r in 5..10 {
+            s.feedback(&RoundFeedback { round: r, outcomes: &[out(0.1)] });
+        }
+        let cands: Vec<Candidate> =
+            (0..6).map(|i| cand(i, Some(1.0), 0.9, 40.0)).collect();
+        let picked = s.select(6, &cands, 6, &mut Rng::seed_from_u64(0));
+        // 45 J/round × 100 would be 4500 J; the cap holds it at the
+        // 90 J envelope ⇒ 2 × 40 J picks.
+        assert_eq!(picked.len(), 2);
+    }
+
+    #[test]
+    fn ranking_is_deterministic_and_battery_aware() {
+        // f=0: reward is the power term alone ⇒ highest battery wins,
+        // and repeated calls return identical picks (no weighted draw).
+        let mut cfg = budget_cfg(BudgetPolicy::HardCap);
+        cfg.eafl_f = 0.0;
+        let mut s = BudgetSelector::new(cfg);
+        s.set_budget(1000.0, 10);
+        let cands = vec![
+            cand(0, Some(100.0), 0.10, 50.0),
+            cand(1, Some(1.0), 0.95, 50.0),
+            cand(2, Some(50.0), 0.50, 50.0),
+        ];
+        let a = s.select(5, &cands, 1, &mut Rng::seed_from_u64(0));
+        let b = s.select(5, &cands, 1, &mut Rng::seed_from_u64(77));
+        assert_eq!(a, vec![1], "f=0 must pick the highest battery");
+        assert_eq!(a, b, "policy walk must be rng-independent");
+    }
+
+    #[test]
+    fn unexplored_candidates_rank_by_power() {
+        // Cold start (nobody measured): the ranking degenerates to the
+        // power term, so the budget family is battery-greedy on round 1
+        // just like EAFL's fixed fallback.
+        let mut s = BudgetSelector::new(budget_cfg(BudgetPolicy::HardCap));
+        s.set_budget(1000.0, 10);
+        let cands = vec![cand(0, None, 0.05, 50.0), cand(1, None, 0.95, 50.0)];
+        let picked = s.select(1, &cands, 1, &mut Rng::seed_from_u64(0));
+        assert_eq!(picked, vec![1]);
+    }
+
+    #[test]
+    fn never_exceeds_k_or_duplicates() {
+        let mut s = BudgetSelector::new(budget_cfg(BudgetPolicy::Amortized));
+        s.set_budget(5000.0, 20);
+        let cands: Vec<Candidate> = (0..25)
+            .map(|i| {
+                cand(i, if i % 3 == 0 { Some(i as f64) } else { None }, 0.7, 30.0)
+            })
+            .collect();
+        for round in 1..20 {
+            let picked = s.select(round, &cands, 10, &mut Rng::seed_from_u64(round));
+            assert!(picked.len() <= 10);
+            let mut d = picked.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), picked.len());
+        }
+    }
+}

@@ -139,14 +139,29 @@ impl EaflSelector {
                 rng,
             ));
         } else if k_exploit > 0 {
-            let mut rest: Vec<usize> = self
-                .unexplored_idx
-                .iter()
-                .map(|&i| candidates[i as usize].id)
-                .filter(|id| !selected.contains(id))
-                .collect();
-            rng.shuffle(&mut rest);
-            selected.extend(rest.into_iter().take(k_exploit));
+            // Cold-start fallback (no explored candidates yet, e.g. the
+            // entire first round): still energy-aware. A uniform shuffle
+            // here would make round 1 battery-blind — the one round
+            // where every candidate is unexplored — so the fill routes
+            // through the same power-weighted draw as the exploration
+            // arm, excluding ids the exploration draw already took.
+            self.pool_scratch.clear();
+            for &i in &self.unexplored_idx {
+                let c = &candidates[i as usize];
+                if selected.contains(&c.id) {
+                    continue;
+                }
+                self.pool_scratch.push((
+                    c.id,
+                    power_term(c.battery_frac, c.projected_drain_frac).max(1e-6),
+                ));
+            }
+            selected.extend(OortSelector::weighted_pick(
+                &mut self.sampler,
+                &self.pool_scratch,
+                k_exploit.min(self.pool_scratch.len()),
+                rng,
+            ));
         }
         selected
     }
@@ -203,9 +218,10 @@ mod tests {
             stat_util: util,
             measured_duration_s: util.map(|_| dur),
             expected_duration_s: dur,
-            last_selected_round: 0,
+            last_selected_round: None,
             battery_frac: battery,
             projected_drain_frac: 0.02,
+            round_energy_j: 50.0,
         }
     }
 
@@ -282,6 +298,51 @@ mod tests {
         }
         // power(1)≈0.93 vs power(0)≈0.03 ⇒ ~97% of draws pick id 1.
         assert!(high_battery_first > 150, "got {high_battery_first}/200");
+    }
+
+    #[test]
+    fn cold_start_fallback_stays_battery_greedy() {
+        // Regression: with ε forced to 0 and an all-unexplored pool
+        // (the first round of every run), selection lands in the
+        // fallback fill — which used to shuffle uniformly, ignoring
+        // batteries. It must stay power-weighted, like the exploration
+        // arm, for any f (the fallback has no utilities to blend).
+        for f in [0.0, 0.25, 1.0] {
+            let mut s = EaflSelector::new(exploit_cfg(f));
+            let cands = vec![cand(0, None, 100.0, 0.05), cand(1, None, 100.0, 0.95)];
+            let mut high_battery = 0;
+            for seed in 0..200 {
+                let picked = s.select(1, &cands, 1, &mut Rng::seed_from_u64(seed));
+                assert_eq!(picked.len(), 1);
+                if picked == vec![1] {
+                    high_battery += 1;
+                }
+            }
+            // power(1)≈0.93 vs power(0)≈0.03 ⇒ ~97% of draws pick id 1;
+            // a uniform shuffle would sit near 100/200.
+            assert!(high_battery > 150, "f={f}: got {high_battery}/200");
+        }
+    }
+
+    #[test]
+    fn cold_start_fallback_excludes_exploration_picks() {
+        // With ε high enough to take one exploration pick and k larger
+        // than the exploration quota, the fallback must fill from the
+        // *remaining* unexplored ids only — never duplicating.
+        let mut cfg = SelectorConfig::default();
+        cfg.explore_init = 0.5;
+        cfg.explore_decay = 1.0;
+        cfg.min_explore = 0.5;
+        let mut s = EaflSelector::new(cfg);
+        let cands: Vec<Candidate> = (0..6).map(|i| cand(i, None, 100.0, 0.5)).collect();
+        for seed in 0..50 {
+            let picked = s.select(1, &cands, 4, &mut Rng::seed_from_u64(seed));
+            assert_eq!(picked.len(), 4);
+            let mut d = picked.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), picked.len(), "duplicate pick at seed {seed}");
+        }
     }
 
     #[test]

@@ -1,24 +1,30 @@
 //! Participant selection — the paper's contribution surface.
 //!
-//! Three policies behind one [`Selector`] trait:
+//! Four policies behind one [`Selector`] trait:
 //!  - [`RandomSelector`] — uniform over eligible clients.
 //!  - [`OortSelector`]  — Oort's guided selection (Lai et al., OSDI'21):
 //!    statistical×system utility (Eq. 2), exploration/exploitation,
 //!    UCB staleness bonus, and a pacer controlling the deadline T.
 //!  - [`EaflSelector`]  — EAFL (Eq. 1): Oort's utility blended with the
 //!    remaining-battery term, `reward = f·Util + (1−f)·power`.
+//!  - [`BudgetSelector`] — EAFL's reward ranking constrained by a
+//!    campaign-wide energy budget (hard-cap / amortized /
+//!    deadline-aware policies), fed per-round by the coordinator's
+//!    energy ledger through [`Selector::set_budget`].
 //!
 //! The coordinator builds one [`Candidate`] per *eligible* client each
 //! round (alive, above the battery floor) and the selector returns at
 //! most K of them. Selector feedback (measured losses/durations) flows
 //! back through [`RoundFeedback`].
 
+mod budget;
 mod eafl;
 mod oort;
 mod random;
 pub mod sampler;
 pub mod utility;
 
+pub use budget::BudgetSelector;
 pub use eafl::EaflSelector;
 pub use oort::OortSelector;
 pub use random::RandomSelector;
@@ -41,8 +47,11 @@ pub struct Candidate {
     /// Coordinator-estimated duration of the NEXT round for this client
     /// (download + compute + upload from its profiles), seconds.
     pub expected_duration_s: f64,
-    /// Round number of the client's last selection (0 = never).
-    pub last_selected_round: u64,
+    /// Round number of the client's last selection; `None` if never
+    /// selected. (The SoA pool stores this as a `u64` column with
+    /// `u64::MAX` as the never-selected sentinel; the projection into
+    /// candidates converts to the honest `Option`.)
+    pub last_selected_round: Option<u64>,
     /// Remaining battery fraction in [0, 1]. Drain-effective: the
     /// registry fills this from the lazy ledger's closed form, so it
     /// reflects background drain as of the round clock even when the
@@ -51,6 +60,11 @@ pub struct Candidate {
     /// Projected battery cost of participating in the next round, as a
     /// fraction of this client's capacity.
     pub projected_drain_frac: f64,
+    /// Projected energy cost of participating in the next round, in
+    /// absolute joules (the SoA pool's cached `round_energy`
+    /// projection) — what the budget selector's knapsack spends
+    /// against the campaign energy ledger.
+    pub round_energy_j: f64,
 }
 
 /// Post-round feedback for one participant.
@@ -114,6 +128,20 @@ pub trait Selector: Send {
         (selected, deadline_s)
     }
 
+    /// The coordinator's energy ledger, pushed down before every
+    /// `plan`/`select` call when a campaign budget is configured:
+    /// joules left in the campaign envelope and rounds left in the
+    /// schedule. Default: ignore (only the budget family plans against
+    /// it; the coordinator-side hard stop covers every selector).
+    fn set_budget(&mut self, _remaining_j: f64, _remaining_rounds: u64) {}
+
+    /// Whether the selector has concluded the remaining budget cannot
+    /// fund any further participant (checked by the coordinator after
+    /// each round as a terminal condition). Default: never.
+    fn budget_exhausted(&self) -> bool {
+        false
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -123,6 +151,7 @@ pub fn make_selector(cfg: &SelectorConfig) -> Box<dyn Selector> {
         SelectorKind::Random => Box::new(RandomSelector::new(cfg.clone())),
         SelectorKind::Oort => Box::new(OortSelector::new(cfg.clone())),
         SelectorKind::Eafl => Box::new(EaflSelector::new(cfg.clone())),
+        SelectorKind::Budget => Box::new(BudgetSelector::new(cfg.clone())),
     }
 }
 
@@ -218,9 +247,11 @@ mod tests {
             (SelectorKind::Random, "random"),
             (SelectorKind::Oort, "oort"),
             (SelectorKind::Eafl, "eafl"),
+            (SelectorKind::Budget, "budget"),
         ] {
             let mut cfg = SelectorConfig::default();
             cfg.kind = kind;
+            cfg.budget_j = 1_000.0;
             assert_eq!(make_selector(&cfg).name(), name);
         }
     }

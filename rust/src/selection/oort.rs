@@ -90,6 +90,14 @@ impl OortSelector {
             .max(self.cfg.min_explore)
     }
 
+    /// Whether the pacer currently holds a relaxed deadline — i.e. the
+    /// last window comparison saw aggregate utility stall. The budget
+    /// family's deadline-aware policy reads this as its spend-ahead
+    /// signal.
+    pub(super) fn pacer_relaxed(&self) -> bool {
+        self.pacer_relax_s > 0.0
+    }
+
     /// Weighted sample of `k` distinct ids from `(id, weight)` pairs —
     /// THE draw primitive for both selectors (EAFL's exploration loop
     /// routes here too). One `gen_f64` per pick; Fenwick inverse-CDF
@@ -251,9 +259,10 @@ mod tests {
             stat_util: util,
             measured_duration_s: util.map(|_| dur),
             expected_duration_s: dur,
-            last_selected_round: 0,
+            last_selected_round: None,
             battery_frac: battery,
             projected_drain_frac: 0.02,
+            round_energy_j: 50.0,
         }
     }
 

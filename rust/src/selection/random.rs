@@ -71,9 +71,10 @@ mod tests {
                 stat_util: None,
                 measured_duration_s: None,
                 expected_duration_s: 100.0 + id as f64,
-                last_selected_round: 0,
+                last_selected_round: None,
                 battery_frac: 1.0,
                 projected_drain_frac: 0.01,
+                round_energy_j: 50.0,
             })
             .collect()
     }

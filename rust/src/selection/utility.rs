@@ -76,8 +76,16 @@ pub fn min_max_normalize_in_place(values: &mut [f64]) {
 
 /// UCB-style staleness bonus: grows with rounds since last selection,
 /// encouraging revisits of stale utility estimates (Oort §4.2).
-pub fn staleness_bonus(round: u64, last_selected_round: u64, weight: f64) -> f64 {
-    let staleness = round.saturating_sub(last_selected_round).max(1) as f64;
+///
+/// `last_selected_round` is `None` for a never-selected client, which
+/// counts as one round staler than a client picked at round 0 — the
+/// old `0 = never` sentinel conflated the two and under-rewarded
+/// genuinely-never-picked clients.
+pub fn staleness_bonus(round: u64, last_selected_round: Option<u64>, weight: f64) -> f64 {
+    let staleness = match last_selected_round {
+        Some(r) => round.saturating_sub(r).max(1),
+        None => round.saturating_add(1),
+    } as f64;
     weight * (0.1 * (round.max(2) as f64).ln() * staleness).sqrt()
 }
 
@@ -147,9 +155,20 @@ mod tests {
 
     #[test]
     fn staleness_grows() {
-        let fresh = staleness_bonus(100, 99, 0.1);
-        let stale = staleness_bonus(100, 10, 0.1);
+        let fresh = staleness_bonus(100, Some(99), 0.1);
+        let stale = staleness_bonus(100, Some(10), 0.1);
         assert!(stale > fresh);
         assert!(fresh > 0.0);
+    }
+
+    #[test]
+    fn never_selected_is_staler_than_selected_at_round_zero() {
+        // The old u64 sentinel encoded "never" as 0, identical to
+        // "selected at round 0" — the Option must keep them apart, with
+        // the never-selected client strictly staler.
+        let at_zero = staleness_bonus(10, Some(0), 0.1);
+        let never = staleness_bonus(10, None, 0.1);
+        assert!(never > at_zero, "never={never} at_zero={at_zero}");
+        assert!(staleness_bonus(1, None, 0.1) > 0.0);
     }
 }

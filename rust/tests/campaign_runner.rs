@@ -26,6 +26,7 @@ fn spec(jobs: usize) -> CampaignSpec {
         seeds: vec![1, 2, 3],
         f_values: Vec::new(),
         client_counts: Vec::new(),
+        budgets: Vec::new(),
     };
     spec.jobs = jobs;
     spec

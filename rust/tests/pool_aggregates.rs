@@ -49,7 +49,7 @@ fn random_mutation(registry: &mut Registry, rng: &mut Rng, step: u64) {
             let dur = rng.gen_range_f64(10.0, 2000.0);
             let mut s = registry.stats_mut(id);
             s.times_selected += 1;
-            s.last_selected_round = step;
+            s.last_selected_round = Some(step);
             s.stat_util = Some(util);
             s.measured_duration_s = Some(dur);
         }
@@ -130,6 +130,7 @@ fn prop_fill_candidates_matches_reference() {
             assert_eq!(a.last_selected_round, b.last_selected_round);
             assert_eq!(a.battery_frac, b.battery_frac);
             assert_eq!(a.projected_drain_frac, b.projected_drain_frac);
+            assert_eq!(a.round_energy_j, b.round_energy_j);
         }
     });
 }

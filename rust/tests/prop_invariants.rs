@@ -26,9 +26,14 @@ fn random_candidates(rng: &mut Rng, n: usize) -> Vec<Candidate> {
                 None
             },
             expected_duration_s: rng.gen_range_f64(10.0, 2000.0),
-            last_selected_round: rng.gen_range_usize(0, 40) as u64,
+            last_selected_round: if rng.gen_bool(0.5) {
+                Some(rng.gen_range_usize(0, 40) as u64)
+            } else {
+                None
+            },
             battery_frac: rng.gen_f64(),
             projected_drain_frac: rng.gen_range_f64(0.0, 0.2),
+            round_energy_j: rng.gen_range_f64(1.0, 500.0),
         })
         .collect()
 }

@@ -35,6 +35,7 @@ fn all_scenario_spec(workers_per_run: usize, jobs: usize) -> CampaignSpec {
         seeds: vec![1, 2],
         f_values: Vec::new(),
         client_counts: Vec::new(),
+        budgets: Vec::new(),
     };
     spec.jobs = jobs;
     spec.workers_per_run = workers_per_run;
