@@ -4,7 +4,10 @@
 //! steady and diurnal scenarios — plus background-maintenance and
 //! full-round rows that time the lazy drain ledger (per-class cumsums
 //! + death wheel, see `coordinator::registry`) against the eager
-//! settle-every-epoch sweep it replaced.
+//! settle-every-epoch sweep it replaced, and candidate-build-only rows
+//! that time the incrementally patched eligible arena
+//! (`Registry::refresh_eligible`, O(changed) per round) against the
+//! from-scratch `fill_candidates` walk (O(N)) it replaced.
 //!
 //! The fast path is what the engine runs today: SoA pool filtered into
 //! a reused candidate arena, band-partition + Fenwick selection, O(1)
@@ -31,9 +34,9 @@ use anyhow::Result;
 
 use eafl::benchkit::{bb, parse_count_list, parse_name_list, require_value, Bench};
 use eafl::config::{ExperimentConfig, SelectorConfig, SelectorKind};
-use eafl::coordinator::Registry;
+use eafl::coordinator::{AvailabilityView, Registry};
 use eafl::metrics::{jain_index, jain_index_from_moments};
-use eafl::scenario::{Scenario, ScenarioEnv};
+use eafl::scenario::{Scenario, ScenarioEnv, WakeWheel};
 use eafl::selection::utility::{
     eafl_reward, min_max_normalize, oort_utility, power_term, staleness_bonus,
 };
@@ -481,6 +484,86 @@ fn main() {
             let speedup = mean_of(&bench, &base_name) / mean_of(&bench, &fast_name);
             println!("--> {label}: speedup {speedup:.1}x");
             derived.push((format!("speedup_{scenario_name}_{n}"), speedup));
+
+            // --- Candidate-build-only rows: the incrementally patched
+            // eligible arena (`refresh_eligible`) against the
+            // from-scratch `fill_candidates` walk it replaced. One
+            // untimed refresh first — the initial build (and any
+            // floor/view switch) is O(N) by design — so the timed row
+            // measures the steady-state O(changed) patch cost. The
+            // clock is pinned at CLOCK_H like the plan rows, so the
+            // row isolates the pure bookkeeping floor: no availability
+            // flips, no floor crossings, just the dirty-drain + merge.
+            let inc_name = format!("incremental candidate build {label}");
+            let reb_name = format!("rebuild candidate build {label}");
+            let floor = cfg.selector.min_battery_frac;
+            let cand_wake = (!env.availability.is_always_available())
+                .then(|| WakeWheel::new(env.availability.as_ref(), n, CLOCK_H));
+            let refresh = |registry: &mut Registry, round: u64| match cand_wake.as_ref() {
+                None => registry.refresh_eligible(round, floor, AvailabilityView::AlwaysOn),
+                Some(w) => registry.refresh_eligible(
+                    round,
+                    floor,
+                    AvailabilityView::Cached { bits: w.avail(), changed: w.changed() },
+                ),
+            };
+            round += 1;
+            refresh(&mut registry, round);
+            bench.run(&inc_name, || {
+                round += 1;
+                refresh(&mut registry, round);
+                bb(registry.eligible().len());
+            });
+            // The rebuild walk is O(N): at 1M+ a single measured pass
+            // is the honest budget, same rule as the plan rows.
+            let mut cand_scratch: Vec<Candidate> = Vec::new();
+            if n >= 1_000_000 && !args.smoke {
+                bench.run_once(&reb_name, || {
+                    round += 1;
+                    match cand_wake.as_ref() {
+                        None => {
+                            registry.fill_candidates(round, floor, |_| true, &mut cand_scratch)
+                        }
+                        Some(w) => {
+                            let bits = w.avail();
+                            registry.fill_candidates(
+                                round,
+                                floor,
+                                |id| bits[id],
+                                &mut cand_scratch,
+                            );
+                        }
+                    }
+                    cand_scratch.len()
+                });
+            } else {
+                bench.run(&reb_name, || {
+                    round += 1;
+                    match cand_wake.as_ref() {
+                        None => {
+                            registry.fill_candidates(round, floor, |_| true, &mut cand_scratch)
+                        }
+                        Some(w) => {
+                            let bits = w.avail();
+                            registry.fill_candidates(
+                                round,
+                                floor,
+                                |id| bits[id],
+                                &mut cand_scratch,
+                            );
+                        }
+                    }
+                    bb(cand_scratch.len());
+                });
+            }
+            let inc_ns = mean_of(&bench, &inc_name);
+            let cand_speedup = mean_of(&bench, &reb_name) / inc_ns;
+            println!(
+                "--> {label}: candidate build {inc_ns:.0} ns incremental, \
+                 {cand_speedup:.1}x vs rebuild"
+            );
+            derived.push((format!("candidate_build_ns_{scenario_name}_{n}"), inc_ns));
+            derived.push((format!("candidate_speedup_{scenario_name}_{n}"), cand_speedup));
 
             // --- Full non-training round, lazy vs eager drain: the
             // plan+select+record pass plus one background epoch. The

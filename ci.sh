@@ -42,6 +42,14 @@ EAFL_WORKERS=8 cargo test -q
 echo "==> cargo test -q (EAFL_EAGER_DRAIN=1)"
 EAFL_EAGER_DRAIN=1 cargo test -q
 
+# Candidate-build invariance, same contract again: with the
+# incrementally patched eligible arena forced back to the per-round
+# full-pool rebuild, every pick, golden, campaign byte and trace byte
+# must come out identical — the arena is an optimization, never a
+# semantic.
+echo "==> cargo test -q (EAFL_REBUILD_CANDIDATES=1)"
+EAFL_REBUILD_CANDIDATES=1 cargo test -q
+
 # Benches must always compile, even though CI never runs the heavy ones.
 echo "==> cargo bench --no-run"
 cargo bench --no-run
@@ -85,6 +93,19 @@ cmp -s "$SMOKE_CSV" "$EAGER_OUT/sweep.campaign.csv" \
   || { echo "FAIL: EAFL_EAGER_DRAIN=1 changed the campaign CSV bytes"; exit 1; }
 echo "    eager-drain cross-check OK (campaign bytes identical)"
 
+# And once more with the eligible arena forced back to per-round
+# rebuilds: the incremental patch path must be byte-invisible in
+# campaign output too.
+echo "==> rebuild-candidates sweep cross-check"
+REBUILD_OUT="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_OUT" "$EAGER_OUT" "$REBUILD_OUT"' EXIT
+EAFL_REBUILD_CANDIDATES=1 ./target/release/eafl sweep --mock \
+  --scenario steady,diurnal --selectors random,eafl --seeds 1 --rounds 2 \
+  --clients 16 --jobs 2 --out "$REBUILD_OUT" >/dev/null
+cmp -s "$SMOKE_CSV" "$REBUILD_OUT/sweep.campaign.csv" \
+  || { echo "FAIL: EAFL_REBUILD_CANDIDATES=1 changed the campaign CSV bytes"; exit 1; }
+echo "    rebuild-candidates cross-check OK (campaign bytes identical)"
+
 # Budget-axis sweep smoke: three budgets x two selectors over the mock
 # must tag run names with -b{budget}, emit the energy/accuracy frontier
 # columns in the merged CSV, and stay byte-identical across the 2-shard
@@ -95,7 +116,7 @@ BUDGET_OUT="$(mktemp -d)"
 BUDGET_SHARD="$(mktemp -d)"
 BUDGET_W8="$(mktemp -d)"
 BUDGET_EAGER="$(mktemp -d)"
-trap 'rm -rf "$SMOKE_OUT" "$EAGER_OUT" "$BUDGET_OUT" "$BUDGET_SHARD" "$BUDGET_W8" "$BUDGET_EAGER"' EXIT
+trap 'rm -rf "$SMOKE_OUT" "$EAGER_OUT" "$REBUILD_OUT" "$BUDGET_OUT" "$BUDGET_SHARD" "$BUDGET_W8" "$BUDGET_EAGER"' EXIT
 budget_sweep() {
   ./target/release/eafl sweep --mock --scenario steady \
     --selectors random,eafl --seeds 1 --rounds 2 --clients 16 \
@@ -132,7 +153,7 @@ echo "    budget smoke OK ($rows lines, frontier columns, shard/worker/drain sta
 # after-cells=1 crash fires.
 echo "==> fault-injection sweep smoke (crash + corrupt config)"
 FAULT_OUT="$(mktemp -d)"
-trap 'rm -rf "$SMOKE_OUT" "$EAGER_OUT" "$BUDGET_OUT" "$BUDGET_SHARD" "$BUDGET_W8" "$BUDGET_EAGER" "$FAULT_OUT"' EXIT
+trap 'rm -rf "$SMOKE_OUT" "$EAGER_OUT" "$REBUILD_OUT" "$BUDGET_OUT" "$BUDGET_SHARD" "$BUDGET_W8" "$BUDGET_EAGER" "$FAULT_OUT"' EXIT
 FAULT_CELL="sweep-random-steady-n16-f0.25-s1"
 ./target/release/eafl sweep --mock --scenario steady,diurnal \
   --selectors random,eafl --seeds 1 --rounds 2 --clients 16 --jobs 2 \
@@ -152,12 +173,13 @@ cmp -s "$SMOKE_CSV" "$FAULT_OUT/sweep.campaign.csv" \
 echo "    fault smoke OK (retried, quarantined, bytes identical)"
 
 # Trace smoke: a traced 10-round run must emit a schema-tagged
-# eafl-trace-v1 JSONL whose bytes are invariant across worker counts
-# and drain modes, on two scenarios; `eafl trace summarize` must then
-# reproduce the run's own summary numbers from the events alone.
-echo "==> trace smoke (2 scenarios, worker/drain byte-compares)"
+# eafl-trace-v1 JSONL whose bytes are invariant across worker counts,
+# drain modes and the candidate-rebuild escape hatch, on two scenarios;
+# `eafl trace summarize` must then reproduce the run's own summary
+# numbers from the events alone.
+echo "==> trace smoke (2 scenarios, worker/drain/rebuild byte-compares)"
 TRACE_OUT="$(mktemp -d)"
-trap 'rm -rf "$SMOKE_OUT" "$EAGER_OUT" "$BUDGET_OUT" "$BUDGET_SHARD" "$BUDGET_W8" "$BUDGET_EAGER" "$FAULT_OUT" "$TRACE_OUT"' EXIT
+trap 'rm -rf "$SMOKE_OUT" "$EAGER_OUT" "$REBUILD_OUT" "$BUDGET_OUT" "$BUDGET_SHARD" "$BUDGET_W8" "$BUDGET_EAGER" "$FAULT_OUT" "$TRACE_OUT"' EXIT
 for scenario in diurnal steady; do
   EAFL_WORKERS=1 ./target/release/eafl run --mock --selector eafl \
     --rounds 10 --clients 24 --scenario "$scenario" \
@@ -182,6 +204,13 @@ for scenario in diurnal steady; do
   cmp -s "$TRACE_OUT/$scenario-w1.trace.jsonl" \
          "$TRACE_OUT/$scenario-eager.trace.jsonl" \
     || { echo "FAIL: $scenario trace bytes depend on EAFL_EAGER_DRAIN"; exit 1; }
+  EAFL_WORKERS=1 EAFL_REBUILD_CANDIDATES=1 ./target/release/eafl run --mock \
+    --selector eafl --rounds 10 --clients 24 --scenario "$scenario" \
+    --out "$TRACE_OUT/$scenario" \
+    --trace "$TRACE_OUT/$scenario-rebuild.trace.jsonl" >/dev/null
+  cmp -s "$TRACE_OUT/$scenario-w1.trace.jsonl" \
+         "$TRACE_OUT/$scenario-rebuild.trace.jsonl" \
+    || { echo "FAIL: $scenario trace bytes depend on EAFL_REBUILD_CANDIDATES"; exit 1; }
 done
 ./target/release/eafl trace summarize \
   "$TRACE_OUT/diurnal-w1.trace.jsonl" --out "$TRACE_OUT/figures" >/dev/null
@@ -210,6 +239,8 @@ for key in results derived mean_ns median_ns min_ns p95_ns iterations; do
 done
 grep -q '"speedup_steady_10000"' "$BENCH_JSON" \
   || { echo "FAIL: bench JSON missing derived speedup"; exit 1; }
+grep -q '"candidate_speedup_steady_10000"' "$BENCH_JSON" \
+  || { echo "FAIL: bench JSON missing derived candidate-build speedup"; exit 1; }
 echo "    bench smoke OK ($(basename "$BENCH_JSON"))"
 
 if cargo clippy --version >/dev/null 2>&1; then

@@ -101,6 +101,24 @@ pub fn eager_drain_forced() -> bool {
     })
 }
 
+/// Whether `EAFL_REBUILD_CANDIDATES=1` (or `true`) forces the legacy
+/// full-pool candidate rebuild every round instead of the incrementally
+/// patched eligible arena (`Registry::refresh_eligible`). The arena is
+/// bit-identical to the rebuild by construction — this latch is the
+/// escape hatch and ci.sh's incremental-vs-rebuild determinism tier,
+/// the exact analogue of [`eager_drain_forced`] for the plan phase.
+///
+/// Latched once per process for the same reason: flipping candidate
+/// maintenance strategies mid-run must be impossible.
+pub fn rebuild_candidates_forced() -> bool {
+    static REBUILD: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *REBUILD.get_or_init(|| {
+        std::env::var("EAFL_REBUILD_CANDIDATES")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false)
+    })
+}
+
 /// Pluggable device-recovery model, applied once at the end of every
 /// round with the round's wall-clock window `[start_clock_h,
 /// end_clock_h)` — wall-clock-keyed policies (overnight charging

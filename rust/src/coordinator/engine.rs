@@ -56,7 +56,7 @@ use crate::sim::{simulate_round, FailureKind, ParticipantPlan, RoundSimOutcome};
 use crate::training::{LocalTrainResult, Trainer, TrainerBufs};
 use crate::util::rng::Rng;
 
-use super::registry::Registry;
+use super::registry::{AvailabilityView, Registry};
 
 /// Consecutive deadline misses before a client is benched.
 pub const MISS_BLACKLIST_THRESHOLD: u32 = 3;
@@ -95,41 +95,63 @@ pub struct RoundPlan {
 /// demand. An empty eligible pool yields an empty plan — the round is
 /// skipped downstream, never a panic.
 ///
-/// Fast path: candidates are filtered straight out of the registry's
-/// SoA [`ClientPool`](super::registry::ClientPool) into the
-/// caller-owned `arena` (reused across rounds — no per-round Vec), the
-/// availability gate is fused into the filter (and skipped entirely
-/// when the model is always-on), and the selected clients' timing and
-/// energy plans are copied from the build-time projection cache instead
-/// of re-running the energy model.
+/// Fast path: the registry maintains an incremental eligible arena
+/// ([`Registry::refresh_eligible`]) patched per round from change
+/// events (battery-floor crossings, blacklist releases, availability
+/// flips, guard-level mutations) instead of re-walking all N clients;
+/// the selected clients' timing and energy plans are copied from the
+/// build-time projection cache instead of re-running the energy model.
+/// `EAFL_REBUILD_CANDIDATES=1` forces the legacy O(N)
+/// [`Registry::fill_candidates`] walk into the caller-owned `arena`
+/// every round — bit-identical output, legacy cost (ci.sh's
+/// incremental-vs-rebuild determinism tier).
 ///
-/// `avail_cache`, when present, is the coordinator's
-/// [`WakeWheel`](crate::scenario::WakeWheel) bitmap already advanced to
-/// `clock_h`: the availability gate becomes a slice load instead of a
-/// dynamic model dispatch per client. `None` falls back to direct model
-/// calls — same bits either way (the wheel's soundness contract).
+/// `avail`, when present, is the coordinator's
+/// [`WakeWheel`](crate::scenario::WakeWheel) state already advanced to
+/// `clock_h` — the cached bitmap plus the ids whose bit flipped during
+/// that advance (the arena's availability change list). `None` falls
+/// back to direct model calls through `fill_candidates` — same bits
+/// either way (the wheel's soundness contract), but without a change
+/// list the arena cannot patch, so that path always rebuilds.
 pub struct PlanPhase;
 
 impl PlanPhase {
     #[allow(clippy::too_many_arguments)]
     pub fn run(
-        registry: &Registry,
+        registry: &mut Registry,
         selector: &mut dyn Selector,
         cfg: &ExperimentConfig,
         env: &ScenarioEnv,
         round: u64,
         clock_h: f64,
-        avail_cache: Option<&[bool]>,
+        avail: Option<(&[bool], &[u32])>,
         rng: &mut Rng,
         arena: &mut Vec<Candidate>,
     ) -> RoundPlan {
         let k = cfg.federation.participants_per_round;
         let floor = cfg.selector.min_battery_frac;
+        let incremental = !super::accounting::rebuild_candidates_forced();
 
-        if env.availability.is_always_available() {
-            registry.fill_candidates(round, floor, |_| true, arena);
-        } else if let Some(cache) = avail_cache {
-            registry.fill_candidates(round, floor, |id| cache[id], arena);
+        let candidates: &[Candidate] = if env.availability.is_always_available() {
+            if incremental {
+                registry.refresh_eligible(round, floor, AvailabilityView::AlwaysOn);
+                registry.eligible()
+            } else {
+                registry.fill_candidates(round, floor, |_| true, arena);
+                arena
+            }
+        } else if let Some((bits, changed)) = avail {
+            if incremental {
+                registry.refresh_eligible(
+                    round,
+                    floor,
+                    AvailabilityView::Cached { bits, changed },
+                );
+                registry.eligible()
+            } else {
+                registry.fill_candidates(round, floor, |id| bits[id], arena);
+                arena
+            }
         } else {
             let availability = &env.availability;
             registry.fill_candidates(
@@ -138,11 +160,12 @@ impl PlanPhase {
                 |id| availability.available(id, clock_h),
                 arena,
             );
-        }
+            arena
+        };
         // One call yields both picks and deadline, so the pacer
         // percentile runs once per round instead of twice.
-        let eligible = arena.len();
-        let (selected, deadline_s) = selector.plan(round, arena, k, rng);
+        let eligible = candidates.len();
+        let (selected, deadline_s) = selector.plan(round, candidates, k, rng);
 
         let pool = registry.pool();
         let plans: Vec<ParticipantPlan> = selected
@@ -631,7 +654,7 @@ mod tests {
     /// PlanPhase::run with a throwaway arena (tests don't care about
     /// arena reuse).
     fn run_plan(
-        registry: &Registry,
+        registry: &mut Registry,
         selector: &mut dyn Selector,
         cfg: &ExperimentConfig,
         env: &ScenarioEnv,
@@ -645,11 +668,11 @@ mod tests {
 
     #[test]
     fn plan_phase_projects_each_selected_client() {
-        let (cfg, registry, _rt, env) = fixture();
+        let (cfg, mut registry, _rt, env) = fixture();
         let mut selector = make_selector(&cfg.selector);
         let mut rng = Rng::seed_from_u64(1);
         let plan =
-            run_plan(&registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
+            run_plan(&mut registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
         assert_eq!(plan.selected.len(), plan.plans.len());
         assert!(plan.selected.len() <= cfg.federation.participants_per_round);
         assert!(plan.deadline_s > 0.0);
@@ -662,12 +685,12 @@ mod tests {
 
     #[test]
     fn plan_phase_with_zero_availability_selects_nobody() {
-        let (cfg, registry, _rt, _) = fixture();
+        let (cfg, mut registry, _rt, _) = fixture();
         let env = blackout_env(&cfg);
         let mut selector = make_selector(&cfg.selector);
         let mut rng = Rng::seed_from_u64(2);
         let plan =
-            run_plan(&registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
+            run_plan(&mut registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
         assert!(plan.selected.is_empty(), "offline population must yield an empty plan");
         assert!(plan.plans.is_empty());
         // And the empty plan flows through the sim without panicking.
@@ -704,11 +727,11 @@ mod tests {
 
     #[test]
     fn sim_phase_congestion_slows_and_drains_more_than_static() {
-        let (cfg, registry, _rt, steady) = fixture();
+        let (cfg, mut registry, _rt, steady) = fixture();
         let mut selector = make_selector(&cfg.selector);
         let mut rng = Rng::seed_from_u64(5);
         let plan =
-            run_plan(&registry, selector.as_mut(), &cfg, &steady, 1, 0.0, &mut rng);
+            run_plan(&mut registry, selector.as_mut(), &cfg, &steady, 1, 0.0, &mut rng);
         assert!(!plan.selected.is_empty());
 
         let mut congested = ScenarioEnv::steady(&cfg.devices);
@@ -736,11 +759,11 @@ mod tests {
 
     #[test]
     fn static_scenario_matches_plan_timings_exactly() {
-        let (cfg, registry, _rt, env) = fixture();
+        let (cfg, mut registry, _rt, env) = fixture();
         let mut selector = make_selector(&cfg.selector);
         let mut rng = Rng::seed_from_u64(8);
         let plan =
-            run_plan(&registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
+            run_plan(&mut registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
         assert!(env.network.is_static());
         let sim = SimPhase::run(&plan, &registry, &env, 0.0);
         // Completed clients' active time equals the planned timeline —
@@ -754,11 +777,11 @@ mod tests {
 
     #[test]
     fn exec_phase_identical_at_1_and_4_workers() {
-        let (cfg, registry, rt, env) = fixture();
+        let (cfg, mut registry, rt, env) = fixture();
         let mut selector = make_selector(&cfg.selector);
         let mut rng = Rng::seed_from_u64(9);
         let plan =
-            run_plan(&registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
+            run_plan(&mut registry, selector.as_mut(), &cfg, &env, 1, 0.0, &mut rng);
         let sim = SimPhase::run(&plan, &registry, &env, 0.0);
         let global = rt.init_params(0).unwrap();
         let data = SyntheticSpeech::new(rt.input_hw, rt.num_classes, 0.3, cfg.data.seed);

@@ -19,14 +19,15 @@ mod registry;
 mod server;
 
 pub use accounting::{
-    recharge_policy_from, BatteryAccounting, CooldownRecharge, NoRecharge, RechargePolicy,
+    eager_drain_forced, rebuild_candidates_forced, recharge_policy_from, BatteryAccounting,
+    CooldownRecharge, NoRecharge, RechargePolicy,
 };
 pub use engine::{
     quorum_required, CommitDecision, CommitPhase, EnergyLedger, ExecPhase, ExecutionOutcome,
     FeedbackPhase, PlanPhase, RecordPhase, RoundPlan, SimPhase, SimulatedRound,
 };
 pub use registry::{
-    BatteryMut, ClientPool, ClientState, ClientStats, LifecycleEvent, LinkMut, PoolAggregates,
-    Registry, StatsMut,
+    AvailabilityView, BatteryMut, ClientPool, ClientState, ClientStats, LifecycleEvent, LinkMut,
+    PoolAggregates, Registry, StatsMut,
 };
 pub use server::Coordinator;

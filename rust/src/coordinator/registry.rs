@@ -77,7 +77,7 @@ use crate::data::{partition_clients, ClientShard};
 use crate::device::{generate_profiles, Battery, DeviceProfile};
 use crate::energy::RoundEnergy;
 use crate::network::{generate_links, LinkProfile};
-use crate::selection::Candidate;
+use crate::selection::{battery_floor_admits, Candidate};
 use crate::util::fixed::FixedSum;
 use crate::util::index_set::IndexSet;
 use crate::util::wheel::BucketWheel;
@@ -269,6 +269,18 @@ const DEATH_BUCKET_WIDTH: f64 = 1.0 / 1024.0;
 /// exact predicate decides the outcome.
 const DEATH_SAFETY: f64 = 1e-7;
 
+/// Threshold slack for the eligible arena's battery-floor wheels — the
+/// same float-ulp argument as [`DEATH_SAFETY`]: the margin only pulls
+/// in already-due (or one-bucket-early) entries, and the exact
+/// [`battery_floor_admits`] predicate decides every fired entry.
+const FLOOR_SAFETY: f64 = 1e-7;
+
+/// Ban-wheel bucket width. Keys are whole round numbers
+/// (`banned_until_round as f64`), so width 1.0 makes every bucket start
+/// coincide with its key: a ban-release entry fires exactly at its
+/// release round, never early.
+const BAN_BUCKET_WIDTH: f64 = 1.0;
+
 /// The lazy background-drain ledger: one cumulative drained fraction
 /// per drain class plus per-client anchors (see the module docs).
 ///
@@ -371,6 +383,150 @@ pub enum LifecycleEvent {
     Revived { id: usize, at_h: f64, battery_frac: f64 },
 }
 
+/// How the plan phase exposes scenario availability to the eligible
+/// arena: either the always-on fast case (nothing to gate, nothing to
+/// watch) or the coordinator's [`WakeWheel`](crate::scenario::WakeWheel)
+/// state — the cached bitmap plus the ids whose bit flipped during the
+/// wheel's last advance (the arena's availability change list).
+#[derive(Clone, Copy)]
+pub enum AvailabilityView<'a> {
+    /// Every client is reachable every round.
+    AlwaysOn,
+    /// Wake-wheel cache: `bits[id]` is the availability at the round
+    /// clock; `changed` lists (ascending) the ids whose bit flipped
+    /// since the previous advance.
+    Cached { bits: &'a [bool], changed: &'a [u32] },
+}
+
+impl AvailabilityView<'_> {
+    #[inline]
+    fn get(&self, id: usize) -> bool {
+        match self {
+            AvailabilityView::AlwaysOn => true,
+            AvailabilityView::Cached { bits, .. } => bits[id],
+        }
+    }
+
+    /// Discriminant for the arena's view-consistency check: patching
+    /// only composes with change lists from one view kind, so switching
+    /// kinds forces a full rebuild.
+    fn kind(&self) -> u8 {
+        match self {
+            AvailabilityView::AlwaysOn => 0,
+            AvailabilityView::Cached { .. } => 1,
+        }
+    }
+}
+
+/// The incrementally maintained eligible-candidate arena — the plan
+/// phase's replacement for the per-round O(N)
+/// [`Registry::fill_candidates`] walk.
+///
+/// `members` is always exactly what `fill_candidates(round, floor,
+/// avail, ..)` would produce (same ids, same ascending order, same
+/// `Candidate` bits — property-tested in
+/// `rust/tests/candidate_arena.rs`), but it is *patched* per round from
+/// four O(changed) event sources instead of rebuilt:
+///
+///  - **floor wheels** (per drain class, keyed by the lazy ledger's
+///    `anchor_u` like the death wheel, popped at `s + floor` instead of
+///    `s`) fire members whose drain-effective fraction may have reached
+///    the battery floor;
+///  - the **ban wheel** (1-round buckets keyed by `banned_until_round`)
+///    fires blacklist releases exactly at their release round;
+///  - the wake wheel's **availability change list** re-evaluates
+///    clients whose presence bit flipped;
+///  - the **dirty list**, marked by every mutation guard at the
+///    existing mirror-sync choke points (`sync_battery_mirrors`,
+///    `sync_stats`, `refresh_projection`), re-evaluates clients whose
+///    battery / stats / link state changed — FL drains, charges,
+///    recharge revivals, bans, link migrations.
+///
+/// Membership is therefore a *guarded mirror* in the same sense as the
+/// SoA pool columns: no mutation path can change a client's
+/// eligibility without either flowing through a guard (dirty mark) or
+/// being a pure function of round time (wheels, change list).
+///
+/// Invariant: `in_floor_wheel[id]` ⇔ the floor wheel holds exactly one
+/// entry for `id` at the ledger's *current* `anchor_gen[id]` (stale
+/// generations are lazily discarded on fire, like the death wheel).
+/// Members are armed; non-members may carry a harmless armed entry
+/// until it fires.
+struct EligibleArena {
+    /// False until the first `refresh_eligible` does its one full O(N)
+    /// build. While false, dirty marks are dropped (nothing to patch) —
+    /// which is also what keeps the `EAFL_REBUILD_CANDIDATES=1` escape
+    /// hatch from accumulating an unbounded dirty list.
+    built: bool,
+    /// The battery floor the arena was built for (bit-compared; a
+    /// different floor forces a rebuild).
+    min_battery_frac: f64,
+    /// View-kind discriminant the arena was built under.
+    avail_kind: u8,
+    /// id → index into `members`; `u32::MAX` = not a member.
+    pos: Vec<u32>,
+    /// The eligible candidates, ascending id.
+    members: Vec<Candidate>,
+    /// Per-class battery-floor-crossing wheels (class 0 idle, 1 busy).
+    floor_wheels: [BucketWheel; 2],
+    in_floor_wheel: Vec<bool>,
+    /// Blacklist-release wheel keyed by `banned_until_round`.
+    ban_wheel: BucketWheel,
+    /// Guard-marked ids awaiting re-evaluation (deduped via
+    /// `dirty_flag`).
+    dirty: Vec<u32>,
+    dirty_flag: Vec<bool>,
+    /// Ledger cumsums at the last refresh: when an epoch advanced, every
+    /// member's projected `battery_frac` is stale and gets recomputed.
+    last_s: [f64; 2],
+    // Reusable scratch — no per-round allocation in steady state.
+    fired: Vec<(u32, u32)>,
+    eval: Vec<u32>,
+    adds: Vec<u32>,
+    removals: Vec<u32>,
+    merge_scratch: Vec<Candidate>,
+}
+
+impl Default for EligibleArena {
+    fn default() -> Self {
+        Self {
+            built: false,
+            // NaN bit-compares unequal to every real floor, so the
+            // first refresh always takes the full-build path.
+            min_battery_frac: f64::NAN,
+            avail_kind: u8::MAX,
+            pos: Vec::new(),
+            members: Vec::new(),
+            floor_wheels: [
+                BucketWheel::new(DEATH_BUCKET_WIDTH),
+                BucketWheel::new(DEATH_BUCKET_WIDTH),
+            ],
+            in_floor_wheel: Vec::new(),
+            ban_wheel: BucketWheel::new(BAN_BUCKET_WIDTH),
+            dirty: Vec::new(),
+            dirty_flag: Vec::new(),
+            last_s: [0.0; 2],
+            fired: Vec::new(),
+            eval: Vec::new(),
+            adds: Vec::new(),
+            removals: Vec::new(),
+            merge_scratch: Vec::new(),
+        }
+    }
+}
+
+impl EligibleArena {
+    /// Queue `id` for re-evaluation at the next refresh. No-op until
+    /// the arena is built (a rebuild sees everything anyway).
+    #[inline]
+    fn mark_dirty(&mut self, id: usize) {
+        if self.built && !self.dirty_flag[id] {
+            self.dirty_flag[id] = true;
+            self.dirty.push(id as u32);
+        }
+    }
+}
+
 /// The full client population.
 pub struct Registry {
     clients: Vec<ClientState>,
@@ -378,6 +534,10 @@ pub struct Registry {
     aggregates: PoolAggregates,
     /// Lazy background-drain state (see the module docs).
     ledger: DrainLedger,
+    /// Incrementally maintained eligible-candidate arena (see
+    /// [`EligibleArena`]); unbuilt until the first
+    /// [`Registry::refresh_eligible`].
+    arena: EligibleArena,
     /// Liveness-flip journal (see [`LifecycleEvent`]); empty and
     /// cost-free unless a trace sink enabled it.
     journal: Vec<LifecycleEvent>,
@@ -420,6 +580,7 @@ impl Registry {
             pool: ClientPool::default(),
             aggregates: PoolAggregates::default(),
             ledger: DrainLedger::new(&[]),
+            arena: EligibleArena::default(),
             journal: Vec::new(),
             journal_enabled: false,
             payload_bytes: param_count * 4,
@@ -461,6 +622,7 @@ impl Registry {
         self.pool = pool;
         self.aggregates = PoolAggregates::recompute(self);
         self.ledger = DrainLedger::new(&self.clients);
+        self.arena = EligibleArena::default();
     }
 
     /// Recompute one client's *static* projections after its device or
@@ -484,6 +646,7 @@ impl Registry {
         p.expected_duration_s[id] = expected;
         p.round_energy_j[id] = energy;
         p.drain_frac[id] = drain_frac;
+        self.arena.mark_dirty(id);
     }
 
     /// Mutable access to a client's link profile; the projection cache
@@ -616,6 +779,10 @@ impl Registry {
         } else {
             self.pool.below_capacity.remove(id);
         }
+        // Every battery mutation — FL drains, charges, revivals, wheel
+        // kills, settles — flows through here, so this one mark keeps
+        // arena membership a guarded mirror of the battery state.
+        self.arena.mark_dirty(id);
         if self.journal_enabled && was_alive != alive {
             let ev = if alive {
                 LifecycleEvent::Revived { id, at_h: self.ledger.now_h, battery_frac: frac }
@@ -670,6 +837,23 @@ impl Registry {
             led.contributing[id] = true;
             led.wheels[class].insert(u, id as u32, led.anchor_gen[id]);
         }
+        // The generation bump just invalidated any floor-wheel entry;
+        // re-arm current members at the fresh (key, gen) so their next
+        // floor crossing still fires. Non-members need no entry — they
+        // re-enter through the dirty/change paths, which arm them then.
+        if self.arena.built {
+            if self.arena.pos[id] != u32::MAX && self.ledger.contributing[id] {
+                let class = self.ledger.class_of[id] as usize;
+                self.arena.floor_wheels[class].insert(
+                    self.ledger.anchor_u[id],
+                    id as u32,
+                    self.ledger.anchor_gen[id],
+                );
+                self.arena.in_floor_wheel[id] = true;
+            } else {
+                self.arena.in_floor_wheel[id] = false;
+            }
+        }
     }
 
     /// Drop a client from the ledger's contributing set after its
@@ -685,6 +869,12 @@ impl Registry {
         led.anchor_charge_j[id] = 0.0;
         led.anchor_s_frac[id] = led.s_frac[class];
         led.anchor_gen[id] = led.anchor_gen[id].wrapping_add(1);
+        if self.arena.built {
+            // Dead clients carry no valid floor-wheel entry (the gen
+            // bump lazily deleted it); membership is removed at the next
+            // refresh via the dirty mark the mirror sync just made.
+            self.arena.in_floor_wheel[id] = false;
+        }
     }
 
     /// Materialize any lazily accrued background drain for one client:
@@ -813,6 +1003,9 @@ impl Registry {
     }
 
     fn sync_stats(&mut self, id: usize, old_times_selected: u64) {
+        // Mirror still holds the pre-mutation ban round — the arena's
+        // release wheel needs the transition, not just the new value.
+        let old_ban = self.pool.banned_until_round[id];
         let s = &self.clients[id].stats;
         let agg = &mut self.aggregates;
         agg.selected_sum = agg.selected_sum - old_times_selected + s.times_selected;
@@ -822,6 +1015,17 @@ impl Registry {
         self.pool.measured_duration_s[id] = s.measured_duration_s;
         self.pool.last_selected_round[id] = s.last_selected_round.unwrap_or(u64::MAX);
         self.pool.banned_until_round[id] = s.banned_until_round;
+        if self.arena.built {
+            let new_ban = self.pool.banned_until_round[id];
+            if new_ban != old_ban {
+                // Arm the release: the wheel fires the entry exactly at
+                // round `new_ban`, when the ban (exclusive) expires. A
+                // shortened or already-expired ban leaves a stale entry
+                // behind — it fires later, re-evaluates, and is a no-op.
+                self.arena.ban_wheel.insert(new_ban as f64, id as u32, 0);
+            }
+            self.arena.mark_dirty(id);
+        }
     }
 
     // --- O(1) population metrics (incremental aggregates) ------------------
@@ -898,26 +1102,298 @@ impl Registry {
                 continue;
             }
             let frac = self.effective_battery_frac(id);
-            if frac <= min_battery_frac
+            if !battery_floor_admits(frac, min_battery_frac)
                 || p.banned_until_round[id] > round
                 || !available(id)
             {
                 continue;
             }
-            out.push(Candidate {
-                id,
-                stat_util: p.stat_util[id],
-                measured_duration_s: p.measured_duration_s[id],
-                expected_duration_s: p.expected_duration_s[id],
-                last_selected_round: match p.last_selected_round[id] {
-                    u64::MAX => None,
-                    r => Some(r),
-                },
-                battery_frac: frac,
-                projected_drain_frac: p.drain_frac[id],
-                round_energy_j: p.round_energy_j[id],
-            });
+            out.push(self.make_candidate(id, frac));
         }
+    }
+
+    /// The single construction site for a [`Candidate`]'s pool
+    /// projection — `fill_candidates` and the eligible arena both build
+    /// through here, so their fields are bit-identical by construction.
+    #[inline]
+    fn make_candidate(&self, id: usize, battery_frac: f64) -> Candidate {
+        let p = &self.pool;
+        Candidate {
+            id,
+            stat_util: p.stat_util[id],
+            measured_duration_s: p.measured_duration_s[id],
+            expected_duration_s: p.expected_duration_s[id],
+            last_selected_round: match p.last_selected_round[id] {
+                u64::MAX => None,
+                r => Some(r),
+            },
+            battery_frac,
+            projected_drain_frac: p.drain_frac[id],
+            round_energy_j: p.round_energy_j[id],
+        }
+    }
+
+    /// Eligibility predicate, stated once: alive ∧ strictly above the
+    /// battery floor ([`battery_floor_admits`]) ∧ not blacklisted ∧
+    /// available.
+    #[inline]
+    fn is_eligible(
+        &self,
+        id: usize,
+        round: u64,
+        min_battery_frac: f64,
+        frac: f64,
+        view: &AvailabilityView<'_>,
+    ) -> bool {
+        self.pool.alive[id]
+            && battery_floor_admits(frac, min_battery_frac)
+            && self.pool.banned_until_round[id] <= round
+            && view.get(id)
+    }
+
+    /// Bring the eligible arena up to date for `round` — the plan
+    /// phase's O(changed) replacement for a full
+    /// [`Registry::fill_candidates`] walk. Read the result with
+    /// [`Registry::eligible`].
+    ///
+    /// The first call (or a floor / view-kind change) does one full
+    /// O(N) build; every later call patches: blacklist releases pop off
+    /// the ban wheel, battery-floor crossings pop off the per-class
+    /// floor wheels (driven by the same lazy-drain cumsums and anchor
+    /// generations as the death wheel), availability flips arrive on
+    /// the view's change list, and guard-level mutations arrive on the
+    /// dirty list — so per-round cost is O(selected + floor-crossings +
+    /// availability flips), plus an O(members) `battery_frac` refresh
+    /// when a drain epoch advanced (the selector reads every member
+    /// anyway, so that adds no asymptotic round cost).
+    ///
+    /// `round` must be non-decreasing across calls (the ban wheel is a
+    /// monotone queue) — true for every engine loop. Byte-identity with
+    /// the rebuild path at any worker count, shard split and drain mode
+    /// is enforced by `rust/tests/candidate_arena.rs` and ci.sh's
+    /// `EAFL_REBUILD_CANDIDATES=1` tier.
+    pub fn refresh_eligible(
+        &mut self,
+        round: u64,
+        min_battery_frac: f64,
+        view: AvailabilityView<'_>,
+    ) {
+        if !self.arena.built
+            || self.arena.min_battery_frac.to_bits() != min_battery_frac.to_bits()
+            || self.arena.avail_kind != view.kind()
+        {
+            self.rebuild_eligible(round, min_battery_frac, view);
+        } else {
+            self.patch_eligible(round, view);
+        }
+    }
+
+    /// The eligible candidates as of the last
+    /// [`Registry::refresh_eligible`], ascending id — bit-identical to
+    /// what `fill_candidates` would produce for the same (round, floor,
+    /// availability).
+    pub fn eligible(&self) -> &[Candidate] {
+        &self.arena.members
+    }
+
+    /// The one full O(N) arena build: scan the pool with the shared
+    /// predicate, arm every member in its class's floor wheel, and arm
+    /// ban releases for every currently blacklisted client.
+    fn rebuild_eligible(
+        &mut self,
+        round: u64,
+        min_battery_frac: f64,
+        view: AvailabilityView<'_>,
+    ) {
+        let n = self.clients.len();
+        let arena = &mut self.arena;
+        arena.min_battery_frac = min_battery_frac;
+        arena.avail_kind = view.kind();
+        arena.members.clear();
+        arena.pos.clear();
+        arena.pos.resize(n, u32::MAX);
+        arena.in_floor_wheel.clear();
+        arena.in_floor_wheel.resize(n, false);
+        arena.dirty_flag.clear();
+        arena.dirty_flag.resize(n, false);
+        arena.dirty.clear();
+        arena.floor_wheels = [
+            BucketWheel::new(DEATH_BUCKET_WIDTH),
+            BucketWheel::new(DEATH_BUCKET_WIDTH),
+        ];
+        arena.ban_wheel = BucketWheel::new(BAN_BUCKET_WIDTH);
+        arena.last_s = self.ledger.s_frac;
+        arena.built = true;
+        for id in 0..n {
+            if self.pool.banned_until_round[id] > round {
+                self.arena.ban_wheel.insert(
+                    self.pool.banned_until_round[id] as f64,
+                    id as u32,
+                    0,
+                );
+            }
+            let frac = self.effective_battery_frac(id);
+            if !self.is_eligible(id, round, min_battery_frac, frac, &view) {
+                continue;
+            }
+            self.arena.pos[id] = self.arena.members.len() as u32;
+            let cand = self.make_candidate(id, frac);
+            self.arena.members.push(cand);
+            let class = self.ledger.class_of[id] as usize;
+            self.arena.floor_wheels[class].insert(
+                self.ledger.anchor_u[id],
+                id as u32,
+                self.ledger.anchor_gen[id],
+            );
+            self.arena.in_floor_wheel[id] = true;
+        }
+    }
+
+    /// Patch the arena from the four change sources (see
+    /// [`Registry::refresh_eligible`]).
+    fn patch_eligible(&mut self, round: u64, view: AvailabilityView<'_>) {
+        let floor = self.arena.min_battery_frac;
+        let mut eval = std::mem::take(&mut self.arena.eval);
+        let mut fired = std::mem::take(&mut self.arena.fired);
+        eval.clear();
+
+        // Blacklist releases due this round. Whole-round buckets fire
+        // exactly at the release round; stale entries (a ban extended
+        // or shortened since registration) just re-evaluate to a no-op.
+        fired.clear();
+        self.arena.ban_wheel.pop_due(round as f64, &mut fired);
+        for &(id32, _) in &fired {
+            eval.push(id32);
+        }
+
+        // Battery-floor crossings: a member with anchor key `u` crosses
+        // the floor when `u − s_class ≤ floor`, so pop at
+        // `s_class + floor` (+ ulp slack). The exact predicate decides
+        // each fired entry; early fires re-arm below.
+        for class in 0..2 {
+            let threshold = self.ledger.s_frac[class] + floor + FLOOR_SAFETY;
+            fired.clear();
+            self.arena.floor_wheels[class].pop_due(threshold, &mut fired);
+            for &(id32, gen) in &fired {
+                let id = id32 as usize;
+                if gen != self.ledger.anchor_gen[id] {
+                    continue; // stale registration (anchor moved or died)
+                }
+                self.arena.in_floor_wheel[id] = false;
+                eval.push(id32);
+            }
+        }
+
+        // Availability flips since the wake wheel's last advance.
+        if let AvailabilityView::Cached { changed, .. } = view {
+            eval.extend_from_slice(changed);
+        }
+
+        // Guard-marked mutations (battery / stats / link).
+        for &id32 in &self.arena.dirty {
+            self.arena.dirty_flag[id32 as usize] = false;
+            eval.push(id32);
+        }
+        self.arena.dirty.clear();
+
+        // One pass per touched client, in ascending-id order (the
+        // result is a pure function of state, but sorting also hands
+        // the merge below pre-sorted add/removal lists).
+        eval.sort_unstable();
+        eval.dedup();
+
+        let mut adds = std::mem::take(&mut self.arena.adds);
+        let mut removals = std::mem::take(&mut self.arena.removals);
+        adds.clear();
+        removals.clear();
+        for &id32 in &eval {
+            let id = id32 as usize;
+            let frac = self.effective_battery_frac(id);
+            let want = self.is_eligible(id, round, floor, frac, &view);
+            let have = self.arena.pos[id] != u32::MAX;
+            if want && have {
+                // Still eligible, state changed: refresh in place.
+                let cand = self.make_candidate(id, frac);
+                let idx = self.arena.pos[id] as usize;
+                self.arena.members[idx] = cand;
+            } else if want {
+                adds.push(id32);
+            } else if have {
+                removals.push(id32);
+            }
+        }
+
+        // Membership changes: one sorted merge preserves ascending-id
+        // order — the same order the rebuild's 0..n walk emits.
+        if !adds.is_empty() || !removals.is_empty() {
+            let mut merged = std::mem::take(&mut self.arena.merge_scratch);
+            merged.clear();
+            let members = std::mem::take(&mut self.arena.members);
+            let (mut ai, mut ri) = (0usize, 0usize);
+            for m in &members {
+                while ai < adds.len() && (adds[ai] as usize) < m.id {
+                    let id = adds[ai] as usize;
+                    let frac = self.effective_battery_frac(id);
+                    let cand = self.make_candidate(id, frac);
+                    merged.push(cand);
+                    ai += 1;
+                }
+                if ri < removals.len() && removals[ri] as usize == m.id {
+                    ri += 1;
+                    self.arena.pos[m.id] = u32::MAX;
+                    continue;
+                }
+                merged.push(*m);
+            }
+            while ai < adds.len() {
+                let id = adds[ai] as usize;
+                let frac = self.effective_battery_frac(id);
+                let cand = self.make_candidate(id, frac);
+                merged.push(cand);
+                ai += 1;
+            }
+            debug_assert_eq!(ri, removals.len(), "every removal was a member");
+            for (i, m) in merged.iter().enumerate() {
+                self.arena.pos[m.id] = i as u32;
+            }
+            self.arena.merge_scratch = members;
+            self.arena.members = merged;
+        }
+
+        // Arm every touched member that lost (or never had) its floor
+        // entry: fresh admissions, and early fires that stayed
+        // eligible, re-arm at the current (key, generation).
+        for &id32 in &eval {
+            let id = id32 as usize;
+            if self.arena.pos[id] != u32::MAX && !self.arena.in_floor_wheel[id] {
+                let class = self.ledger.class_of[id] as usize;
+                self.arena.floor_wheels[class].insert(
+                    self.ledger.anchor_u[id],
+                    id32,
+                    self.ledger.anchor_gen[id],
+                );
+                self.arena.in_floor_wheel[id] = true;
+            }
+        }
+
+        // A drain-epoch advance stales every member's projected
+        // battery_frac (the candidates must read drain as-of the round
+        // clock); recompute them in one pass. O(members) — but the
+        // selector reads every member anyway, so the round's asymptotic
+        // cost is unchanged, and rounds with no epoch advance skip it.
+        if self.arena.last_s != self.ledger.s_frac {
+            let mut members = std::mem::take(&mut self.arena.members);
+            for m in &mut members {
+                m.battery_frac = self.effective_battery_frac(m.id);
+            }
+            self.arena.members = members;
+            self.arena.last_s = self.ledger.s_frac;
+        }
+
+        self.arena.eval = eval;
+        self.arena.fired = fired;
+        self.arena.adds = adds;
+        self.arena.removals = removals;
     }
 
     /// Reference path: build selector candidates by recomputing every
@@ -937,7 +1413,10 @@ impl Registry {
             .iter()
             .filter(|c| {
                 c.battery.is_alive()
-                    && self.effective_battery_frac(c.id) > min_battery_frac
+                    && battery_floor_admits(
+                        self.effective_battery_frac(c.id),
+                        min_battery_frac,
+                    )
                     && c.stats.banned_until_round <= round
             })
             .map(|c| {
@@ -1150,6 +1629,158 @@ mod tests {
         r.fill_candidates(4, 0.01, |id| id % 2 == 0, &mut gated);
         assert!(gated.iter().all(|c| c.id % 2 == 0));
         assert!(gated.len() < fast.len());
+    }
+
+    /// Bit-exact candidate-slice equality: ids, order, every field.
+    fn assert_bit_identical(got: &[Candidate], want: &[Candidate]) {
+        assert_eq!(got.len(), want.len(), "candidate counts differ");
+        for (a, b) in got.iter().zip(want) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.stat_util.map(f64::to_bits), b.stat_util.map(f64::to_bits));
+            assert_eq!(
+                a.measured_duration_s.map(f64::to_bits),
+                b.measured_duration_s.map(f64::to_bits)
+            );
+            assert_eq!(
+                a.expected_duration_s.to_bits(),
+                b.expected_duration_s.to_bits(),
+                "expected_duration_s for id {}",
+                a.id
+            );
+            assert_eq!(a.last_selected_round, b.last_selected_round);
+            assert_eq!(
+                a.battery_frac.to_bits(),
+                b.battery_frac.to_bits(),
+                "battery_frac for id {}",
+                a.id
+            );
+            assert_eq!(a.projected_drain_frac.to_bits(), b.projected_drain_frac.to_bits());
+            assert_eq!(a.round_energy_j.to_bits(), b.round_energy_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn eligible_arena_tracks_rebuild_through_mutations() {
+        let cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+        let mut r = Registry::build(&cfg, 35, 1000);
+        let floor = 0.01;
+        let mut reference = Vec::new();
+
+        // Round 1: the first refresh is the full build.
+        r.refresh_eligible(1, floor, AvailabilityView::AlwaysOn);
+        r.fill_candidates(1, floor, |_| true, &mut reference);
+        assert_bit_identical(r.eligible(), &reference);
+
+        // Round 2: deaths, partial drains, a ban, stats, a link change.
+        let cap = r.client(0).battery.capacity_joules();
+        r.drain_fl(2, cap * 2.0, 1.0);
+        r.drain_fl(5, cap * 0.6, 1.0);
+        r.stats_mut(7).banned_until_round = 4;
+        {
+            let mut s = r.stats_mut(11);
+            s.stat_util = Some(42.0);
+            s.measured_duration_s = Some(120.0);
+            s.last_selected_round = Some(1);
+            s.times_selected = 1;
+        }
+        r.link_mut(3).up_mbps *= 0.5;
+        r.refresh_eligible(2, floor, AvailabilityView::AlwaysOn);
+        r.fill_candidates(2, floor, |_| true, &mut reference);
+        assert_bit_identical(r.eligible(), &reference);
+        assert!(r.eligible().iter().all(|c| c.id != 2), "dead client evicted");
+        assert!(r.eligible().iter().all(|c| c.id != 7), "banned client evicted");
+
+        // Round 3: a lazy background epoch (participant 0 exempt) —
+        // every member's drain-effective battery_frac must refresh.
+        r.advance_background(&[0], 0.004, 0.01, 3.0, 3.0);
+        r.refresh_eligible(3, floor, AvailabilityView::AlwaysOn);
+        r.fill_candidates(3, floor, |_| true, &mut reference);
+        assert_bit_identical(r.eligible(), &reference);
+
+        // Round 4: nothing is marked dirty — the ban wheel alone must
+        // re-admit client 7 exactly at its release round.
+        r.refresh_eligible(4, floor, AvailabilityView::AlwaysOn);
+        r.fill_candidates(4, floor, |_| true, &mut reference);
+        assert_bit_identical(r.eligible(), &reference);
+        assert!(r.eligible().iter().any(|c| c.id == 7), "ban released on time");
+
+        // Round 5: revival re-admits through the battery-guard dirty path.
+        r.recharge_to(2, 0.8);
+        r.refresh_eligible(5, floor, AvailabilityView::AlwaysOn);
+        r.fill_candidates(5, floor, |_| true, &mut reference);
+        assert_bit_identical(r.eligible(), &reference);
+        assert!(r.eligible().iter().any(|c| c.id == 2), "revived client re-admitted");
+    }
+
+    #[test]
+    fn eligible_arena_follows_availability_change_lists() {
+        let cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+        let mut r = Registry::build(&cfg, 35, 1000);
+        let n = r.len();
+        let floor = 0.01;
+        let mut bits = vec![true; n];
+        let mut reference = Vec::new();
+
+        r.refresh_eligible(1, floor, AvailabilityView::Cached { bits: &bits, changed: &[] });
+        r.fill_candidates(1, floor, |id| bits[id], &mut reference);
+        assert_bit_identical(r.eligible(), &reference);
+
+        // Flip a few bits; only the change list carries the news.
+        bits[4] = false;
+        bits[9] = false;
+        r.refresh_eligible(2, floor, AvailabilityView::Cached { bits: &bits, changed: &[4, 9] });
+        r.fill_candidates(2, floor, |id| bits[id], &mut reference);
+        assert_bit_identical(r.eligible(), &reference);
+        assert!(r.eligible().iter().all(|c| c.id != 4 && c.id != 9));
+
+        // Flip one back.
+        bits[4] = true;
+        r.refresh_eligible(3, floor, AvailabilityView::Cached { bits: &bits, changed: &[4] });
+        r.fill_candidates(3, floor, |id| bits[id], &mut reference);
+        assert_bit_identical(r.eligible(), &reference);
+        assert!(r.eligible().iter().any(|c| c.id == 4));
+
+        // Switching view kinds forces a rebuild (membership from the
+        // cached bitmap would otherwise leak into the always-on view).
+        r.refresh_eligible(4, floor, AvailabilityView::AlwaysOn);
+        r.fill_candidates(4, floor, |_| true, &mut reference);
+        assert_bit_identical(r.eligible(), &reference);
+        assert!(r.eligible().iter().any(|c| c.id == 9));
+    }
+
+    #[test]
+    fn battery_floor_boundary_is_exclusive_at_every_site() {
+        let cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+        let mut r = Registry::build(&cfg, 35, 1000);
+        // 0.25 is a power of two: `recharge_to` computes charge =
+        // capacity × 0.25 and `fraction()` divides it back out, both
+        // exact in binary floating point — so the client sits on the
+        // boundary *bit-for-bit*, with no epoch advance to blur it.
+        let floor = 0.25;
+        r.recharge_to(0, floor);
+        assert_eq!(r.effective_battery_frac(0).to_bits(), floor.to_bits());
+
+        // The convention, stated once: admission is strictly above.
+        assert!(!battery_floor_admits(floor, floor));
+        assert!(battery_floor_admits(f64::from_bits(floor.to_bits() + 1), floor));
+
+        // All three sites agree at the exact boundary.
+        let mut fast = Vec::new();
+        r.fill_candidates(1, floor, |_| true, &mut fast);
+        assert!(fast.iter().all(|c| c.id != 0), "fill_candidates excludes the boundary");
+        let reference = r.candidates(1, floor, cfg.training.local_steps, cfg.data.batch_size);
+        assert!(reference.iter().all(|c| c.id != 0), "candidates excludes the boundary");
+        r.refresh_eligible(1, floor, AvailabilityView::AlwaysOn);
+        assert!(r.eligible().iter().all(|c| c.id != 0), "arena excludes the boundary");
+        assert_bit_identical(r.eligible(), &fast);
+
+        // One ulp of charge above the floor admits at every site.
+        let cap = r.client(0).battery.capacity_joules();
+        r.charge_add(0, cap * 1e-9);
+        r.fill_candidates(2, floor, |_| true, &mut fast);
+        assert!(fast.iter().any(|c| c.id == 0));
+        r.refresh_eligible(2, floor, AvailabilityView::AlwaysOn);
+        assert_bit_identical(r.eligible(), &fast);
     }
 
     #[test]

@@ -305,21 +305,21 @@ impl<'r> Coordinator<'r> {
         // the clients whose model-declared change time is due get
         // re-evaluated, so the plan gate reads a bitmap instead of making
         // N dynamic model calls.
-        let avail_cache = match self.wake.as_mut() {
-            Some(w) => {
-                w.advance(self.env.availability.as_ref(), self.clock_h);
-                Some(w.avail())
-            }
-            None => None,
-        };
+        // The wheel also surfaces the change list (ids whose bit actually
+        // flipped) so the incremental eligible arena patches membership
+        // in O(flips) instead of rescanning the bitmap.
+        if let Some(w) = self.wake.as_mut() {
+            w.advance(self.env.availability.as_ref(), self.clock_h);
+        }
+        let avail = self.wake.as_ref().map(|w| (w.avail(), w.changed()));
         let plan = PlanPhase::run(
-            &self.registry,
+            &mut self.registry,
             self.selector.as_mut(),
             &self.cfg,
             &self.env,
             round,
             self.clock_h,
-            avail_cache,
+            avail,
             &mut self.rng,
             &mut self.candidate_arena,
         );

@@ -53,7 +53,7 @@
 //!
 //! | stage                | before                                   | after                                    |
 //! |----------------------|------------------------------------------|------------------------------------------|
-//! | candidate build      | O(N) recompute + fresh `Vec<Candidate>`  | O(N) filter of cached SoA pool, reused arena, zero alloc |
+//! | candidate build      | O(N) recompute + fresh `Vec<Candidate>`  | O(changed) patched eligible arena: selected + floor crossings + ban releases + availability flips |
 //! | selection (Oort/EAFL)| O(E log E) full sort + O(k·E) linear draws | O(E) band partition + O(k·log band) Fenwick draws |
 //! | selection (Random)   | O(E) full shuffle                        | O(k) partial Fisher–Yates                |
 //! | participant drain    | O(k)                                     | O(k) (through aggregate guards)          |
@@ -77,8 +77,24 @@
 //! lower bound* on its next change time (`next_change_h`): the
 //! availability bit is constant on `[clock_h, next)`. The
 //! [`scenario::WakeWheel`] re-evaluates only clients whose bound has
-//! come due, so the plan gate reads a cached bitmap. Early wake-ups
-//! cost a redundant re-evaluation, never a stale bit.
+//! come due, so the plan gate reads a cached bitmap — and surfaces the
+//! ids whose bit actually flipped as a sorted change list. Early
+//! wake-ups cost a redundant re-evaluation, never a stale bit.
+//!
+//! **The eligible-arena invariant:** the per-round candidate set is an
+//! incrementally-maintained mirror, not a scan. The registry keeps an
+//! arena whose membership is always exactly alive ∧ strictly above the
+//! battery floor ([`selection::battery_floor_admits`], one shared
+//! predicate at every site) ∧ not banned ∧ available:
+//! battery-floor-crossing wheels (death-wheel machinery at threshold
+//! `min_battery_frac`, riding the same lazy-drain cumsums), a
+//! ban-release wheel, the wake wheel's change lists, and dirty marks
+//! from the guard choke points feed `Registry::refresh_eligible`, so
+//! `PlanPhase` patches in O(changed) instead of rewalking all N slots.
+//! Patched == rebuilt bit-equality is property-tested in
+//! `rust/tests/candidate_arena.rs`, and the `EAFL_REBUILD_CANDIDATES=1`
+//! escape hatch forces the full rebuild (ci.sh runs the whole suite
+//! plus campaign and trace byte-compares under it).
 //!
 //! The machinery (see [`coordinator::Registry`]):
 //!
@@ -95,7 +111,10 @@
 //!    `rust/tests/pool_aggregates.rs`.
 //!  - **Pool invariants** — every battery/stats mutation goes through
 //!    `Registry::battery_mut` / `stats_mut` guards; `clients` is
-//!    private, so pool mirrors and aggregates can never drift.
+//!    private, so pool mirrors and aggregates can never drift. The
+//!    eligible arena is one more guarded mirror: the same choke points
+//!    mark its entries dirty, so arena membership can never drift from
+//!    the eligibility predicate either.
 //!  - **Fenwick sampler** — one weighted-draw implementation
 //!    ([`selection::FenwickSampler`]) for Oort exploitation and EAFL
 //!    exploration, provably identical to the linear-scan reference on
@@ -104,8 +123,8 @@
 //!
 //! `benches/plan_path_throughput.rs` measures the whole path at
 //! 10k/100k/1M/10M clients (steady + diurnal), keeps the pre-refactor
-//! baseline and an eager-drain sweep alongside for honest speedups,
-//! and emits machine-readable
+//! baseline, an eager-drain sweep, and a from-scratch candidate
+//! rebuild alongside for honest speedups, and emits machine-readable
 //! `BENCH_plan.json` (`eafl-bench-v1` schema via [`benchkit`]);
 //! `make bench` writes it at the repo root and ci.sh smoke-checks it.
 //!

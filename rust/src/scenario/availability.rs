@@ -254,6 +254,12 @@ pub struct WakeWheel {
     wheel: BucketWheel,
     /// Reusable pop buffer — no per-round allocation.
     fired: Vec<(u32, u32)>,
+    /// Ids whose cached bit actually flipped during the most recent
+    /// [`WakeWheel::advance`], ascending — the change list consumed by
+    /// the registry's incremental eligible arena. A fired-but-unchanged
+    /// client (early wake-up, conservative bound) is *not* listed:
+    /// downstream consumers only care about real transitions.
+    changed: Vec<u32>,
 }
 
 impl WakeWheel {
@@ -264,6 +270,7 @@ impl WakeWheel {
             avail: vec![false; n],
             wheel: BucketWheel::new(WAKE_BUCKET_WIDTH_H),
             fired: Vec::new(),
+            changed: Vec::new(),
         };
         for id in 0..n {
             w.refresh(model, id, clock_h);
@@ -277,10 +284,16 @@ impl WakeWheel {
     pub fn advance(&mut self, model: &dyn AvailabilityModel, clock_h: f64) {
         let mut fired = std::mem::take(&mut self.fired);
         fired.clear();
+        self.changed.clear();
         self.wheel.pop_due(clock_h, &mut fired);
         for &(id, _) in &fired {
+            let was = self.avail[id as usize];
             self.refresh(model, id as usize, clock_h);
+            if self.avail[id as usize] != was {
+                self.changed.push(id);
+            }
         }
+        self.changed.sort_unstable();
         self.fired = fired;
     }
 
@@ -297,6 +310,14 @@ impl WakeWheel {
     /// [`WakeWheel::advance`] (or `new`). Indexed by client id.
     pub fn avail(&self) -> &[bool] {
         &self.avail
+    }
+
+    /// Ids whose availability bit flipped during the most recent
+    /// [`WakeWheel::advance`], sorted ascending. Empty right after
+    /// [`WakeWheel::new`] — the initial build is the baseline, not a
+    /// transition.
+    pub fn changed(&self) -> &[u32] {
+        &self.changed
     }
 
     /// Clients currently armed for a future re-evaluation.
@@ -483,6 +504,39 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn wake_wheel_change_list_is_exactly_the_bit_diff() {
+        let n = 200;
+        let clocks =
+            [0.0, 0.11, 0.25, 0.3, 1.0, 1.02, 2.75, 5.5, 12.0, 12.26, 23.9, 24.1, 30.0];
+        let models: [Box<dyn AvailabilityModel>; 2] = [
+            Box::new(diurnal(0.1, 0.9, 2.0)),
+            Box::new(TraceAvailability::generate(5, n, 24.0, 0.5, 0.6, 0.2)),
+        ];
+        let mut saw_changes = false;
+        for model in &models {
+            let mut wheel = WakeWheel::new(model.as_ref(), n, clocks[0]);
+            assert!(wheel.changed().is_empty(), "initial build reports no transitions");
+            let mut prev: Vec<bool> = wheel.avail().to_vec();
+            for &clock in &clocks[1..] {
+                wheel.advance(model.as_ref(), clock);
+                let expected: Vec<u32> = (0..n)
+                    .filter(|&id| wheel.avail()[id] != prev[id])
+                    .map(|id| id as u32)
+                    .collect();
+                assert_eq!(
+                    wheel.changed(),
+                    expected.as_slice(),
+                    "change list must equal the bitmap diff: model={} clock={clock}",
+                    model.name()
+                );
+                saw_changes |= !expected.is_empty();
+                prev = wheel.avail().to_vec();
+            }
+        }
+        assert!(saw_changes, "dynamic models must produce some flips");
     }
 
     #[test]

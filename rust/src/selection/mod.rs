@@ -34,6 +34,21 @@ use crate::util::rng::Rng;
 
 use crate::config::{SelectorConfig, SelectorKind};
 
+/// The battery-floor admission convention, stated once for every site
+/// that gates on `min_battery_frac`: a client is admitted iff its
+/// effective battery fraction is **strictly above** the floor. The
+/// interval of eligible fractions is the open-below `(floor, 1.0]` —
+/// at exactly `frac == floor` the client is *excluded* (it could not
+/// survive even an infinitesimal additional drain without dipping
+/// under the floor). The registry's `fill_candidates` fast path, the
+/// allocating `candidates` reference, and the incremental eligible
+/// arena's floor wheel all call this one predicate, so the boundary
+/// can never drift between them.
+#[inline]
+pub fn battery_floor_admits(battery_frac: f64, min_battery_frac: f64) -> bool {
+    battery_frac > min_battery_frac
+}
+
 /// Everything a selector may know about one eligible client this round.
 #[derive(Debug, Clone, Copy)]
 pub struct Candidate {

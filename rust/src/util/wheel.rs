@@ -1,6 +1,11 @@
 //! Coarse-bucket time wheel: a monotone priority queue over f64 keys,
-//! backing the registry's lazy-drain death wheel and the availability
-//! wake wheel.
+//! backing the registry's lazy-drain death wheel, the availability
+//! wake wheel, and the eligible arena's battery-floor-crossing and
+//! ban-release wheels (the floor wheels run on the same drained-
+//! fraction cumsums as the death wheel, just at threshold
+//! `min_battery_frac` instead of zero; the ban wheel keys on the
+//! release round as f64, where integer keys coincide with bucket
+//! starts, so releases fire on the exact round).
 //!
 //! Entries are `(id, gen)` pairs registered at a non-negative key (a
 //! cumulative drained fraction, or a simulated clock hour). Keys are

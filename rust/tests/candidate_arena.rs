@@ -1,0 +1,305 @@
+//! Incremental eligible-arena equivalence properties: the registry's
+//! patched candidate arena (`Registry::refresh_eligible`) must be
+//! *bit-identical* — same ids, same ascending order, same bits in every
+//! `Candidate` field — to a from-scratch `fill_candidates` rebuild at
+//! every round, under randomized interleavings of FL drains (some
+//! lethal), lazy background epochs, charges, exact floor-boundary
+//! recharges, bans (extended, shortened, and released), link changes
+//! and wake-wheel-driven availability flips, across the
+//! steady/diurnal/commuter presets and both drain modes (eager is
+//! emulated with an explicit per-epoch `settle_all`, since the
+//! `EAFL_EAGER_DRAIN=1` latch is process-wide; ci.sh's
+//! `EAFL_REBUILD_CANDIDATES=1` pass covers the engine-level latch).
+
+use eafl::config::{ExperimentConfig, SelectorKind};
+use eafl::coordinator::{AvailabilityView, Registry};
+use eafl::scenario::{Scenario, WakeWheel};
+use eafl::selection::Candidate;
+use eafl::util::prop::forall;
+use eafl::util::rng::Rng;
+
+/// Bit-exact candidate-slice equality: ids, order, every field.
+fn assert_bit_identical(got: &[Candidate], want: &[Candidate], ctx: &str) {
+    assert_eq!(
+        got.len(),
+        want.len(),
+        "{ctx}: candidate counts differ (arena {} vs rebuild {})",
+        got.len(),
+        want.len()
+    );
+    for (a, b) in got.iter().zip(want) {
+        assert_eq!(a.id, b.id, "{ctx}: membership/order diverged");
+        assert_eq!(
+            a.stat_util.map(f64::to_bits),
+            b.stat_util.map(f64::to_bits),
+            "{ctx}: stat_util at id {}",
+            a.id
+        );
+        assert_eq!(
+            a.measured_duration_s.map(f64::to_bits),
+            b.measured_duration_s.map(f64::to_bits),
+            "{ctx}: measured_duration_s at id {}",
+            a.id
+        );
+        assert_eq!(
+            a.expected_duration_s.to_bits(),
+            b.expected_duration_s.to_bits(),
+            "{ctx}: expected_duration_s at id {}",
+            a.id
+        );
+        assert_eq!(
+            a.last_selected_round, b.last_selected_round,
+            "{ctx}: last_selected_round at id {}",
+            a.id
+        );
+        assert_eq!(
+            a.battery_frac.to_bits(),
+            b.battery_frac.to_bits(),
+            "{ctx}: battery_frac at id {} ({} vs {})",
+            a.id,
+            a.battery_frac,
+            b.battery_frac
+        );
+        assert_eq!(
+            a.projected_drain_frac.to_bits(),
+            b.projected_drain_frac.to_bits(),
+            "{ctx}: projected_drain_frac at id {}",
+            a.id
+        );
+        assert_eq!(
+            a.round_energy_j.to_bits(),
+            b.round_energy_j.to_bits(),
+            "{ctx}: round_energy_j at id {}",
+            a.id
+        );
+    }
+}
+
+/// One randomized campaign against one preset: every round the arena is
+/// refreshed, compared bit-for-bit against the rebuild, and then the
+/// state is perturbed through every mutation family the arena must
+/// track.
+fn drive(preset: &str, eager: bool, cases: u64) {
+    forall(cases, |rng| {
+        let mut cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+        cfg.federation.num_clients = rng.gen_range_usize(6, 48);
+        cfg.devices.seed = rng.next_u64();
+        cfg.network.seed = rng.next_u64();
+        cfg.data.seed = rng.next_u64();
+        cfg.data.min_samples = 3;
+        cfg.data.max_samples = 8;
+        let n = cfg.federation.num_clients;
+        let scenario = Scenario::preset(preset).expect("known preset");
+        let env = scenario.build_env(rng.next_u64(), n, &cfg.devices);
+        let mut r = Registry::build(&cfg, 35, 1000);
+
+        // Half the cases pin the floor to an exact binary fraction so
+        // the boundary recharges below land on it bit-for-bit.
+        let floor = if rng.gen_bool(0.5) { 0.25 } else { rng.gen_range_f64(0.0, 0.4) };
+        let always = env.availability.is_always_available();
+        let mut wake =
+            (!always).then(|| WakeWheel::new(env.availability.as_ref(), n, 0.0));
+        let mut clock = 0.0f64;
+        let mut reference = Vec::new();
+        let rounds = rng.gen_range_usize(8, 25) as u64;
+        for round in 1..=rounds {
+            // The engine's per-round order: advance the wake wheel to
+            // the round clock, refresh the arena, plan.
+            if let Some(w) = wake.as_mut() {
+                w.advance(env.availability.as_ref(), clock);
+            }
+            match wake.as_ref() {
+                None => {
+                    r.refresh_eligible(round, floor, AvailabilityView::AlwaysOn);
+                    r.fill_candidates(round, floor, |_| true, &mut reference);
+                }
+                Some(w) => {
+                    r.refresh_eligible(
+                        round,
+                        floor,
+                        AvailabilityView::Cached { bits: w.avail(), changed: w.changed() },
+                    );
+                    let bits = w.avail();
+                    r.fill_candidates(round, floor, |id| bits[id], &mut reference);
+                }
+            }
+            assert_bit_identical(
+                r.eligible(),
+                &reference,
+                &format!("{preset} eager={eager} round {round}"),
+            );
+
+            // Perturb between rounds.
+            for _ in 0..rng.gen_range_usize(0, 5) {
+                let id = rng.gen_range_usize(0, n - 1);
+                let cap = r.client(id).battery.capacity_joules();
+                match rng.gen_range_usize(0, 7) {
+                    // Lazy background epoch with random participants —
+                    // moves the cumsums, fires death + floor wheels.
+                    0 | 1 => {
+                        let hours = rng.gen_range_f64(0.05, 1.0);
+                        let participants: Vec<usize> =
+                            (0..n).filter(|_| rng.gen_bool(0.15)).collect();
+                        clock += hours;
+                        r.advance_background(
+                            &participants,
+                            rng.gen_range_f64(0.0, 0.05),
+                            rng.gen_range_f64(0.0, 0.1),
+                            hours,
+                            clock,
+                        );
+                        if eager {
+                            r.settle_all();
+                        }
+                    }
+                    // FL drain — sometimes lethal.
+                    2 => {
+                        let e = cap * rng.gen_range_f64(0.0, 1.6);
+                        r.drain_fl(id, e, clock);
+                    }
+                    // Charge / revive.
+                    3 => r.charge_add(id, cap * rng.gen_range_f64(0.0, 0.6)),
+                    // Exact floor-boundary recharge: frac == floor
+                    // bit-for-bit, which the strict `>` must exclude.
+                    4 => r.recharge_to(id, floor),
+                    // Ban churn: fresh bans, extensions, shortenings,
+                    // and already-expired values.
+                    5 => {
+                        let until = match rng.gen_range_usize(0, 3) {
+                            0 => round + rng.gen_range_usize(1, 6) as u64,
+                            1 => round, // expires immediately (not banned)
+                            _ => round.saturating_sub(1),
+                        };
+                        r.stats_mut(id).banned_until_round = until;
+                    }
+                    // Selection stats (candidate payload fields).
+                    6 => {
+                        let mut s = r.stats_mut(id);
+                        s.stat_util = Some(rng.gen_range_f64(0.1, 90.0));
+                        s.measured_duration_s = Some(rng.gen_range_f64(5.0, 500.0));
+                        s.last_selected_round = Some(round);
+                        s.times_selected += 1;
+                    }
+                    // Link migration — reprojects through the guard.
+                    _ => {
+                        r.link_mut(id).up_mbps *= rng.gen_range_f64(0.5, 1.5);
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_arena_matches_rebuild_steady_lazy() {
+    drive("steady", false, 12);
+}
+
+#[test]
+fn prop_arena_matches_rebuild_steady_eager() {
+    drive("steady", true, 8);
+}
+
+#[test]
+fn prop_arena_matches_rebuild_diurnal_lazy() {
+    drive("diurnal", false, 12);
+}
+
+#[test]
+fn prop_arena_matches_rebuild_diurnal_eager() {
+    drive("diurnal", true, 8);
+}
+
+#[test]
+fn prop_arena_matches_rebuild_commuter_lazy() {
+    drive("commuter", false, 12);
+}
+
+#[test]
+fn prop_arena_matches_rebuild_commuter_eager() {
+    drive("commuter", true, 8);
+}
+
+/// A floor change mid-run forces a rebuild instead of a stale patch —
+/// the arena is keyed to the floor it was built for.
+#[test]
+fn floor_change_forces_a_rebuild() {
+    let mut cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+    cfg.federation.num_clients = 12;
+    cfg.data.min_samples = 3;
+    cfg.data.max_samples = 8;
+    let mut r = Registry::build(&cfg, 35, 1000);
+    let mut reference = Vec::new();
+
+    r.refresh_eligible(1, 0.01, AvailabilityView::AlwaysOn);
+    r.fill_candidates(1, 0.01, |_| true, &mut reference);
+    assert_bit_identical(r.eligible(), &reference, "floor 0.01");
+
+    // Drain a few clients into the band between the two floors, then
+    // raise the floor: membership must contract accordingly.
+    for id in 0..4 {
+        let cap = r.client(id).battery.capacity_joules();
+        let frac = r.effective_battery_frac(id);
+        r.drain_fl(id, cap * (frac - 0.2), 0.5);
+    }
+    r.refresh_eligible(2, 0.5, AvailabilityView::AlwaysOn);
+    r.fill_candidates(2, 0.5, |_| true, &mut reference);
+    assert_bit_identical(r.eligible(), &reference, "floor 0.5");
+    for id in 0..4 {
+        assert!(
+            r.eligible().iter().all(|c| c.id != id),
+            "client {id} sits under the raised floor"
+        );
+    }
+}
+
+/// Deterministic worst case for the floor wheel: a staircase of charges
+/// drained at a fixed rate crosses the floor one client per epoch. The
+/// arena must evict each client on exactly the epoch its drain-effective
+/// fraction stops being strictly above the floor — the wheel may fire
+/// early (re-armed, harmless) but never late. Membership is checked
+/// against the closed-form fraction itself, so the assertion is exact
+/// wherever the floating-point boundary actually lands.
+#[test]
+fn floor_crossings_fire_on_the_exact_epoch() {
+    let mut cfg = ExperimentConfig::smoke(SelectorKind::Eafl);
+    cfg.federation.num_clients = 8;
+    cfg.data.min_samples = 3;
+    cfg.data.max_samples = 8;
+    let n = cfg.federation.num_clients;
+    let mut r = Registry::build(&cfg, 35, 1000);
+    let floor = 0.25;
+    // Client `id` starts at floor + (id+1)/1024: with a drain rate of
+    // 1/1024 per hour it sits strictly above the floor for exactly
+    // `id + 1` one-hour epochs (all quantities exact binary fractions).
+    for id in 0..n {
+        r.recharge_to(id, floor + (id + 1) as f64 / 1024.0);
+    }
+    let rate = 1.0 / 1024.0;
+    let mut reference = Vec::new();
+    r.refresh_eligible(1, floor, AvailabilityView::AlwaysOn);
+    r.fill_candidates(1, floor, |_| true, &mut reference);
+    assert_bit_identical(r.eligible(), &reference, "epoch 0");
+    assert_eq!(r.eligible().len(), n);
+
+    for epoch in 1..=n as u64 + 1 {
+        r.advance_background(&[], rate, rate, 1.0, epoch as f64);
+        let round = epoch + 1;
+        r.refresh_eligible(round, floor, AvailabilityView::AlwaysOn);
+        r.fill_candidates(round, floor, |_| true, &mut reference);
+        assert_bit_identical(r.eligible(), &reference, &format!("epoch {epoch}"));
+        // The wheel must never be late: membership equals the exact
+        // strictly-above predicate over the closed-form fraction.
+        let expect: Vec<usize> =
+            (0..n).filter(|&id| r.effective_battery_frac(id) > floor).collect();
+        let got: Vec<usize> = r.eligible().iter().map(|c| c.id).collect();
+        assert_eq!(got, expect, "late or phantom floor crossing at epoch {epoch}");
+        assert!(
+            r.eligible().len() <= n.saturating_sub(epoch as usize - 1),
+            "staircase must shed roughly one client per epoch"
+        );
+    }
+    // The full staircase is at least 1/1024 under the floor by the end
+    // — a margin no rounding can blur.
+    assert!(r.eligible().is_empty());
+}

@@ -15,7 +15,9 @@
 //! ulp — and nothing exported ever reads it, see `report.rs`.)
 
 use eafl::config::{ExperimentConfig, SelectorKind};
-use eafl::coordinator::{PoolAggregates, Registry};
+use eafl::coordinator::{
+    AvailabilityView, CooldownRecharge, PoolAggregates, RechargePolicy, Registry,
+};
 use eafl::util::prop::forall;
 use eafl::util::rng::Rng;
 
@@ -224,6 +226,82 @@ fn mid_interval_deaths_stamp_the_epoch_end_in_both_modes() {
     assert!(!lazy.client(0).battery.is_alive());
     assert_eq!(lazy.client(0).battery.died_at_h, Some(2.0), "stamped at epoch end");
     assert_eq!(lazy.effective_charge_j(0), 0.0, "sub-zero residual clamps");
+}
+
+/// Refresh the incremental arena and require it to match a from-scratch
+/// `fill_candidates` rebuild (ids, order, drain-effective fractions).
+fn assert_arena_matches(r: &mut Registry, round: u64, floor: f64, ctx: &str) {
+    r.refresh_eligible(round, floor, AvailabilityView::AlwaysOn);
+    let mut reference = Vec::new();
+    r.fill_candidates(round, floor, |_| true, &mut reference);
+    let got = r.eligible();
+    assert_eq!(got.len(), reference.len(), "{ctx}: candidate count");
+    for (a, b) in got.iter().zip(&reference) {
+        assert_eq!(a.id, b.id, "{ctx}: membership/order");
+        assert_eq!(
+            a.battery_frac.to_bits(),
+            b.battery_frac.to_bits(),
+            "{ctx}: drain-effective fraction at id {}",
+            a.id
+        );
+        assert_eq!(
+            a.expected_duration_s.to_bits(),
+            b.expected_duration_s.to_bits(),
+            "{ctx}: projection at id {}",
+            a.id
+        );
+    }
+}
+
+/// A `CooldownRecharge` revival re-enters the incremental eligible
+/// arena *in the same round it revives*: the recharge flows through the
+/// battery guard, whose mirror sync dirty-marks the arena, so the very
+/// next `refresh_eligible` re-admits the client in O(changed) — no
+/// rebuild, no extra round of latency — identically in both drain
+/// modes (eager emulated with an explicit per-epoch `settle_all`, as
+/// the `EAFL_EAGER_DRAIN=1` latch is process-wide).
+#[test]
+fn cooldown_revival_is_immediately_eligible_in_the_patched_arena() {
+    let floor = 0.05;
+    let policy = CooldownRecharge { after_hours: 1.0, to_fraction: 0.8 };
+    let (mut lazy, mut eager) = fixed_pair(6);
+
+    for (name, r, eager_mode) in [("lazy", &mut lazy, false), ("eager", &mut eager, true)] {
+        // Round 1: arena built with everyone alive; client 2 then dies
+        // of FL work and the fleet pays a background epoch.
+        assert_arena_matches(r, 1, floor, name);
+        assert!(r.eligible().iter().any(|c| c.id == 2));
+        let cap = r.client(2).battery.capacity_joules();
+        r.drain_fl(2, cap * 2.0, 1.0);
+        r.advance_background(&[], 0.001, 0.002, 1.0, 1.0);
+        if eager_mode {
+            r.settle_all();
+        }
+
+        // Round 2: dead ⇒ evicted from the patched arena.
+        assert_arena_matches(r, 2, floor, name);
+        assert!(r.eligible().iter().all(|c| c.id != 2), "{name}: dead client evicted");
+
+        // The cooldown elapses over round 2's window and the policy
+        // revives client 2 at its end — exactly where the engine runs
+        // recharge, between drain and the next round's plan.
+        r.advance_background(&[], 0.001, 0.002, 1.5, 2.5);
+        if eager_mode {
+            r.settle_all();
+        }
+        policy.apply(r, 1.0, 2.5);
+        assert!(r.client(2).battery.is_alive(), "{name}: revived");
+
+        // Round 3: the revival's guard sync already queued client 2, so
+        // the patch pass re-admits it with its recharged fraction.
+        assert_arena_matches(r, 3, floor, name);
+        let revived = r
+            .eligible()
+            .iter()
+            .find(|c| c.id == 2)
+            .unwrap_or_else(|| panic!("{name}: revived client eligible in the same round"));
+        assert!((revived.battery_frac - 0.8).abs() < 1e-12, "{name}: recharged level");
+    }
 }
 
 /// Participants of a round are exempt from that round's background
